@@ -1,0 +1,17 @@
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::config::ModelConfig;
+use linear_transformer::nn::TransformerLM;
+fn main() {
+    let cfg = ModelConfig::mnist();
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 1);
+    let mut sess = model.session();
+    let mut logits = sess.step(0);
+    let t0 = std::time::Instant::now();
+    let steps = 2000usize.min(cfg.max_len - 1);
+    for _ in 0..steps {
+        let px = linear_transformer::sampling::argmax(&logits);
+        logits = sess.step(px % 255);
+        if sess.history.len() + 1 >= cfg.max_len { break; }
+    }
+    println!("linear decode: {:.1} us/token", t0.elapsed().as_secs_f64() * 1e6 / sess.history.len() as f64);
+}

@@ -1,0 +1,91 @@
+//! Serving demo: the coordinator under a bursty batched workload.
+//!
+//! Spins up the native engine + TCP server, fires concurrent client
+//! requests over real sockets, and reports throughput / latency
+//! percentiles / batch occupancy — the serving-systems view of the
+//! paper's O(1)-per-token decode.
+//!
+//! Run: cargo run --release --example serve -- [n_requests] [max_batch]
+
+use std::sync::Arc;
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::config::{ModelConfig, ServeConfig};
+use linear_transformer::coordinator::engine::NativeEngine;
+use linear_transformer::coordinator::request::GenerateRequest;
+use linear_transformer::coordinator::server::{request_over_tcp, Server};
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let max_batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    // model: copy task with the AOT init weights (or a trained checkpoint)
+    let rt = Runtime::open("artifacts")?;
+    let cfg = ModelConfig::small_copy();
+    let weights = std::path::Path::new("results/copy_linear_trained.ltw")
+        .exists()
+        .then(|| linear_transformer::weights::WeightBundle::load("results/copy_linear_trained.ltw"))
+        .transpose()?
+        .unwrap_or(rt.load_weights("copy_linear")?);
+    let model = TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &weights)?;
+
+    let engine = Arc::new(NativeEngine::spawn(
+        model,
+        ServeConfig {
+            max_batch,
+            max_wait_us: 500,
+            ..Default::default()
+        },
+    )?);
+    let server = Server::start("127.0.0.1:0", engine.clone())?;
+    println!("serving on {} (max_batch = {max_batch})", server.addr);
+
+    // bursty client load: 4 client threads, each a burst of requests
+    let addr = server.addr.to_string();
+    let per_client = n_requests.div_ceil(4);
+    let t0 = std::time::Instant::now();
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let reqs: Vec<GenerateRequest> = (0..per_client)
+                    .map(|i| GenerateRequest {
+                        id: (c * per_client + i) as u64,
+                        prompt: vec![12, 3, 4, 5, 1],
+                        max_new: 32,
+                        temperature: 0.8,
+                    })
+                    .collect();
+                request_over_tcp(&addr, &reqs).expect("client io")
+            })
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    let mut completed = 0usize;
+    for c in clients {
+        for resp in c.join().unwrap() {
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            total_tokens += resp.tokens.len();
+            completed += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let st = engine.stats();
+    println!(
+        "{completed} requests, {total_tokens} tokens in {:.2}s \
+         -> {:.0} tok/s, {:.1} req/s",
+        dt.as_secs_f64(),
+        total_tokens as f64 / dt.as_secs_f64(),
+        completed as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "engine: mean batch occupancy {:.2}/{max_batch}, latency {}",
+        st.mean_batch_occupancy(),
+        st.latency.summary()
+    );
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX models + AOT export.
+
+Nothing in here runs on the request path — `make artifacts` lowers every
+function to HLO text under artifacts/ and the rust binary takes over.
+"""

@@ -1,0 +1,427 @@
+"""AOT export: lower every model function to HLO text + write weights/manifest.
+
+This is the single build-time entry point (`make artifacts`). It produces,
+under artifacts/:
+
+  <task>_<variant>_train.hlo.txt   — one optimizer step (fwd+bwd+RAdam/Adam)
+  <task>_<variant>_eval.hlo.txt    — scalar eval loss (teacher-forced)
+  <task>_fwd_*.hlo.txt             — full posteriors where rust needs them
+  <task>_decode_linear_b<B>.hlo.txt— eqs 16-20 RNN decode step, batch B
+  <task>_decode_kv_b<B>.hlo.txt    — stateful-softmax KV-cache decode step
+  <task>_prefill_b1.hlo.txt        — prompt ingestion -> (logits, S, Z)
+  <task>_<variant>_init.ltw        — initial parameters (LTW1 bundle)
+  manifest.json                    — artifact/param/shape registry for rust
+
+Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects jax>=0.5
+serialized protos (64-bit instruction ids); the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Conventions the rust side relies on (rust/src/runtime/bundle.rs):
+  * flat positional inputs, named in the manifest as
+    "param:<name>", "opt_m:<name>", "opt_v:<name>", "opt_step", "lr",
+    "in:<field>", "state:s", "state:z", "cache:k", "cache:v"
+  * train outputs: ("loss", params..., m..., v..., "opt_step")
+  * every tensor is f32 except token/index inputs which are i32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import losses, model as model_mod, models_speech as speech_mod
+from .ltw import write_ltw
+from .model import ModelConfig
+from .optimizers import OptState, UPDATES, clip_by_global_norm
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# task registry
+# ---------------------------------------------------------------------------
+
+
+def _lm_cfg(attention, **kw):
+    return ModelConfig(attention=attention, **kw)
+
+
+COPY_KW = dict(vocab=13, d_model=128, n_heads=4, n_layers=4, max_len=128, d_ff=512, chunk=16)
+MNIST_KW = dict(vocab=256, d_model=128, n_heads=4, n_layers=4, max_len=784, d_ff=512, chunk=16, lsh_chunk=32, lsh_buckets=32)
+CIFAR_KW = dict(vocab=256, d_model=128, n_heads=4, n_layers=4, max_len=3072, d_ff=512, chunk=16)
+SPEECH_KW = dict(vocab=41, d_model=128, n_heads=4, n_layers=4, max_len=256, d_ff=512, chunk=16, causal=False)
+
+TASKS = {
+    "copy": dict(kw=COPY_KW, batch=32, variants=["linear", "softmax", "lsh"], kind="lm"),
+    "mnist": dict(kw=MNIST_KW, batch=8, variants=["linear", "softmax", "lsh"], kind="lm"),
+    "cifar": dict(kw=CIFAR_KW, batch=2, variants=["linear", "softmax"], kind="lm"),
+    "speech": dict(
+        kw=SPEECH_KW,
+        batch=8,
+        variants=["linear", "softmax", "bilstm"],
+        kind="ctc",
+        n_mels=40,
+        max_labels=48,
+    ),
+}
+
+DECODE_BATCHES = {"copy": [1], "mnist": [1, 32], "cifar": [1, 16]}
+PREFILL_LEN = {"mnist": 384, "cifar": 1024}
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (the aot_recipe / xla-example path)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": "i32" if x.dtype == jnp.int32 else "f32"}
+
+
+def lower_artifact(out_dir, name, fn, named_inputs, output_names, manifest, model_key):
+    """jit-lower fn(*inputs), dump HLO text, record manifest entry."""
+    specs = [jax.ShapeDtypeStruct(x.shape, x.dtype) for _, x in named_inputs]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # output specs via eval_shape (no execution)
+    out_shapes = jax.eval_shape(fn, *specs)
+    flat_out = jax.tree_util.tree_leaves(out_shapes)
+    assert len(flat_out) == len(output_names), (name, len(flat_out), len(output_names))
+    manifest["artifacts"][name] = {
+        "file": fname,
+        "model": model_key,
+        "inputs": [{"name": n, **spec_of(x)} for n, x in named_inputs],
+        "outputs": [{"name": n, **spec_of(x)} for n, x in zip(output_names, flat_out)],
+    }
+    print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB, {len(named_inputs)} inputs)")
+
+
+# ---------------------------------------------------------------------------
+# generic train/eval step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(names, loss_fn, opt_name, batch_template, clip_norm=1.0):
+    """Flat-signature train step for a parameter list in `names` order."""
+    p_count = len(names)
+
+    def train_step(*args):
+        params = list(args[:p_count])
+        m = list(args[p_count : 2 * p_count])
+        v = list(args[2 * p_count : 3 * p_count])
+        step = args[3 * p_count]
+        lr = args[3 * p_count + 1]
+        batch = args[3 * p_count + 2 :]
+
+        def lf(plist):
+            return loss_fn(dict(zip(names, plist)), *batch)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        new_p, st = UPDATES[opt_name](params, grads, OptState(m, v, step), lr)
+        return (loss, *new_p, *st.m, *st.v, st.step)
+
+    return train_step
+
+
+def train_io_names(names, batch_fields):
+    inputs = (
+        [f"param:{n}" for n in names]
+        + [f"opt_m:{n}" for n in names]
+        + [f"opt_v:{n}" for n in names]
+        + ["opt_step", "lr"]
+        + [f"in:{f}" for f in batch_fields]
+    )
+    outputs = (
+        ["loss"]
+        + [f"param:{n}" for n in names]
+        + [f"opt_m:{n}" for n in names]
+        + [f"opt_v:{n}" for n in names]
+        + ["opt_step"]
+    )
+    return inputs, outputs
+
+
+def zeros_like_params(params):
+    return [jnp.zeros_like(p) for p in params]
+
+
+# ---------------------------------------------------------------------------
+# per-task emitters
+# ---------------------------------------------------------------------------
+
+
+def emit_lm_task(task, spec, out_dir, manifest):
+    batch = spec["batch"]
+    for variant in spec["variants"]:
+        cfg = _lm_cfg(variant, **spec["kw"])
+        key = f"{task}_{variant}"
+        names = model_mod.param_names(cfg)
+        params = model_mod.init_params(cfg, seed=hash(key) % 2**31)
+        plist = model_mod.params_to_list(cfg, params)
+
+        write_ltw(
+            os.path.join(out_dir, f"{key}_init.ltw"),
+            [(n, np.asarray(a)) for n, a in zip(names, plist)],
+        )
+        manifest["models"][key] = {
+            "task": task,
+            "attention": variant,
+            "config": asdict(cfg),
+            "params": names,
+            "param_shapes": {n: list(params[n].shape) for n in names},
+            "weights": f"{key}_init.ltw",
+        }
+
+        n = cfg.max_len
+
+        def lm_loss(pd, inputs, targets, mask):
+            logits = model_mod.forward(cfg, pd, inputs)
+            return losses.cross_entropy(logits, targets, mask)
+
+        tok = jnp.zeros((batch, n), I32)
+        msk = jnp.ones((batch, n), F32)
+        sc = jnp.zeros((), F32)
+        batch_inputs = [("in:inputs", tok), ("in:targets", tok), ("in:mask", msk)]
+
+        in_names, out_names = train_io_names(names, ["inputs", "targets", "mask"])
+        named_inputs = (
+            [(f"param:{nm}", p) for nm, p in zip(names, plist)]
+            + [(f"opt_m:{nm}", p) for nm, p in zip(names, plist)]
+            + [(f"opt_v:{nm}", p) for nm, p in zip(names, plist)]
+            + [("opt_step", sc), ("lr", sc)]
+            + batch_inputs
+        )
+        lower_artifact(
+            out_dir,
+            f"{key}_train",
+            make_train_step(names, lm_loss, "radam", None),
+            named_inputs,
+            out_names,
+            manifest,
+            key,
+        )
+
+        # eval: scalar mean CE (rust converts to bits/dim)
+        def eval_loss(*args):
+            pd = dict(zip(names, args[: len(names)]))
+            inputs, targets, mask = args[len(names) :]
+            return (losses.cross_entropy(model_mod.forward(cfg, pd, inputs), targets, mask),)
+
+        lower_artifact(
+            out_dir,
+            f"{key}_eval",
+            eval_loss,
+            [(f"param:{nm}", p) for nm, p in zip(names, plist)] + batch_inputs,
+            ["loss"],
+            manifest,
+            key,
+        )
+
+    # decode-step artifacts exist for the linear (RNN) and softmax (KV) models
+    cfg_lin = _lm_cfg("linear", **spec["kw"])
+    names_lin = model_mod.param_names(cfg_lin)
+    params_lin = model_mod.init_params(cfg_lin)
+    plist_lin = model_mod.params_to_list(cfg_lin, params_lin)
+    cfg_sm = _lm_cfg("softmax", **spec["kw"])
+    names_sm = model_mod.param_names(cfg_sm)
+    plist_sm = model_mod.params_to_list(cfg_sm, model_mod.init_params(cfg_sm))
+
+    for b in DECODE_BATCHES.get(task, []):
+        s0, z0 = model_mod.init_decode_state(cfg_lin, b)
+        tok = jnp.zeros((b,), I32)
+        pos = jnp.zeros((b,), I32)  # per-slot positions (continuous batching)
+
+        def dec(*args):
+            pd = dict(zip(names_lin, args[: len(names_lin)]))
+            token, p, s, z = args[len(names_lin) :]
+            return model_mod.decode_step(cfg_lin, pd, token, p, s, z)
+
+        lower_artifact(
+            out_dir,
+            f"{task}_decode_linear_b{b}",
+            dec,
+            [(f"param:{nm}", p) for nm, p in zip(names_lin, plist_lin)]
+            + [("in:token", tok), ("in:pos", pos), ("state:s", s0), ("state:z", z0)],
+            ["out:logits", "state:s", "state:z"],
+            manifest,
+            f"{task}_linear",
+        )
+
+        kc0, vc0 = model_mod.init_kv_cache(cfg_sm, b)
+
+        def dec_kv(*args):
+            pd = dict(zip(names_sm, args[: len(names_sm)]))
+            token, p, kc, vc = args[len(names_sm) :]
+            return model_mod.decode_step_kv(cfg_sm, pd, token, p, kc, vc)
+
+        lower_artifact(
+            out_dir,
+            f"{task}_decode_kv_b{b}",
+            dec_kv,
+            [(f"param:{nm}", p) for nm, p in zip(names_sm, plist_sm)]
+            + [("in:token", tok), ("in:pos", pos), ("cache:k", kc0), ("cache:v", vc0)],
+            ["out:logits", "cache:k", "cache:v"],
+            manifest,
+            f"{task}_softmax",
+        )
+
+    if task in PREFILL_LEN:
+        plen = PREFILL_LEN[task]
+        tok = jnp.zeros((1, plen), I32)
+
+        def pre(*args):
+            pd = dict(zip(names_lin, args[: len(names_lin)]))
+            return model_mod.prefill(cfg_lin, pd, args[-1])
+
+        lower_artifact(
+            out_dir,
+            f"{task}_prefill_b1",
+            pre,
+            [(f"param:{nm}", p) for nm, p in zip(names_lin, plist_lin)]
+            + [("in:tokens", tok)],
+            ["out:logits", "state:s", "state:z"],
+            manifest,
+            f"{task}_linear",
+        )
+
+
+def emit_ctc_task(task, spec, out_dir, manifest):
+    batch, n_mels, max_s = spec["batch"], spec["n_mels"], spec["max_labels"]
+    t = spec["kw"]["max_len"]
+    feats = jnp.zeros((batch, t, n_mels), F32)
+    flen = jnp.zeros((batch,), I32)
+    labels = jnp.zeros((batch, max_s), I32)
+    llen = jnp.zeros((batch,), I32)
+    sc = jnp.zeros((), F32)
+    batch_inputs = [
+        ("in:feats", feats),
+        ("in:frame_len", flen),
+        ("in:labels", labels),
+        ("in:label_len", llen),
+    ]
+    batch_fields = ["feats", "frame_len", "labels", "label_len"]
+
+    for variant in spec["variants"]:
+        key = f"{task}_{variant}"
+        if variant == "bilstm":
+            lcfg = speech_mod.LstmConfig(n_mels=n_mels, hidden=128, n_layers=3, vocab=spec["kw"]["vocab"])
+            names = speech_mod.lstm_param_names(lcfg)
+            pd0 = speech_mod.init_lstm_params(lcfg)
+            fwd = lambda pd, f: speech_mod.lstm_forward(lcfg, pd, f)
+            opt = "adam"
+            cfg_json = asdict(lcfg)
+        else:
+            cfg = _lm_cfg(variant, **spec["kw"])
+            names = speech_mod.speech_param_names(cfg)
+            pd0 = speech_mod.init_speech_params(cfg, n_mels)
+            fwd = lambda pd, f, cfg=cfg: speech_mod.speech_forward(cfg, pd, f)
+            opt = "radam"
+            cfg_json = asdict(cfg)
+        plist = [pd0[n] for n in names]
+
+        write_ltw(
+            os.path.join(out_dir, f"{key}_init.ltw"),
+            [(n, np.asarray(a)) for n, a in zip(names, plist)],
+        )
+        manifest["models"][key] = {
+            "task": task,
+            "attention": variant,
+            "config": cfg_json,
+            "params": names,
+            "param_shapes": {n: list(pd0[n].shape) for n in names},
+            "weights": f"{key}_init.ltw",
+        }
+
+        def ctc_of(pd, feats, frame_len, labels, label_len, fwd=fwd):
+            logp = fwd(pd, feats)
+            return losses.ctc_loss(logp, frame_len, labels, label_len, blank=0)
+
+        in_names, out_names = train_io_names(names, batch_fields)
+        named_inputs = (
+            [(f"param:{nm}", p) for nm, p in zip(names, plist)]
+            + [(f"opt_m:{nm}", p) for nm, p in zip(names, plist)]
+            + [(f"opt_v:{nm}", p) for nm, p in zip(names, plist)]
+            + [("opt_step", sc), ("lr", sc)]
+            + batch_inputs
+        )
+        lower_artifact(
+            out_dir,
+            f"{key}_train",
+            make_train_step(names, ctc_of, opt, None),
+            named_inputs,
+            out_names,
+            manifest,
+            key,
+        )
+
+        def fwd_only(*args, fwd=fwd, names=names):
+            pd = dict(zip(names, args[: len(names)]))
+            return (fwd(pd, args[-1]),)
+
+        lower_artifact(
+            out_dir,
+            f"{key}_fwd",
+            fwd_only,
+            [(f"param:{nm}", p) for nm, p in zip(names, plist)] + [("in:feats", feats)],
+            ["out:logp"],
+            manifest,
+            key,
+        )
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tasks", default="copy,mnist,cifar,speech")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # merge into an existing manifest so per-task incremental runs compose
+    manifest = {"format": "hlo-text-v1", "models": {}, "artifacts": {}}
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            prev = json.load(f)
+        if prev.get("format") == manifest["format"]:
+            manifest = prev
+    for task in args.tasks.split(","):
+        spec = TASKS[task]
+        print(f"[aot] task {task}")
+        if spec["kind"] == "lm":
+            emit_lm_task(task, spec, args.out_dir, manifest)
+        else:
+            emit_ctc_task(task, spec, args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts, {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

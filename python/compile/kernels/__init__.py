@@ -1,0 +1,30 @@
+"""L1: Pallas kernels for linearized attention + baselines, and jnp oracles.
+
+Public surface:
+  linear_attention                — non-causal, O(N) (eq. 6)
+  causal_linear_attention         — Algorithm-1 scan kernel
+  causal_linear_attention_chunked — MXU-shaped chunked kernel
+  causal_linear_attention_cm      — chunked + constant-memory custom vjp
+  softmax_attention               — O(N^2) baseline kernel
+  feature_maps                    — phi(x) = elu(x)+1 and ablations
+  ref                             — pure-jnp oracles (tests only)
+"""
+
+from . import feature_maps, ref
+from .causal_linear_attention import (
+    causal_linear_attention,
+    causal_linear_attention_chunked,
+    causal_linear_attention_cm,
+)
+from .linear_attention import linear_attention
+from .softmax_attention import softmax_attention
+
+__all__ = [
+    "feature_maps",
+    "ref",
+    "linear_attention",
+    "causal_linear_attention",
+    "causal_linear_attention_chunked",
+    "causal_linear_attention_cm",
+    "softmax_attention",
+]

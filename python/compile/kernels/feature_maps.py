@@ -1,0 +1,49 @@
+"""Feature maps phi(.) for linearized attention (paper section 3.2).
+
+The paper's choice is phi(x) = elu(x) + 1 (eq. 7): strictly positive, so the
+similarity sim(q, k) = phi(q)^T phi(k) defines a valid attention kernel, and
+smooth for x < 0 (unlike relu) so gradients never vanish on the negative side.
+
+These are plain-jnp functions used both inside the Pallas kernels (they are
+jnp-traceable elementwise ops) and by the L2 model code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["elu_plus_one", "relu_plus_eps", "squared_relu", "get_feature_map"]
+
+
+def elu_plus_one(x: jax.Array) -> jax.Array:
+    """phi(x) = elu(x) + 1  (paper eq. 7). Output is in (0, inf)."""
+    return jax.nn.elu(x) + 1.0
+
+
+def relu_plus_eps(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """phi(x) = relu(x) + eps. Ablation map; zero gradient for x < 0."""
+    return jax.nn.relu(x) + eps
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    """phi(x) = relu(x)^2. Ablation map with sharper selectivity."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+_FEATURE_MAPS = {
+    "elu+1": elu_plus_one,
+    "relu+eps": relu_plus_eps,
+    "relu2": squared_relu,
+}
+
+
+def get_feature_map(name: str):
+    """Look up a feature map by name ('elu+1' is the paper's default)."""
+    try:
+        return _FEATURE_MAPS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown feature map {name!r}; available: {sorted(_FEATURE_MAPS)}"
+        ) from None

@@ -1,0 +1,139 @@
+"""Pallas kernel: non-causal linearized attention (paper eq. 4-6).
+
+The associativity trick: instead of materializing phi(Q) phi(K)^T (N x N),
+compute KV = phi(K)^T V (D x M) and Z = sum_j phi(K_j) (D) once, then every
+query costs O(D*M). Total O(N*D*M) time, O(D*M) extra memory.
+
+Kernel layout: inputs are reshaped to (B*H, N, *) outside the kernel and the
+grid iterates over the fused batch*heads axis — one program instance per
+(batch, head), the Pallas equivalent of the paper's CUDA block per (b, h).
+Each instance stages its (N, D)/(N, M) slices HBM->VMEM via BlockSpec.
+
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls; the
+kernel is still the real TPU schedule, just interpreted (see DESIGN.md
+section Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_maps import elu_plus_one
+
+EPS = 1e-6
+
+
+def _linear_attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One (batch, head) slice: q (1,N,D), k (1,N,D), v (1,N,M)."""
+    q = q_ref[0]  # (N, D) in VMEM
+    k = k_ref[0]
+    v = v_ref[0]
+    # KV-aggregation: phi(K)^T V is a (D, M) matmul — MXU-shaped on TPU.
+    kv = jnp.dot(k.T, v)  # (D, M)
+    z = jnp.sum(k, axis=0)  # (D,)
+    num = jnp.dot(q, kv)  # (N, M)
+    den = jnp.dot(q, z) + EPS  # (N,)
+    o_ref[0] = num / den[:, None]
+
+
+def _linear_attention_bwd_kernel(q_ref, k_ref, v_ref, g_ref, dq_ref, dk_ref, dv_ref):
+    """Backward of the non-causal kernel, O(N) time / O(D*M) extra memory.
+
+    With KV = phi(K)^T V, Z = sum_j phi(K_j), den_i = q_i.Z + eps,
+    Gn_i = g_i/den_i, h_i = -(g_i.out_i)/den_i and A = sum_i q_i Gn_i^T:
+        dq_i = KV Gn_i + h_i Z
+        dk_j = A v_j + sum_i h_i q_i
+        dv_j = A^T k_j
+    — the same associativity trick as the forward, applied to the vjp.
+    """
+    q = q_ref[0]  # (N, D)
+    k = k_ref[0]
+    v = v_ref[0]
+    g = g_ref[0]  # (N, M)
+    kv = jnp.dot(k.T, v)  # (D, M)
+    z = jnp.sum(k, axis=0)  # (D,)
+    den = jnp.dot(q, z) + EPS  # (N,)
+    num = jnp.dot(q, kv)  # (N, M)
+    out = num / den[:, None]
+    gn = g / den[:, None]
+    hh = -jnp.sum(g * out, axis=-1) / den  # (N,)
+    a = jnp.dot(q.T, gn)  # (D, M)
+    u = jnp.dot(hh, q)  # (D,)
+    dq_ref[0] = jnp.dot(gn, kv.T) + hh[:, None] * z[None, :]
+    dk_ref[0] = jnp.dot(v, a.T) + u[None, :]
+    dv_ref[0] = jnp.dot(k, a)
+
+
+@jax.custom_vjp
+def _linear_bh(q, k, v):
+    bh, n, d = q.shape
+    m = v.shape[-1]
+    return pl.pallas_call(
+        _linear_attention_kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, m), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _linear_bh_fwd(q, k, v):
+    return _linear_bh(q, k, v), (q, k, v)
+
+
+def _linear_bh_bwd(res, g):
+    q, k, v = res
+    bh, n, d = q.shape
+    m = v.shape[-1]
+    dq, dk, dv = pl.pallas_call(
+        _linear_attention_bwd_kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, n, m), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, g)
+    return dq, dk, dv
+
+
+_linear_bh.defvjp(_linear_bh_fwd, _linear_bh_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("feature_map",))
+def linear_attention(q, k, v, feature_map=True):
+    """Non-causal linear attention over f32[B, H, N, D] / [B, H, N, M].
+
+    If feature_map is True, applies phi(x) = elu(x)+1 to q and k first
+    (paper eq. 7); pass False when the caller has already mapped them.
+    """
+    b, h, n, d = q.shape
+    m = v.shape[-1]
+    if feature_map:
+        q = elu_plus_one(q)
+        k = elu_plus_one(k)
+    out = _linear_bh(
+        q.reshape(b * h, n, d), k.reshape(b * h, n, d), v.reshape(b * h, n, m)
+    )
+    return out.reshape(b, h, n, m)

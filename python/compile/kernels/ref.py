@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for every attention kernel in this repo.
+
+These implementations are deliberately naive and O(N^2) where applicable:
+they exist to be *obviously correct*, and the Pallas kernels are tested
+against them with assert_allclose (python/tests/test_kernel.py).
+
+Conventions (shared with the Pallas kernels):
+  q, k : f32[B, H, N, D]   already feature-mapped for the linear variants
+  v    : f32[B, H, N, M]
+  out  : f32[B, H, N, M]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def linear_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Non-causal linearized attention, eq. 4/5 of the paper.
+
+    Computed the *slow* way — materialize the N x N similarity matrix —
+    so that associativity-based fast paths can be checked against it.
+    """
+    sim = jnp.einsum("bhnd,bhmd->bhnm", q, k)  # phi(Q) phi(K)^T
+    num = jnp.einsum("bhnm,bhme->bhne", sim, v)
+    den = sim.sum(-1, keepdims=True)
+    return num / (den + EPS)
+
+
+def linear_attention_fast(q, k, v):
+    """Non-causal linearized attention via associativity (eq. 6): O(N)."""
+    kv = jnp.einsum("bhnd,bhne->bhde", k, v)  # phi(K)^T V
+    z = k.sum(axis=2)  # sum_j phi(K_j)
+    num = jnp.einsum("bhnd,bhde->bhne", q, kv)
+    den = jnp.einsum("bhnd,bhd->bhn", q, z)[..., None]
+    return num / (den + EPS)
+
+
+def causal_linear_attention(q, k, v):
+    """Causal linearized attention, eq. 9: masked quadratic form."""
+    n = q.shape[2]
+    sim = jnp.einsum("bhnd,bhmd->bhnm", q, k)
+    mask = jnp.tril(jnp.ones((n, n), dtype=sim.dtype))
+    sim = sim * mask
+    num = jnp.einsum("bhnm,bhme->bhne", sim, v)
+    den = sim.sum(-1, keepdims=True)
+    return num / (den + EPS)
+
+
+def causal_numerator(q, k, v):
+    """Numerator-only causal linear attention (Algorithm 1 'forward').
+
+    Vbar_i = phi(Q_i)^T S_i with S_i = sum_{j<=i} phi(K_j) V_j^T.
+    Used for gradient checks of the custom-vjp kernel.
+    """
+    n = q.shape[2]
+    sim = jnp.einsum("bhnd,bhmd->bhnm", q, k)
+    mask = jnp.tril(jnp.ones((n, n), dtype=sim.dtype))
+    return jnp.einsum("bhnm,bhme->bhne", sim * mask, v)
+
+
+def softmax_attention(q, k, v, causal: bool = False):
+    """Standard softmax attention (eq. 2), with optional causal mask."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        n = q.shape[2]
+        neg = jnp.finfo(logits.dtype).min
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        logits = jnp.where(mask, logits, neg)
+    weights = jnp.exp(logits - logits.max(-1, keepdims=True))
+    weights = weights / weights.sum(-1, keepdims=True)
+    return jnp.einsum("bhnm,bhme->bhne", weights, v)
+
+
+def recurrent_linear_attention(q, k, v):
+    """Eqs. 16-20: the RNN view, a python loop over timesteps.
+
+    Slowest but most literal transcription of section 3.4 — the oracle for
+    the rust LinearAttnState cell and for the scan/chunked Pallas kernels.
+    """
+    b, h, n, d = q.shape
+    m = v.shape[-1]
+    s = jnp.zeros((b, h, d, m), dtype=q.dtype)
+    z = jnp.zeros((b, h, d), dtype=q.dtype)
+    outs = []
+    for i in range(n):
+        ki = k[:, :, i, :]
+        vi = v[:, :, i, :]
+        qi = q[:, :, i, :]
+        s = s + ki[..., :, None] * vi[..., None, :]  # phi(K_i) V_i^T
+        z = z + ki
+        num = jnp.einsum("bhd,bhdm->bhm", qi, s)
+        den = jnp.einsum("bhd,bhd->bh", qi, z)[..., None]
+        outs.append(num / (den + EPS))
+    return jnp.stack(outs, axis=2)

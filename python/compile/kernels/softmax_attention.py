@@ -1,0 +1,119 @@
+"""Pallas kernel: standard softmax attention (paper eq. 2) — the baseline.
+
+O(N^2 D) compute, O(N^2) memory per (batch, head): the kernel materializes
+the full attention matrix, exactly the cost profile the paper's Figure 1
+measures against. Grid is one program instance per fused (batch, head).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_weights(q, k, causal: bool):
+    """Stable rowwise softmax of the (N, N) score matrix."""
+    n, d = q.shape
+    logits = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(d))  # (N, N)
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    w = jnp.exp(logits)
+    return w / w.sum(axis=-1, keepdims=True)
+
+
+def _make_softmax_kernel(causal: bool):
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        w = _softmax_weights(q_ref[0], k_ref[0], causal)
+        o_ref[0] = jnp.dot(w, v_ref[0])
+
+    return kernel
+
+
+def _make_softmax_bwd_kernel(causal: bool):
+    """Backward kernel; recomputes W (flash-style) instead of saving it.
+
+    The O(N^2) attention matrix still has to exist transiently — that IS
+    the softmax memory wall the paper measures in Figure 1.
+    """
+
+    def kernel(q_ref, k_ref, v_ref, g_ref, dq_ref, dk_ref, dv_ref):
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        g = g_ref[0]
+        d = q.shape[-1]
+        w = _softmax_weights(q, k, causal)  # (N, N)
+        dv_ref[0] = jnp.dot(w.T, g)
+        dw = jnp.dot(g, v.T)  # (N, N)
+        dlogits = w * (dw - jnp.sum(dw * w, axis=-1, keepdims=True))
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        dq_ref[0] = jnp.dot(dlogits, k) * scale
+        dk_ref[0] = jnp.dot(dlogits.T, q) * scale
+
+    return kernel
+
+
+def _bh_specs(n, d, m, count):
+    return [
+        pl.BlockSpec((1, n, dd), lambda i: (i, 0, 0)) for dd in ([d, d, m, m][:count])
+    ]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _softmax_bh(q, k, v, causal):
+    bh, n, d = q.shape
+    m = v.shape[-1]
+    return pl.pallas_call(
+        _make_softmax_kernel(causal),
+        grid=(bh,),
+        in_specs=_bh_specs(n, d, m, 3),
+        out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, m), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _softmax_bh_fwd(q, k, v, causal):
+    return _softmax_bh(q, k, v, causal), (q, k, v)
+
+
+def _softmax_bh_bwd(causal, res, g):
+    q, k, v = res
+    bh, n, d = q.shape
+    m = v.shape[-1]
+    dq, dk, dv = pl.pallas_call(
+        _make_softmax_bwd_kernel(causal),
+        grid=(bh,),
+        in_specs=_bh_specs(n, d, m, 4),
+        out_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, n, m), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, g)
+    return dq, dk, dv
+
+
+_softmax_bh.defvjp(_softmax_bh_fwd, _softmax_bh_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def softmax_attention(q, k, v, causal=False):
+    """Softmax attention over f32[B, H, N, D] / [B, H, N, M]."""
+    b, h, n, d = q.shape
+    m = v.shape[-1]
+    out = _softmax_bh(
+        q.reshape(b * h, n, d), k.reshape(b * h, n, d), v.reshape(b * h, n, m), causal
+    )
+    return out.reshape(b, h, n, m)

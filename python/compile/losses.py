@@ -1,0 +1,99 @@
+"""Training losses: cross-entropy, bits/dim, and a from-scratch CTC.
+
+CTC (Graves et al., 2006) is required by the paper's speech experiment
+(Table 3). jax ships no CTC in this environment's feature set we rely on,
+so the forward algorithm is implemented here directly: log-space alpha
+recursion over the blank-extended label sequence, scanned over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, mask: jax.Array | None = None):
+    """Mean token cross-entropy. logits [..., V], targets [...] int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def bits_per_dim(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """bits/dim for autoregressive image models: nats -> bits."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() / jnp.log(2.0)
+
+
+def _extend_labels(labels: jax.Array, blank: int) -> jax.Array:
+    """[a, b, c] -> [blank, a, blank, b, blank, c, blank]."""
+    s = labels.shape[-1]
+    ext = jnp.full(labels.shape[:-1] + (2 * s + 1,), blank, labels.dtype)
+    return ext.at[..., 1::2].set(labels)
+
+
+def ctc_loss(
+    log_probs: jax.Array,  # [B, T, V] log-softmaxed frame posteriors
+    frame_lengths: jax.Array,  # [B] int32, valid frames per sample
+    labels: jax.Array,  # [B, S] int32, padded with `blank`
+    label_lengths: jax.Array,  # [B] int32
+    blank: int = 0,
+) -> jax.Array:
+    """Mean negative log-likelihood under the CTC alignment lattice."""
+    b, t, v = log_probs.shape
+    ext = _extend_labels(labels, blank)  # [B, 2S+1]
+    u = ext.shape[-1]
+
+    # transition structure: alpha[s] <- alpha[s] + alpha[s-1] (+ alpha[s-2]
+    # when ext[s] != blank and ext[s] != ext[s-2])
+    ext_prev2 = jnp.concatenate(
+        [jnp.full(ext.shape[:-1] + (2,), -1, ext.dtype), ext[..., :-2]], axis=-1
+    )
+    allow_skip = (ext != blank) & (ext != ext_prev2)  # [B, U]
+
+    def emit(lp_t):  # gather per-state emission log-probs, [B, U]
+        return jnp.take_along_axis(lp_t, ext, axis=-1)
+
+    alpha0 = jnp.full((b, u), NEG_INF)
+    alpha0 = alpha0.at[:, 0].set(emit(log_probs[:, 0])[:, 0])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(label_lengths > 0, emit(log_probs[:, 0])[:, 1], NEG_INF)
+    )
+
+    def step(alpha, lp_t):
+        stay = alpha
+        adv1 = jnp.concatenate([jnp.full((b, 1), NEG_INF), alpha[:, :-1]], axis=-1)
+        adv2 = jnp.concatenate([jnp.full((b, 2), NEG_INF), alpha[:, :-2]], axis=-1)
+        adv2 = jnp.where(allow_skip, adv2, NEG_INF)
+        merged = jnp.logaddexp(jnp.logaddexp(stay, adv1), adv2)
+        return merged + emit(lp_t), None
+
+    def scan_step(carry, inp):
+        alpha, t_idx = carry
+        lp_t = inp
+        new_alpha, _ = step(alpha, lp_t)
+        # freeze alpha past each sample's frame_length
+        active = (t_idx < frame_lengths)[:, None]
+        alpha = jnp.where(active, new_alpha, alpha)
+        return (alpha, t_idx + 1), None
+
+    (alpha, _), _ = jax.lax.scan(scan_step, (alpha0, jnp.int32(1)), log_probs[:, 1:].swapaxes(0, 1))
+
+    # final states: last blank (2*len) and last label (2*len - 1)
+    idx_last = 2 * label_lengths
+    idx_prev = jnp.maximum(2 * label_lengths - 1, 0)
+    ll = jnp.logaddexp(
+        jnp.take_along_axis(alpha, idx_last[:, None], axis=-1)[:, 0],
+        jnp.where(
+            label_lengths > 0,
+            jnp.take_along_axis(alpha, idx_prev[:, None], axis=-1)[:, 0],
+            NEG_INF,
+        ),
+    )
+    return -(ll.mean())

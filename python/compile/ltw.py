@@ -1,0 +1,67 @@
+"""LTW1 — the tensor-bundle interchange format between python and rust.
+
+A deliberately boring little-endian binary format (no pickle, no numpy
+headers) so the rust side (`rust/src/weights.rs`) can read it with nothing
+but std::io:
+
+    b"LTW1"
+    u32  n_tensors
+    repeat n_tensors:
+        u32  name_len,  name (utf-8)
+        u8   dtype      (0 = f32, 1 = i32)
+        u32  ndim
+        u32  dims[ndim]
+        raw  data       (little-endian, C order)
+
+Used for initial model parameters (aot.py), checkpoints written back by the
+rust trainer, and test fixtures.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Iterable
+
+import numpy as np
+
+MAGIC = b"LTW1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_IDS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_ltw(path: str, tensors: Iterable[tuple[str, np.ndarray]]) -> None:
+    tensors = list(tensors)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_IDS:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPE_IDS[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_ltw(path: str) -> list[tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: not an LTW1 file")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (dt,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(_DTYPES[dt]).newbyteorder("<")
+            count = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(count * dtype.itemsize), dtype=dtype)
+            out.append((name, arr.reshape(dims).astype(_DTYPES[dt])))
+    return out

@@ -1,0 +1,348 @@
+"""L2: the transformer language model, built on the L1 Pallas kernels.
+
+One model definition with a pluggable attention family — exactly the
+paper's experimental setup:
+
+  "linear"  — causal linear attention (Pallas constant-memory kernel)
+  "softmax" — full softmax attention  (Pallas baseline kernel)
+  "lsh"     — Reformer-style LSH attention (lsh_attention.py)
+
+plus the two inference formulations the paper contrasts:
+
+  forward(...)        — parallel training/eval pass over a full sequence
+  prefill(...)        — parallel pass that *also* returns the per-layer RNN
+                        states (S, Z) at the end of the prompt (eqs 10-11)
+  decode_step(...)    — eqs 16-20: one autoregressive step in O(1) time and
+                        memory, carrying (s, z)
+  decode_step_kv(...) — "stateful-softmax" baseline (supplementary C.1):
+                        softmax decode with a KV cache, O(N) per step
+
+Parameters are a flat {name: array} dict; `param_names(cfg)` fixes the
+canonical ordering that aot.py records in the manifest and the rust side
+reuses. Everything is f32 and shape-static so it lowers to clean HLO.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lsh_attention as lsh_mod
+from .kernels import (
+    causal_linear_attention_cm,
+    linear_attention,
+    softmax_attention,
+)
+from .kernels.feature_maps import elu_plus_one
+
+EPS = 1e-6
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 12
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    max_len: int = 128
+    d_ff: int = 512
+    attention: str = "linear"  # linear | softmax | lsh
+    chunk: int = 16  # causal linear attention chunk size
+    lsh_rounds: int = 1
+    lsh_buckets: int = 16
+    lsh_chunk: int = 32
+    causal: bool = True  # False => encoder (speech/CTC) stack
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Canonical parameter order — the contract with the rust trainer."""
+    names = ["embed.tok", "embed.pos"]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}"
+        names += [
+            f"{p}.ln1.g",
+            f"{p}.ln1.b",
+            f"{p}.attn.wq",
+            f"{p}.attn.wk",
+            f"{p}.attn.wv",
+            f"{p}.attn.wo",
+            f"{p}.ln2.g",
+            f"{p}.ln2.b",
+            f"{p}.ff.w1",
+            f"{p}.ff.b1",
+            f"{p}.ff.w2",
+            f"{p}.ff.b2",
+        ]
+    names += ["final_ln.g", "final_ln.b", "head.w", "head.b"]
+    if cfg.attention == "lsh":
+        names.append("lsh.rotations")
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init (numpy RNG: artifact builds stay deterministic)."""
+    rng = np.random.default_rng(seed)
+    e, h, dh, ff, v = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.vocab
+
+    def dense(shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    p: dict[str, jnp.ndarray] = {
+        "embed.tok": dense((v, e), 0.02),
+        "embed.pos": dense((cfg.max_len, e), 0.02),
+        "final_ln.g": jnp.ones((e,), jnp.float32),
+        "final_ln.b": jnp.zeros((e,), jnp.float32),
+        "head.w": dense((e, v)),
+        "head.b": jnp.zeros((v,), jnp.float32),
+    }
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}"
+        p[f"{pre}.ln1.g"] = jnp.ones((e,), jnp.float32)
+        p[f"{pre}.ln1.b"] = jnp.zeros((e,), jnp.float32)
+        p[f"{pre}.attn.wq"] = dense((e, e))
+        p[f"{pre}.attn.wk"] = dense((e, e))
+        p[f"{pre}.attn.wv"] = dense((e, e))
+        p[f"{pre}.attn.wo"] = dense((e, e))
+        p[f"{pre}.ln2.g"] = jnp.ones((e,), jnp.float32)
+        p[f"{pre}.ln2.b"] = jnp.zeros((e,), jnp.float32)
+        p[f"{pre}.ff.w1"] = dense((e, ff))
+        p[f"{pre}.ff.b1"] = jnp.zeros((ff,), jnp.float32)
+        p[f"{pre}.ff.w2"] = dense((ff, e))
+        p[f"{pre}.ff.b2"] = jnp.zeros((e,), jnp.float32)
+    if cfg.attention == "lsh":
+        key = jax.random.PRNGKey(seed)
+        p["lsh.rotations"] = lsh_mod.make_rotations(
+            key, cfg.lsh_rounds, cfg.d_head, cfg.lsh_buckets
+        )
+    return p
+
+
+def params_to_list(cfg: ModelConfig, params: dict) -> list[jnp.ndarray]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, plist) -> dict[str, jnp.ndarray]:
+    return dict(zip(param_names(cfg), plist))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _split_heads(x, n_heads):  # [B,N,E] -> [B,H,N,Dh]
+    b, n, e = x.shape
+    return x.reshape(b, n, n_heads, e // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # [B,H,N,Dh] -> [B,N,E]
+    b, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
+
+
+def _attention(cfg: ModelConfig, params, pre, x):
+    """Multi-head attention of the configured family over [B, N, E]."""
+    h = cfg.n_heads
+    q = _split_heads(x @ params[f"{pre}.attn.wq"], h)
+    v = _split_heads(x @ params[f"{pre}.attn.wv"], h)
+    if cfg.attention == "lsh":
+        # Reformer shares queries and keys
+        out = lsh_mod.lsh_attention(
+            q, v, params["lsh.rotations"], chunk=cfg.lsh_chunk, causal=cfg.causal
+        )
+    else:
+        k = _split_heads(x @ params[f"{pre}.attn.wk"], h)
+        if cfg.attention == "linear":
+            if cfg.causal:
+                out = causal_linear_attention_cm(q, k, v, chunk=cfg.chunk)
+            else:
+                out = linear_attention(q, k, v)
+        elif cfg.attention == "softmax":
+            out = softmax_attention(q, k, v, causal=cfg.causal)
+        else:
+            raise ValueError(f"unknown attention {cfg.attention!r}")
+    return _merge_heads(out) @ params[f"{pre}.attn.wo"]
+
+
+def _block(cfg, params, pre, x):
+    """Pre-norm transformer block (eq. 1 with the now-standard norm order)."""
+    x = x + _attention(cfg, params, pre, layer_norm(x, params[f"{pre}.ln1.g"], params[f"{pre}.ln1.b"]))
+    hdd = layer_norm(x, params[f"{pre}.ln2.g"], params[f"{pre}.ln2.b"])
+    hdd = jax.nn.gelu(hdd @ params[f"{pre}.ff.w1"] + params[f"{pre}.ff.b1"])
+    return x + hdd @ params[f"{pre}.ff.w2"] + params[f"{pre}.ff.b2"]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / teacher-forced eval)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Causal LM logits: tokens [B, N] int32 -> [B, N, vocab]."""
+    b, n = tokens.shape
+    x = params["embed.tok"][tokens] + params["embed.pos"][:n][None]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params, f"layer{i}", x)
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    return x @ params["head.w"] + params["head.b"]
+
+
+def encode(cfg: ModelConfig, params: dict, feats: jax.Array, in_proj: jax.Array) -> jax.Array:
+    """Non-causal encoder for CTC speech: feats [B, T, F] -> [B, T, vocab]."""
+    b, t, _ = feats.shape
+    x = feats @ in_proj + params["embed.pos"][:t][None]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params, f"layer{i}", x)
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    return x @ params["head.w"] + params["head.b"]
+
+
+# ---------------------------------------------------------------------------
+# recurrent decode (section 3.4: transformers are RNNs)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    """Zero RNN state: s [L,B,H,Dh,Dh] (eq. 16), z [L,B,H,Dh] (eq. 17)."""
+    l, b, h, d = cfg.n_layers, batch, cfg.n_heads, cfg.d_head
+    return (
+        jnp.zeros((l, b, h, d, d), jnp.float32),
+        jnp.zeros((l, b, h, d), jnp.float32),
+    )
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, s, z):
+    """One RNN step (eqs 18-20). token [B] int32, pos [B] int32.
+
+    Positions are per-slot so the rust coordinator can continuously batch
+    requests that are at different depths of their sequences.
+    Returns (logits [B, vocab], s', z'). Cost is independent of pos — the
+    paper's O(1)-per-token claim lives here.
+    """
+    b = token.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["embed.tok"][token] + params["embed.pos"][pos]  # [B, E]
+    new_s, new_z = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}"
+        xi = layer_norm(x, params[f"{pre}.ln1.g"], params[f"{pre}.ln1.b"])
+        q = elu_plus_one((xi @ params[f"{pre}.attn.wq"]).reshape(b, h, dh))
+        k = elu_plus_one((xi @ params[f"{pre}.attn.wk"]).reshape(b, h, dh))
+        v = (xi @ params[f"{pre}.attn.wv"]).reshape(b, h, dh)
+        si = s[i] + k[..., :, None] * v[..., None, :]  # eq. 18
+        zi = z[i] + k  # eq. 19
+        num = jnp.einsum("bhd,bhdm->bhm", q, si)
+        den = jnp.einsum("bhd,bhd->bh", q, zi)[..., None] + EPS
+        attn = (num / den).reshape(b, h * dh) @ params[f"{pre}.attn.wo"]
+        x = x + attn
+        xf = layer_norm(x, params[f"{pre}.ln2.g"], params[f"{pre}.ln2.b"])
+        xf = jax.nn.gelu(xf @ params[f"{pre}.ff.w1"] + params[f"{pre}.ff.b1"])
+        x = x + xf @ params[f"{pre}.ff.w2"] + params[f"{pre}.ff.b2"]
+        new_s.append(si)
+        new_z.append(zi)
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    logits = x @ params["head.w"] + params["head.b"]
+    return logits, jnp.stack(new_s), jnp.stack(new_z)
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """Parallel prompt ingestion: full forward + final (S, Z) per layer.
+
+    Returns (logits [B, N, vocab], s, z) where (s, z) equal the state
+    decode_step would have reached after consuming `tokens` one by one —
+    tested in test_model.py::test_prefill_decode_equivalence.
+    """
+    b, n = tokens.shape
+    h = cfg.n_heads
+    x = params["embed.tok"][tokens] + params["embed.pos"][:n][None]
+    ss, zs = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}"
+        xi = layer_norm(x, params[f"{pre}.ln1.g"], params[f"{pre}.ln1.b"])
+        q = _split_heads(xi @ params[f"{pre}.attn.wq"], h)
+        k = _split_heads(xi @ params[f"{pre}.attn.wk"], h)
+        v = _split_heads(xi @ params[f"{pre}.attn.wv"], h)
+        out = causal_linear_attention_cm(q, k, v, chunk=cfg.chunk)
+        km = elu_plus_one(k)
+        ss.append(jnp.einsum("bhnd,bhnm->bhdm", km, v))  # S_N  (eq. 10)
+        zs.append(km.sum(axis=2))  # Z_N  (eq. 11)
+        x = x + _merge_heads(out) @ params[f"{pre}.attn.wo"]
+        xf = layer_norm(x, params[f"{pre}.ln2.g"], params[f"{pre}.ln2.b"])
+        xf = jax.nn.gelu(xf @ params[f"{pre}.ff.w1"] + params[f"{pre}.ff.b1"])
+        x = x + xf @ params[f"{pre}.ff.w2"] + params[f"{pre}.ff.b2"]
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    logits = x @ params["head.w"] + params["head.b"]
+    return logits, jnp.stack(ss), jnp.stack(zs)
+
+
+# ---------------------------------------------------------------------------
+# stateful-softmax baseline (supplementary C.1): KV-cache decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int):
+    l, b, h, n, d = cfg.n_layers, batch, cfg.n_heads, cfg.max_len, cfg.d_head
+    return (
+        jnp.zeros((l, b, h, n, d), jnp.float32),
+        jnp.zeros((l, b, h, n, d), jnp.float32),
+    )
+
+
+def decode_step_kv(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
+    """Softmax decode with cached keys/values. O(pos) work per step.
+
+    token [B] int32, pos [B] int32 (per-slot, like decode_step). The
+    paper's supplementary shows this 'recurrent view of softmax' is much
+    faster than re-running the full forward, but still scales with the
+    sequence — the contrast that makes Table 4 interesting.
+    """
+    b = token.shape[0]
+    h, dh, nmax = cfg.n_heads, cfg.d_head, cfg.max_len
+    x = params["embed.tok"][token] + params["embed.pos"][pos]  # [B, E]
+    positions = jnp.arange(nmax)[None, :]  # [1, Nmax]
+    valid = (positions <= pos[:, None])[:, None, :]  # [B, 1, Nmax]
+    onehot = (positions == pos[:, None]).astype(jnp.float32)  # [B, Nmax]
+    oh = onehot[:, None, :, None]  # [B, 1, Nmax, 1] broadcast over heads/dim
+    new_kc, new_vc = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}"
+        xi = layer_norm(x, params[f"{pre}.ln1.g"], params[f"{pre}.ln1.b"])
+        q = (xi @ params[f"{pre}.attn.wq"]).reshape(b, h, dh)
+        k = (xi @ params[f"{pre}.attn.wk"]).reshape(b, h, dh)
+        v = (xi @ params[f"{pre}.attn.wv"]).reshape(b, h, dh)
+        # per-row scatter at each slot's own position (one-hot blend)
+        kc = k_cache[i] * (1.0 - oh) + k[:, :, None, :] * oh
+        vc = v_cache[i] * (1.0 - oh) + v[:, :, None, :] * oh
+        logits = jnp.einsum("bhd,bhnd->bhn", q, kc) / jnp.sqrt(jnp.float32(dh))
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhn,bhnd->bhd", w, vc).reshape(b, h * dh)
+        x = x + attn @ params[f"{pre}.attn.wo"]
+        xf = layer_norm(x, params[f"{pre}.ln2.g"], params[f"{pre}.ln2.b"])
+        xf = jax.nn.gelu(xf @ params[f"{pre}.ff.w1"] + params[f"{pre}.ff.b1"])
+        x = x + xf @ params[f"{pre}.ff.w2"] + params[f"{pre}.ff.b2"]
+        new_kc.append(kc)
+        new_vc.append(vc)
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    logits = x @ params["head.w"] + params["head.b"]
+    return logits, jnp.stack(new_kc), jnp.stack(new_vc)

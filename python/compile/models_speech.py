@@ -1,0 +1,138 @@
+"""L2 speech models for the CTC experiment (paper section 4.3, Table 3).
+
+Two encoder families over mel-filterbank frames [B, T, F]:
+
+  * transformer encoder (non-causal) — reuses model.py blocks with the
+    configured attention (linear / softmax / lsh), plus an input projection.
+  * Bi-LSTM — the paper's recurrent baseline (3 layers in the paper),
+    implemented from scratch with lax.scan.
+
+Both emit frame-level log-posteriors over phonemes+blank for CTC.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_mod
+from .model import ModelConfig, layer_norm
+
+
+# ---------------------------------------------------------------------------
+# transformer encoder
+# ---------------------------------------------------------------------------
+
+
+def speech_param_names(cfg: ModelConfig) -> list[str]:
+    """Transformer-encoder params: input projection replaces the token embed."""
+    names = ["in_proj.w", "in_proj.b"]
+    names += [n for n in model_mod.param_names(cfg) if n != "embed.tok"]
+    return names
+
+
+def init_speech_params(cfg: ModelConfig, n_mels: int, seed: int = 0):
+    rng = np.random.default_rng(seed + 1000)
+    base = model_mod.init_params(cfg, seed)
+    del base["embed.tok"]
+    base["in_proj.w"] = jnp.asarray(
+        rng.normal(0.0, 1.0 / np.sqrt(n_mels), size=(n_mels, cfg.d_model)), jnp.float32
+    )
+    base["in_proj.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return base
+
+
+def speech_forward(cfg: ModelConfig, params: dict, feats: jax.Array) -> jax.Array:
+    """feats [B, T, F] -> log-softmax phoneme posteriors [B, T, vocab]."""
+    b, t, _ = feats.shape
+    x = feats @ params["in_proj.w"] + params["in_proj.b"]
+    x = x + params["embed.pos"][:t][None]
+    for i in range(cfg.n_layers):
+        x = model_mod._block(cfg, params, f"layer{i}", x)
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    logits = x @ params["head.w"] + params["head.b"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Bi-LSTM baseline
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LstmConfig:
+    n_mels: int = 40
+    hidden: int = 128
+    n_layers: int = 3
+    vocab: int = 41  # 40 phonemes + blank
+
+
+def lstm_param_names(cfg: LstmConfig) -> list[str]:
+    names = []
+    for i in range(cfg.n_layers):
+        for d in ("fwd", "bwd"):
+            names += [f"lstm{i}.{d}.wx", f"lstm{i}.{d}.wh", f"lstm{i}.{d}.b"]
+    names += ["head.w", "head.b"]
+    return names
+
+
+def init_lstm_params(cfg: LstmConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed + 2000)
+    h = cfg.hidden
+    p = {}
+    for i in range(cfg.n_layers):
+        d_in = cfg.n_mels if i == 0 else 2 * h
+        for d in ("fwd", "bwd"):
+            p[f"lstm{i}.{d}.wx"] = jnp.asarray(
+                rng.normal(0, 1.0 / np.sqrt(d_in), (d_in, 4 * h)), jnp.float32
+            )
+            p[f"lstm{i}.{d}.wh"] = jnp.asarray(
+                rng.normal(0, 1.0 / np.sqrt(h), (h, 4 * h)), jnp.float32
+            )
+            # forget-gate bias = 1 (standard LSTM trick)
+            b = np.zeros(4 * h, np.float32)
+            b[h : 2 * h] = 1.0
+            p[f"lstm{i}.{d}.b"] = jnp.asarray(b)
+    p["head.w"] = jnp.asarray(
+        rng.normal(0, 1.0 / np.sqrt(2 * h), (2 * h, cfg.vocab)), jnp.float32
+    )
+    p["head.b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return p
+
+
+def _lstm_scan(x, wx, wh, b, reverse: bool):
+    """Single-direction LSTM over [B, T, D] -> [B, T, H]."""
+    bsz = x.shape[0]
+    h_dim = wh.shape[0]
+    xs = x.swapaxes(0, 1)  # [T, B, D]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ wx + h @ wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        c = f * c + i * jnp.tanh(g)
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((bsz, h_dim), x.dtype), jnp.zeros((bsz, h_dim), x.dtype))
+    _, hs = jax.lax.scan(step, init, xs, reverse=reverse)
+    return hs.swapaxes(0, 1)
+
+
+def lstm_forward(cfg: LstmConfig, params: dict, feats: jax.Array) -> jax.Array:
+    """Bi-LSTM encoder: feats [B, T, F] -> log posteriors [B, T, vocab]."""
+    x = feats
+    for i in range(cfg.n_layers):
+        f = _lstm_scan(
+            x, params[f"lstm{i}.fwd.wx"], params[f"lstm{i}.fwd.wh"], params[f"lstm{i}.fwd.b"], False
+        )
+        b = _lstm_scan(
+            x, params[f"lstm{i}.bwd.wx"], params[f"lstm{i}.bwd.wh"], params[f"lstm{i}.bwd.b"], True
+        )
+        x = jnp.concatenate([f, b], axis=-1)
+    logits = x @ params["head.w"] + params["head.b"]
+    return jax.nn.log_softmax(logits, axis=-1)

@@ -1,0 +1,106 @@
+"""Pure-jax optimizers: RAdam (the paper's optimizer) and Adam.
+
+RAdam (Liu et al., 2019) rectifies Adam's early-training variance: until the
+approximated SMA length rho_t exceeds the threshold, the step falls back to
+(momentum-only) SGD; after that the usual Adam update is scaled by the
+rectification term r_t. The paper trains every transformer with RAdam.
+
+State layout is a pair of per-parameter trees (m, v) plus a scalar step
+count — flattened in a fixed order by aot.py so the rust trainer can carry
+the state as opaque literals between train_step executions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    m: list  # first-moment EMAs, one per param leaf
+    v: list  # second-moment EMAs
+    step: jax.Array  # scalar f32 (kept float so every literal is f32)
+
+
+def init_opt_state(params: list[jax.Array]) -> OptState:
+    return OptState(
+        m=[jnp.zeros_like(p) for p in params],
+        v=[jnp.zeros_like(p) for p in params],
+        step=jnp.zeros((), jnp.float32),
+    )
+
+
+def radam_update(
+    params: list[jax.Array],
+    grads: list[jax.Array],
+    state: OptState,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[list[jax.Array], OptState]:
+    """One RAdam step over a flat list of parameter leaves."""
+    t = state.step + 1.0
+    rho_inf = 2.0 / (1.0 - b2) - 1.0
+    b2t = jnp.power(b2, t)
+    b1t = jnp.power(b1, t)
+    rho_t = rho_inf - 2.0 * t * b2t / (1.0 - b2t)
+
+    rect = jnp.sqrt(
+        jnp.clip(
+            ((rho_t - 4.0) * (rho_t - 2.0) * rho_inf)
+            / jnp.maximum((rho_inf - 4.0) * (rho_inf - 2.0) * rho_t, 1e-8),
+            0.0,
+        )
+    )
+    use_rect = rho_t > 5.0
+
+    new_m, new_v, new_p = [], [], []
+    for p, g, m, v in zip(params, grads, state.m, state.v):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * (g * g)
+        m_hat = m / (1.0 - b1t)
+        v_hat = jnp.sqrt(v / (1.0 - b2t)) + eps
+        step_rect = lr * rect * m_hat / v_hat
+        step_sgd = lr * m_hat
+        new_p.append(p - jnp.where(use_rect, step_rect, step_sgd))
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, OptState(new_m, new_v, t)
+
+
+def adam_update(
+    params: list[jax.Array],
+    grads: list[jax.Array],
+    state: OptState,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[list[jax.Array], OptState]:
+    """Vanilla Adam, used by the Bi-LSTM baseline (paper section 4.3)."""
+    t = state.step + 1.0
+    b1t = jnp.power(b1, t)
+    b2t = jnp.power(b2, t)
+    new_m, new_v, new_p = [], [], []
+    for p, g, m, v in zip(params, grads, state.m, state.v):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * (g * g)
+        m_hat = m / (1.0 - b1t)
+        v_hat = v / (1.0 - b2t)
+        new_p.append(p - lr * m_hat / (jnp.sqrt(v_hat) + eps))
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, OptState(new_m, new_v, t)
+
+
+def clip_by_global_norm(grads: list[jax.Array], max_norm: float) -> list[jax.Array]:
+    """Global-norm gradient clipping (stabilizes the lr=1e-3 copy task)."""
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-8))
+    return [g * scale for g in grads]
+
+
+UPDATES = {"radam": radam_update, "adam": adam_update}

@@ -1,0 +1,125 @@
+"""AOT pipeline tests: manifest coherence + a real train-step execution.
+
+These run the *lowered* computations through jax (the same HLO the rust
+runtime loads), checking that the flat-argument calling convention the
+manifest promises actually trains.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, losses, model as M
+from compile.model import ModelConfig
+from compile.optimizers import OptState, init_opt_state
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def small_cfg(attention="linear"):
+    return ModelConfig(
+        vocab=11, d_model=32, n_heads=2, n_layers=2, max_len=32, d_ff=64,
+        chunk=16, attention=attention,
+    )
+
+
+class TestTrainStepConvention:
+    @pytest.mark.parametrize("attention", ["linear", "softmax"])
+    def test_flat_train_step_learns(self, attention):
+        cfg = small_cfg(attention)
+        names = M.param_names(cfg)
+        params = M.init_params(cfg, 0)
+        plist = M.params_to_list(cfg, params)
+
+        def lm_loss(pd, inputs, targets, mask):
+            return losses.cross_entropy(M.forward(cfg, pd, inputs), targets, mask)
+
+        step_fn = jax.jit(aot.make_train_step(names, lm_loss, "radam", None))
+
+        rng = np.random.default_rng(0)
+        # learnable toy data: next token = current token (shift task)
+        seq = rng.integers(0, cfg.vocab, size=(8, cfg.max_len + 1))
+        inputs = jnp.asarray(seq[:, :-1], jnp.int32)
+        targets = jnp.asarray(inputs)  # predict the input token itself
+        mask = jnp.ones_like(inputs, jnp.float32)
+
+        st = init_opt_state(plist)
+        m, v, step = st.m, st.v, st.step
+        first = None
+        for it in range(60):
+            out = step_fn(*plist, *m, *v, step, jnp.float32(1e-2), inputs, targets, mask)
+            loss = float(out[0])
+            p_count = len(names)
+            plist = list(out[1 : 1 + p_count])
+            m = list(out[1 + p_count : 1 + 2 * p_count])
+            v = list(out[1 + 2 * p_count : 1 + 3 * p_count])
+            step = out[-1]
+            if first is None:
+                first = loss
+        assert loss < first * 0.25, f"train step did not learn: {first} -> {loss}"
+        assert float(step) == 60.0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self, manifest):
+        for name, art in manifest["artifacts"].items():
+            path = os.path.join(ARTIFACTS, art["file"])
+            assert os.path.exists(path), f"{name}: missing {art['file']}"
+            assert os.path.getsize(path) > 1000
+
+    def test_every_model_weight_bundle_exists_and_matches_shapes(self, manifest):
+        from compile.ltw import read_ltw
+
+        for key, model in manifest["models"].items():
+            path = os.path.join(ARTIFACTS, model["weights"])
+            assert os.path.exists(path), f"{key}: missing weights"
+            tensors = dict(read_ltw(path))
+            assert sorted(tensors) == sorted(model["params"])
+            for n, shape in model["param_shapes"].items():
+                assert list(tensors[n].shape) == shape, (key, n)
+
+    def test_train_artifact_io_symmetry(self, manifest):
+        # outputs of a train step must mirror its param/opt inputs so the
+        # rust trainer can feed them straight back in
+        for name, art in manifest["artifacts"].items():
+            if not name.endswith("_train"):
+                continue
+            ins = [i["name"] for i in art["inputs"]]
+            outs = [o["name"] for o in art["outputs"]]
+            state_in = [n for n in ins if n.split(":")[0] in ("param", "opt_m", "opt_v")] + ["opt_step"]
+            assert outs[0] == "loss"
+            assert outs[1:] == state_in, name
+            in_shapes = {i["name"]: i["shape"] for i in art["inputs"]}
+            out_shapes = {o["name"]: o["shape"] for o in art["outputs"]}
+            for n in state_in:
+                assert in_shapes[n] == out_shapes[n], (name, n)
+
+    def test_decode_artifact_state_roundtrip(self, manifest):
+        for name, art in manifest["artifacts"].items():
+            if "_decode_linear_" not in name:
+                continue
+            ins = {i["name"]: i["shape"] for i in art["inputs"]}
+            outs = {o["name"]: o["shape"] for o in art["outputs"]}
+            assert ins["state:s"] == outs["state:s"], name
+            assert ins["state:z"] == outs["state:z"], name
+
+    def test_hlo_text_parses_superficially(self, manifest):
+        # HLO text round-trip sanity: ENTRY present, parameter count matches
+        for name, art in list(manifest["artifacts"].items())[:6]:
+            with open(os.path.join(ARTIFACTS, art["file"])) as f:
+                text = f.read()
+            assert "ENTRY" in text, name
+            assert text.count("parameter(") >= len(art["inputs"]), name

@@ -1,0 +1,280 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+This is the core correctness signal of the compile path — hypothesis sweeps
+shapes, pytest parametrizes kernel variants, and the constant-memory custom
+vjp is checked against jax.grad of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from compile.kernels.feature_maps import elu_plus_one, get_feature_map
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def rand_qkv(seed, b, h, n, d, m, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, n, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, h, n, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, h, n, m)), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape parity checks
+# ---------------------------------------------------------------------------
+
+
+class TestLinearAttention:
+    def test_matches_reference(self):
+        q, k, v = rand_qkv(0, 2, 3, 64, 16, 24)
+        got = K.linear_attention(q, k, v)
+        want = ref.linear_attention(elu_plus_one(q), elu_plus_one(k), v)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_fast_reference_matches_slow_reference(self):
+        q, k, v = rand_qkv(1, 1, 2, 96, 8, 8)
+        qm, km = elu_plus_one(q), elu_plus_one(k)
+        np.testing.assert_allclose(
+            ref.linear_attention_fast(qm, km, v),
+            ref.linear_attention(qm, km, v),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+    def test_prefeatured_inputs(self):
+        # feature_map=False must consume q,k verbatim
+        q, k, v = rand_qkv(2, 1, 1, 32, 8, 8)
+        qm, km = elu_plus_one(q), elu_plus_one(k)
+        got = K.linear_attention(qm, km, v, feature_map=False)
+        want = ref.linear_attention(qm, km, v)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_output_is_convex_combination_scale(self):
+        # with positive phi, outputs are weighted averages of V rows:
+        # each output must lie within [min, max] of V per channel.
+        q, k, v = rand_qkv(3, 1, 1, 48, 8, 4)
+        out = np.asarray(K.linear_attention(q, k, v))[0, 0]
+        vn = np.asarray(v)[0, 0]
+        assert out.min() >= vn.min() - 1e-4
+        assert out.max() <= vn.max() + 1e-4
+
+
+CAUSAL_VARIANTS = [
+    ("scan", lambda q, k, v: K.causal_linear_attention(q, k, v)),
+    ("chunked", lambda q, k, v: K.causal_linear_attention_chunked(q, k, v, chunk=32)),
+    ("cm", lambda q, k, v: K.causal_linear_attention_cm(q, k, v, chunk=32)),
+]
+
+
+class TestCausalLinearAttention:
+    @pytest.mark.parametrize("name,fn", CAUSAL_VARIANTS, ids=lambda x: x if isinstance(x, str) else "")
+    def test_matches_reference(self, name, fn):
+        q, k, v = rand_qkv(4, 2, 2, 64, 16, 16)
+        want = ref.causal_linear_attention(elu_plus_one(q), elu_plus_one(k), v)
+        np.testing.assert_allclose(fn(q, k, v), want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("name,fn", CAUSAL_VARIANTS, ids=lambda x: x if isinstance(x, str) else "")
+    def test_matches_rnn_view(self, name, fn):
+        # section 3.4: the causal kernel must equal the explicit RNN loop
+        q, k, v = rand_qkv(5, 1, 2, 32, 8, 8)
+        want = ref.recurrent_linear_attention(elu_plus_one(q), elu_plus_one(k), v)
+        np.testing.assert_allclose(fn(q, k, v), want, rtol=RTOL, atol=ATOL)
+
+    def test_causality(self):
+        # perturbing position j must not change outputs at positions < j
+        q, k, v = rand_qkv(6, 1, 1, 64, 8, 8)
+        base = np.asarray(K.causal_linear_attention(q, k, v))
+        j = 40
+        k2 = k.at[0, 0, j].add(3.0)
+        v2 = v.at[0, 0, j].add(-2.0)
+        pert = np.asarray(K.causal_linear_attention(q, k2, v2))
+        np.testing.assert_allclose(base[0, 0, :j], pert[0, 0, :j], rtol=1e-6, atol=1e-6)
+        assert np.abs(base[0, 0, j:] - pert[0, 0, j:]).max() > 1e-4
+
+    def test_chunk_size_invariance(self):
+        q, k, v = rand_qkv(7, 1, 2, 128, 8, 8)
+        a = K.causal_linear_attention_chunked(q, k, v, chunk=16)
+        b = K.causal_linear_attention_chunked(q, k, v, chunk=64)
+        np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+    def test_rejects_misaligned_chunk(self):
+        q, k, v = rand_qkv(8, 1, 1, 48, 8, 8)
+        with pytest.raises(ValueError):
+            K.causal_linear_attention_chunked(q, k, v, chunk=32)
+
+    def test_first_position_is_v0(self):
+        # at i=0 the causal average has a single term: out_0 == v_0
+        q, k, v = rand_qkv(9, 1, 1, 16, 8, 8)
+        out = np.asarray(K.causal_linear_attention(q, k, v))
+        np.testing.assert_allclose(out[0, 0, 0], np.asarray(v)[0, 0, 0], rtol=1e-4, atol=1e-4)
+
+
+class TestSoftmaxAttention:
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_matches_reference(self, causal):
+        q, k, v = rand_qkv(10, 2, 2, 64, 16, 16)
+        got = K.softmax_attention(q, k, v, causal=causal)
+        want = ref.softmax_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_rows_sum_preserved(self):
+        # attention output of constant V must be that constant
+        q, k, _ = rand_qkv(11, 1, 1, 32, 8, 8)
+        v = jnp.ones((1, 1, 32, 8), jnp.float32) * 2.5
+        out = np.asarray(K.softmax_attention(q, k, v, causal=True))
+        np.testing.assert_allclose(out, 2.5, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient checks for the constant-memory vjp (paper eqs 13-15)
+# ---------------------------------------------------------------------------
+
+
+class TestConstantMemoryGradient:
+    def _grads(self, fn, q, k, v):
+        return jax.grad(lambda *a: (fn(*a) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+
+    def test_matches_autodiff_of_reference(self):
+        q, k, v = rand_qkv(12, 2, 2, 64, 8, 12)
+        got = self._grads(
+            lambda q, k, v: K.causal_linear_attention_cm(q, k, v, chunk=32), q, k, v
+        )
+        want = self._grads(
+            lambda q, k, v: ref.causal_linear_attention(
+                elu_plus_one(q), elu_plus_one(k), v
+            ),
+            q,
+            k,
+            v,
+        )
+        for g1, g2, name in zip(got, want, "qkv"):
+            np.testing.assert_allclose(g1, g2, rtol=5e-3, atol=5e-4, err_msg=name)
+
+    def test_gradient_chunk_size_invariance(self):
+        # the backward kernel splits its cumulative sums at chunk borders;
+        # grads must not depend on where the borders fall. (The scan kernel
+        # itself is not reverse-differentiable — in-kernel fori_loop stores —
+        # which is exactly why the custom vjp exists.)
+        q, k, v = rand_qkv(13, 1, 2, 64, 8, 8)
+        g16 = self._grads(
+            lambda q, k, v: K.causal_linear_attention_cm(q, k, v, chunk=16), q, k, v
+        )
+        g64 = self._grads(
+            lambda q, k, v: K.causal_linear_attention_cm(q, k, v, chunk=64), q, k, v
+        )
+        for g1, g2, name in zip(g16, g64, "qkv"):
+            np.testing.assert_allclose(g1, g2, rtol=5e-3, atol=5e-4, err_msg=name)
+
+    def test_weighted_cotangent(self):
+        # non-trivial upstream gradient, not just sum-of-squares
+        q, k, v = rand_qkv(14, 1, 1, 32, 8, 8)
+        w = jnp.asarray(np.random.default_rng(14).normal(size=(1, 1, 32, 8)), jnp.float32)
+        got = self._grads(
+            lambda q, k, v: K.causal_linear_attention_cm(q, k, v, chunk=16) * w, q, k, v
+        )
+        want = self._grads(
+            lambda q, k, v: ref.causal_linear_attention(
+                elu_plus_one(q), elu_plus_one(k), v
+            )
+            * w,
+            q,
+            k,
+            v,
+        )
+        for g1, g2, name in zip(got, want, "qkv"):
+            np.testing.assert_allclose(g1, g2, rtol=5e-3, atol=5e-4, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps over shapes (and dtypes where meaningful)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def qkv_shapes(draw):
+    b = draw(st.integers(1, 3))
+    h = draw(st.integers(1, 4))
+    n_chunks = draw(st.integers(1, 4))
+    n = 16 * n_chunks
+    d = draw(st.sampled_from([4, 8, 16]))
+    m = draw(st.sampled_from([4, 8, 16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, h, n, d, m, seed
+
+
+@settings(max_examples=15, deadline=None)
+@given(qkv_shapes())
+def test_hypothesis_causal_scan(shape):
+    b, h, n, d, m, seed = shape
+    q, k, v = rand_qkv(seed, b, h, n, d, m)
+    want = ref.causal_linear_attention(elu_plus_one(q), elu_plus_one(k), v)
+    np.testing.assert_allclose(
+        K.causal_linear_attention(q, k, v), want, rtol=5e-4, atol=5e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(qkv_shapes())
+def test_hypothesis_causal_chunked(shape):
+    b, h, n, d, m, seed = shape
+    q, k, v = rand_qkv(seed, b, h, n, d, m)
+    want = ref.causal_linear_attention(elu_plus_one(q), elu_plus_one(k), v)
+    np.testing.assert_allclose(
+        K.causal_linear_attention_chunked(q, k, v, chunk=16), want, rtol=5e-4, atol=5e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(qkv_shapes())
+def test_hypothesis_linear_noncausal(shape):
+    b, h, n, d, m, seed = shape
+    q, k, v = rand_qkv(seed, b, h, n, d, m)
+    want = ref.linear_attention(elu_plus_one(q), elu_plus_one(k), v)
+    np.testing.assert_allclose(K.linear_attention(q, k, v), want, rtol=5e-4, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(qkv_shapes(), st.booleans())
+def test_hypothesis_softmax(shape, causal):
+    b, h, n, d, m, seed = shape
+    q, k, v = rand_qkv(seed, b, h, n, d, m)
+    want = ref.softmax_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        K.softmax_attention(q, k, v, causal=causal), want, rtol=5e-4, atol=5e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# feature maps
+# ---------------------------------------------------------------------------
+
+
+class TestFeatureMaps:
+    def test_elu_plus_one_positive(self):
+        # strictly positive in the working range; non-negative everywhere
+        # (at x <= -17 float32 rounds exp(x) to 0, so elu(x)+1 == +0.0).
+        x = jnp.linspace(-8, 8, 101)
+        assert (np.asarray(elu_plus_one(x)) > 0).all()
+        xw = jnp.linspace(-50, 50, 101)
+        assert (np.asarray(elu_plus_one(xw)) >= 0).all()
+
+    def test_elu_plus_one_gradient_nonzero_for_negative(self):
+        g = jax.grad(lambda x: elu_plus_one(x).sum())(jnp.asarray([-3.0, -1.0]))
+        assert (np.asarray(g) > 0).all()
+
+    def test_lookup(self):
+        assert get_feature_map("elu+1") is elu_plus_one
+        with pytest.raises(ValueError):
+            get_feature_map("nope")
+
+    def test_identity_region(self):
+        # elu(x)+1 == x+1 for x >= 0
+        x = jnp.asarray([0.0, 0.5, 3.0])
+        np.testing.assert_allclose(elu_plus_one(x), x + 1.0, rtol=1e-6)

@@ -1,0 +1,279 @@
+"""Tests for losses.py (incl. CTC vs brute force), optimizers.py, ltw.py."""
+
+import itertools
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import losses
+from compile.ltw import read_ltw, write_ltw
+from compile.optimizers import (
+    OptState,
+    adam_update,
+    clip_by_global_norm,
+    init_opt_state,
+    radam_update,
+)
+
+
+# ---------------------------------------------------------------------------
+# cross entropy / bits per dim
+# ---------------------------------------------------------------------------
+
+
+class TestCrossEntropy:
+    def test_uniform_logits(self):
+        v = 8
+        logits = jnp.zeros((2, 5, v))
+        targets = jnp.zeros((2, 5), jnp.int32)
+        np.testing.assert_allclose(
+            losses.cross_entropy(logits, targets), np.log(v), rtol=1e-5
+        )
+
+    def test_perfect_prediction(self):
+        logits = jnp.full((1, 3, 4), -100.0)
+        targets = jnp.asarray([[0, 1, 2]], jnp.int32)
+        logits = logits.at[0, jnp.arange(3), targets[0]].set(100.0)
+        assert float(losses.cross_entropy(logits, targets)) < 1e-4
+
+    def test_mask_excludes_positions(self):
+        rng = np.random.default_rng(0)
+        logits = jnp.asarray(rng.normal(size=(1, 4, 5)), jnp.float32)
+        targets = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+        mask = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+        # corrupting masked positions must not change the loss
+        logits2 = logits.at[0, 2:].add(7.0)
+        a = losses.cross_entropy(logits, targets, mask)
+        b = losses.cross_entropy(logits2, targets, mask)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_bits_per_dim_is_ce_over_log2(self):
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.normal(size=(2, 6, 16)), jnp.float32)
+        targets = jnp.asarray(rng.integers(0, 16, (2, 6)), jnp.int32)
+        np.testing.assert_allclose(
+            losses.bits_per_dim(logits, targets),
+            losses.cross_entropy(logits, targets) / np.log(2.0),
+            rtol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# CTC vs brute-force enumeration
+# ---------------------------------------------------------------------------
+
+
+def brute_force_ctc(log_probs, labels, blank=0):
+    """Sum path probabilities over all alignments that collapse to `labels`."""
+    t, v = log_probs.shape
+
+    def collapse(path):
+        out = []
+        prev = None
+        for s in path:
+            if s != prev and s != blank:
+                out.append(s)
+            prev = s
+        return tuple(out)
+
+    total = -np.inf
+    for path in itertools.product(range(v), repeat=t):
+        if collapse(path) == tuple(labels):
+            lp = sum(log_probs[i, s] for i, s in enumerate(path))
+            total = np.logaddexp(total, lp)
+    return -total
+
+
+class TestCtc:
+    @pytest.mark.parametrize("labels", [[1], [1, 2], [2, 2], [1, 2, 1]])
+    def test_matches_brute_force(self, labels):
+        rng = np.random.default_rng(42)
+        t, v = 4, 3
+        logits = rng.normal(size=(t, v)).astype(np.float32)
+        logp = np.asarray(jax.nn.log_softmax(jnp.asarray(logits), axis=-1))
+        want = brute_force_ctc(logp, labels)
+        s_max = 6
+        lab = np.zeros((1, s_max), np.int32)
+        lab[0, : len(labels)] = labels
+        got = losses.ctc_loss(
+            jnp.asarray(logp)[None],
+            jnp.asarray([t], jnp.int32),
+            jnp.asarray(lab),
+            jnp.asarray([len(labels)], jnp.int32),
+        )
+        np.testing.assert_allclose(float(got), want, rtol=1e-4)
+
+    def test_impossible_label_longer_than_frames(self):
+        # |labels| > T: probability 0 => loss explodes toward +inf
+        logp = jnp.log(jnp.full((1, 2, 3), 1.0 / 3.0))
+        loss = losses.ctc_loss(
+            logp,
+            jnp.asarray([2], jnp.int32),
+            jnp.asarray([[1, 2, 1, 0]], jnp.int32),
+            jnp.asarray([3], jnp.int32),
+        )
+        assert float(loss) > 1e4
+
+    def test_frame_lengths_respected(self):
+        # frames past frame_len must not affect the loss
+        rng = np.random.default_rng(7)
+        logp = jax.nn.log_softmax(jnp.asarray(rng.normal(size=(1, 6, 4)), jnp.float32))
+        lab = jnp.asarray([[1, 2, 0, 0]], jnp.int32)
+        ll = jnp.asarray([2], jnp.int32)
+        fl = jnp.asarray([4], jnp.int32)
+        a = losses.ctc_loss(logp, fl, lab, ll)
+        logp2 = logp.at[0, 4:].add(3.0)  # corrupt padding frames
+        logp2 = jax.nn.log_softmax(logp2, axis=-1)
+        b = losses.ctc_loss(logp2, fl, lab, ll)
+        np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+    def test_batched_matches_individual(self):
+        rng = np.random.default_rng(8)
+        logp = jax.nn.log_softmax(jnp.asarray(rng.normal(size=(2, 5, 4)), jnp.float32))
+        labs = jnp.asarray([[1, 0, 0], [2, 3, 0]], jnp.int32)
+        lls = jnp.asarray([1, 2], jnp.int32)
+        fls = jnp.asarray([5, 4], jnp.int32)
+        both = losses.ctc_loss(logp, fls, labs, lls)
+        a = losses.ctc_loss(logp[:1], fls[:1], labs[:1], lls[:1])
+        b = losses.ctc_loss(logp[1:], fls[1:], labs[1:], lls[1:])
+        np.testing.assert_allclose(float(both), (float(a) + float(b)) / 2, rtol=1e-5)
+
+    def test_gradient_is_finite(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.normal(size=(2, 8, 5)), jnp.float32)
+
+        def f(x):
+            logp = jax.nn.log_softmax(x, axis=-1)
+            return losses.ctc_loss(
+                logp,
+                jnp.asarray([8, 6], jnp.int32),
+                jnp.asarray([[1, 2, 0], [3, 0, 0]], jnp.int32),
+                jnp.asarray([2, 1], jnp.int32),
+            )
+
+        g = jax.grad(f)(x)
+        assert bool(jnp.isfinite(g).all())
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def quadratic_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=s), jnp.float32) for s in [(4, 3), (5,), ()]]
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("update", [radam_update, adam_update], ids=["radam", "adam"])
+    def test_converges_on_quadratic(self, update):
+        params = quadratic_params()
+        st = init_opt_state(params)
+
+        def loss(ps):
+            return sum(jnp.sum(p * p) for p in ps)
+
+        for _ in range(300):
+            grads = jax.grad(loss)(params)
+            params, st = update(params, grads, st, jnp.float32(0.05))
+        assert float(loss(params)) < 1e-2
+
+    def test_radam_early_steps_are_sgd_like(self):
+        # for the first few steps rho_t <= 5: the update must not divide by
+        # sqrt(v) (variance not yet rectified) — check that two different
+        # gradient magnitudes produce proportionally different steps.
+        p = [jnp.ones((1,), jnp.float32)]
+        st = init_opt_state(p)
+        p1, _ = radam_update(p, [jnp.asarray([1.0])], st, jnp.float32(0.1))
+        p2, _ = radam_update(p, [jnp.asarray([2.0])], st, jnp.float32(0.1))
+        d1 = float((p[0] - p1[0])[0])
+        d2 = float((p[0] - p2[0])[0])
+        np.testing.assert_allclose(d2 / d1, 2.0, rtol=1e-4)  # adam would give 1.0
+
+    def test_step_counter_increments(self):
+        p = quadratic_params(1)
+        st = init_opt_state(p)
+        g = jax.grad(lambda ps: sum(jnp.sum(x * x) for x in ps))(p)
+        _, st = radam_update(p, g, st, jnp.float32(0.01))
+        assert float(st.step) == 1.0
+        _, st = radam_update(p, g, st, jnp.float32(0.01))
+        assert float(st.step) == 2.0
+
+    def test_clip_by_global_norm(self):
+        g = [jnp.asarray([3.0, 4.0])]  # norm 5
+        clipped = clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(clipped[0])), 1.0, rtol=1e-5
+        )
+        # under the limit: untouched
+        g2 = clip_by_global_norm(g, 10.0)
+        np.testing.assert_allclose(g2[0], g[0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LTW1 round trip
+# ---------------------------------------------------------------------------
+
+
+class TestLtw:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        tensors = [
+            ("a.weight", rng.normal(size=(3, 4)).astype(np.float32)),
+            ("b.bias", rng.normal(size=(7,)).astype(np.float32)),
+            ("c.scalar", np.asarray(2.5, np.float32)),
+            ("d.ints", rng.integers(0, 100, (2, 2)).astype(np.int32)),
+        ]
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.ltw")
+            write_ltw(p, tensors)
+            back = read_ltw(p)
+        assert [n for n, _ in back] == [n for n, _ in tensors]
+        for (_, a), (_, b) in zip(tensors, back):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(a, b)
+
+    def test_rejects_bad_magic(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "bad.ltw")
+            with open(p, "wb") as f:
+                f.write(b"NOPE\x00\x00\x00\x00")
+            with pytest.raises(ValueError):
+                read_ltw(p)
+
+    def test_rejects_unsupported_dtype(self):
+        with tempfile.TemporaryDirectory() as d:
+            with pytest.raises(ValueError):
+                write_ltw(os.path.join(d, "x.ltw"), [("x", np.zeros(3, np.float64))])
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(
+                st.text(alphabet="abcdef.0123", min_size=1, max_size=20),
+                st.lists(st.integers(1, 5), min_size=0, max_size=3),
+            ),
+            min_size=1,
+            max_size=5,
+        ),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_roundtrip_hypothesis(self, specs, seed):
+        rng = np.random.default_rng(seed)
+        tensors = [
+            (f"{i}.{name}", rng.normal(size=tuple(shape)).astype(np.float32))
+            for i, (name, shape) in enumerate(specs)
+        ]
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.ltw")
+            write_ltw(p, tensors)
+            back = read_ltw(p)
+        for (n1, a), (n2, b) in zip(tensors, back):
+            assert n1 == n2
+            np.testing.assert_array_equal(a, b)

@@ -1,0 +1,93 @@
+"""Tests for the jax LSH attention baseline (Reformer structure)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import lsh_attention as L
+from compile.kernels import ref
+
+
+def setup(seed=0, b=1, h=2, n=64, d=8, m=8, rounds=2, buckets=8):
+    rng = np.random.default_rng(seed)
+    qk = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, n, m)), jnp.float32)
+    rot = L.make_rotations(jax.random.PRNGKey(seed), rounds, d, buckets)
+    return qk, v, rot
+
+
+class TestBucketing:
+    def test_bucket_range(self):
+        qk, _, rot = setup(buckets=8)
+        b = L._bucket_ids(qk, rot[0])
+        bn = np.asarray(b)
+        assert bn.min() >= 0 and bn.max() < 8
+
+    def test_identical_vectors_same_bucket(self):
+        qk, _, rot = setup()
+        x = qk.at[:, :, 1].set(qk[:, :, 0])
+        b = np.asarray(L._bucket_ids(x, rot[0]))
+        assert (b[..., 0] == b[..., 1]).all()
+
+    def test_opposite_vectors_different_bucket(self):
+        # angular LSH maps x and -x to complementary buckets
+        qk, _, rot = setup()
+        x = qk.at[:, :, 1].set(-qk[:, :, 0])
+        b = np.asarray(L._bucket_ids(x, rot[0]))
+        assert (b[..., 0] != b[..., 1]).all()
+
+    def test_chunk_mask_shapes_and_lookback(self):
+        buckets = jnp.asarray(np.random.default_rng(0).integers(0, 4, (1, 1, 32)))
+        m = np.asarray(L._chunk_mask(buckets, chunk=8))
+        assert m.shape == (1, 1, 32, 32)
+        # every row has at least its own chunk (8) and at most 2 chunks (16)
+        rowsums = m.sum(-1)
+        assert rowsums.min() >= 8 and rowsums.max() <= 16
+
+
+class TestLshAttention:
+    def test_output_shape_finite(self):
+        qk, v, rot = setup()
+        out = L.lsh_attention(qk, v, rot, chunk=16)
+        assert out.shape == v.shape
+        assert bool(jnp.isfinite(out).all())
+
+    def test_causality_in_values(self):
+        # Causal masking: a future position's VALUE can never leak into the
+        # past. (Its key *can* reshuffle bucket boundaries — an inherent
+        # Reformer property — so we perturb v only, keeping hashes fixed.)
+        qk, v, rot = setup(seed=1)
+        base = np.asarray(L.lsh_attention(qk, v, rot, chunk=16, causal=True))
+        v2 = v.at[0, :, -1].add(10.0)
+        pert = np.asarray(L.lsh_attention(qk, v2, rot, chunk=16, causal=True))
+        np.testing.assert_allclose(base[0, :, :-1], pert[0, :, :-1], rtol=1e-4, atol=1e-4)
+
+    def test_single_chunk_equals_full_softmax_structure(self):
+        # with chunk >= N and one round, every position sees all others:
+        # result must be close to full softmax attention with shared qk
+        # (up to the normalized-key and diagonal-handling differences, so we
+        # check correlation rather than equality on the off-diagonal mass).
+        qk, v, rot = setup(seed=2, n=32, rounds=1)
+        out = L.lsh_attention(qk, v, rot, chunk=32, causal=True)
+        # same candidate set as full causal attention; sanity: convex-ish hull
+        vn = np.asarray(v)
+        assert np.asarray(out).max() <= vn.max() + 1e-3
+        assert np.asarray(out).min() >= vn.min() - 1e-3
+
+    def test_rounds_reduce_to_single_when_identical(self):
+        qk, v, rot = setup(seed=3, rounds=1)
+        rot2 = jnp.concatenate([rot, rot], axis=0)  # two identical rounds
+        a = L.lsh_attention(qk, v, rot, chunk=16)
+        b = L.lsh_attention(qk, v, rot2, chunk=16)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_differentiable(self):
+        qk, v, rot = setup(seed=4)
+
+        def f(qk, v):
+            return (L.lsh_attention(qk, v, rot, chunk=16) ** 2).sum()
+
+        gq, gv = jax.grad(f, argnums=(0, 1))(qk, v)
+        assert bool(jnp.isfinite(gq).all()) and bool(jnp.isfinite(gv).all())
+        assert float(jnp.abs(gv).max()) > 0

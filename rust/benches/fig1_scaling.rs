@@ -1,0 +1,128 @@
+//! Figure 1 — forward+backward time and peak memory vs sequence length.
+//!
+//! Sweeps N ∈ {2^9 .. 2^14} for softmax, linear, lsh-4 and lsh-8 attention
+//! (per head, D = M = 32 like the paper's per-head dims), timing one
+//! fwd+bwd pass per sample and reporting the engines' peak-memory models
+//! (asserted against actual buffer allocation in the unit tests).
+//!
+//! Expected shape (paper): softmax grows ~4x per N-doubling in both time
+//! and memory and runs out of budget first; linear and lsh grow ~2x
+//! (linear in N); linear is fastest with constant O(D·M) extra memory.
+//!
+//! Run: cargo bench --bench fig1_scaling   (BENCH_QUICK=1 for a fast pass)
+
+use std::time::Duration;
+
+use linear_transformer::attention::{cost_fwd_bwd, linear, lsh, softmax, AttentionKind};
+use linear_transformer::benchkit::{fmt_bytes, fmt_duration, opts_from_env, Table};
+use linear_transformer::rng::Rng;
+
+const D: usize = 32;
+const M: usize = 32;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let max_n: usize = if quick { 1 << 12 } else { 1 << 13 };
+    let opts = opts_from_env();
+    let budget_per_cfg = Duration::from_secs(if quick { 3 } else { 8 });
+
+    let mut table = Table::new(
+        "Figure 1: fwd+bwd per sample vs sequence length (per head, D=M=32)",
+        &["method", "N", "time", "time_per_token", "peak_memory"],
+    );
+
+    let mut n = 512usize;
+    while n <= max_n {
+        let mut rng = Rng::new(n as u64);
+        let q = rng.normal_vec(n * D, 1.0);
+        let k = rng.normal_vec(n * D, 1.0);
+        let v = rng.normal_vec(n * M, 1.0);
+        let g = rng.normal_vec(n * M, 1.0);
+
+        // --- softmax (skip when the quadratic cost exceeds the budget,
+        //     like the paper's GPU running out of memory at N=4096) ---
+        let est_secs = (n as f64 / 4096.0).powi(2) * 4.0;
+        if est_secs < budget_per_cfg.as_secs_f64() * 4.0 {
+            let m = linear_transformer::benchkit::bench(
+                "softmax",
+                linear_transformer::benchkit::BenchOpts {
+                    max_total: budget_per_cfg,
+                    ..opts
+                },
+                || {
+                    let _ = softmax::forward_backward(&q, &k, &v, &g, n, D, M, true);
+                },
+            );
+            push_row(&mut table, "softmax", AttentionKind::Softmax, n, &m);
+        } else {
+            table.row(vec![
+                "softmax".into(),
+                n.to_string(),
+                "OOB (budget)".into(),
+                "-".into(),
+                fmt_bytes(cost_fwd_bwd(AttentionKind::Softmax, n as u64, D as u64, M as u64).peak_bytes() as usize),
+            ]);
+        }
+
+        // --- linear (the paper's kernel: constant-memory fwd+bwd) ---
+        let m = linear_transformer::benchkit::bench(
+            "linear",
+            linear_transformer::benchkit::BenchOpts {
+                max_total: budget_per_cfg,
+                ..opts
+            },
+            || {
+                let _ = linear::forward_backward_causal(&q, &k, &v, &g, n, D, M);
+            },
+        );
+        push_row(&mut table, "linear", AttentionKind::Linear, n, &m);
+
+        // --- lsh-4 / lsh-8 ---
+        for rounds in [4usize, 8] {
+            let cfg = lsh::LshConfig {
+                rounds,
+                buckets: 64.min(n / 16).max(2),
+                chunk: 32,
+                seed: 0,
+            };
+            let rots = lsh::make_rotations(&cfg, D);
+            let m = linear_transformer::benchkit::bench(
+                "lsh",
+                linear_transformer::benchkit::BenchOpts {
+                    max_total: budget_per_cfg,
+                    ..opts
+                },
+                || {
+                    let _ = lsh::forward_backward(&cfg, &rots, &q, &k, &v, &g, n, D, M, true);
+                },
+            );
+            push_row(
+                &mut table,
+                &format!("lsh-{rounds}"),
+                AttentionKind::Lsh { rounds },
+                n,
+                &m,
+            );
+        }
+        n *= 2;
+    }
+    table.emit("fig1_scaling.csv");
+    println!("\n(memory column = engine peak-allocation model; linear attention's is constant in N)");
+}
+
+fn push_row(
+    table: &mut Table,
+    name: &str,
+    kind: AttentionKind,
+    n: usize,
+    m: &linear_transformer::benchkit::Measurement,
+) {
+    let cost = cost_fwd_bwd(kind, n as u64, D as u64, M as u64);
+    table.row(vec![
+        name.into(),
+        n.to_string(),
+        fmt_duration(m.mean),
+        format!("{:.2} µs", m.mean.as_secs_f64() * 1e6 / n as f64),
+        fmt_bytes(cost.peak_bytes() as usize),
+    ]);
+}

@@ -1,0 +1,183 @@
+//! Table 1 (+ Table 4a row) — MNIST image-generation throughput.
+//!
+//! Generates 784-pixel images with every decode strategy over the same
+//! model weights and reports images/sec:
+//!   softmax           — recompute the full forward per pixel (O(t²)/px)
+//!   stateful-softmax  — KV-cache decode (supplementary C.1, O(t)/px)
+//!   lsh-1 / lsh-4     — Reformer decode (recompute; no stateful decode)
+//!   linear            — the paper's RNN decode (O(1)/px)
+//!   linear (pjrt)     — same through the batched AOT decode artifact
+//!
+//! Quadratic rows are measured on a step prefix and extrapolated (marked ~,
+//! see benchkit_gen). Expected shape: linear orders of magnitude above
+//! softmax/lsh, stateful-softmax in between — paper ratios 317x / 0.6-1.5x.
+//!
+//! Run: cargo bench --bench table1_mnist  (BENCH_QUICK=1 for a fast pass)
+
+use std::time::Duration;
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::benchkit::Table;
+use linear_transformer::benchkit_gen::measure_steps;
+use linear_transformer::config::ModelConfig;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let budget = Duration::from_secs(if quick { 5 } else { 12 });
+    let cfg = ModelConfig::mnist();
+    let n = cfg.max_len;
+
+    let mut table = Table::new(
+        "Table 1: MNIST (784 px) generation throughput",
+        &["method", "images/sec", "speedup_vs_softmax", "decode_state", "measured_px"],
+    );
+
+    let mut rows: Vec<(String, f64, String, usize)> = Vec::new();
+
+    // softmax: full recompute per pixel
+    {
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 1);
+        let mut sess = model.session();
+        let mut rng = Rng::new(0);
+        let mut logits = sess.step(0);
+        let m = measure_steps(n - 1, budget, |_t| {
+            let px = linear_transformer::sampling::sample_logits(&logits, 1.0, &mut rng);
+            logits = sess.step(px);
+        });
+        rows.push((
+            format!("softmax{}", m.label()),
+            1.0 / m.total_secs,
+            format!("{} B (history)", sess.state_bytes()),
+            m.steps_measured,
+        ));
+    }
+
+    // stateful softmax (KV cache)
+    {
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 1);
+        let mut sess = model.session_kv();
+        let mut rng = Rng::new(0);
+        let mut logits = sess.step(0);
+        let m = measure_steps(n - 1, budget, |_t| {
+            let px = linear_transformer::sampling::sample_logits(&logits, 1.0, &mut rng);
+            logits = sess.step(px);
+        });
+        rows.push((
+            format!("stateful-softmax{}", m.label()),
+            1.0 / m.total_secs,
+            format!("{} B (grows)", sess.state_bytes()),
+            m.steps_measured,
+        ));
+    }
+
+    // lsh-1, lsh-4: recompute decode
+    for rounds in [1usize, 4] {
+        let model = TransformerLM::init(&cfg, AttentionKind::Lsh { rounds }, 1);
+        let mut sess = model.session();
+        let mut rng = Rng::new(0);
+        let mut logits = sess.step(0);
+        let m = measure_steps(n - 1, budget, |_t| {
+            let px = linear_transformer::sampling::sample_logits(&logits, 1.0, &mut rng);
+            logits = sess.step(px);
+        });
+        rows.push((
+            format!("lsh-{rounds}{}", m.label()),
+            1.0 / m.total_secs,
+            format!("{} B (history)", sess.state_bytes()),
+            m.steps_measured,
+        ));
+    }
+
+    // linear: the RNN decode — fast enough to measure fully
+    {
+        let model = TransformerLM::init(&cfg, AttentionKind::Linear, 1);
+        let mut sess = model.session();
+        let mut rng = Rng::new(0);
+        let mut logits = sess.step(0);
+        let m = measure_steps(n - 1, Duration::from_secs(3600), |_t| {
+            let px = linear_transformer::sampling::sample_logits(&logits, 1.0, &mut rng);
+            logits = sess.step(px);
+        });
+        assert!(!m.extrapolated);
+        rows.push((
+            "linear (ours)".into(),
+            1.0 / m.total_secs,
+            format!("{} B (constant)", sess.state_bytes()),
+            m.steps_measured,
+        ));
+    }
+
+    // linear through the PJRT batched decode artifact, if built
+    let art_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&art_dir).join("manifest.json").exists() {
+        if let Ok(ips) = pjrt_linear_images_per_sec(&art_dir, &cfg, 32) {
+            rows.push((
+                "linear (pjrt, batch 32)".into(),
+                ips,
+                "constant".into(),
+                n,
+            ));
+        }
+    }
+
+    let softmax_ips = rows[0].1;
+    for (name, ips, state, measured) in rows {
+        table.row(vec![
+            name,
+            format!("{ips:.3}"),
+            format!("{:.1}x", ips / softmax_ips),
+            state,
+            measured.to_string(),
+        ]);
+    }
+    table.emit("table1_mnist.csv");
+    println!("\n(~ = prefix-measured, quadratic/linear tail extrapolated; see EXPERIMENTS.md)");
+}
+
+/// Images/sec of the batched PJRT decode artifact (all slots aligned).
+fn pjrt_linear_images_per_sec(
+    dir: &str,
+    cfg: &ModelConfig,
+    batch: usize,
+) -> anyhow::Result<f64> {
+    use linear_transformer::runtime::{Runtime, Value};
+    let mut rt = Runtime::open(dir)?;
+    let art = rt.load(&format!("mnist_decode_linear_b{batch}"))?;
+    let weights = rt.load_weights("mnist_linear")?;
+    let spec = rt.bundle.model("mnist_linear").unwrap().clone();
+    let params: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head());
+    let mut s = vec![0.0f32; l * batch * h * dh * dh];
+    let mut z = vec![0.0f32; l * batch * h * dh];
+    let mut rng = Rng::new(0);
+    let mut token = vec![0i32; batch];
+    // time a slice of steps, scale to the full image
+    let steps = 64usize;
+    let t0 = std::time::Instant::now();
+    for pos in 0..steps {
+        let mut inputs = params.clone();
+        inputs.push(Value::I32(vec![batch], token.clone()));
+        inputs.push(Value::I32(vec![batch], vec![pos as i32; batch]));
+        inputs.push(Value::F32(vec![l, batch, h, dh, dh], s));
+        inputs.push(Value::F32(vec![l, batch, h, dh], z));
+        let out = art.run(&inputs)?;
+        let logits = out[0].as_f32()?;
+        for (b, t) in token.iter_mut().enumerate() {
+            *t = linear_transformer::sampling::sample_logits(
+                &logits[b * cfg.vocab..(b + 1) * cfg.vocab],
+                1.0,
+                &mut rng,
+            ) as i32;
+        }
+        s = out[1].as_f32()?.to_vec();
+        z = out[2].as_f32()?.to_vec();
+    }
+    let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+    Ok(batch as f64 / (per_step * cfg.max_len as f64))
+}

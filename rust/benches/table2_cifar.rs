@@ -1,0 +1,67 @@
+//! Table 2 (+ Table 4b row) — CIFAR-scale (3072 px) generation throughput.
+//!
+//! Same protocol as table1_mnist at 4x the sequence length, where the gap
+//! between O(1)-per-token linear decode and the quadratic baselines widens
+//! (paper: 4,462x over softmax). Quadratic rows are prefix-measured and
+//! extrapolated (~).
+//!
+//! Run: cargo bench --bench table2_cifar  (BENCH_QUICK=1 for a fast pass)
+
+use std::time::Duration;
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::benchkit::Table;
+use linear_transformer::benchkit_gen::measure_steps;
+use linear_transformer::config::ModelConfig;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let budget = Duration::from_secs(if quick { 5 } else { 12 });
+    let cfg = ModelConfig::cifar();
+    let n = cfg.max_len;
+
+    let mut table = Table::new(
+        "Table 2: CIFAR-scale (3072 px) generation throughput",
+        &["method", "images/sec", "speedup_vs_softmax", "measured_px"],
+    );
+    let mut rows: Vec<(String, f64, usize)> = Vec::new();
+
+    let variants: Vec<(String, AttentionKind, bool)> = vec![
+        ("softmax".into(), AttentionKind::Softmax, false),
+        ("stateful-softmax".into(), AttentionKind::Softmax, true),
+        ("lsh-1".into(), AttentionKind::Lsh { rounds: 1 }, false),
+        ("lsh-4".into(), AttentionKind::Lsh { rounds: 4 }, false),
+        ("linear (ours)".into(), AttentionKind::Linear, false),
+    ];
+    for (name, kind, kv) in variants {
+        let model = TransformerLM::init(&cfg, kind, 1);
+        let mut sess = if kv { model.session_kv() } else { model.session() };
+        let mut rng = Rng::new(0);
+        let mut logits = sess.step(0);
+        let is_linear = kind == AttentionKind::Linear;
+        let this_budget = if is_linear { Duration::from_secs(3600) } else { budget };
+        let m = measure_steps(n - 1, this_budget, |_t| {
+            let px = linear_transformer::sampling::sample_logits(&logits, 1.0, &mut rng);
+            logits = sess.step(px);
+        });
+        rows.push((
+            format!("{name}{}", m.label()),
+            1.0 / m.total_secs,
+            m.steps_measured,
+        ));
+    }
+
+    let softmax_ips = rows[0].1;
+    for (name, ips, measured) in rows {
+        table.row(vec![
+            name,
+            format!("{ips:.4}"),
+            format!("{:.1}x", ips / softmax_ips),
+            measured.to_string(),
+        ]);
+    }
+    table.emit("table2_cifar.csv");
+    println!("\n(~ = prefix-measured + extrapolated tail; see EXPERIMENTS.md)");
+}

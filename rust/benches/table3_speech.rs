@@ -1,0 +1,120 @@
+//! Table 3 — speech recognition (CTC): training time per epoch + PER.
+//!
+//! For each encoder (Bi-LSTM, softmax transformer, linear transformer) the
+//! bench measures the PJRT train-step wall time on synthetic WSJ-shaped
+//! batches and scales it to a fixed-size epoch, reproducing the paper's
+//! time/epoch column. PER is evaluated with greedy CTC decoding after a
+//! short warm-up training run (documented: paper trains to convergence —
+//! hours; the *ordering* of time/epoch and the PER trend are the
+//! reproduction targets; see EXPERIMENTS.md).
+//!
+//! Run: cargo bench --bench table3_speech  (BENCH_QUICK=1 for a fast pass)
+
+use linear_transformer::benchkit::Table;
+use linear_transformer::data::speech::{BLANK, VOCAB};
+use linear_transformer::metrics::{ctc_greedy_decode, phoneme_error_rate};
+use linear_transformer::runtime::{Runtime, Value};
+use linear_transformer::trainer::{self, Trainer};
+
+const EPOCH_UTTERANCES: usize = 512; // synthetic-WSJ epoch size
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let warmup_steps = if quick { 4 } else { 12 };
+    let timing_steps = if quick { 2 } else { 3 };
+
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::open(&dir).unwrap();
+
+    let mut table = Table::new(
+        "Table 3: speech CTC — validation PER + training time/epoch",
+        &["method", "PER_%", "time/epoch_s", "ms/step", "steps_trained"],
+    );
+
+    for variant in ["bilstm", "softmax", "linear"] {
+        let mut tr = Trainer::new(&mut rt, "speech", variant).unwrap();
+        let specs = tr.batch_specs().to_vec();
+        let (b, t) = (specs[0].shape[0], specs[0].shape[1]);
+        let max_labels = specs[2].shape[1];
+        let mut batch_fn = trainer::speech_batch_fn(t, b, max_labels, 0);
+
+        // short training warm-up so PER is meaningfully below chance
+        for step in 0..warmup_steps {
+            tr.step(1e-3, batch_fn(step)).unwrap();
+        }
+        // timed steps
+        let t0 = std::time::Instant::now();
+        for step in 0..timing_steps {
+            tr.step(1e-3, batch_fn(warmup_steps + step)).unwrap();
+        }
+        let per_step = t0.elapsed().as_secs_f64() / timing_steps as f64;
+        let steps_per_epoch = EPOCH_UTTERANCES.div_ceil(b);
+        let epoch_secs = per_step * steps_per_epoch as f64;
+
+        // PER via the fwd artifact + greedy decode on held-out batches
+        let per = eval_per(&mut rt, variant, &tr, b, t, max_labels);
+
+        table.row(vec![
+            variant.to_string(),
+            format!("{per:.1}"),
+            format!("{epoch_secs:.1}"),
+            format!("{:.0}", per_step * 1e3),
+            (warmup_steps + timing_steps).to_string(),
+        ]);
+    }
+    table.emit("table3_speech.csv");
+    println!(
+        "\n(epoch = {EPOCH_UTTERANCES} synthetic utterances; PER after only \
+         {warmup_steps}+{timing_steps} steps — orderings, not absolute paper values)"
+    );
+}
+
+fn eval_per(
+    rt: &mut Runtime,
+    variant: &str,
+    tr: &Trainer,
+    b: usize,
+    t: usize,
+    max_labels: usize,
+) -> f64 {
+    let fwd = rt.load(&format!("speech_{variant}_fwd")).unwrap();
+    let weights = tr.weights().unwrap();
+    let spec = rt.bundle.model(&format!("speech_{variant}")).unwrap().clone();
+    let params: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let mut gen = linear_transformer::data::SpeechDataset::new(t, 777);
+    let mut pairs = Vec::new();
+    for _ in 0..2 {
+        let (feats, frame_len, labels, label_len) = gen.batch(b, max_labels);
+        let mut inputs = params.clone();
+        inputs.push(Value::F32(
+            vec![b, t, linear_transformer::data::speech::N_MELS],
+            feats,
+        ));
+        let out = fwd.run(&inputs).unwrap();
+        let logp = out[0].as_f32().unwrap();
+        for bi in 0..b {
+            let frames = frame_len[bi] as usize;
+            let hyp = ctc_greedy_decode(
+                &logp[bi * t * VOCAB..(bi * t + frames) * VOCAB],
+                frames,
+                VOCAB,
+                BLANK,
+            );
+            let reference: Vec<u32> = labels
+                [bi * max_labels..bi * max_labels + label_len[bi] as usize]
+                .iter()
+                .map(|&l| l as u32)
+                .collect();
+            pairs.push((hyp, reference));
+        }
+    }
+    phoneme_error_rate(&pairs)
+}

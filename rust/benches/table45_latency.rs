@@ -1,0 +1,82 @@
+//! Tables 4 & 5 (supplementary) — stateful baselines and batch-1 latency.
+//!
+//! Table 5: seconds to generate a single image (batch size 1, CPU) for
+//! every decode strategy, on both the MNIST (784) and CIFAR (3072)
+//! geometries. Table 4's extra observation — stateful-softmax is much
+//! faster than vanilla softmax but still far behind linear, with a state
+//! that grows per token — falls out of the same sweep, so both tables are
+//! emitted here. Quadratic rows are prefix-measured and extrapolated (~).
+//!
+//! Expected shape (paper, CPU column): linear fastest (5.5s MNIST / 45s
+//! CIFAR on their hardware), stateful-softmax ~1.3-1.6x slower, softmax
+//! 13-192x slower, lsh in between; linear is the only method whose decode
+//! state does not grow.
+//!
+//! Run: cargo bench --bench table45_latency  (BENCH_QUICK=1 for a fast pass)
+
+use std::time::Duration;
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::benchkit::Table;
+use linear_transformer::benchkit_gen::measure_steps;
+use linear_transformer::config::ModelConfig;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let budget = Duration::from_secs(if quick { 4 } else { 8 });
+
+    let mut table = Table::new(
+        "Tables 4+5: single-image latency, batch 1, CPU",
+        &["dataset", "method", "seconds/image", "vs_linear", "state_end", "measured_px"],
+    );
+
+    for (dataset, cfg) in [("mnist", ModelConfig::mnist()), ("cifar", ModelConfig::cifar())] {
+        let n = cfg.max_len;
+        let mut rows: Vec<(String, f64, String, usize)> = Vec::new();
+        let variants: Vec<(String, AttentionKind, bool)> = vec![
+            ("softmax".into(), AttentionKind::Softmax, false),
+            ("stateful-softmax".into(), AttentionKind::Softmax, true),
+            ("lsh-1".into(), AttentionKind::Lsh { rounds: 1 }, false),
+            ("lsh-4".into(), AttentionKind::Lsh { rounds: 4 }, false),
+            ("linear (ours)".into(), AttentionKind::Linear, false),
+        ];
+        for (name, kind, kv) in variants {
+            let model = TransformerLM::init(&cfg, kind, 1);
+            let mut sess = if kv { model.session_kv() } else { model.session() };
+            let mut rng = Rng::new(0);
+            let mut logits = sess.step(0);
+            let is_linear = kind == AttentionKind::Linear;
+            let this_budget = if is_linear { Duration::from_secs(3600) } else { budget };
+            let m = measure_steps(n - 1, this_budget, |_t| {
+                let px = linear_transformer::sampling::sample_logits(&logits, 1.0, &mut rng);
+                logits = sess.step(px);
+            });
+            let state = linear_transformer::benchkit::fmt_bytes(sess.state_bytes());
+            rows.push((
+                format!("{name}{}", m.label()),
+                m.total_secs,
+                if is_linear || kv {
+                    format!("{state}{}", if is_linear { " (const)" } else { " (grown)" })
+                } else {
+                    format!("{state} (history)")
+                },
+                m.steps_measured,
+            ));
+        }
+        let linear_secs = rows.last().unwrap().1;
+        for (name, secs, state, measured) in rows {
+            table.row(vec![
+                dataset.to_string(),
+                name,
+                format!("{secs:.2}"),
+                format!("{:.1}x", secs / linear_secs),
+                state,
+                measured.to_string(),
+            ]);
+        }
+    }
+    table.emit("table45_latency.csv");
+    println!("\n(~ = prefix-measured + extrapolated; paper Table 5 CPU column is the comparison point)");
+}

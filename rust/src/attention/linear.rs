@@ -1,0 +1,472 @@
+//! Linearized attention (the paper's contribution), per head.
+//!
+//! * [`forward_causal`] — the chunk-free O(N·D·M) training/eval pass
+//!   (Algorithm 1 forward).
+//! * [`forward_backward_causal`] — constant-memory gradients (eqs 13-15
+//!   plus the denominator terms), mirroring the Pallas backward kernel.
+//! * [`forward_noncausal`] — eq. 6 for encoder stacks.
+//! * [`LinearAttnState`] — eqs 16-20: the RNN cell. `step()` is the O(1)
+//!   per-token decode hot path the serving engine batches over; it is THE
+//!   performance-critical function of this crate (see EXPERIMENTS.md §Perf).
+//!
+//! Inputs q, k are *raw* (un-mapped); phi(x) = elu(x)+1 is applied
+//! internally, matching the python wrappers.
+
+use crate::tensor::{axpy, dot, elu_plus_one};
+
+pub const EPS: f32 = 1e-6;
+
+/// Causal linear attention forward. q,k: [n,d], v: [n,m] -> out [n,m].
+pub fn forward_causal(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * m);
+    assert_eq!(out.len(), n * m);
+    let mut s = vec![0.0f32; d * m]; // S_i = sum phi(k_j) v_j^T
+    let mut z = vec![0.0f32; d]; // Z_i = sum phi(k_j)
+    let mut qi = vec![0.0f32; d];
+    let mut ki = vec![0.0f32; d];
+    for i in 0..n {
+        for t in 0..d {
+            qi[t] = elu_plus_one(q[i * d + t]);
+            ki[t] = elu_plus_one(k[i * d + t]);
+        }
+        let vi = &v[i * m..(i + 1) * m];
+        // S += phi(k_i) v_i^T ; Z += phi(k_i)
+        for t in 0..d {
+            let kt = ki[t];
+            if kt != 0.0 {
+                axpy(&mut s[t * m..(t + 1) * m], kt, vi);
+            }
+            z[t] += kt;
+        }
+        // out_i = (phi(q_i)^T S) / (phi(q_i) . Z + eps)
+        let den = dot(&qi, &z) + EPS;
+        let orow = &mut out[i * m..(i + 1) * m];
+        orow.fill(0.0);
+        for t in 0..d {
+            let qt = qi[t];
+            if qt != 0.0 {
+                axpy(orow, qt, &s[t * m..(t + 1) * m]);
+            }
+        }
+        let inv = 1.0 / den;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Non-causal linear attention (eq. 6): one global KV aggregation.
+pub fn forward_noncausal(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    let mut kv = vec![0.0f32; d * m];
+    let mut z = vec![0.0f32; d];
+    let mut ki = vec![0.0f32; d];
+    for j in 0..n {
+        for t in 0..d {
+            ki[t] = elu_plus_one(k[j * d + t]);
+        }
+        let vj = &v[j * m..(j + 1) * m];
+        for t in 0..d {
+            if ki[t] != 0.0 {
+                axpy(&mut kv[t * m..(t + 1) * m], ki[t], vj);
+            }
+            z[t] += ki[t];
+        }
+    }
+    let mut qi = vec![0.0f32; d];
+    for i in 0..n {
+        for t in 0..d {
+            qi[t] = elu_plus_one(q[i * d + t]);
+        }
+        let den = dot(&qi, &z) + EPS;
+        let orow = &mut out[i * m..(i + 1) * m];
+        orow.fill(0.0);
+        for t in 0..d {
+            if qi[t] != 0.0 {
+                axpy(orow, qi[t], &kv[t * m..(t + 1) * m]);
+            }
+        }
+        let inv = 1.0 / den;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Constant-memory forward+backward for causal linear attention
+/// (paper §3.3.1). Returns (out, dq, dk, dv) for raw (un-mapped) q, k.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_backward_causal(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    // map q, k once; chain rule through phi at the end
+    let qm: Vec<f32> = q.iter().map(|&x| elu_plus_one(x)).collect();
+    let km: Vec<f32> = k.iter().map(|&x| elu_plus_one(x)).collect();
+
+    // ---- forward, saving only out + den (O(N) residuals) ----
+    let mut out = vec![0.0f32; n * m];
+    let mut den = vec![0.0f32; n];
+    {
+        let mut s = vec![0.0f32; d * m];
+        let mut z = vec![0.0f32; d];
+        for i in 0..n {
+            let ki = &km[i * d..(i + 1) * d];
+            let qi = &qm[i * d..(i + 1) * d];
+            let vi = &v[i * m..(i + 1) * m];
+            for t in 0..d {
+                if ki[t] != 0.0 {
+                    axpy(&mut s[t * m..(t + 1) * m], ki[t], vi);
+                }
+                z[t] += ki[t];
+            }
+            den[i] = dot(qi, &z) + EPS;
+            let orow = &mut out[i * m..(i + 1) * m];
+            for t in 0..d {
+                if qi[t] != 0.0 {
+                    axpy(orow, qi[t], &s[t * m..(t + 1) * m]);
+                }
+            }
+            let inv = 1.0 / den[i];
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+
+    // upstream grads split into numerator/denominator parts
+    // gn_i = g_i / den_i ; h_i = -(g_i . out_i) / den_i
+    let mut gn = vec![0.0f32; n * m];
+    let mut h = vec![0.0f32; n];
+    for i in 0..n {
+        let inv = 1.0 / den[i];
+        let gi = &g[i * m..(i + 1) * m];
+        let oi = &out[i * m..(i + 1) * m];
+        for e in 0..m {
+            gn[i * m + e] = gi[e] * inv;
+        }
+        h[i] = -dot(gi, oi) * inv;
+    }
+
+    let mut dqm = vec![0.0f32; n * d];
+    let mut dkm = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * m];
+
+    // ---- forward sweep: dq (eq. 13 + denominator term) ----
+    {
+        let mut s = vec![0.0f32; d * m];
+        let mut z = vec![0.0f32; d];
+        for i in 0..n {
+            let ki = &km[i * d..(i + 1) * d];
+            let vi = &v[i * m..(i + 1) * m];
+            for t in 0..d {
+                if ki[t] != 0.0 {
+                    axpy(&mut s[t * m..(t + 1) * m], ki[t], vi);
+                }
+                z[t] += ki[t];
+            }
+            let gi = &gn[i * m..(i + 1) * m];
+            let dqrow = &mut dqm[i * d..(i + 1) * d];
+            for t in 0..d {
+                dqrow[t] = dot(gi, &s[t * m..(t + 1) * m]) + h[i] * z[t];
+            }
+        }
+    }
+
+    // ---- backward sweep: dk (eq. 14 + den), dv (eq. 15) ----
+    {
+        let mut tmat = vec![0.0f32; d * m]; // T_i = sum_{j>=i} q_j gn_j^T
+        let mut u = vec![0.0f32; d]; // sum_{j>=i} h_j q_j
+        for i in (0..n).rev() {
+            let qi = &qm[i * d..(i + 1) * d];
+            let gi = &gn[i * m..(i + 1) * m];
+            // include j = i
+            for t in 0..d {
+                if qi[t] != 0.0 {
+                    axpy(&mut tmat[t * m..(t + 1) * m], qi[t], gi);
+                }
+                u[t] += h[i] * qi[t];
+            }
+            let ki = &km[i * d..(i + 1) * d];
+            let vi = &v[i * m..(i + 1) * m];
+            let dkrow = &mut dkm[i * d..(i + 1) * d];
+            for t in 0..d {
+                dkrow[t] = dot(vi, &tmat[t * m..(t + 1) * m]) + u[t];
+            }
+            let dvrow = &mut dv[i * m..(i + 1) * m];
+            dvrow.fill(0.0);
+            for t in 0..d {
+                if ki[t] != 0.0 {
+                    axpy(dvrow, ki[t], &tmat[t * m..(t + 1) * m]);
+                }
+            }
+        }
+    }
+
+    // chain through phi: d phi/dx = 1 for x >= 0, exp(x) for x < 0
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    for idx in 0..n * d {
+        dq[idx] = dqm[idx] * if q[idx] >= 0.0 { 1.0 } else { q[idx].exp() };
+        dk[idx] = dkm[idx] * if k[idx] >= 0.0 { 1.0 } else { k[idx].exp() };
+    }
+    (out, dq, dk, dv)
+}
+
+/// The RNN view (eqs 16-20): per-head recurrent state.
+///
+/// `step()` performs one autoregressive update in O(D·M) — independent of
+/// how many tokens came before. This is the paper's headline property.
+#[derive(Clone, Debug)]
+pub struct LinearAttnState {
+    pub d: usize,
+    pub m: usize,
+    /// s: [d, m] row-major — the attention memory (eq. 18)
+    pub s: Vec<f32>,
+    /// z: [d] — the normalizer memory (eq. 19)
+    pub z: Vec<f32>,
+    // preallocated scratch (phi(q), phi(k)) to keep step() allocation-free
+    qbuf: Vec<f32>,
+    kbuf: Vec<f32>,
+}
+
+impl LinearAttnState {
+    pub fn new(d: usize, m: usize) -> Self {
+        LinearAttnState {
+            d,
+            m,
+            s: vec![0.0; d * m],
+            z: vec![0.0; d],
+            qbuf: vec![0.0; d],
+            kbuf: vec![0.0; d],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.s.fill(0.0);
+        self.z.fill(0.0);
+    }
+
+    /// Memory footprint (constant in sequence length).
+    pub fn state_bytes(&self) -> usize {
+        (self.s.len() + self.z.len()) * 4
+    }
+
+    /// One decode step with raw (un-mapped) q, k, v; writes `out` [m].
+    pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), self.d);
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.m);
+        debug_assert_eq!(out.len(), self.m);
+        let d = self.d;
+        let m = self.m;
+        for t in 0..d {
+            self.qbuf[t] = elu_plus_one(q[t]);
+            self.kbuf[t] = elu_plus_one(k[t]);
+        }
+        // s += phi(k) v^T ; z += phi(k)   (eqs 18, 19)
+        for t in 0..d {
+            let kt = self.kbuf[t];
+            if kt != 0.0 {
+                axpy(&mut self.s[t * m..(t + 1) * m], kt, v);
+            }
+            self.z[t] += kt;
+        }
+        // out = (phi(q)^T s) / (phi(q) . z + eps)   (eq. 20 numerator part)
+        let den = dot(&self.qbuf, &self.z) + EPS;
+        out.fill(0.0);
+        for t in 0..d {
+            let qt = self.qbuf[t];
+            if qt != 0.0 {
+                axpy(out, qt, &self.s[t * m..(t + 1) * m]);
+            }
+        }
+        let inv = 1.0 / den;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand(n: usize, rng: &mut Rng) -> Vec<f32> {
+        rng.normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn rnn_view_equals_parallel_view() {
+        // the crux of section 3.4, at the engine level
+        let (n, d, m) = (24, 8, 8);
+        let mut rng = Rng::new(0);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut parallel = vec![0.0; n * m];
+        forward_causal(&q, &k, &v, n, d, m, &mut parallel);
+
+        let mut state = LinearAttnState::new(d, m);
+        let mut step_out = vec![0.0; m];
+        for i in 0..n {
+            state.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * m..(i + 1) * m], &mut step_out);
+            for e in 0..m {
+                let p = parallel[i * m + e];
+                assert!(
+                    (p - step_out[e]).abs() < 1e-4,
+                    "RNN/parallel divergence at i={i} e={e}: {p} vs {}",
+                    step_out[e]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_output_is_v0() {
+        let (n, d, m) = (4, 4, 4);
+        let mut rng = Rng::new(1);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut out = vec![0.0; n * m];
+        forward_causal(&q, &k, &v, n, d, m, &mut out);
+        for e in 0..m {
+            assert!((out[e] - v[e]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn causality_perturbation() {
+        let (n, d, m) = (16, 4, 4);
+        let mut rng = Rng::new(2);
+        let (q, mut k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut base = vec![0.0; n * m];
+        forward_causal(&q, &k, &v, n, d, m, &mut base);
+        for x in &mut k[(n - 2) * d..] {
+            *x += 2.0;
+        }
+        let mut pert = vec![0.0; n * m];
+        forward_causal(&q, &k, &v, n, d, m, &mut pert);
+        for i in 0..(n - 2) * m {
+            assert!((base[i] - pert[i]).abs() < 1e-6);
+        }
+        let tail: f32 = ((n - 2) * m..n * m).map(|i| (base[i] - pert[i]).abs()).sum();
+        assert!(tail > 1e-4);
+    }
+
+    #[test]
+    fn noncausal_is_constant_over_positions_when_q_constant() {
+        // with identical queries, every output row must be identical
+        let (n, d, m) = (10, 4, 4);
+        let mut rng = Rng::new(3);
+        let q1 = rand(d, &mut rng);
+        let q: Vec<f32> = (0..n).flat_map(|_| q1.clone()).collect();
+        let (k, v) = (rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut out = vec![0.0; n * m];
+        forward_noncausal(&q, &k, &v, n, d, m, &mut out);
+        for i in 1..n {
+            for e in 0..m {
+                assert!((out[e] - out[i * m + e]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (n, d, m) = (6, 3, 3);
+        let mut rng = Rng::new(4);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let g = rand(n * m, &mut rng);
+        let (_, dq, dk, dv) = forward_backward_causal(&q, &k, &v, &g, n, d, m);
+
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f32 {
+            let mut out = vec![0.0; n * m];
+            forward_causal(q, k, v, n, d, m, &mut out);
+            out.iter().zip(&g).map(|(o, gg)| o * gg).sum()
+        };
+        let eps = 1e-3;
+        for (analytic, which) in [(&dq, 0usize), (&dk, 1), (&dv, 2)] {
+            for idx in [0usize, 4, analytic.len() - 1] {
+                let (mut qp, mut kp, mut vp) = (q.clone(), k.clone(), v.clone());
+                match which {
+                    0 => qp[idx] += eps,
+                    1 => kp[idx] += eps,
+                    _ => vp[idx] += eps,
+                }
+                let up = loss(&qp, &kp, &vp);
+                match which {
+                    0 => qp[idx] -= 2.0 * eps,
+                    1 => kp[idx] -= 2.0 * eps,
+                    _ => vp[idx] -= 2.0 * eps,
+                }
+                let down = loss(&qp, &kp, &vp);
+                let fd = (up - down) / (2.0 * eps);
+                assert!(
+                    (fd - analytic[idx]).abs() < 2e-2,
+                    "which={which} idx={idx}: fd={fd} analytic={}",
+                    analytic[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn state_size_constant_and_resettable() {
+        let mut st = LinearAttnState::new(32, 32);
+        let bytes0 = st.state_bytes();
+        let mut rng = Rng::new(5);
+        let mut out = vec![0.0; 32];
+        for _ in 0..100 {
+            let q = rand(32, &mut rng);
+            let k = rand(32, &mut rng);
+            let v = rand(32, &mut rng);
+            st.step(&q, &k, &v, &mut out);
+        }
+        assert_eq!(st.state_bytes(), bytes0, "state must not grow with tokens");
+        st.reset();
+        assert!(st.s.iter().all(|&x| x == 0.0));
+        assert!(st.z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn outputs_are_weighted_averages_of_values() {
+        crate::propcheck::check("linear-attn-convex-hull", 30, |gen| {
+            let n = gen.usize_in(2, 16);
+            let d = 4usize;
+            let m = 4usize;
+            let q = gen.vec_f32(n * d, 1.0);
+            let k = gen.vec_f32(n * d, 1.0);
+            let v = gen.vec_f32(n * m, 1.0);
+            let mut out = vec![0.0; n * m];
+            forward_causal(&q, &k, &v, n, d, m, &mut out);
+            let vmax = v.iter().cloned().fold(f32::MIN, f32::max);
+            let vmin = v.iter().cloned().fold(f32::MAX, f32::min);
+            for &o in &out {
+                if o > vmax + 1e-3 || o < vmin - 1e-3 {
+                    return Err(format!("output {o} escapes value hull [{vmin}, {vmax}]"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

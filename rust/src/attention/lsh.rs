@@ -1,0 +1,479 @@
+//! LSH attention (Reformer; Kitaev et al. 2020) — the paper's baseline,
+//! implemented as the real sort→chunk→attend pipeline.
+//!
+//! Per hashing round:
+//!   1. angular LSH: bucket(x) = argmax([xR; -xR]) with a random rotation R,
+//!   2. stable sort positions by (bucket, position),
+//!   3. cut the sorted order into chunks of `chunk` positions,
+//!   4. each position attends within its chunk and the previous chunk,
+//!      causally masked by *original* position,
+//! then rounds are combined weighted by their softmax mass (the round that
+//! found the query's true neighbours gets the weight).
+//!
+//! Unlike the jax `lsh_attention.py` (dense-mask variant used only for the
+//! convergence figure), this implementation has the true ~O(N · chunk)
+//! compute profile and is what the speed/memory benches (Figure 1, Tables
+//! 1-2 lsh rows) run.
+//!
+//! `forward_backward` recomputes per-chunk weights and backpropagates the
+//! local attention exactly; the round-combination weights are treated as
+//! constants (straight-through), which preserves the cost profile Figure 1
+//! measures. The models *trained* with lsh use the jax path.
+
+use crate::rng::Rng;
+use crate::tensor::dot;
+
+/// LSH attention configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LshConfig {
+    pub rounds: usize,
+    pub buckets: usize,
+    pub chunk: usize,
+    pub seed: u64,
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        LshConfig {
+            rounds: 1,
+            buckets: 32,
+            chunk: 32,
+            seed: 0,
+        }
+    }
+}
+
+/// Rotation bank: rounds x [d, buckets/2], deterministic in (seed, d).
+pub fn make_rotations(cfg: &LshConfig, d: usize) -> Vec<Vec<f32>> {
+    assert!(cfg.buckets % 2 == 0, "angular LSH needs even bucket count");
+    let mut rng = Rng::new(cfg.seed ^ 0x15ba_77f0);
+    (0..cfg.rounds)
+        .map(|_| rng.normal_vec(d * cfg.buckets / 2, 1.0))
+        .collect()
+}
+
+/// Bucket ids for all n positions under one rotation.
+fn bucket_ids(k: &[f32], n: usize, d: usize, rot: &[f32], buckets: usize) -> Vec<u32> {
+    let half = buckets / 2;
+    let mut ids = Vec::with_capacity(n);
+    for i in 0..n {
+        let ki = &k[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for b in 0..half {
+            // proj = k_i . rot[:, b]
+            let mut p = 0.0;
+            for t in 0..d {
+                p += ki[t] * rot[t * half + b];
+            }
+            if p > best_v {
+                best_v = p;
+                best = b;
+            }
+            if -p > best_v {
+                best_v = -p;
+                best = b + half;
+            }
+        }
+        ids.push(best as u32);
+    }
+    ids
+}
+
+/// Sorted order (stable by bucket then position) and per-position chunk id.
+fn sort_and_chunk(buckets_of: &[u32], chunk: usize) -> (Vec<usize>, Vec<usize>) {
+    let n = buckets_of.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (buckets_of[i], i)); // stable by construction
+    let mut chunk_of = vec![0usize; n];
+    for (rank, &pos) in order.iter().enumerate() {
+        chunk_of[pos] = rank / chunk;
+    }
+    (order, chunk_of)
+}
+
+/// Multi-round LSH attention forward.
+/// q, k: [n, d] (k doubles as the hashed vector — Reformer shares QK),
+/// v: [n, m], out: [n, m]. Returns per-round outputs merged by mass.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    cfg: &LshConfig,
+    rotations: &[Vec<f32>],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    causal: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(rotations.len(), cfg.rounds);
+    let mut round_outs = vec![0.0f32; cfg.rounds * n * m];
+    let mut round_mass = vec![f32::NEG_INFINITY; cfg.rounds * n];
+    for (r, rot) in rotations.iter().enumerate() {
+        round_forward(
+            cfg,
+            rot,
+            q,
+            k,
+            v,
+            n,
+            d,
+            m,
+            causal,
+            &mut round_outs[r * n * m..(r + 1) * n * m],
+            &mut round_mass[r * n..(r + 1) * n],
+        );
+    }
+    // combine rounds: softmax over per-round log mass, per position
+    out.fill(0.0);
+    for i in 0..n {
+        let mut mx = f32::NEG_INFINITY;
+        for r in 0..cfg.rounds {
+            mx = mx.max(round_mass[r * n + i]);
+        }
+        let mut total = 0.0f32;
+        let mut ws = vec![0.0f32; cfg.rounds];
+        for r in 0..cfg.rounds {
+            let w = (round_mass[r * n + i] - mx).exp();
+            ws[r] = w;
+            total += w;
+        }
+        for r in 0..cfg.rounds {
+            let w = ws[r] / total;
+            if w != 0.0 {
+                crate::tensor::axpy(
+                    &mut out[i * m..(i + 1) * m],
+                    w,
+                    &round_outs[r * n * m + i * m..r * n * m + (i + 1) * m],
+                );
+            }
+        }
+    }
+}
+
+/// One hashing round. Writes the round's output and per-position log-mass.
+#[allow(clippy::too_many_arguments)]
+fn round_forward(
+    cfg: &LshConfig,
+    rot: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    causal: bool,
+    out: &mut [f32],
+    mass: &mut [f32],
+) {
+    let buckets = bucket_ids(k, n, d, rot, cfg.buckets);
+    let (order, chunk_of) = sort_and_chunk(&buckets, cfg.chunk);
+    let n_chunks = n.div_ceil(cfg.chunk);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // candidate list per chunk: positions in chunk c-1 and c (sorted order)
+    let chunk_span = |c: usize| -> &[usize] {
+        let lo = c.saturating_sub(1) * cfg.chunk;
+        let hi = ((c + 1) * cfg.chunk).min(n);
+        &order[lo..hi]
+    };
+
+    let mut logits: Vec<f32> = Vec::with_capacity(2 * cfg.chunk);
+    for c in 0..n_chunks {
+        let span = chunk_span(c);
+        let own_lo = c * cfg.chunk;
+        let own_hi = ((c + 1) * cfg.chunk).min(n);
+        for &i in &order[own_lo..own_hi] {
+            debug_assert_eq!(chunk_of[i], c);
+            let qi = &q[i * d..(i + 1) * d];
+            logits.clear();
+            let mut mx = f32::NEG_INFINITY;
+            for &j in span {
+                let l = if causal && j > i {
+                    f32::NEG_INFINITY
+                } else if j == i && span.len() > 1 {
+                    // Reformer: self-attention only as a last resort
+                    -1e5
+                } else {
+                    dot(qi, &k[j * d..(j + 1) * d]) * scale
+                };
+                mx = mx.max(l);
+                logits.push(l);
+            }
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - mx).exp();
+                denom += *l;
+            }
+            let orow = &mut out[i * m..(i + 1) * m];
+            orow.fill(0.0);
+            if denom > 0.0 {
+                for (idx, &j) in span.iter().enumerate() {
+                    let w = logits[idx] / denom;
+                    if w != 0.0 {
+                        crate::tensor::axpy(orow, w, &v[j * m..(j + 1) * m]);
+                    }
+                }
+            }
+            // log total mass (for round combination): mx + log denom
+            mass[i] = if denom > 0.0 { mx + denom.ln() } else { f32::NEG_INFINITY };
+        }
+    }
+}
+
+/// Forward + backward for the Figure-1 cost sweep: exact within-round local
+/// attention gradients; round-combination weights straight-through.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_backward(
+    cfg: &LshConfig,
+    rotations: &[Vec<f32>],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    causal: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut out = vec![0.0f32; n * m];
+    forward(cfg, rotations, q, k, v, n, d, m, causal, &mut out);
+
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * m];
+    let scale = 1.0 / (d as f32).sqrt();
+    let gscale = 1.0 / cfg.rounds as f32; // straight-through round average
+
+    for rot in rotations {
+        let buckets = bucket_ids(k, n, d, rot, cfg.buckets);
+        let (order, _) = sort_and_chunk(&buckets, cfg.chunk);
+        let n_chunks = n.div_ceil(cfg.chunk);
+        let mut logits: Vec<f32> = Vec::with_capacity(2 * cfg.chunk);
+        let mut dlog: Vec<f32> = Vec::with_capacity(2 * cfg.chunk);
+        for c in 0..n_chunks {
+            let lo = c.saturating_sub(1) * cfg.chunk;
+            let hi = ((c + 1) * cfg.chunk).min(n);
+            let span = &order[lo..hi];
+            let own_lo = c * cfg.chunk;
+            let own_hi = ((c + 1) * cfg.chunk).min(n);
+            for &i in &order[own_lo..own_hi] {
+                let qi = &q[i * d..(i + 1) * d];
+                let gi = &g[i * m..(i + 1) * m];
+                logits.clear();
+                let mut mx = f32::NEG_INFINITY;
+                for &j in span {
+                    let l = if causal && j > i {
+                        f32::NEG_INFINITY
+                    } else if j == i && span.len() > 1 {
+                        -1e5
+                    } else {
+                        dot(qi, &k[j * d..(j + 1) * d]) * scale
+                    };
+                    mx = mx.max(l);
+                    logits.push(l);
+                }
+                let mut denom = 0.0f32;
+                for l in logits.iter_mut() {
+                    *l = (*l - mx).exp();
+                    denom += *l;
+                }
+                if denom <= 0.0 {
+                    continue;
+                }
+                for l in logits.iter_mut() {
+                    *l /= denom;
+                }
+                // dW_j = g_i . v_j ; dlogits = w (dW - sum w dW)
+                dlog.clear();
+                let mut wd = 0.0f32;
+                for (idx, &j) in span.iter().enumerate() {
+                    let dwj = dot(gi, &v[j * m..(j + 1) * m]);
+                    wd += logits[idx] * dwj;
+                    dlog.push(dwj);
+                }
+                for (idx, &j) in span.iter().enumerate() {
+                    let w = logits[idx];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    crate::tensor::axpy(&mut dv[j * m..(j + 1) * m], w * gscale, gi);
+                    let dl = w * (dlog[idx] - wd) * scale * gscale;
+                    if dl != 0.0 {
+                        crate::tensor::axpy(&mut dq[i * d..(i + 1) * d], dl, &k[j * d..(j + 1) * d]);
+                        crate::tensor::axpy(&mut dk[j * d..(j + 1) * d], dl, qi);
+                    }
+                }
+            }
+        }
+    }
+    (out, dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::softmax;
+    use crate::rng::Rng;
+
+    fn rand(n: usize, rng: &mut Rng) -> Vec<f32> {
+        rng.normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn bucket_ids_in_range_and_antipodal() {
+        let cfg = LshConfig {
+            buckets: 8,
+            ..Default::default()
+        };
+        let rots = make_rotations(&cfg, 6);
+        let mut rng = Rng::new(0);
+        let k = rand(10 * 6, &mut rng);
+        let ids = bucket_ids(&k, 10, 6, &rots[0], 8);
+        assert!(ids.iter().all(|&b| b < 8));
+        // x and -x land in complementary buckets
+        let mut k2 = k.clone();
+        for x in &mut k2[..6] {
+            *x = -*x;
+        }
+        let ids2 = bucket_ids(&k2, 10, 6, &rots[0], 8);
+        assert_ne!(ids[0], ids2[0]);
+        assert_eq!((ids[0] + 4) % 8, ids2[0] % 8);
+    }
+
+    #[test]
+    fn sort_is_stable_partition() {
+        let buckets = vec![2u32, 0, 1, 0, 2, 1];
+        let (order, chunk_of) = sort_and_chunk(&buckets, 2);
+        assert_eq!(order, vec![1, 3, 2, 5, 0, 4]);
+        assert_eq!(chunk_of[1], 0);
+        assert_eq!(chunk_of[0], 2);
+    }
+
+    #[test]
+    fn single_chunk_single_round_equals_full_softmax() {
+        // chunk >= n and 1 round: candidate set = everything, so (up to the
+        // self-exclusion handled below) LSH == full causal softmax.
+        let (n, d, m) = (12, 8, 8);
+        let mut rng = Rng::new(1);
+        let q = rand(n * d, &mut rng);
+        let k = rand(n * d, &mut rng);
+        let v = rand(n * m, &mut rng);
+        let cfg = LshConfig {
+            rounds: 1,
+            buckets: 4,
+            chunk: n, // one chunk covers all
+            seed: 0,
+        };
+        let rots = make_rotations(&cfg, d);
+        let mut lsh_out = vec![0.0; n * m];
+        forward(&cfg, &rots, &q, &k, &v, n, d, m, true, &mut lsh_out);
+        let mut full = vec![0.0; n * m];
+        softmax::forward(&q, &k, &v, n, d, m, true, &mut full);
+        // positions i >= 1 (self is down-weighted in lsh, so compare where
+        // self weight in full attention is small — use a generous tolerance
+        // on later positions where 1/t self-mass is diluted)
+        for i in 4..n {
+            for e in 0..m {
+                let a = lsh_out[i * m + e];
+                let b = full[i * m + e];
+                assert!((a - b).abs() < 0.6, "i={i} e={e}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn value_causality() {
+        // future VALUES never leak backward (future keys may reshuffle
+        // chunks — inherent to Reformer — so perturb v only)
+        let (n, d, m) = (32, 8, 4);
+        let mut rng = Rng::new(2);
+        let q = rand(n * d, &mut rng);
+        let k = rand(n * d, &mut rng);
+        let mut v = rand(n * m, &mut rng);
+        let cfg = LshConfig {
+            rounds: 2,
+            buckets: 8,
+            chunk: 8,
+            seed: 3,
+        };
+        let rots = make_rotations(&cfg, d);
+        let mut base = vec![0.0; n * m];
+        forward(&cfg, &rots, &q, &k, &v, n, d, m, true, &mut base);
+        for x in &mut v[(n - 1) * m..] {
+            *x += 10.0;
+        }
+        let mut pert = vec![0.0; n * m];
+        forward(&cfg, &rots, &q, &k, &v, n, d, m, true, &mut pert);
+        for i in 0..(n - 1) * m {
+            assert!((base[i] - pert[i]).abs() < 1e-5, "leak at {i}");
+        }
+    }
+
+    #[test]
+    fn every_position_gets_output_mass() {
+        let (n, d, m) = (64, 8, 8);
+        let mut rng = Rng::new(4);
+        let q = rand(n * d, &mut rng);
+        let k = rand(n * d, &mut rng);
+        let v: Vec<f32> = (0..n * m).map(|_| 1.0).collect(); // constant values
+        let cfg = LshConfig {
+            rounds: 1,
+            buckets: 8,
+            chunk: 16,
+            seed: 5,
+        };
+        let rots = make_rotations(&cfg, d);
+        let mut out = vec![0.0; n * m];
+        forward(&cfg, &rots, &q, &k, &v, n, d, m, true, &mut out);
+        // with constant v = 1, any valid attention average must be 1
+        for i in 0..n {
+            assert!(
+                (out[i * m] - 1.0).abs() < 1e-4,
+                "position {i} got mass {}",
+                out[i * m]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_finite_differences_single_round() {
+        let (n, d, m) = (10, 4, 4);
+        let mut rng = Rng::new(6);
+        let q = rand(n * d, &mut rng);
+        let k = rand(n * d, &mut rng);
+        let v = rand(n * m, &mut rng);
+        let g = rand(n * m, &mut rng);
+        let cfg = LshConfig {
+            rounds: 1,
+            buckets: 4,
+            chunk: 4,
+            seed: 7,
+        };
+        let rots = make_rotations(&cfg, d);
+        let (_, _dq, _dk, dv) = forward_backward(&cfg, &rots, &q, &k, &v, &g, n, d, m, true);
+        // check dv by finite differences (v does not affect hashing, so
+        // the gradient is exact for v)
+        let loss = |v: &[f32]| -> f32 {
+            let mut out = vec![0.0; n * m];
+            forward(&cfg, &rots, &q, &k, v, n, d, m, true, &mut out);
+            out.iter().zip(&g).map(|(o, gg)| o * gg).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 7, n * m - 1] {
+            let mut vp = v.clone();
+            vp[idx] += eps;
+            let up = loss(&vp);
+            vp[idx] -= 2.0 * eps;
+            let down = loss(&vp);
+            let fd = (up - down) / (2.0 * eps);
+            assert!(
+                (fd - dv[idx]).abs() < 2e-2,
+                "idx={idx}: fd={fd} analytic={}",
+                dv[idx]
+            );
+        }
+    }
+}

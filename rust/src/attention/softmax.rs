@@ -1,0 +1,201 @@
+//! Full softmax attention (eq. 2) — the vanilla-transformer baseline.
+//!
+//! Materializes the N x N weight matrix; O(N²·max(D,M)) time and O(N²)
+//! memory, which is exactly the wall Figure 1 measures. The backward pass
+//! implements the standard softmax-attention vjp, recomputing W.
+
+use crate::tensor::{matmul_into, softmax_inplace};
+
+/// out[n,m] = softmax(q k^T / sqrt(d)) v, optionally causal.
+pub fn forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    causal: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * m);
+    assert_eq!(out.len(), n * m);
+    let mut w = vec![0.0f32; n * n];
+    weights_into(&mut w, q, k, n, d, causal);
+    matmul_into(out, &w, v, n, n, m);
+}
+
+/// Compute the softmax weight matrix into `w`.
+fn weights_into(w: &mut [f32], q: &[f32], k: &[f32], n: usize, d: usize, causal: bool) {
+    let scale = 1.0 / (d as f32).sqrt();
+    // w = q k^T (k is [n, d], we need k^T [d, n]: loop directly)
+    for i in 0..n {
+        let qi = &q[i * d..(i + 1) * d];
+        let row = &mut w[i * n..(i + 1) * n];
+        let limit = if causal { i + 1 } else { n };
+        for (j, rj) in row.iter_mut().enumerate().take(limit) {
+            let kj = &k[j * d..(j + 1) * d];
+            *rj = crate::tensor::dot(qi, kj) * scale;
+        }
+        for rj in row.iter_mut().take(n).skip(limit) {
+            *rj = f32::NEG_INFINITY;
+        }
+        softmax_inplace(&mut row[..n]);
+    }
+}
+
+/// Forward + backward in one call (for the Figure 1 fwd/bwd benchmark).
+/// Returns (out, dq, dk, dv) given upstream gradient g[n,m].
+#[allow(clippy::too_many_arguments)]
+pub fn forward_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    causal: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut w = vec![0.0f32; n * n];
+    weights_into(&mut w, q, k, n, d, causal);
+    let mut out = vec![0.0f32; n * m];
+    matmul_into(&mut out, &w, v, n, n, m);
+
+    // dv = W^T g
+    let mut dv = vec![0.0f32; n * m];
+    for i in 0..n {
+        let wi = &w[i * n..(i + 1) * n];
+        let gi = &g[i * m..(i + 1) * m];
+        for (j, &wij) in wi.iter().enumerate() {
+            if wij != 0.0 {
+                crate::tensor::axpy(&mut dv[j * m..(j + 1) * m], wij, gi);
+            }
+        }
+    }
+
+    // dW = g v^T ; dlogits = W ∘ (dW - rowsum(dW ∘ W))
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dwrow = vec![0.0f32; n];
+    for i in 0..n {
+        let gi = &g[i * m..(i + 1) * m];
+        let wi = &w[i * n..(i + 1) * n];
+        let limit = if causal { i + 1 } else { n };
+        // dW_ij = g_i . v_j
+        for j in 0..limit {
+            dwrow[j] = crate::tensor::dot(gi, &v[j * m..(j + 1) * m]);
+        }
+        let dot_ww: f32 = (0..limit).map(|j| dwrow[j] * wi[j]).sum();
+        // dlogits_ij
+        for j in 0..limit {
+            let dl = wi[j] * (dwrow[j] - dot_ww) * scale;
+            if dl != 0.0 {
+                crate::tensor::axpy(&mut dq[i * d..(i + 1) * d], dl, &k[j * d..(j + 1) * d]);
+                crate::tensor::axpy(&mut dk[j * d..(j + 1) * d], dl, &q[i * d..(i + 1) * d]);
+            }
+        }
+    }
+    (out, dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand(n: usize, rng: &mut Rng) -> Vec<f32> {
+        rng.normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let (n, d, m) = (16, 8, 8);
+        let mut rng = Rng::new(0);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut out = vec![0.0; n * m];
+        forward(&q, &k, &v, n, d, m, false, &mut out);
+        let vmax = v.iter().cloned().fold(f32::MIN, f32::max);
+        let vmin = v.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(out.iter().all(|&o| o <= vmax + 1e-4 && o >= vmin - 1e-4));
+    }
+
+    #[test]
+    fn causal_first_row_is_v0() {
+        let (n, d, m) = (8, 4, 4);
+        let mut rng = Rng::new(1);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut out = vec![0.0; n * m];
+        forward(&q, &k, &v, n, d, m, true, &mut out);
+        for j in 0..m {
+            assert!((out[j] - v[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causality_perturbation() {
+        let (n, d, m) = (12, 4, 4);
+        let mut rng = Rng::new(2);
+        let (q, mut k, mut v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut base = vec![0.0; n * m];
+        forward(&q, &k, &v, n, d, m, true, &mut base);
+        // perturb the last position
+        for x in &mut k[(n - 1) * d..] {
+            *x += 3.0;
+        }
+        for x in &mut v[(n - 1) * m..] {
+            *x -= 2.0;
+        }
+        let mut pert = vec![0.0; n * m];
+        forward(&q, &k, &v, n, d, m, true, &mut pert);
+        for i in 0..(n - 1) * m {
+            assert!((base[i] - pert[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (n, d, m) = (6, 3, 3);
+        let mut rng = Rng::new(3);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let g = rand(n * m, &mut rng);
+        let (_, dq, dk, dv) = forward_backward(&q, &k, &v, &g, n, d, m, true);
+
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f32 {
+            let mut out = vec![0.0; n * m];
+            forward(q, k, v, n, d, m, true, &mut out);
+            out.iter().zip(&g).map(|(o, gg)| o * gg).sum()
+        };
+        let eps = 1e-3;
+        let check = |analytic: &[f32], which: usize| {
+            for idx in [0usize, 5, analytic.len() - 1] {
+                let (mut qp, mut kp, mut vp) = (q.clone(), k.clone(), v.clone());
+                let target = match which {
+                    0 => &mut qp,
+                    1 => &mut kp,
+                    _ => &mut vp,
+                };
+                target[idx] += eps;
+                let up = loss(&qp, &kp, &vp);
+                let target = match which {
+                    0 => &mut qp,
+                    1 => &mut kp,
+                    _ => &mut vp,
+                };
+                target[idx] -= 2.0 * eps;
+                let down = loss(&qp, &kp, &vp);
+                let fd = (up - down) / (2.0 * eps);
+                assert!(
+                    (fd - analytic[idx]).abs() < 2e-2,
+                    "which={which} idx={idx}: fd={fd} analytic={}",
+                    analytic[idx]
+                );
+            }
+        };
+        check(&dq, 0);
+        check(&dk, 1);
+        check(&dv, 2);
+    }
+}

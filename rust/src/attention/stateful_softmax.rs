@@ -1,0 +1,130 @@
+//! Stateful softmax decode — the "recurrent view of softmax" baseline of
+//! the paper's supplementary §C.1 (Table 4).
+//!
+//! Keys and values are cached; each decode step attends over the whole
+//! cache. Per-token cost is O(t·D) at position t (linear-in-position,
+//! quadratic over a whole sequence), and the cache grows with the
+//! sequence — the two contrasts against [`super::linear::LinearAttnState`].
+
+use crate::tensor::{dot, softmax_inplace};
+
+/// Per-head KV cache with preallocated capacity.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub d: usize,
+    pub m: usize,
+    pub len: usize,
+    k: Vec<f32>, // [cap, d]
+    v: Vec<f32>, // [cap, m]
+    logits: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(d: usize, m: usize, capacity: usize) -> Self {
+        KvCache {
+            d,
+            m,
+            len: 0,
+            k: vec![0.0; capacity * d],
+            v: vec![0.0; capacity * m],
+            logits: vec![0.0; capacity],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes held by the cache *at the current length* — grows with tokens
+    /// (this is what Table 4 contrasts against the constant linear state).
+    pub fn state_bytes(&self) -> usize {
+        self.len * (self.d + self.m) * 4
+    }
+
+    /// One decode step: append (k, v), attend q over the cache.
+    pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), self.d);
+        debug_assert!(self.len * self.d < self.k.len(), "KV cache capacity exceeded");
+        let d = self.d;
+        let m = self.m;
+        self.k[self.len * d..(self.len + 1) * d].copy_from_slice(k);
+        self.v[self.len * m..(self.len + 1) * m].copy_from_slice(v);
+        self.len += 1;
+
+        let scale = 1.0 / (d as f32).sqrt();
+        let t = self.len;
+        for j in 0..t {
+            self.logits[j] = dot(q, &self.k[j * d..(j + 1) * d]) * scale;
+        }
+        softmax_inplace(&mut self.logits[..t]);
+        out.fill(0.0);
+        for j in 0..t {
+            let w = self.logits[j];
+            if w != 0.0 {
+                crate::tensor::axpy(out, w, &self.v[j * m..(j + 1) * m]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::softmax;
+    use crate::rng::Rng;
+
+    #[test]
+    fn stepwise_equals_full_causal_softmax() {
+        let (n, d, m) = (20, 8, 8);
+        let mut rng = Rng::new(0);
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * m, 1.0);
+        let mut full = vec![0.0; n * m];
+        softmax::forward(&q, &k, &v, n, d, m, true, &mut full);
+
+        let mut cache = KvCache::new(d, m, n);
+        let mut out = vec![0.0; m];
+        for i in 0..n {
+            cache.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * m..(i + 1) * m], &mut out);
+            for e in 0..m {
+                assert!(
+                    (full[i * m + e] - out[e]).abs() < 1e-4,
+                    "divergence at {i},{e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cache_grows_linearly() {
+        let mut cache = KvCache::new(16, 16, 64);
+        let q = vec![0.1; 16];
+        let mut out = vec![0.0; 16];
+        let mut prev = 0;
+        for i in 0..64 {
+            cache.step(&q, &q, &q, &mut out);
+            let b = cache.state_bytes();
+            assert!(b > prev, "cache must grow at step {i}");
+            prev = b;
+        }
+        assert_eq!(prev, 64 * (16 + 16) * 4);
+    }
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let mut cache = KvCache::new(4, 4, 8);
+        let x = vec![0.5; 4];
+        let mut out = vec![0.0; 4];
+        for _ in 0..8 {
+            cache.step(&x, &x, &x, &mut out);
+        }
+        cache.reset();
+        assert_eq!(cache.len, 0);
+        cache.step(&x, &x, &x, &mut out);
+        // single entry: output must equal v exactly
+        for e in 0..4 {
+            assert!((out[e] - 0.5).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with robust statistics, per-run peak
+//! memory accounting hooks, and table output in both human-readable
+//! markdown and machine-readable CSV — every `rust/benches/*.rs` target
+//! (one per paper table/figure) is built on this.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics of one measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Items/sec at `items` per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+/// Bench configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard wall-clock cap for the measurement loop — long configurations
+    /// (e.g. softmax at N=16384) stop early with however many iters ran.
+    pub max_total: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 2,
+            measure_iters: 10,
+            max_total: Duration::from_secs(20),
+        }
+    }
+}
+
+impl BenchOpts {
+    pub fn quick() -> Self {
+        BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 3,
+            max_total: Duration::from_secs(8),
+        }
+    }
+}
+
+/// Time a closure under the given options.
+pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    let start = Instant::now();
+    for _ in 0..opts.measure_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() > opts.max_total && !samples.is_empty() {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+/// Time a closure once (for very slow configurations).
+pub fn bench_once(name: &str, mut f: impl FnMut()) -> Measurement {
+    let t0 = Instant::now();
+    f();
+    summarize(name, vec![t0.elapsed()])
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> Measurement {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let idx = |q: f64| ((samples.len() - 1) as f64 * q).round() as usize;
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[idx(0.5)],
+        p95: samples[idx(0.95)],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// A results table with aligned markdown rendering and CSV output.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and write CSV under results/.
+    pub fn emit(&self, csv_name: &str) {
+        print!("{}", self.to_markdown());
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(csv_name);
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            } else {
+                eprintln!("[csv] {}", path.display());
+            }
+        }
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+/// Read `BENCH_QUICK=1` to shrink iteration counts in CI-ish runs.
+pub fn opts_from_env() -> BenchOpts {
+    if std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let m = bench(
+            "sleepless",
+            BenchOpts {
+                warmup_iters: 1,
+                measure_iters: 5,
+                max_total: Duration::from_secs(5),
+            },
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert_eq!(m.iters, 5);
+        assert!(m.min <= m.p50 && m.p50 <= m.max);
+        assert!(m.mean >= m.min && m.mean <= m.max);
+    }
+
+    #[test]
+    fn max_total_stops_early() {
+        let m = bench(
+            "slow",
+            BenchOpts {
+                warmup_iters: 0,
+                measure_iters: 1000,
+                max_total: Duration::from_millis(30),
+            },
+            || std::thread::sleep(Duration::from_millis(10)),
+        );
+        assert!(m.iters < 1000);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = summarize("t", vec![Duration::from_millis(100)]);
+        let thr = m.throughput(50.0);
+        assert!((thr - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["method", "value"]);
+        t.row(vec!["linear".into(), "1.0".into()]);
+        t.row(vec!["softmax".into(), "2.0".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("## Demo"));
+        assert!(md.contains("| linear "));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("method,value"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_bytes(512), "512.0 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+    }
+}

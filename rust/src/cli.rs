@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the `lintra <subcommand> --flag value --switch` shape used by
+//! the binary and examples. Flags may appear as `--key value` or
+//! `--key=value`; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// Parsed command line: a subcommand, positional args, and string flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_flags: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut args = Args {
+            known: known_flags.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let (key, inline_val) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                if !args.known.iter().any(|k| k == &key) {
+                    bail!("unknown flag --{key} (known: {})", args.known.join(", "));
+                }
+                if let Some(v) = inline_val {
+                    args.flags.insert(key, v);
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(key, it.next().unwrap());
+                } else {
+                    args.switches.push(key);
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// From the process environment.
+    pub fn from_env(known_flags: &[&str]) -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn f32_flag(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+        }
+    }
+
+    pub fn u64_flag(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str], known: &[&str]) -> anyhow::Result<Args> {
+        Args::parse(tokens.iter().map(|s| s.to_string()), known)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(
+            &["train", "--task", "copy", "--steps", "100", "--verbose"],
+            &["task", "steps", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.flag("task"), Some("copy"));
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 100);
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["x", "--lr=0.001"], &["lr"]).unwrap();
+        assert!((a.f32_flag("lr", 0.0).unwrap() - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&["x", "--bogus", "1"], &["real"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["serve"], &["port"]).unwrap();
+        assert_eq!(a.usize_flag("port", 7070).unwrap(), 7070);
+        assert_eq!(a.flag_or("port", "7070"), "7070");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["eval", "model.ltw", "data.bin"], &[]).unwrap();
+        assert_eq!(a.positional, vec!["model.ltw", "data.bin"]);
+    }
+
+    #[test]
+    fn bad_numeric_flag_is_error() {
+        let a = parse(&["x", "--steps", "abc"], &["steps"]).unwrap();
+        assert!(a.usize_flag("steps", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["bench", "--quick"], &["quick"]).unwrap();
+        assert!(a.switch("quick"));
+        assert_eq!(a.flag("quick"), None);
+    }
+}

@@ -1,0 +1,276 @@
+//! Typed configuration system.
+//!
+//! [`ModelConfig`] mirrors `python/compile/model.py::ModelConfig` and can be
+//! parsed straight from the artifact manifest, so the rust engines always
+//! agree with the lowered HLO about shapes. [`TrainConfig`] / [`ServeConfig`]
+//! configure the trainer and the serving engine; both can be loaded from a
+//! JSON file and overridden by CLI flags.
+
+use anyhow::{bail, Context};
+
+use crate::json::Json;
+
+/// Transformer hyper-parameters (must match the python side for a model key).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_len: usize,
+    pub d_ff: usize,
+    pub chunk: usize,
+    pub causal: bool,
+    pub lsh_rounds: usize,
+    pub lsh_buckets: usize,
+    pub lsh_chunk: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// The copy-task model from the synthetic experiments (§4.1).
+    pub fn small_copy() -> Self {
+        ModelConfig {
+            vocab: 13,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 4,
+            max_len: 128,
+            d_ff: 512,
+            chunk: 16,
+            causal: true,
+            lsh_rounds: 1,
+            lsh_buckets: 16,
+            lsh_chunk: 32,
+        }
+    }
+
+    /// The MNIST pixel model (§4.2.1, scaled: see DESIGN.md).
+    pub fn mnist() -> Self {
+        ModelConfig {
+            vocab: 256,
+            max_len: 784,
+            lsh_buckets: 32,
+            ..Self::small_copy()
+        }
+    }
+
+    /// The CIFAR pixel model (§4.2.2, scaled).
+    pub fn cifar() -> Self {
+        ModelConfig {
+            vocab: 256,
+            max_len: 3072,
+            ..Self::small_copy()
+        }
+    }
+
+    /// Paper-scale MNIST config (8 layers, 8 heads, d=256) for reference.
+    pub fn mnist_paper_scale() -> Self {
+        ModelConfig {
+            vocab: 256,
+            d_model: 256,
+            n_heads: 8,
+            n_layers: 8,
+            max_len: 784,
+            d_ff: 1024,
+            ..Self::small_copy()
+        }
+    }
+
+    /// Parse from a manifest `models.<key>.config` object.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let grab = |k: &str| -> anyhow::Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("config missing field {k:?}"))
+        };
+        Ok(ModelConfig {
+            vocab: grab("vocab")?,
+            d_model: grab("d_model")?,
+            n_heads: grab("n_heads")?,
+            n_layers: grab("n_layers")?,
+            max_len: grab("max_len")?,
+            d_ff: grab("d_ff")?,
+            chunk: grab("chunk").unwrap_or(16),
+            causal: j.get("causal").and_then(|v| v.as_bool()).unwrap_or(true),
+            lsh_rounds: grab("lsh_rounds").unwrap_or(1),
+            lsh_buckets: grab("lsh_buckets").unwrap_or(16),
+            lsh_chunk: grab("lsh_chunk").unwrap_or(32),
+        })
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        if self.causal && self.max_len % self.chunk != 0 {
+            bail!("max_len {} not a multiple of chunk {}", self.max_len, self.chunk);
+        }
+        if self.lsh_buckets % 2 != 0 {
+            bail!("lsh_buckets must be even (angular LSH)");
+        }
+        Ok(())
+    }
+}
+
+/// Trainer configuration (Figure 2 / Figure 5 runs).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub task: String,
+    pub variant: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// LR is divided by 10 after this step (paper: 1e-3 -> 1e-4 after 3000).
+    pub lr_drop_step: Option<usize>,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub out_csv: Option<String>,
+    pub checkpoint: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            task: "copy".into(),
+            variant: "linear".into(),
+            steps: 400,
+            lr: 1e-3,
+            lr_drop_step: Some(3000),
+            log_every: 10,
+            eval_every: 0,
+            seed: 0,
+            out_csv: None,
+            checkpoint: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match self.lr_drop_step {
+            Some(drop) if step >= drop => self.lr * 0.1,
+            _ => self.lr,
+        }
+    }
+}
+
+/// Serving engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Maximum decode batch (requests fused into one RNN step).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub max_wait_us: u64,
+    /// Upper bound on concurrent sessions.
+    pub max_sessions: usize,
+    /// TCP bind address for the JSON-lines server ("" = in-process only).
+    pub bind: String,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 500,
+            max_sessions: 256,
+            bind: String::new(),
+            temperature: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        if self.max_sessions < self.max_batch {
+            bail!("max_sessions must be >= max_batch");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for cfg in [
+            ModelConfig::small_copy(),
+            ModelConfig::mnist(),
+            ModelConfig::cifar(),
+            ModelConfig::mnist_paper_scale(),
+        ] {
+            cfg.validate().unwrap();
+            assert_eq!(cfg.d_head() * cfg.n_heads, cfg.d_model);
+        }
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"vocab": 13, "d_model": 128, "n_heads": 4, "n_layers": 4,
+                "max_len": 128, "d_ff": 512, "chunk": 16, "causal": true,
+                "lsh_rounds": 1, "lsh_buckets": 16, "lsh_chunk": 32,
+                "attention": "linear"}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, ModelConfig::small_copy());
+    }
+
+    #[test]
+    fn from_json_missing_field_errors() {
+        let j = Json::parse(r#"{"vocab": 13}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_heads() {
+        let cfg = ModelConfig {
+            n_heads: 5,
+            ..ModelConfig::small_copy()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn lr_schedule() {
+        let tc = TrainConfig {
+            lr: 1e-3,
+            lr_drop_step: Some(100),
+            ..Default::default()
+        };
+        assert_eq!(tc.lr_at(0), 1e-3);
+        assert_eq!(tc.lr_at(99), 1e-3);
+        assert!((tc.lr_at(100) - 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_config_validation() {
+        assert!(ServeConfig::default().validate().is_ok());
+        assert!(ServeConfig {
+            max_batch: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(ServeConfig {
+            max_batch: 16,
+            max_sessions: 4,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Dynamic batching policy — pure logic, no I/O, fully propcheckable.
+//!
+//! Requests queue until either (a) `max_batch` are waiting or (b) the
+//! oldest has waited `max_wait`; then a batch is released. The policy is
+//! driven by an injected clock so tests control time.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::GenerateRequest;
+
+/// A queued request with its arrival time.
+#[derive(Debug, Clone)]
+struct Pending {
+    req: GenerateRequest,
+    arrived: Instant,
+}
+
+/// The batching policy.
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    queue: VecDeque<Pending>,
+    /// total requests ever enqueued / released (conservation invariant)
+    pub enqueued: u64,
+    pub released: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Batcher {
+            max_batch,
+            max_wait,
+            queue: VecDeque::new(),
+            enqueued: 0,
+            released: 0,
+        }
+    }
+
+    pub fn push(&mut self, req: GenerateRequest, now: Instant) {
+        self.queue.push_back(Pending { req, arrived: now });
+        self.enqueued += 1;
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Would `poll` release a batch at `now`?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        now.duration_since(self.queue[0].arrived) >= self.max_wait
+    }
+
+    /// If the deadline has not fired, when will it?
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|p| p.arrived + self.max_wait)
+    }
+
+    /// Release up to `capacity.min(max_batch)` requests if ready.
+    /// FIFO order is preserved (no starvation).
+    pub fn poll(&mut self, now: Instant, capacity: usize) -> Vec<GenerateRequest> {
+        if capacity == 0 || !self.ready(now) {
+            return Vec::new();
+        }
+        let n = self.queue.len().min(self.max_batch).min(capacity);
+        let out: Vec<GenerateRequest> = self.queue.drain(..n).map(|p| p.req).collect();
+        self.released += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> GenerateRequest {
+        GenerateRequest {
+            id,
+            prompt: vec![1],
+            max_new: 4,
+            temperature: 0.0,
+        }
+    }
+
+    #[test]
+    fn releases_on_full_batch_immediately() {
+        let mut b = Batcher::new(3, Duration::from_secs(10));
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i), t0);
+        }
+        assert!(b.ready(t0));
+        let batch = b.poll(t0, usize::MAX);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0); // FIFO
+    }
+
+    #[test]
+    fn waits_for_deadline_when_underfull() {
+        let mut b = Batcher::new(8, Duration::from_millis(100));
+        let t0 = Instant::now();
+        b.push(req(1), t0);
+        assert!(!b.ready(t0));
+        assert!(b.poll(t0, usize::MAX).is_empty());
+        let later = t0 + Duration::from_millis(150);
+        assert!(b.ready(later));
+        assert_eq!(b.poll(later, usize::MAX).len(), 1);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let mut b = Batcher::new(4, Duration::from_millis(0));
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(req(i), t0);
+        }
+        let batch = b.poll(t0, 2);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn conservation_and_fifo_property() {
+        crate::propcheck::check("batcher-conservation-fifo", crate::propcheck::default_cases(), |g| {
+            let max_batch = g.usize_in(1, 8);
+            let max_wait = Duration::from_millis(g.usize_in(0, 50) as u64);
+            let mut b = Batcher::new(max_batch, max_wait);
+            let t0 = Instant::now();
+            let mut next_id = 0u64;
+            let mut released_ids = Vec::new();
+            let mut now = t0;
+            for _ in 0..g.usize_in(1, 40) {
+                // random interleaving of pushes, time advances, polls
+                match g.usize_in(0, 2) {
+                    0 => {
+                        b.push(req(next_id), now);
+                        next_id += 1;
+                    }
+                    1 => now += Duration::from_millis(g.usize_in(0, 30) as u64),
+                    _ => {
+                        let cap = g.usize_in(0, 10);
+                        let batch = b.poll(now, cap);
+                        if batch.len() > max_batch.min(cap) {
+                            return Err(format!(
+                                "batch of {} exceeds max_batch {} / cap {}",
+                                batch.len(),
+                                max_batch,
+                                cap
+                            ));
+                        }
+                        released_ids.extend(batch.iter().map(|r| r.id));
+                    }
+                }
+            }
+            // drain completely
+            now += max_wait + Duration::from_millis(1);
+            loop {
+                let batch = b.poll(now, usize::MAX);
+                if batch.is_empty() {
+                    break;
+                }
+                released_ids.extend(batch.iter().map(|r| r.id));
+            }
+            // conservation: everything enqueued is eventually released once
+            if released_ids.len() as u64 != b.enqueued {
+                return Err(format!(
+                    "released {} of {} enqueued",
+                    released_ids.len(),
+                    b.enqueued
+                ));
+            }
+            if b.enqueued != b.released {
+                return Err("counter mismatch".into());
+            }
+            // FIFO: ids must come out strictly increasing
+            for w in released_ids.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("out of order: {} then {}", w[0], w[1]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_starvation_property() {
+        // any request is released within max_wait once polls happen
+        crate::propcheck::check("batcher-no-starvation", 40, |g| {
+            let max_wait = Duration::from_millis(20);
+            let mut b = Batcher::new(16, max_wait);
+            let t0 = Instant::now();
+            b.push(req(0), t0);
+            // adversarial: keep polling *before* the deadline with tiny caps
+            let mut now = t0;
+            for _ in 0..g.usize_in(0, 5) {
+                now += Duration::from_millis(3);
+                let _ = b.poll(now, 1);
+            }
+            // after the deadline the request must come out
+            now = t0 + max_wait;
+            let batch = b.poll(now, 1);
+            if batch.len() != 1 {
+                return Err("request starved past its deadline".into());
+            }
+            Ok(())
+        });
+    }
+}

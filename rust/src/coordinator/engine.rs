@@ -1,0 +1,601 @@
+//! The serving engine: worker thread + continuous batching decode loop.
+//!
+//! Two interchangeable engines implement the same submit/response API:
+//!
+//! * [`NativeEngine`] — decodes with the pure-rust [`crate::nn`] model.
+//!   One `DecodeSession` per slot; a tick advances every active slot by
+//!   one token. Because linear attention's decode state is O(1) per slot,
+//!   admission never requires eviction or cache planning.
+//! * [`PjrtEngine`] — decodes with a batched `*_decode_linear_b<B>` AOT
+//!   artifact through the PJRT runtime. All slots advance in one XLA
+//!   execution per tick; per-slot positions ride in the `in:pos` vector
+//!   (this is why the artifact takes pos as [B]).
+//!
+//! PJRT handles are not `Send`, so the PJRT engine constructs its
+//! `Runtime` *inside* the worker thread; only plain data crosses.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::attention::AttentionKind;
+use crate::config::{ModelConfig, ServeConfig};
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::request::{GenerateRequest, GenerateResponse};
+use crate::coordinator::sessions::{SlotInfo, SlotTable};
+use crate::metrics::LatencyRecorder;
+use crate::nn::TransformerLM;
+use crate::rng::Rng;
+use crate::runtime::{Runtime, Value};
+use crate::sampling::sample_logits;
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub requests: u64,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub ticks: u64,
+    pub batch_occupancy_sum: u64,
+    pub latency: LatencyRecorder,
+}
+
+impl EngineStats {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum as f64 / self.ticks as f64
+        }
+    }
+}
+
+enum Msg {
+    Request(GenerateRequest, Sender<GenerateResponse>),
+    Shutdown,
+}
+
+/// Handle for submitting work to a running engine.
+pub struct EngineHandle {
+    tx: Sender<Msg>,
+    stats: Arc<Mutex<EngineStats>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenerateRequest) -> Receiver<GenerateResponse> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Request(req, tx))
+            .expect("engine worker gone");
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn generate_blocking(&self, req: GenerateRequest) -> GenerateResponse {
+        self.submit(req).recv().expect("engine dropped response")
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native engine
+// ---------------------------------------------------------------------------
+
+/// Serving engine over the pure-rust model.
+pub struct NativeEngine;
+
+impl NativeEngine {
+    /// Spawn the worker; the model moves into the thread.
+    pub fn spawn(model: TransformerLM, cfg: ServeConfig) -> anyhow::Result<EngineHandle> {
+        cfg.validate()?;
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
+        let stats_w = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name("lintra-native-engine".into())
+            .spawn(move || native_worker(model, cfg, rx, stats_w))?;
+        Ok(EngineHandle {
+            tx,
+            stats,
+            worker: Some(worker),
+        })
+    }
+}
+
+fn native_worker(
+    model: TransformerLM,
+    cfg: ServeConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    assert_eq!(
+        model.kind,
+        AttentionKind::Linear,
+        "the native engine decodes with the linear-RNN backend"
+    );
+    let mut batcher = Batcher::new(cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
+    let mut slots = SlotTable::new(cfg.max_batch);
+    let mut sessions: Vec<Option<crate::nn::DecodeSession>> =
+        (0..cfg.max_batch).map(|_| None).collect();
+    let mut responders: std::collections::HashMap<u64, Sender<GenerateResponse>> =
+        std::collections::HashMap::new();
+    let mut rng = Rng::new(cfg.seed);
+    let mut shutdown = false;
+
+    while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
+        // 1. ingest requests (block only when totally idle)
+        let idle = slots.active() == 0 && batcher.pending() == 0;
+        loop {
+            let msg = if idle && !shutdown {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => None,
+                }
+            };
+            match msg {
+                Some(Msg::Request(req, resp_tx)) => {
+                    responders.insert(req.id, resp_tx);
+                    stats.lock().unwrap().requests += 1;
+                    batcher.push(req, Instant::now());
+                    continue; // drain any further queued messages
+                }
+                Some(Msg::Shutdown) => {
+                    shutdown = true;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // 2. admit from the batcher into free slots
+        let now = Instant::now();
+        let capacity = cfg.max_batch - slots.active();
+        for req in batcher.poll(now, capacity) {
+            let prompt = req.prompt.clone();
+            let idx = slots
+                .alloc(SlotInfo {
+                    request_id: req.id,
+                    started: now,
+                    prompt_left: prompt,
+                    generated: Vec::new(),
+                    max_new: req.max_new,
+                    temperature: req.temperature,
+                    pos: 0,
+                })
+                .expect("capacity checked");
+            sessions[idx] = Some(model.session());
+        }
+
+        if slots.active() == 0 {
+            continue;
+        }
+
+        // 3. one decode tick: advance every active slot by one token
+        let active = slots.active_indices();
+        {
+            let mut st = stats.lock().unwrap();
+            st.ticks += 1;
+            st.batch_occupancy_sum += active.len() as u64;
+        }
+        let mut finished: Vec<usize> = Vec::new();
+        for idx in active {
+            let info = slots.get_mut(idx).unwrap();
+            let sess = sessions[idx].as_mut().unwrap();
+            let token = if !info.prompt_left.is_empty() {
+                info.prompt_left.remove(0)
+            } else {
+                *info.generated.last().unwrap()
+            };
+            let logits = sess.step(token);
+            info.pos += 1;
+            if info.prompt_left.is_empty() {
+                let next = sample_logits(&logits, info.temperature, &mut rng);
+                info.generated.push(next);
+                stats.lock().unwrap().tokens_generated += 1;
+                let at_len_cap = info.pos + 1 >= model.cfg.max_len;
+                if info.generated.len() >= info.max_new || at_len_cap {
+                    finished.push(idx);
+                }
+            }
+        }
+
+        // 4. complete finished slots
+        for idx in finished {
+            let info = slots.release(idx).unwrap();
+            sessions[idx] = None;
+            let latency = info.started.elapsed();
+            {
+                let mut st = stats.lock().unwrap();
+                st.completed += 1;
+                st.latency.record(latency);
+            }
+            if let Some(tx) = responders.remove(&info.request_id) {
+                let _ = tx.send(GenerateResponse {
+                    id: info.request_id,
+                    tokens: info.generated,
+                    latency_us: latency.as_micros() as u64,
+                    error: None,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine
+// ---------------------------------------------------------------------------
+
+/// Serving engine over a batched AOT decode artifact.
+pub struct PjrtEngine;
+
+/// Parameters identifying the artifact the PJRT engine decodes with.
+#[derive(Clone, Debug)]
+pub struct PjrtEngineSpec {
+    pub artifacts_dir: String,
+    /// e.g. "mnist" — uses `<task>_decode_linear_b<max_batch>`
+    pub task: String,
+    pub model_cfg: ModelConfig,
+}
+
+impl PjrtEngine {
+    pub fn spawn(spec: PjrtEngineSpec, cfg: ServeConfig) -> anyhow::Result<EngineHandle> {
+        cfg.validate()?;
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
+        let stats_w = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name("lintra-pjrt-engine".into())
+            .spawn(move || pjrt_worker(spec, cfg, rx, stats_w, ready_tx))?;
+        // surface artifact-loading errors synchronously
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pjrt worker died during startup"))??;
+        Ok(EngineHandle {
+            tx,
+            stats,
+            worker: Some(worker),
+        })
+    }
+}
+
+fn pjrt_worker(
+    spec: PjrtEngineSpec,
+    cfg: ServeConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<EngineStats>>,
+    ready: Sender<anyhow::Result<()>>,
+) {
+    // Build everything PJRT inside the worker (handles are not Send).
+    let setup = (|| -> anyhow::Result<_> {
+        let mut rt = Runtime::open(&spec.artifacts_dir)?;
+        let art_name = format!("{}_decode_linear_b{}", spec.task, cfg.max_batch);
+        let artifact = rt.load(&art_name)?;
+        let model_key = format!("{}_linear", spec.task);
+        let weights = rt.load_weights(&model_key)?;
+        let model_spec = rt
+            .bundle
+            .model(&model_key)
+            .ok_or_else(|| anyhow::anyhow!("model {model_key} missing"))?
+            .clone();
+        // params in manifest order
+        let params: Vec<Value> = model_spec
+            .params
+            .iter()
+            .map(|n| Value::from_tensor(weights.req(n)))
+            .collect();
+        Ok((artifact, params))
+    })();
+    let (artifact, params) = match setup {
+        Ok(x) => {
+            let _ = ready.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mcfg = &spec.model_cfg;
+    let b = cfg.max_batch;
+    let (l, h, dh) = (mcfg.n_layers, mcfg.n_heads, mcfg.d_head());
+    let s_shape = vec![l, b, h, dh, dh];
+    let z_shape = vec![l, b, h, dh];
+    let mut s = vec![0.0f32; l * b * h * dh * dh];
+    let mut z = vec![0.0f32; l * b * h * dh];
+    let mut token = vec![0i32; b];
+    let mut pos = vec![0i32; b];
+
+    let mut batcher = Batcher::new(b, Duration::from_micros(cfg.max_wait_us));
+    let mut slots = SlotTable::new(b);
+    let mut responders: std::collections::HashMap<u64, Sender<GenerateResponse>> =
+        std::collections::HashMap::new();
+    let mut rng = Rng::new(cfg.seed);
+    let mut shutdown = false;
+
+    // zero one slot's stripes in (s, z)
+    let clear_slot = |s: &mut [f32], z: &mut [f32], slot: usize| {
+        for li in 0..l {
+            for hi in 0..h {
+                let base = ((li * b + slot) * h + hi) * dh * dh;
+                s[base..base + dh * dh].fill(0.0);
+                let zbase = ((li * b + slot) * h + hi) * dh;
+                z[zbase..zbase + dh].fill(0.0);
+            }
+        }
+    };
+
+    while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
+        let idle = slots.active() == 0 && batcher.pending() == 0;
+        loop {
+            let msg = if idle && !shutdown {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
+                rx.try_recv().ok()
+            };
+            match msg {
+                Some(Msg::Request(req, resp_tx)) => {
+                    responders.insert(req.id, resp_tx);
+                    stats.lock().unwrap().requests += 1;
+                    batcher.push(req, Instant::now());
+                    continue;
+                }
+                Some(Msg::Shutdown) => {
+                    shutdown = true;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        let now = Instant::now();
+        let capacity = b - slots.active();
+        for req in batcher.poll(now, capacity) {
+            let idx = slots
+                .alloc(SlotInfo {
+                    request_id: req.id,
+                    started: now,
+                    prompt_left: req.prompt.clone(),
+                    generated: Vec::new(),
+                    max_new: req.max_new,
+                    temperature: req.temperature,
+                    pos: 0,
+                })
+                .expect("capacity checked");
+            clear_slot(&mut s, &mut z, idx);
+            pos[idx] = 0;
+        }
+
+        if slots.active() == 0 {
+            continue;
+        }
+
+        // build the tick inputs: per-slot next token
+        let active = slots.active_indices();
+        for &idx in &active {
+            let info = slots.get_mut(idx).unwrap();
+            token[idx] = if !info.prompt_left.is_empty() {
+                info.prompt_left.remove(0) as i32
+            } else {
+                *info.generated.last().unwrap() as i32
+            };
+            pos[idx] = info.pos as i32;
+        }
+        {
+            let mut st = stats.lock().unwrap();
+            st.ticks += 1;
+            st.batch_occupancy_sum += active.len() as u64;
+        }
+
+        // assemble artifact inputs: params..., token, pos, s, z
+        let mut inputs = params.clone();
+        inputs.push(Value::I32(vec![b], token.clone()));
+        inputs.push(Value::I32(vec![b], pos.clone()));
+        inputs.push(Value::F32(s_shape.clone(), s.clone()));
+        inputs.push(Value::F32(z_shape.clone(), z.clone()));
+        let outputs = match artifact.run(&inputs) {
+            Ok(o) => o,
+            Err(e) => {
+                // fail all active requests
+                for idx in active {
+                    if let Some(info) = slots.release(idx) {
+                        if let Some(tx) = responders.remove(&info.request_id) {
+                            let _ = tx.send(GenerateResponse {
+                                id: info.request_id,
+                                tokens: info.generated,
+                                latency_us: 0,
+                                error: Some(format!("decode failed: {e}")),
+                            });
+                        }
+                    }
+                }
+                continue;
+            }
+        };
+        let logits = outputs[0].as_f32().unwrap();
+        let vocab = mcfg.vocab;
+        s.copy_from_slice(outputs[1].as_f32().unwrap());
+        z.copy_from_slice(outputs[2].as_f32().unwrap());
+
+        let mut finished: Vec<usize> = Vec::new();
+        for &idx in &active {
+            let info = slots.get_mut(idx).unwrap();
+            info.pos += 1;
+            if info.prompt_left.is_empty() {
+                let row = &logits[idx * vocab..(idx + 1) * vocab];
+                let next = sample_logits(row, info.temperature, &mut rng);
+                info.generated.push(next);
+                stats.lock().unwrap().tokens_generated += 1;
+                if info.generated.len() >= info.max_new || info.pos + 1 >= mcfg.max_len {
+                    finished.push(idx);
+                }
+            }
+        }
+        for idx in finished {
+            let info = slots.release(idx).unwrap();
+            let latency = info.started.elapsed();
+            {
+                let mut st = stats.lock().unwrap();
+                st.completed += 1;
+                st.latency.record(latency);
+            }
+            if let Some(tx) = responders.remove(&info.request_id) {
+                let _ = tx.send(GenerateResponse {
+                    id: info.request_id,
+                    tokens: info.generated,
+                    latency_us: latency.as_micros() as u64,
+                    error: None,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny_model() -> TransformerLM {
+        let cfg = ModelConfig {
+            vocab: 11,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            max_len: 64,
+            d_ff: 64,
+            chunk: 16,
+            causal: true,
+            lsh_rounds: 1,
+            lsh_buckets: 8,
+            lsh_chunk: 8,
+        };
+        TransformerLM::init(&cfg, AttentionKind::Linear, 0)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 1,
+            prompt: vec![1, 2, 3],
+            max_new: 5,
+            temperature: 0.0,
+        });
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.tokens.len(), 5);
+        assert!(resp.error.is_none());
+        let st = handle.stats();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.tokens_generated, 5);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_requests_batched() {
+        let handle = NativeEngine::spawn(
+            tiny_model(),
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 2000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                handle.submit(GenerateRequest {
+                    id: i,
+                    prompt: vec![1, (i % 10) as u32],
+                    max_new: 6,
+                    temperature: 0.0,
+                })
+            })
+            .collect();
+        let mut ids = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens.len(), 6);
+            ids.push(resp.id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+        let st = handle.stats();
+        assert_eq!(st.completed, 8);
+        // batching actually happened: mean occupancy > 1
+        assert!(
+            st.mean_batch_occupancy() > 1.0,
+            "occupancy {}",
+            st.mean_batch_occupancy()
+        );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn deterministic_greedy_responses_match_direct_generation() {
+        let model = tiny_model();
+        let direct = model.generate(&[1, 2, 3], 5, 0.0, 0);
+        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 9,
+            prompt: vec![1, 2, 3],
+            max_new: 5,
+            temperature: 0.0,
+        });
+        assert_eq!(resp.tokens, direct);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn respects_max_len() {
+        let model = tiny_model();
+        let max_len = model.cfg.max_len;
+        let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 2,
+            prompt: vec![1; 10],
+            max_new: 10_000,
+            temperature: 0.0,
+        });
+        assert!(resp.tokens.len() <= max_len - 10);
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,36 @@
+//! Layer-3 coordinator: the serving engine.
+//!
+//! Architecture (vLLM-router-shaped, adapted to RNN-state decode):
+//!
+//! ```text
+//!   clients ──> server (TCP json-lines) ─┐
+//!   in-process callers ──────────────────┼──> EngineHandle (mpsc)
+//!                                        │
+//!                         worker thread ─┴─> Batcher ──> SlotTable
+//!                                              │             │
+//!                                        decode tick    per-slot RNN
+//!                                        (native nn or   state (S, Z)
+//!                                         PJRT artifact)
+//! ```
+//!
+//! The paper's property that makes this engine *simple* is the O(1)
+//! per-token, fixed-size recurrent state (eqs 16-20): a decode slot is
+//! just (S, Z) — no paged KV cache, no prefix eviction. Continuous
+//! batching is a gather over slot states; admission is a free-slot pop.
+//!
+//! Modules:
+//! * [`request`]  — request/response types + JSON wire codec
+//! * [`batcher`]  — pure batching policy (deadline + capacity), propchecked
+//! * [`sessions`] — slot allocator with leak-freedom invariants
+//! * [`engine`]   — the worker loop over the native model (Send-safe) and
+//!   the PJRT batched-decode loop (runtime created inside the worker)
+//! * [`server`]   — TCP JSON-lines front-end
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod server;
+pub mod sessions;
+
+pub use engine::{EngineHandle, EngineStats, NativeEngine};
+pub use request::{GenerateRequest, GenerateResponse};

@@ -1,0 +1,139 @@
+//! Request/response types and the JSON-lines wire codec.
+
+use crate::json::{obj, Json};
+
+/// A generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+}
+
+impl GenerateRequest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            (
+                "prompt",
+                Json::Arr(self.prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("max_new", Json::Num(self.max_new as f64)),
+            ("temperature", Json::Num(self.temperature as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<GenerateRequest> {
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("request missing id"))? as u64;
+        let prompt = j
+            .get("prompt")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("request missing prompt"))?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as u32))
+            .collect::<Option<Vec<u32>>>()
+            .ok_or_else(|| anyhow::anyhow!("prompt must be an int array"))?;
+        if prompt.is_empty() {
+            anyhow::bail!("prompt must not be empty");
+        }
+        Ok(GenerateRequest {
+            id,
+            prompt,
+            max_new: j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(16),
+            temperature: j
+                .get("temperature")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(1.0) as f32,
+        })
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateResponse {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// end-to-end latency in microseconds
+    pub latency_us: u64,
+    pub error: Option<String>,
+}
+
+impl GenerateResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::Num(self.id as f64)),
+            (
+                "tokens",
+                Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("latency_us", Json::Num(self.latency_us as f64)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::Str(e.clone())));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<GenerateResponse> {
+        Ok(GenerateResponse {
+            id: j
+                .get("id")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("response missing id"))? as u64,
+            tokens: j
+                .get("tokens")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64().map(|x| x as u32)).collect())
+                .unwrap_or_default(),
+            latency_us: j.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            error: j.get("error").and_then(|v| v.as_str()).map(String::from),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = GenerateRequest {
+            id: 42,
+            prompt: vec![1, 2, 3],
+            max_new: 8,
+            temperature: 0.5,
+        };
+        let back = GenerateRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let j = Json::parse(r#"{"id": 1, "prompt": [5]}"#).unwrap();
+        let r = GenerateRequest::from_json(&j).unwrap();
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.temperature, 1.0);
+    }
+
+    #[test]
+    fn empty_prompt_rejected() {
+        let j = Json::parse(r#"{"id": 1, "prompt": []}"#).unwrap();
+        assert!(GenerateRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_with_error() {
+        let r = GenerateResponse {
+            id: 7,
+            tokens: vec![],
+            latency_us: 1234,
+            error: Some("boom".into()),
+        };
+        let back = GenerateResponse::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+    }
+}

@@ -1,0 +1,238 @@
+//! TCP JSON-lines front-end for the serving engine.
+//!
+//! Protocol: one JSON object per line.
+//!   -> {"id": 1, "prompt": [12, 3, 4], "max_new": 16, "temperature": 0.8}
+//!   <- {"id": 1, "tokens": [5, 6, ...], "latency_us": 1234}
+//! Malformed lines get {"id": 0, "error": "..."}. One thread per
+//! connection; responses are written in completion order.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use crate::coordinator::engine::EngineHandle;
+use crate::coordinator::request::{GenerateRequest, GenerateResponse};
+use crate::json::Json;
+
+/// A running TCP server bound to `addr`.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    listener_thread: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Server {
+    /// Bind and serve requests against `engine` until stopped.
+    pub fn start(bind: &str, engine: Arc<EngineHandle>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop_l = stop.clone();
+        let listener_thread = std::thread::Builder::new()
+            .name("lintra-server".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop_l.load(std::sync::atomic::Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let engine = engine.clone();
+                            conns.push(
+                                std::thread::Builder::new()
+                                    .name("lintra-conn".into())
+                                    .spawn(move || handle_conn(stream, engine))
+                                    .expect("spawn conn thread"),
+                            );
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(Server {
+            addr,
+            listener_thread: Some(listener_thread),
+            stop,
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.stop
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.listener_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.listener_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, engine: Arc<EngineHandle>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    // responses flow back over a channel so multiple in-flight requests
+    // per connection complete out of order without blocking the reader
+    let (resp_tx, resp_rx) = channel::<GenerateResponse>();
+    let mut write_half = stream;
+    let writer = std::thread::spawn(move || {
+        for resp in resp_rx {
+            let mut line = resp.to_json().to_string();
+            line.push('\n');
+            if write_half.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut in_flight: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .and_then(|j| GenerateRequest::from_json(&j));
+        match parsed {
+            Ok(req) => {
+                let rx = engine.submit(req);
+                let tx = resp_tx.clone();
+                in_flight.push(std::thread::spawn(move || {
+                    if let Ok(resp) = rx.recv() {
+                        let _ = tx.send(resp);
+                    }
+                }));
+            }
+            Err(e) => {
+                let _ = resp_tx.send(GenerateResponse {
+                    id: 0,
+                    tokens: vec![],
+                    latency_us: 0,
+                    error: Some(format!("bad request from {peer:?}: {e}")),
+                });
+            }
+        }
+    }
+    for h in in_flight {
+        let _ = h.join();
+    }
+    drop(resp_tx);
+    let _ = writer.join();
+}
+
+/// Minimal client for tests/benches and the `lintra client` subcommand.
+pub fn request_over_tcp(
+    addr: &str,
+    reqs: &[GenerateRequest],
+) -> anyhow::Result<Vec<GenerateResponse>> {
+    let mut stream = TcpStream::connect(addr)?;
+    for r in reqs {
+        let mut line = r.to_json().to_string();
+        line.push('\n');
+        stream.write_all(line.as_bytes())?;
+    }
+    stream.shutdown(std::net::Shutdown::Write)?;
+    let reader = BufReader::new(stream);
+    let mut out = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        out.push(GenerateResponse::from_json(&j)?);
+        if out.len() == reqs.len() {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttentionKind;
+    use crate::config::{ModelConfig, ServeConfig};
+    use crate::coordinator::engine::NativeEngine;
+    use crate::nn::TransformerLM;
+
+    fn tiny_engine() -> Arc<EngineHandle> {
+        let cfg = ModelConfig {
+            vocab: 11,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 1,
+            max_len: 64,
+            d_ff: 64,
+            chunk: 16,
+            causal: true,
+            lsh_rounds: 1,
+            lsh_buckets: 8,
+            lsh_chunk: 8,
+        };
+        let model = TransformerLM::init(&cfg, AttentionKind::Linear, 0);
+        Arc::new(NativeEngine::spawn(model, ServeConfig::default()).unwrap())
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let engine = tiny_engine();
+        let server = Server::start("127.0.0.1:0", engine).unwrap();
+        let addr = server.addr.to_string();
+        let reqs: Vec<_> = (1..=3u64)
+            .map(|id| GenerateRequest {
+                id,
+                prompt: vec![1, 2],
+                max_new: 4,
+                temperature: 0.0,
+            })
+            .collect();
+        let resps = request_over_tcp(&addr, &reqs).unwrap();
+        assert_eq!(resps.len(), 3);
+        let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
+        for r in &resps {
+            assert_eq!(r.tokens.len(), 4);
+            assert!(r.error.is_none());
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_line_gets_error_response() {
+        let engine = tiny_engine();
+        let server = Server::start("127.0.0.1:0", engine).unwrap();
+        let addr = server.addr.to_string();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(b"this is not json\n").unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        let resp = GenerateResponse::from_json(&j).unwrap();
+        assert!(resp.error.is_some());
+        server.stop();
+    }
+}

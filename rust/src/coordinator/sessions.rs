@@ -1,0 +1,196 @@
+//! Slot table: maps in-flight requests to decode slots.
+//!
+//! A slot is one lane of the batched decode state (one RNN (S, Z) pair in
+//! the PJRT engine, one `DecodeSession` in the native engine). The table
+//! enforces capacity, guarantees a freed slot is reusable, and never hands
+//! the same slot to two requests — invariants propchecked below.
+
+use std::time::Instant;
+
+/// Metadata of an active decode slot.
+#[derive(Debug, Clone)]
+pub struct SlotInfo {
+    pub request_id: u64,
+    pub started: Instant,
+    /// tokens of the prompt not yet consumed
+    pub prompt_left: Vec<u32>,
+    /// sampled tokens so far
+    pub generated: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    /// absolute position of the next token to feed
+    pub pos: usize,
+}
+
+/// Fixed-capacity slot allocator.
+#[derive(Debug)]
+pub struct SlotTable {
+    slots: Vec<Option<SlotInfo>>,
+    free: Vec<usize>,
+}
+
+impl SlotTable {
+    pub fn new(capacity: usize) -> Self {
+        SlotTable {
+            slots: (0..capacity).map(|_| None).collect(),
+            free: (0..capacity).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn has_free(&self) -> bool {
+        !self.free.is_empty()
+    }
+
+    /// Claim a slot; returns its index.
+    pub fn alloc(&mut self, info: SlotInfo) -> Option<usize> {
+        let idx = self.free.pop()?;
+        debug_assert!(self.slots[idx].is_none(), "slot {idx} double-allocated");
+        self.slots[idx] = Some(info);
+        Some(idx)
+    }
+
+    /// Release a slot, returning its info.
+    pub fn release(&mut self, idx: usize) -> Option<SlotInfo> {
+        let info = self.slots[idx].take()?;
+        self.free.push(idx);
+        Some(info)
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&SlotInfo> {
+        self.slots.get(idx).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> Option<&mut SlotInfo> {
+        self.slots.get_mut(idx).and_then(|s| s.as_mut())
+    }
+
+    /// Indices of active slots (ascending).
+    pub fn active_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(id: u64) -> SlotInfo {
+        SlotInfo {
+            request_id: id,
+            started: Instant::now(),
+            prompt_left: vec![1, 2],
+            generated: Vec::new(),
+            max_new: 4,
+            temperature: 0.0,
+            pos: 0,
+        }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut t = SlotTable::new(2);
+        let a = t.alloc(info(1)).unwrap();
+        let b = t.alloc(info(2)).unwrap();
+        assert_ne!(a, b);
+        assert!(t.alloc(info(3)).is_none(), "capacity enforced");
+        assert_eq!(t.release(a).unwrap().request_id, 1);
+        let c = t.alloc(info(3)).unwrap();
+        assert_eq!(c, a, "freed slot reused");
+        assert_eq!(t.active(), 2);
+    }
+
+    #[test]
+    fn release_empty_is_none() {
+        let mut t = SlotTable::new(1);
+        assert!(t.release(0).is_none());
+    }
+
+    #[test]
+    fn active_indices_sorted_and_exact() {
+        let mut t = SlotTable::new(4);
+        let a = t.alloc(info(1)).unwrap();
+        let b = t.alloc(info(2)).unwrap();
+        let c = t.alloc(info(3)).unwrap();
+        t.release(b);
+        let idx = t.active_indices();
+        assert_eq!(idx.len(), 2);
+        assert!(idx.contains(&a) && idx.contains(&c));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn leak_freedom_and_uniqueness_property() {
+        crate::propcheck::check("slot-table-invariants", crate::propcheck::default_cases(), |g| {
+            let cap = g.usize_in(1, 12);
+            let mut t = SlotTable::new(cap);
+            let mut live: Vec<(usize, u64)> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1, 60) {
+                if g.bool() {
+                    if let Some(idx) = t.alloc(info(next_id)) {
+                        // uniqueness: idx must not be currently live
+                        if live.iter().any(|&(i, _)| i == idx) {
+                            return Err(format!("slot {idx} double-allocated"));
+                        }
+                        live.push((idx, next_id));
+                        next_id += 1;
+                    } else if live.len() != cap {
+                        return Err("alloc failed below capacity".into());
+                    }
+                } else if !live.is_empty() {
+                    let pick = g.usize_in(0, live.len() - 1);
+                    let (idx, id) = live.swap_remove(pick);
+                    match t.release(idx) {
+                        Some(info) if info.request_id == id => {}
+                        Some(info) => {
+                            return Err(format!(
+                                "slot {idx} returned request {} not {id}",
+                                info.request_id
+                            ))
+                        }
+                        None => return Err(format!("slot {idx} lost its info")),
+                    }
+                }
+                if t.active() != live.len() {
+                    return Err(format!(
+                        "active() = {} but {} live",
+                        t.active(),
+                        live.len()
+                    ));
+                }
+            }
+            // leak freedom: releasing everything restores full capacity
+            for (idx, _) in live {
+                t.release(idx);
+            }
+            if t.active() != 0 || !t.has_free() {
+                return Err("slots leaked".into());
+            }
+            let mut all = Vec::new();
+            for i in 0..cap {
+                match t.alloc(info(1000 + i as u64)) {
+                    Some(idx) => all.push(idx),
+                    None => return Err("cannot re-fill to capacity after drain".into()),
+                }
+            }
+            all.sort_unstable();
+            all.dedup();
+            if all.len() != cap {
+                return Err("duplicate slots after drain/refill".into());
+            }
+            Ok(())
+        });
+    }
+}

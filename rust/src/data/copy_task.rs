@@ -1,0 +1,189 @@
+//! The §4.1 copy task: duplicate a symbol sequence across a separator.
+//!
+//! Token layout (vocab = 13, matching the `copy` artifacts):
+//!   0        = PAD
+//!   1        = SEP
+//!   2..=11   = the 10 payload symbols
+//!   12       = BOS
+//!
+//! A sample of payload width `w` is
+//!   `BOS s_1 .. s_w SEP s_1 .. s_w` padded with PAD to `seq_len`,
+//! and the loss mask covers exactly the second copy (the model must
+//! reproduce the payload; everything before it is context).
+
+use crate::rng::Rng;
+
+pub const PAD: u32 = 0;
+pub const SEP: u32 = 1;
+pub const SYMBOL_BASE: u32 = 2;
+pub const N_SYMBOLS: u32 = 10;
+pub const BOS: u32 = 12;
+pub const VOCAB: usize = 13;
+
+/// Copy-task batch generator.
+#[derive(Clone, Debug)]
+pub struct CopyTask {
+    pub seq_len: usize,
+    /// Payload width range [min_w, max_w]; paper uses up to 128-long
+    /// sequences, i.e. max_w = (seq_len - 2) / 2.
+    pub min_w: usize,
+    pub max_w: usize,
+    rng: Rng,
+}
+
+/// One teacher-forced LM batch in flat row-major layout.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub batch: usize,
+    pub seq_len: usize,
+    /// [batch * seq_len] model inputs
+    pub inputs: Vec<u32>,
+    /// [batch * seq_len] next-token targets
+    pub targets: Vec<u32>,
+    /// [batch * seq_len] 1.0 where the loss applies
+    pub mask: Vec<f32>,
+}
+
+impl CopyTask {
+    pub fn new(seq_len: usize, seed: u64) -> Self {
+        assert!(seq_len >= 6, "sequence too short for a copy sample");
+        let max_w = (seq_len - 2) / 2;
+        CopyTask {
+            seq_len,
+            min_w: max_w.min(4),
+            max_w,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Build one full token sequence of length seq_len + 1 (for input/target
+    /// shifting), returning (tokens, copy_start, copy_end) over that string.
+    fn sample_tokens(&mut self) -> (Vec<u32>, usize, usize) {
+        let w = self.min_w + self.rng.below((self.max_w - self.min_w + 1) as u64) as usize;
+        let mut toks = Vec::with_capacity(self.seq_len + 1);
+        toks.push(BOS);
+        let payload: Vec<u32> = (0..w)
+            .map(|_| SYMBOL_BASE + self.rng.below(N_SYMBOLS as u64) as u32)
+            .collect();
+        toks.extend_from_slice(&payload);
+        toks.push(SEP);
+        let copy_start = toks.len();
+        toks.extend_from_slice(&payload);
+        let copy_end = toks.len();
+        while toks.len() < self.seq_len + 1 {
+            toks.push(PAD);
+        }
+        (toks, copy_start, copy_end)
+    }
+
+    /// Generate a teacher-forced batch.
+    pub fn batch(&mut self, batch: usize) -> LmBatch {
+        let n = self.seq_len;
+        let mut inputs = Vec::with_capacity(batch * n);
+        let mut targets = Vec::with_capacity(batch * n);
+        let mut mask = Vec::with_capacity(batch * n);
+        for _ in 0..batch {
+            let (toks, cs, ce) = self.sample_tokens();
+            for i in 0..n {
+                inputs.push(toks[i]);
+                targets.push(toks[i + 1]);
+                // target position i predicts token i+1; mask the copy span
+                let predicted_index = i + 1;
+                mask.push(if predicted_index >= cs && predicted_index < ce {
+                    1.0
+                } else {
+                    0.0
+                });
+            }
+        }
+        LmBatch {
+            batch,
+            seq_len: n,
+            inputs,
+            targets,
+            mask,
+        }
+    }
+
+    /// A prompt (BOS + payload + SEP) and its expected continuation,
+    /// for generation-side evaluation.
+    pub fn prompt(&mut self) -> (Vec<u32>, Vec<u32>) {
+        let (toks, cs, ce) = self.sample_tokens();
+        (toks[..cs].to_vec(), toks[cs..ce].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let mut t = CopyTask::new(128, 0);
+        let b = t.batch(4);
+        assert_eq!(b.inputs.len(), 4 * 128);
+        assert_eq!(b.targets.len(), 4 * 128);
+        assert_eq!(b.mask.len(), 4 * 128);
+    }
+
+    #[test]
+    fn structure_is_copy() {
+        let mut t = CopyTask::new(64, 1);
+        let (toks, cs, ce) = t.sample_tokens();
+        assert_eq!(toks[0], BOS);
+        let w = ce - cs;
+        assert_eq!(toks[cs - 1], SEP);
+        assert_eq!(&toks[1..1 + w], &toks[cs..ce], "payload must be duplicated");
+        assert!(toks[ce..].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn mask_covers_exactly_the_copy() {
+        let mut t = CopyTask::new(64, 2);
+        let b = t.batch(1);
+        // masked positions' targets must be payload symbols
+        for i in 0..b.seq_len {
+            if b.mask[i] == 1.0 {
+                let target = b.targets[i];
+                assert!((SYMBOL_BASE..SYMBOL_BASE + N_SYMBOLS).contains(&target));
+            }
+        }
+        let count = b.mask.iter().filter(|&&m| m == 1.0).count();
+        assert!(count >= 4, "at least min_w masked positions");
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let mut t = CopyTask::new(32, 3);
+        let b = t.batch(2);
+        for s in 0..2 {
+            for i in 0..31 {
+                assert_eq!(b.targets[s * 32 + i], b.inputs[s * 32 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_and_continuation_consistent() {
+        let mut t = CopyTask::new(64, 4);
+        let (prompt, cont) = t.prompt();
+        assert_eq!(prompt[0], BOS);
+        assert_eq!(*prompt.last().unwrap(), SEP);
+        assert_eq!(&prompt[1..prompt.len() - 1], &cont[..]);
+    }
+
+    #[test]
+    fn tokens_in_vocab_property() {
+        crate::propcheck::check("copy-task-vocab", 30, |g| {
+            let seed = g.rng.next_u64();
+            let mut t = CopyTask::new(32 + 2 * g.usize_in(0, 16), seed);
+            let b = t.batch(2);
+            for &tok in b.inputs.iter().chain(&b.targets) {
+                if tok as usize >= VOCAB {
+                    return Err(format!("token {tok} out of vocab"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

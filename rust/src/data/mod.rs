@@ -1,0 +1,18 @@
+//! Synthetic workload generators — the datasets of the paper's evaluation.
+//!
+//! No network access exists in this environment, so every dataset is a
+//! carefully-shaped synthetic stand-in (documented in DESIGN.md §4):
+//!
+//! * [`copy_task`] — the §4.1 sequence-duplication task (exact match).
+//! * [`images`] — procedural MNIST-like digits (784-long sequences) and
+//!   CIFAR-like RGB textures (3072-long) for §4.2.
+//! * [`speech`] — HMM-generated filterbank frames + phoneme labels for the
+//!   §4.3 CTC experiment.
+
+pub mod copy_task;
+pub mod images;
+pub mod speech;
+
+pub use copy_task::CopyTask;
+pub use images::{ImageDataset, ImageKind};
+pub use speech::SpeechDataset;

@@ -1,0 +1,44 @@
+//! # linear-transformer
+//!
+//! Production-shaped reproduction of *“Transformers are RNNs: Fast
+//! Autoregressive Transformers with Linear Attention”* (Katharopoulos,
+//! Vyas, Pappas, Fleuret — ICML 2020) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! This crate is **Layer 3**: the coordinator. It owns the event loop,
+//! the serving engine, the trainer, the CLI, and every substrate the
+//! paper's evaluation needs — a tensor library, four attention engines
+//! (linear / softmax / stateful-softmax / LSH), a pure-rust transformer
+//! and Bi-LSTM, synthetic workload generators, metrics, and a PJRT
+//! runtime that loads the HLO artifacts lowered by the build-time Python
+//! layers (L2 JAX model, L1 Pallas kernels).
+//!
+//! Two inference paths coexist by design (see DESIGN.md §2):
+//!
+//! * [`runtime`] executes AOT artifacts (`artifacts/*.hlo.txt`) through
+//!   the PJRT CPU client — training steps and batched decode.
+//! * [`nn`] + [`attention`] run the same weights natively in rust — the
+//!   level playing field for the paper's Figure 1 / Tables 1–5 sweeps,
+//!   and the demonstration of the supplementary's claim that linear-RNN
+//!   inference is CPU-friendly.
+
+pub mod attention;
+pub mod benchkit;
+pub mod benchkit_gen;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod nn;
+pub mod propcheck;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod tensor;
+pub mod trainer;
+pub mod weights;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

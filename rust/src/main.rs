@@ -1,0 +1,269 @@
+//! `lintra` — the linear-transformer coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          inspect artifacts + models
+//!   train    --task --variant     run a training loop over a train artifact
+//!   generate --task               autoregressive generation (native or pjrt)
+//!   serve    --task --bind        TCP serving engine
+//!   eval     --task --variant     teacher-forced eval loss via eval artifact
+//!
+//! Run `lintra <cmd> --help-flags` to see the flags each command reads.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::cli::Args;
+use linear_transformer::config::{ServeConfig, TrainConfig};
+use linear_transformer::coordinator::engine::{NativeEngine, PjrtEngine, PjrtEngineSpec};
+use linear_transformer::coordinator::server::Server;
+use linear_transformer::data::ImageKind;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::runtime::{Runtime, Value};
+use linear_transformer::trainer::{self, Trainer};
+
+const FLAGS: &[&str] = &[
+    "task", "variant", "steps", "lr", "lr-drop", "batch-log", "log-every", "csv",
+    "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
+    "prompt-len", "max-new", "temperature", "count", "backend", "weights",
+    "batches", "help-flags",
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    if args.switch("help-flags") {
+        eprintln!("flags: {}", FLAGS.join(", "));
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        other => {
+            bail!(
+                "unknown subcommand {other:?}; available: info, train, generate, serve, eval"
+            )
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.flag_or("artifacts", "artifacts")
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    println!("platform: {}", rt.platform());
+    println!("models:");
+    for (name, m) in &rt.bundle.models {
+        println!(
+            "  {name:<18} task={:<7} attention={:<8} params={} weights={}",
+            m.task,
+            m.attention,
+            m.params.len(),
+            m.weights
+        );
+    }
+    println!("artifacts:");
+    for (name, a) in &rt.bundle.artifacts {
+        println!(
+            "  {name:<26} inputs={:<3} outputs={:<3} file={}",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let task = args.flag_or("task", "copy");
+    let variant = args.flag_or("variant", "linear");
+    let cfg = TrainConfig {
+        task: task.clone(),
+        variant: variant.clone(),
+        steps: args.usize_flag("steps", 200)?,
+        lr: args.f32_flag("lr", 1e-3)?,
+        lr_drop_step: Some(args.usize_flag("lr-drop", 3000)?),
+        log_every: args.usize_flag("log-every", 10)?,
+        eval_every: 0,
+        seed: args.u64_flag("seed", 0)?,
+        out_csv: args.flag("csv").map(String::from),
+        checkpoint: args.flag("checkpoint").map(String::from),
+    };
+    let mut rt = Runtime::open(artifacts_dir(args))?;
+    let mut tr = Trainer::new(&mut rt, &task, &variant)?;
+    let specs = tr.batch_specs().to_vec();
+    let batch = specs[0].shape[0];
+    let seq = if specs[0].shape.len() > 1 { specs[0].shape[1] } else { 0 };
+    let seed = cfg.seed;
+    let mut batch_fn: Box<dyn FnMut(usize) -> Vec<Value>> = match task.as_str() {
+        "copy" => Box::new(trainer::copy_batch_fn(seq, batch, seed)),
+        "mnist" => Box::new(trainer::image_batch_fn(ImageKind::MnistLike, batch, seed)),
+        "cifar" => Box::new(trainer::image_batch_fn(ImageKind::CifarLike, batch, seed)),
+        "speech" => {
+            let max_labels = specs[2].shape[1];
+            Box::new(trainer::speech_batch_fn(seq, batch, max_labels, seed))
+        }
+        other => bail!("unknown task {other:?}"),
+    };
+    trainer::train_loop(&mut tr, &cfg, |s| batch_fn(s))?;
+    eprintln!(
+        "[train] done: final loss {:.4}, mean step {:?}",
+        tr.history.last().map(|s| s.loss).unwrap_or(f32::NAN),
+        tr.mean_step_time()
+    );
+    Ok(())
+}
+
+fn model_config_for(task: &str) -> anyhow::Result<linear_transformer::config::ModelConfig> {
+    Ok(match task {
+        "copy" => linear_transformer::config::ModelConfig::small_copy(),
+        "mnist" => linear_transformer::config::ModelConfig::mnist(),
+        "cifar" => linear_transformer::config::ModelConfig::cifar(),
+        other => bail!("unknown task {other:?}"),
+    })
+}
+
+fn load_native_model(args: &Args, task: &str) -> anyhow::Result<TransformerLM> {
+    let cfg = model_config_for(task)?;
+    match args.flag("weights") {
+        Some(path) => {
+            let bundle = linear_transformer::weights::WeightBundle::load(path)?;
+            TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle)
+        }
+        None => {
+            // default to the AOT initial weights so native == pjrt numerics
+            let dir = artifacts_dir(args);
+            let rt = Runtime::open(&dir)?;
+            let bundle = rt.load_weights(&format!("{task}_linear"))?;
+            TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle)
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let task = args.flag_or("task", "copy");
+    let count = args.usize_flag("count", 1)?;
+    let max_new = args.usize_flag("max-new", 32)?;
+    let temperature = args.f32_flag("temperature", 1.0)?;
+    let model = load_native_model(args, &task)?;
+    let mut rng = linear_transformer::rng::Rng::new(args.u64_flag("seed", 0)?);
+    let t0 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    for i in 0..count {
+        let prompt = vec![0u32];
+        let mut sess = model.session();
+        let out = sess.generate(&prompt, max_new, temperature, &mut rng);
+        total_tokens += out.len();
+        if i == 0 {
+            println!("sample 0: {out:?}");
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{count} sequences, {total_tokens} tokens in {:.2}s ({:.1} tok/s)",
+        dt.as_secs_f64(),
+        total_tokens as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let task = args.flag_or("task", "copy");
+    let serve_cfg = ServeConfig {
+        max_batch: args.usize_flag("max-batch", 8)?,
+        max_wait_us: args.u64_flag("max-wait-us", 500)?,
+        max_sessions: 256,
+        bind: args.flag_or("bind", "127.0.0.1:7411"),
+        temperature: args.f32_flag("temperature", 1.0)?,
+        seed: args.u64_flag("seed", 0)?,
+    };
+    let backend = args.flag_or("backend", "native");
+    let handle = match backend.as_str() {
+        "native" => {
+            let model = load_native_model(args, &task)?;
+            NativeEngine::spawn(model, serve_cfg.clone())?
+        }
+        "pjrt" => PjrtEngine::spawn(
+            PjrtEngineSpec {
+                artifacts_dir: artifacts_dir(args),
+                task: task.clone(),
+                model_cfg: model_config_for(&task)?,
+            },
+            serve_cfg.clone(),
+        )?,
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    };
+    let engine = Arc::new(handle);
+    let server = Server::start(&serve_cfg.bind, engine.clone())
+        .with_context(|| format!("binding {}", serve_cfg.bind))?;
+    println!(
+        "serving task={task} backend={backend} on {} (max_batch={})",
+        server.addr, serve_cfg.max_batch
+    );
+    println!("protocol: one json per line: {{\"id\":1,\"prompt\":[0],\"max_new\":16}}");
+    // run until ctrl-c
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let st = engine.stats();
+        if st.requests > 0 {
+            eprintln!(
+                "[stats] req={} done={} tokens={} occupancy={:.2} {}",
+                st.requests,
+                st.completed,
+                st.tokens_generated,
+                st.mean_batch_occupancy(),
+                st.latency.summary()
+            );
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let task = args.flag_or("task", "copy");
+    let variant = args.flag_or("variant", "linear");
+    let batches = args.usize_flag("batches", 4)?;
+    let mut rt = Runtime::open(artifacts_dir(args))?;
+    let model_key = format!("{task}_{variant}");
+    let eval = rt.load(&format!("{model_key}_eval"))?;
+    let weights = rt.load_weights(&model_key)?;
+    let spec = rt.bundle.model(&model_key).unwrap().clone();
+    let params: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let batch_shape = &eval.spec.inputs[params.len()].shape;
+    let (b, n) = (batch_shape[0], batch_shape[1]);
+    let seed = args.u64_flag("seed", 0)?;
+    let mut batch_fn: Box<dyn FnMut(usize) -> Vec<Value>> = match task.as_str() {
+        "copy" => Box::new(trainer::copy_batch_fn(n, b, seed)),
+        "mnist" => Box::new(trainer::image_batch_fn(ImageKind::MnistLike, b, seed)),
+        "cifar" => Box::new(trainer::image_batch_fn(ImageKind::CifarLike, b, seed)),
+        other => bail!("eval unsupported for task {other:?}"),
+    };
+    let mut total = 0.0f64;
+    for i in 0..batches {
+        let mut inputs = params.clone();
+        inputs.extend(batch_fn(i));
+        let out = eval.run(&inputs)?;
+        total += out[0].scalar()? as f64;
+    }
+    let nats = total / batches as f64;
+    println!(
+        "{model_key}: eval loss {:.4} nats ({:.4} bits/dim)",
+        nats,
+        linear_transformer::metrics::bits_per_dim(nats)
+    );
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Evaluation metrics + serving telemetry.
+//!
+//! * [`bits_per_dim`] — image-modeling metric of Tables 1–2.
+//! * [`edit_distance`] / [`phoneme_error_rate`] — Table 3's PER.
+//! * [`LatencyRecorder`] — p50/p95/p99 request latency for the engine.
+//! * [`Counter`]-style throughput accounting used by the coordinator.
+
+use std::time::Duration;
+
+/// Cross entropy (nats) -> bits per dimension.
+pub fn bits_per_dim(nats: f64) -> f64 {
+    nats / std::f64::consts::LN_2
+}
+
+/// Mean negative log likelihood (nats) of `targets` under `logits` rows.
+/// `logits` is [n, vocab] row-major, already unnormalized.
+pub fn mean_nll(logits: &[f32], vocab: usize, targets: &[u32]) -> f64 {
+    assert_eq!(logits.len(), vocab * targets.len());
+    let mut total = 0.0f64;
+    for (i, &t) in targets.iter().enumerate() {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+        total += (lse - row[t as usize]) as f64;
+    }
+    total / targets.len() as f64
+}
+
+/// Levenshtein edit distance between two symbol sequences.
+pub fn edit_distance(a: &[u32], b: &[u32]) -> usize {
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Phoneme error rate: total edit distance / total reference length.
+pub fn phoneme_error_rate(pairs: &[(Vec<u32>, Vec<u32>)]) -> f64 {
+    let mut errs = 0usize;
+    let mut total = 0usize;
+    for (hyp, reference) in pairs {
+        errs += edit_distance(hyp, reference);
+        total += reference.len();
+    }
+    if total == 0 {
+        0.0
+    } else {
+        100.0 * errs as f64 / total as f64
+    }
+}
+
+/// CTC greedy decode: argmax per frame, collapse repeats, drop blanks.
+pub fn ctc_greedy_decode(logp: &[f32], frames: usize, vocab: usize, blank: u32) -> Vec<u32> {
+    assert_eq!(logp.len(), frames * vocab);
+    let mut out = Vec::new();
+    let mut prev = u32::MAX;
+    for f in 0..frames {
+        let row = &logp[f * vocab..(f + 1) * vocab];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32;
+        if arg != prev && arg != blank {
+            out.push(arg);
+        }
+        prev = arg;
+    }
+    out
+}
+
+/// Online latency statistics (stores samples; fine for bench-scale counts).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples: Vec<Duration>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    pub fn percentile(&self, q: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples.clone();
+        s.sort();
+        s[((s.len() - 1) as f64 * q).round() as usize]
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(0.99)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?}",
+            self.count(),
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.p99()
+        )
+    }
+}
+
+/// Throughput counter over a wall-clock window.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    start: std::time::Instant,
+    pub items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput {
+            start: std::time::Instant::now(),
+            items: 0,
+        }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        self.items as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_per_dim_conversion() {
+        assert!((bits_per_dim(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_nll_uniform() {
+        // uniform logits over 4 classes: nll = ln 4
+        let logits = vec![0.0f32; 8];
+        let nll = mean_nll(&logits, 4, &[0, 3]);
+        assert!((nll - (4.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_nll_confident() {
+        let mut logits = vec![-50.0f32; 4];
+        logits[2] = 50.0;
+        assert!(mean_nll(&logits, 4, &[2]) < 1e-6);
+    }
+
+    #[test]
+    fn edit_distance_cases() {
+        assert_eq!(edit_distance(&[], &[]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 3], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(edit_distance(&[], &[5, 6]), 2);
+    }
+
+    #[test]
+    fn edit_distance_symmetry_property() {
+        crate::propcheck::check("edit-distance-symmetry", 40, |g| {
+            let la = g.usize_in(0, 12);
+            let a: Vec<u32> = g.vec_usize(la, 0, 5).iter().map(|&x| x as u32).collect();
+            let lb = g.usize_in(0, 12);
+            let b: Vec<u32> = g.vec_usize(lb, 0, 5).iter().map(|&x| x as u32).collect();
+            let d1 = edit_distance(&a, &b);
+            let d2 = edit_distance(&b, &a);
+            if d1 != d2 {
+                return Err(format!("asymmetric: {d1} vs {d2}"));
+            }
+            // triangle-ish sanity: distance bounded by max length
+            if d1 > a.len().max(b.len()) {
+                return Err("distance exceeds max length".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_math() {
+        let pairs = vec![(vec![1, 2, 3], vec![1, 2, 4]), (vec![1], vec![1])];
+        // 1 error over 4 reference symbols = 25%
+        assert!((phoneme_error_rate(&pairs) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ctc_greedy_collapses() {
+        // frames argmax: [1, 1, 0, 2, 2, 0, 2] -> [1, 2, 2]
+        let v = 3;
+        let mk = |c: usize| {
+            let mut row = vec![-10.0f32; v];
+            row[c] = 0.0;
+            row
+        };
+        let frames = [1usize, 1, 0, 2, 2, 0, 2];
+        let logp: Vec<f32> = frames.iter().flat_map(|&c| mk(c)).collect();
+        assert_eq!(ctc_greedy_decode(&logp, frames.len(), v, 0), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(Duration::from_millis(i));
+        }
+        assert!(r.p50() <= r.p95() && r.p95() <= r.p99());
+        assert_eq!(r.count(), 100);
+        assert!(r.p50() >= Duration::from_millis(45) && r.p50() <= Duration::from_millis(55));
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.items, 15);
+        assert!(t.per_sec() > 0.0);
+    }
+}

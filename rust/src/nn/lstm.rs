@@ -1,0 +1,212 @@
+//! Bi-LSTM baseline for the speech experiment (§4.3, Table 3).
+//!
+//! Matches `python/compile/models_speech.py::lstm_forward`: per layer one
+//! forward and one backward LSTM whose outputs are concatenated; a linear
+//! head produces log-softmax phoneme posteriors. Weights come from the
+//! `speech_bilstm_*.ltw` bundles (gate order i, f, g, o as in the jax code).
+
+use crate::tensor::{vecmat_into, Tensor};
+use crate::weights::WeightBundle;
+
+/// One direction's weights.
+#[derive(Clone, Debug)]
+struct LstmDir {
+    wx: Tensor, // [d_in, 4h]
+    wh: Tensor, // [h, 4h]
+    b: Tensor,  // [4h]
+}
+
+/// The Bi-LSTM CTC encoder.
+#[derive(Clone, Debug)]
+pub struct BiLstm {
+    pub n_mels: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    layers: Vec<(LstmDir, LstmDir)>,
+    head_w: Tensor,
+    head_b: Tensor,
+}
+
+impl BiLstm {
+    pub fn from_bundle(
+        n_mels: usize,
+        hidden: usize,
+        n_layers: usize,
+        vocab: usize,
+        bundle: &WeightBundle,
+    ) -> anyhow::Result<Self> {
+        let t = |name: &str| -> anyhow::Result<Tensor> {
+            bundle
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("bundle missing {name:?}"))
+        };
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let dir = |d: &str| -> anyhow::Result<LstmDir> {
+                Ok(LstmDir {
+                    wx: t(&format!("lstm{i}.{d}.wx"))?,
+                    wh: t(&format!("lstm{i}.{d}.wh"))?,
+                    b: t(&format!("lstm{i}.{d}.b"))?,
+                })
+            };
+            layers.push((dir("fwd")?, dir("bwd")?));
+        }
+        Ok(BiLstm {
+            n_mels,
+            hidden,
+            n_layers,
+            vocab,
+            layers,
+            head_w: t("head.w")?,
+            head_b: t("head.b")?,
+        })
+    }
+
+    /// Random init at the python scales (speed benches).
+    pub fn init(n_mels: usize, hidden: usize, n_layers: usize, vocab: usize, seed: u64) -> Self {
+        use crate::weights::NamedTensor;
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut tensors = Vec::new();
+        for i in 0..n_layers {
+            let d_in = if i == 0 { n_mels } else { 2 * hidden };
+            for d in ["fwd", "bwd"] {
+                tensors.push(NamedTensor {
+                    name: format!("lstm{i}.{d}.wx"),
+                    tensor: Tensor::randn(&[d_in, 4 * hidden], 1.0 / (d_in as f32).sqrt(), &mut rng),
+                });
+                tensors.push(NamedTensor {
+                    name: format!("lstm{i}.{d}.wh"),
+                    tensor: Tensor::randn(&[hidden, 4 * hidden], 1.0 / (hidden as f32).sqrt(), &mut rng),
+                });
+                let mut b = Tensor::zeros(&[4 * hidden]);
+                for j in hidden..2 * hidden {
+                    b.data[j] = 1.0; // forget-gate bias
+                }
+                tensors.push(NamedTensor {
+                    name: format!("lstm{i}.{d}.b"),
+                    tensor: b,
+                });
+            }
+        }
+        tensors.push(NamedTensor {
+            name: "head.w".into(),
+            tensor: Tensor::randn(&[2 * hidden, vocab], 1.0 / ((2 * hidden) as f32).sqrt(), &mut rng),
+        });
+        tensors.push(NamedTensor {
+            name: "head.b".into(),
+            tensor: Tensor::zeros(&[vocab]),
+        });
+        Self::from_bundle(n_mels, hidden, n_layers, vocab, &WeightBundle::new(tensors)).unwrap()
+    }
+
+    fn scan_dir(&self, dir: &LstmDir, x: &Tensor, reverse: bool) -> Tensor {
+        let (t_len, d_in) = x.dims2();
+        let h = self.hidden;
+        let mut out = Tensor::zeros(&[t_len, h]);
+        let mut hs = vec![0.0f32; h];
+        let mut cs = vec![0.0f32; h];
+        let mut gates = vec![0.0f32; 4 * h];
+        let mut gates_h = vec![0.0f32; 4 * h];
+        let steps: Vec<usize> = if reverse {
+            (0..t_len).rev().collect()
+        } else {
+            (0..t_len).collect()
+        };
+        for t in steps {
+            vecmat_into(&mut gates, x.row(t), &dir.wx.data, d_in, 4 * h);
+            vecmat_into(&mut gates_h, &hs, &dir.wh.data, h, 4 * h);
+            for j in 0..4 * h {
+                gates[j] += gates_h[j] + dir.b.data[j];
+            }
+            for j in 0..h {
+                let i_g = sigmoid(gates[j]);
+                let f_g = sigmoid(gates[h + j]);
+                let g_g = gates[2 * h + j].tanh();
+                let o_g = sigmoid(gates[3 * h + j]);
+                cs[j] = f_g * cs[j] + i_g * g_g;
+                hs[j] = o_g * cs[j].tanh();
+            }
+            out.row_mut(t).copy_from_slice(&hs);
+        }
+        out
+    }
+
+    /// feats [t, n_mels] -> log posteriors [t, vocab].
+    pub fn forward(&self, feats: &Tensor) -> Tensor {
+        let (t_len, _) = feats.dims2();
+        let mut x = feats.clone();
+        for (fwd, bwd) in &self.layers {
+            let f = self.scan_dir(fwd, &x, false);
+            let b = self.scan_dir(bwd, &x, true);
+            let mut cat = Tensor::zeros(&[t_len, 2 * self.hidden]);
+            for t in 0..t_len {
+                cat.row_mut(t)[..self.hidden].copy_from_slice(f.row(t));
+                cat.row_mut(t)[self.hidden..].copy_from_slice(b.row(t));
+            }
+            x = cat;
+        }
+        let mut logits = crate::tensor::matmul(&x, &self.head_w);
+        for t in 0..t_len {
+            let row = logits.row_mut(t);
+            for (l, b) in row.iter_mut().zip(&self.head_b.data) {
+                *l += b;
+            }
+            // log softmax
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            for l in row.iter_mut() {
+                *l -= lse;
+            }
+        }
+        logits
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn forward_shape_and_normalization() {
+        let m = BiLstm::init(13, 16, 2, 9, 0);
+        let mut rng = Rng::new(1);
+        let feats = Tensor::randn(&[20, 13], 1.0, &mut rng);
+        let logp = m.forward(&feats);
+        assert_eq!(logp.shape, vec![20, 9]);
+        for t in 0..20 {
+            let s: f32 = logp.row(t).iter().map(|&l| l.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {t} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn uses_future_context() {
+        let m = BiLstm::init(8, 8, 1, 5, 2);
+        let mut rng = Rng::new(3);
+        let feats = Tensor::randn(&[10, 8], 1.0, &mut rng);
+        let a = m.forward(&feats);
+        let mut feats2 = feats.clone();
+        for x in feats2.row_mut(9) {
+            *x += 5.0;
+        }
+        let b = m.forward(&feats2);
+        let diff: f32 = a.row(0).iter().zip(b.row(0)).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-6, "first frame must see the perturbed last frame");
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = BiLstm::init(8, 8, 2, 5, 4);
+        let mut rng = Rng::new(5);
+        let feats = Tensor::randn(&[12, 8], 1.0, &mut rng);
+        assert_eq!(m.forward(&feats), m.forward(&feats));
+    }
+}

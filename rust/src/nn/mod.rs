@@ -1,0 +1,722 @@
+//! Pure-rust neural-net substrate: the native inference path.
+//!
+//! [`TransformerLM`] mirrors `python/compile/model.py` exactly (pre-norm
+//! blocks, gelu FF, learned positional embeddings, per-head column-block
+//! projections) so that LTW1 weights trained through the PJRT path drop
+//! straight in. Parity with the jax model is asserted by
+//! `rust/tests/parity.rs`.
+//!
+//! Generation backends implement the paper's four decode strategies:
+//! linear RNN state (O(1)/token), stateful-softmax KV cache (O(t)/token),
+//! naive softmax (full recompute, O(t²)/token) and LSH (full recompute —
+//! Reformer cannot decode statefully; see §C.1 of the paper).
+
+pub mod lstm;
+
+use crate::attention::{linear, lsh, softmax, stateful_softmax, AttentionKind};
+use crate::config::ModelConfig;
+use crate::rng::Rng;
+use crate::tensor::{gelu, layer_norm_into, vecmat_into, Tensor};
+use crate::weights::{NamedTensor, WeightBundle};
+
+/// Weights of one transformer block.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+    pub ff_w1: Tensor,
+    pub ff_b1: Tensor,
+    pub ff_w2: Tensor,
+    pub ff_b2: Tensor,
+}
+
+/// The full language model.
+#[derive(Clone, Debug)]
+pub struct TransformerLM {
+    pub cfg: ModelConfig,
+    pub kind: AttentionKind,
+    pub tok_embed: Tensor,
+    pub pos_embed: Tensor,
+    pub blocks: Vec<BlockWeights>,
+    pub final_ln_g: Tensor,
+    pub final_ln_b: Tensor,
+    pub head_w: Tensor,
+    pub head_b: Tensor,
+    /// LSH rotation bank (derived, not learned), present for lsh models.
+    lsh_rotations: Vec<Vec<f32>>,
+    lsh_cfg: lsh::LshConfig,
+}
+
+impl TransformerLM {
+    /// Load from an LTW1 bundle written by `aot.py` (or a trainer checkpoint).
+    pub fn from_bundle(
+        cfg: &ModelConfig,
+        kind: AttentionKind,
+        bundle: &WeightBundle,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let t = |name: &str| -> anyhow::Result<Tensor> {
+            bundle
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("bundle missing parameter {name:?}"))
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layer{i}");
+            blocks.push(BlockWeights {
+                ln1_g: t(&format!("{p}.ln1.g"))?,
+                ln1_b: t(&format!("{p}.ln1.b"))?,
+                wq: t(&format!("{p}.attn.wq"))?,
+                wk: t(&format!("{p}.attn.wk"))?,
+                wv: t(&format!("{p}.attn.wv"))?,
+                wo: t(&format!("{p}.attn.wo"))?,
+                ln2_g: t(&format!("{p}.ln2.g"))?,
+                ln2_b: t(&format!("{p}.ln2.b"))?,
+                ff_w1: t(&format!("{p}.ff.w1"))?,
+                ff_b1: t(&format!("{p}.ff.b1"))?,
+                ff_w2: t(&format!("{p}.ff.w2"))?,
+                ff_b2: t(&format!("{p}.ff.b2"))?,
+            });
+        }
+        let lsh_cfg = lsh::LshConfig {
+            rounds: match kind {
+                AttentionKind::Lsh { rounds } => rounds,
+                _ => cfg.lsh_rounds,
+            },
+            buckets: cfg.lsh_buckets,
+            chunk: cfg.lsh_chunk,
+            seed: 0,
+        };
+        let lsh_rotations = make_lsh_rotations(&lsh_cfg, cfg.d_head());
+        Ok(TransformerLM {
+            cfg: cfg.clone(),
+            kind,
+            tok_embed: t("embed.tok")?,
+            pos_embed: t("embed.pos")?,
+            blocks,
+            final_ln_g: t("final_ln.g")?,
+            final_ln_b: t("final_ln.b")?,
+            head_w: t("head.w")?,
+            head_b: t("head.b")?,
+            lsh_rotations,
+            lsh_cfg,
+        })
+    }
+
+    /// Random init (same scales as python init_params) — for benches that
+    /// measure speed rather than quality.
+    pub fn init(cfg: &ModelConfig, kind: AttentionKind, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let e = cfg.d_model;
+        let bundle = WeightBundle::new(random_param_tensors(cfg, &mut rng));
+        let mut model = Self::from_bundle(cfg, kind, &bundle).expect("init bundle complete");
+        // keep tensors in struct; bundle dropped
+        let _ = e;
+        model.lsh_cfg.seed = seed;
+        model.lsh_rotations = make_lsh_rotations(&model.lsh_cfg, cfg.d_head());
+        model
+    }
+
+    pub fn n_params(&self) -> usize {
+        let mut n = self.tok_embed.numel()
+            + self.pos_embed.numel()
+            + self.final_ln_g.numel()
+            + self.final_ln_b.numel()
+            + self.head_w.numel()
+            + self.head_b.numel();
+        for b in &self.blocks {
+            n += b.wq.numel() * 4
+                + b.ln1_g.numel() * 4 // ln1 g/b + ln2 g/b
+                + b.ff_w1.numel()
+                + b.ff_b1.numel()
+                + b.ff_w2.numel()
+                + b.ff_b2.numel();
+        }
+        n
+    }
+
+    // -----------------------------------------------------------------------
+    // full-sequence forward (teacher-forced eval; Figure 1-style workloads)
+    // -----------------------------------------------------------------------
+
+    /// Forward a token sequence -> logits [n, vocab].
+    pub fn forward(&self, tokens: &[u32]) -> Tensor {
+        let n = tokens.len();
+        let e = self.cfg.d_model;
+        assert!(n <= self.cfg.max_len, "sequence {n} > max_len {}", self.cfg.max_len);
+        let mut x = Tensor::zeros(&[n, e]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = x.row_mut(i);
+            let te = self.tok_embed.row(t as usize);
+            let pe = self.pos_embed.row(i);
+            for j in 0..e {
+                row[j] = te[j] + pe[j];
+            }
+        }
+        for blk in &self.blocks {
+            self.block_forward(blk, &mut x);
+        }
+        // final ln + head
+        let mut normed = Tensor::zeros(&[n, e]);
+        for i in 0..n {
+            layer_norm_into(
+                normed.row_mut(i),
+                x.row(i),
+                &self.final_ln_g.data,
+                &self.final_ln_b.data,
+            );
+        }
+        let mut logits = crate::tensor::matmul(&normed, &self.head_w);
+        for i in 0..n {
+            for (l, b) in logits.row_mut(i).iter_mut().zip(&self.head_b.data) {
+                *l += b;
+            }
+        }
+        logits
+    }
+
+    /// Mean next-token NLL (nats) of a teacher-forced sequence.
+    pub fn sequence_nll(&self, inputs: &[u32], targets: &[u32]) -> f64 {
+        let logits = self.forward(inputs);
+        crate::metrics::mean_nll(&logits.data, self.cfg.vocab, targets)
+    }
+
+    fn block_forward(&self, blk: &BlockWeights, x: &mut Tensor) {
+        let (n, e) = x.dims2();
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+
+        // ln1 -> q/k/v projections
+        let mut normed = Tensor::zeros(&[n, e]);
+        for i in 0..n {
+            layer_norm_into(normed.row_mut(i), x.row(i), &blk.ln1_g.data, &blk.ln1_b.data);
+        }
+        let q = crate::tensor::matmul(&normed, &blk.wq);
+        let k = crate::tensor::matmul(&normed, &blk.wk);
+        let v = crate::tensor::matmul(&normed, &blk.wv);
+
+        // per-head attention into `merged`
+        let mut merged = Tensor::zeros(&[n, e]);
+        let mut qh = vec![0.0f32; n * dh];
+        let mut kh = vec![0.0f32; n * dh];
+        let mut vh = vec![0.0f32; n * dh];
+        let mut oh = vec![0.0f32; n * dh];
+        for hd in 0..h {
+            let col = hd * dh;
+            for i in 0..n {
+                qh[i * dh..(i + 1) * dh].copy_from_slice(&q.row(i)[col..col + dh]);
+                kh[i * dh..(i + 1) * dh].copy_from_slice(&k.row(i)[col..col + dh]);
+                vh[i * dh..(i + 1) * dh].copy_from_slice(&v.row(i)[col..col + dh]);
+            }
+            match self.kind {
+                AttentionKind::Linear => {
+                    if self.cfg.causal {
+                        linear::forward_causal(&qh, &kh, &vh, n, dh, dh, &mut oh);
+                    } else {
+                        linear::forward_noncausal(&qh, &kh, &vh, n, dh, dh, &mut oh);
+                    }
+                }
+                AttentionKind::Softmax => {
+                    softmax::forward(&qh, &kh, &vh, n, dh, dh, self.cfg.causal, &mut oh);
+                }
+                AttentionKind::Lsh { .. } => {
+                    // Reformer shares QK: hash/attend with q in the key role
+                    lsh::forward(
+                        &self.lsh_cfg,
+                        &self.lsh_rotations,
+                        &qh,
+                        &qh,
+                        &vh,
+                        n,
+                        dh,
+                        dh,
+                        self.cfg.causal,
+                        &mut oh,
+                    );
+                }
+            }
+            for i in 0..n {
+                merged.row_mut(i)[col..col + dh].copy_from_slice(&oh[i * dh..(i + 1) * dh]);
+            }
+        }
+        let attn_out = crate::tensor::matmul(&merged, &blk.wo);
+        x.add_assign(&attn_out);
+
+        // ff
+        for i in 0..n {
+            let mut normed_row = vec![0.0f32; e];
+            layer_norm_into(&mut normed_row, x.row(i), &blk.ln2_g.data, &blk.ln2_b.data);
+            let ff = self.cfg.d_ff;
+            let mut hrow = vec![0.0f32; ff];
+            vecmat_into(&mut hrow, &normed_row, &blk.ff_w1.data, e, ff);
+            for (hv, b) in hrow.iter_mut().zip(&blk.ff_b1.data) {
+                *hv = gelu(*hv + b);
+            }
+            let mut orow = vec![0.0f32; e];
+            vecmat_into(&mut orow, &hrow, &blk.ff_w2.data, ff, e);
+            let xrow = x.row_mut(i);
+            for j in 0..e {
+                xrow[j] += orow[j] + blk.ff_b2.data[j];
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // generation
+    // -----------------------------------------------------------------------
+
+    /// Create a decode session for this model's natural backend
+    /// (linear -> RNN; softmax -> naive recompute; lsh -> recompute).
+    pub fn session(&self) -> DecodeSession<'_> {
+        let backend = match self.kind {
+            AttentionKind::Linear => Backend::LinearRnn(RnnState::new(&self.cfg)),
+            AttentionKind::Softmax => Backend::Recompute,
+            AttentionKind::Lsh { .. } => Backend::Recompute,
+        };
+        DecodeSession::new(self, backend)
+    }
+
+    /// Stateful-softmax session (supplementary C.1) — only for softmax models.
+    pub fn session_kv(&self) -> DecodeSession<'_> {
+        assert_eq!(self.kind, AttentionKind::Softmax);
+        DecodeSession::new(self, Backend::KvCache(KvState::new(&self.cfg)))
+    }
+
+    /// Convenience: feed `prompt`, then sample `n_new` tokens.
+    pub fn generate(&self, prompt: &[u32], n_new: usize, temperature: f32, seed: u64) -> Vec<u32> {
+        let mut sess = self.session();
+        let mut rng = Rng::new(seed);
+        sess.generate(prompt, n_new, temperature, &mut rng)
+    }
+}
+
+fn make_lsh_rotations(cfg: &lsh::LshConfig, d: usize) -> Vec<Vec<f32>> {
+    lsh::make_rotations(cfg, d)
+}
+
+/// Random parameter tensors in the python naming scheme.
+pub fn random_param_tensors(cfg: &ModelConfig, rng: &mut Rng) -> Vec<NamedTensor> {
+    let e = cfg.d_model;
+    let scale_e = 1.0 / (e as f32).sqrt();
+    let mut out = vec![
+        NamedTensor {
+            name: "embed.tok".into(),
+            tensor: Tensor::randn(&[cfg.vocab, e], 0.02, rng),
+        },
+        NamedTensor {
+            name: "embed.pos".into(),
+            tensor: Tensor::randn(&[cfg.max_len, e], 0.02, rng),
+        },
+    ];
+    for i in 0..cfg.n_layers {
+        let p = format!("layer{i}");
+        let mut push = |suffix: &str, t: Tensor| {
+            out.push(NamedTensor {
+                name: format!("{p}.{suffix}"),
+                tensor: t,
+            })
+        };
+        push("ln1.g", Tensor::filled(&[e], 1.0));
+        push("ln1.b", Tensor::zeros(&[e]));
+        push("attn.wq", Tensor::randn(&[e, e], scale_e, rng));
+        push("attn.wk", Tensor::randn(&[e, e], scale_e, rng));
+        push("attn.wv", Tensor::randn(&[e, e], scale_e, rng));
+        push("attn.wo", Tensor::randn(&[e, e], scale_e, rng));
+        push("ln2.g", Tensor::filled(&[e], 1.0));
+        push("ln2.b", Tensor::zeros(&[e]));
+        push("ff.w1", Tensor::randn(&[e, cfg.d_ff], scale_e, rng));
+        push("ff.b1", Tensor::zeros(&[cfg.d_ff]));
+        push(
+            "ff.w2",
+            Tensor::randn(&[cfg.d_ff, e], 1.0 / (cfg.d_ff as f32).sqrt(), rng),
+        );
+        push("ff.b2", Tensor::zeros(&[e]));
+    }
+    out.push(NamedTensor {
+        name: "final_ln.g".into(),
+        tensor: Tensor::filled(&[e], 1.0),
+    });
+    out.push(NamedTensor {
+        name: "final_ln.b".into(),
+        tensor: Tensor::zeros(&[e]),
+    });
+    out.push(NamedTensor {
+        name: "head.w".into(),
+        tensor: Tensor::randn(&[e, cfg.vocab], scale_e, rng),
+    });
+    out.push(NamedTensor {
+        name: "head.b".into(),
+        tensor: Tensor::zeros(&[cfg.vocab]),
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// decode sessions
+// ---------------------------------------------------------------------------
+
+/// Per-layer, per-head linear RNN states (eqs 16-20).
+#[derive(Clone, Debug)]
+pub struct RnnState {
+    states: Vec<linear::LinearAttnState>, // n_layers * n_heads
+}
+
+impl RnnState {
+    fn new(cfg: &ModelConfig) -> Self {
+        let dh = cfg.d_head();
+        RnnState {
+            states: (0..cfg.n_layers * cfg.n_heads)
+                .map(|_| linear::LinearAttnState::new(dh, dh))
+                .collect(),
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.state_bytes()).sum()
+    }
+}
+
+/// Per-layer, per-head KV caches.
+#[derive(Clone, Debug)]
+pub struct KvState {
+    caches: Vec<stateful_softmax::KvCache>,
+}
+
+impl KvState {
+    fn new(cfg: &ModelConfig) -> Self {
+        let dh = cfg.d_head();
+        KvState {
+            caches: (0..cfg.n_layers * cfg.n_heads)
+                .map(|_| stateful_softmax::KvCache::new(dh, dh, cfg.max_len))
+                .collect(),
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.state_bytes()).sum()
+    }
+}
+
+enum Backend {
+    /// O(1)/token — the paper's contribution.
+    LinearRnn(RnnState),
+    /// O(t)/token — stateful softmax (supplementary C.1).
+    KvCache(KvState),
+    /// O(t²)/token — rerun the full forward each step (vanilla softmax /
+    /// lsh decode; Reformer has no stateful decode).
+    Recompute,
+}
+
+/// A generation session over a model.
+pub struct DecodeSession<'m> {
+    model: &'m TransformerLM,
+    backend: Backend,
+    /// Tokens consumed so far (needed by the recompute backend and for
+    /// position indexing everywhere).
+    pub history: Vec<u32>,
+    // preallocated per-step buffers
+    xbuf: Vec<f32>,
+    normed: Vec<f32>,
+    qrow: Vec<f32>,
+    krow: Vec<f32>,
+    vrow: Vec<f32>,
+    orow: Vec<f32>,
+    ffrow: Vec<f32>,
+    out2: Vec<f32>,
+}
+
+impl<'m> DecodeSession<'m> {
+    fn new(model: &'m TransformerLM, backend: Backend) -> Self {
+        let e = model.cfg.d_model;
+        DecodeSession {
+            model,
+            backend,
+            history: Vec::new(),
+            xbuf: vec![0.0; e],
+            normed: vec![0.0; e],
+            qrow: vec![0.0; e],
+            krow: vec![0.0; e],
+            vrow: vec![0.0; e],
+            orow: vec![0.0; e],
+            ffrow: vec![0.0; model.cfg.d_ff],
+            out2: vec![0.0; e],
+        }
+    }
+
+    /// Bytes of decode state held right now (Table 4's memory story).
+    pub fn state_bytes(&self) -> usize {
+        match &self.backend {
+            Backend::LinearRnn(s) => s.state_bytes(),
+            Backend::KvCache(c) => c.state_bytes(),
+            Backend::Recompute => self.history.len() * 4,
+        }
+    }
+
+    /// Feed one token; returns logits for the *next* position.
+    pub fn step(&mut self, token: u32) -> Vec<f32> {
+        let pos = self.history.len();
+        assert!(
+            pos < self.model.cfg.max_len,
+            "sequence exceeds max_len {}",
+            self.model.cfg.max_len
+        );
+        self.history.push(token);
+        match &mut self.backend {
+            Backend::Recompute => {
+                let logits = self.model.forward(&self.history);
+                let (n, v) = logits.dims2();
+                logits.data[(n - 1) * v..].to_vec()
+            }
+            _ => self.step_incremental(token, pos),
+        }
+    }
+
+    fn step_incremental(&mut self, token: u32, pos: usize) -> Vec<f32> {
+        let cfg = &self.model.cfg;
+        let e = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.d_head();
+        // x = tok_embed + pos_embed
+        let te = self.model.tok_embed.row(token as usize);
+        let pe = self.model.pos_embed.row(pos);
+        for j in 0..e {
+            self.xbuf[j] = te[j] + pe[j];
+        }
+        for (li, blk) in self.model.blocks.iter().enumerate() {
+            layer_norm_into(&mut self.normed, &self.xbuf, &blk.ln1_g.data, &blk.ln1_b.data);
+            vecmat_into(&mut self.qrow, &self.normed, &blk.wq.data, e, e);
+            vecmat_into(&mut self.krow, &self.normed, &blk.wk.data, e, e);
+            vecmat_into(&mut self.vrow, &self.normed, &blk.wv.data, e, e);
+            for hd in 0..h {
+                let col = hd * dh;
+                let q = &self.qrow[col..col + dh];
+                let k = &self.krow[col..col + dh];
+                let v = &self.vrow[col..col + dh];
+                let o = &mut self.orow[col..col + dh];
+                match &mut self.backend {
+                    Backend::LinearRnn(st) => st.states[li * h + hd].step(q, k, v, o),
+                    Backend::KvCache(st) => st.caches[li * h + hd].step(q, k, v, o),
+                    Backend::Recompute => unreachable!(),
+                }
+            }
+            vecmat_into(&mut self.out2, &self.orow, &blk.wo.data, e, e);
+            for j in 0..e {
+                self.xbuf[j] += self.out2[j];
+            }
+            // ff
+            layer_norm_into(&mut self.normed, &self.xbuf, &blk.ln2_g.data, &blk.ln2_b.data);
+            vecmat_into(&mut self.ffrow, &self.normed, &blk.ff_w1.data, e, cfg.d_ff);
+            for (hv, b) in self.ffrow.iter_mut().zip(&blk.ff_b1.data) {
+                *hv = gelu(*hv + b);
+            }
+            vecmat_into(&mut self.out2, &self.ffrow, &blk.ff_w2.data, cfg.d_ff, e);
+            for j in 0..e {
+                self.xbuf[j] += self.out2[j] + blk.ff_b2.data[j];
+            }
+        }
+        layer_norm_into(
+            &mut self.normed,
+            &self.xbuf,
+            &self.model.final_ln_g.data,
+            &self.model.final_ln_b.data,
+        );
+        let vsize = cfg.vocab;
+        let mut logits = vec![0.0f32; vsize];
+        vecmat_into(&mut logits, &self.normed, &self.model.head_w.data, e, vsize);
+        for (l, b) in logits.iter_mut().zip(&self.model.head_b.data) {
+            *l += b;
+        }
+        logits
+    }
+
+    /// Feed a prompt and sample `n_new` continuation tokens.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        n_new: usize,
+        temperature: f32,
+        rng: &mut Rng,
+    ) -> Vec<u32> {
+        assert!(!prompt.is_empty(), "prompt must contain at least one token");
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.step(t);
+        }
+        let mut out = Vec::with_capacity(n_new);
+        let max_len = self.model.cfg.max_len;
+        for _ in 0..n_new {
+            if self.history.len() >= max_len {
+                break; // no position left for another token
+            }
+            let next = crate::sampling::sample_logits(&logits, temperature, rng);
+            out.push(next);
+            if self.history.len() + 1 >= max_len {
+                break;
+            }
+            logits = self.step(next);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 11,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            max_len: 32,
+            d_ff: 64,
+            chunk: 16,
+            causal: true,
+            lsh_rounds: 1,
+            lsh_buckets: 8,
+            lsh_chunk: 8,
+        }
+    }
+
+    fn tokens(n: usize, vocab: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(vocab as u64) as u32).collect()
+    }
+
+    #[test]
+    fn forward_shapes_all_kinds() {
+        let cfg = tiny_cfg();
+        for kind in [
+            AttentionKind::Linear,
+            AttentionKind::Softmax,
+            AttentionKind::Lsh { rounds: 2 },
+        ] {
+            let m = TransformerLM::init(&cfg, kind, 0);
+            let t = tokens(16, cfg.vocab, 1);
+            let logits = m.forward(&t);
+            assert_eq!(logits.shape, vec![16, 11]);
+            assert!(logits.data.iter().all(|x| x.is_finite()), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn linear_rnn_decode_matches_forward() {
+        // "Transformers are RNNs" at the full-model level, native path
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 2);
+        let t = tokens(20, cfg.vocab, 3);
+        let full = m.forward(&t);
+        let mut sess = m.session();
+        for (i, &tok) in t.iter().enumerate() {
+            let logits = sess.step(tok);
+            for (a, b) in logits.iter().zip(full.row(i)) {
+                assert!((a - b).abs() < 2e-3, "divergence at position {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn kv_decode_matches_softmax_forward() {
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Softmax, 4);
+        let t = tokens(18, cfg.vocab, 5);
+        let full = m.forward(&t);
+        let mut sess = m.session_kv();
+        for (i, &tok) in t.iter().enumerate() {
+            let logits = sess.step(tok);
+            for (a, b) in logits.iter().zip(full.row(i)) {
+                assert!((a - b).abs() < 2e-3, "divergence at position {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_decode_matches_forward() {
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Softmax, 6);
+        let t = tokens(10, cfg.vocab, 7);
+        let full = m.forward(&t);
+        let mut sess = m.session();
+        for (i, &tok) in t.iter().enumerate() {
+            let logits = sess.step(tok);
+            for (a, b) in logits.iter().zip(full.row(i)) {
+                assert!((a - b).abs() < 1e-4, "divergence at position {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_state_constant_kv_state_grows() {
+        let cfg = tiny_cfg();
+        let lin = TransformerLM::init(&cfg, AttentionKind::Linear, 8);
+        let sm = TransformerLM::init(&cfg, AttentionKind::Softmax, 8);
+        let mut s1 = lin.session();
+        let mut s2 = sm.session_kv();
+        let t = tokens(16, cfg.vocab, 9);
+        s1.step(t[0]);
+        s2.step(t[0]);
+        let lin0 = s1.state_bytes();
+        let kv0 = s2.state_bytes();
+        for &tok in &t[1..] {
+            s1.step(tok);
+            s2.step(tok);
+        }
+        assert_eq!(s1.state_bytes(), lin0, "linear state must stay constant");
+        assert!(s2.state_bytes() > kv0, "kv state must grow");
+    }
+
+    #[test]
+    fn generation_stays_in_vocab_and_respects_max_len() {
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 10);
+        let out = m.generate(&[1, 2, 3], 64, 1.0, 11);
+        assert!(out.len() <= cfg.max_len - 3);
+        assert!(out.iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 12);
+        let a = m.generate(&[1, 2], 10, 0.0, 1);
+        let b = m.generate(&[1, 2], 10, 0.0, 2); // different seed, greedy
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_forward() {
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 13);
+        let mut rng = Rng::new(13);
+        let tensors = random_param_tensors(&cfg, &mut rng);
+        let bundle = WeightBundle::new(tensors);
+        let dir = std::env::temp_dir().join(format!("nn_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ltw");
+        bundle.save(&path).unwrap();
+        let loaded = WeightBundle::load(&path).unwrap();
+        let m2 = TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &loaded).unwrap();
+        let t = tokens(8, cfg.vocab, 14);
+        // same weights => identical logits (m uses an independent init
+        // stream, so compare m2 against a third model from same bundle)
+        let m3 = TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &loaded).unwrap();
+        assert_eq!(m2.forward(&t), m3.forward(&t));
+        let _ = m;
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_param_is_error() {
+        let cfg = tiny_cfg();
+        let bundle = WeightBundle::new(vec![]);
+        assert!(TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! A [`Gen`] wraps the crate PRNG; properties are closures over generated
+//! inputs, run for N cases. On failure the harness reports the seed and
+//! case index so the exact input can be regenerated, and retries the
+//! failing case with "smaller" size hints when the generator supports it
+//! (shrinking-lite: we re-run with progressively smaller `size`).
+//!
+//! Used for the coordinator invariants (batching, routing, sessions), the
+//! tensor algebra identities, and the attention-engine equivalences.
+
+use crate::rng::Rng;
+
+/// Random-input generator context with a size hint.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint in [1, 100]; generators should scale with it.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(len, std)
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub case: usize,
+    pub size: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (seed {}, size {}): {}",
+            self.case, self.seed, self.size, self.message
+        )
+    }
+}
+
+/// Run `prop` for `cases` random cases. The property returns
+/// `Err(message)` to fail. Panics with a reproducible report on failure.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    check_seeded(name, base_seed(name), cases, prop)
+}
+
+/// Like [`check`] with an explicit base seed (for regression pinning).
+pub fn check_seeded(
+    name: &str,
+    base: u64,
+    cases: usize,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // ramp size from small to large so early failures are tiny cases
+        let size = 1 + (case * 100) / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(message) = prop(&mut g) {
+            // shrinking-lite: retry with smaller sizes to find a smaller repro
+            let mut best = Failure {
+                seed,
+                case,
+                size,
+                message,
+            };
+            for s in [1usize, 2, 5, 10, 25] {
+                if s >= size {
+                    break;
+                }
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut g2) {
+                    best = Failure {
+                        seed,
+                        case,
+                        size: s,
+                        message: m2,
+                    };
+                    break;
+                }
+            }
+            panic!("[propcheck:{name}] {best}");
+        }
+    }
+}
+
+/// Env-tunable case count: PROPCHECK_CASES overrides (for soak runs).
+pub fn default_cases() -> usize {
+    std::env::var("PROPCHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed(name: &str) -> u64 {
+    // FNV-1a over the property name: stable across runs, distinct per prop
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-involution", 50, |g| {
+            let n = g.usize_in(0, g.size);
+            let v = g.vec_usize(n, 0, 100);
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            if r == v {
+                Ok(())
+            } else {
+                Err("reverse twice != identity".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "propcheck:always-fails")]
+    fn failing_property_reports() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        use std::cell::RefCell;
+        let sizes = RefCell::new(Vec::new());
+        check("size-ramp", 20, |g| {
+            sizes.borrow_mut().push(g.size);
+            Ok(())
+        });
+        let s = sizes.borrow();
+        assert!(s.first().unwrap() < s.last().unwrap());
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let collect = |name: &str| {
+            use std::cell::RefCell;
+            let vals = RefCell::new(Vec::new());
+            check_seeded(name, base_seed(name), 5, |g| {
+                vals.borrow_mut().push(g.rng.next_u64());
+                Ok(())
+            });
+            vals.into_inner()
+        };
+        assert_eq!(collect("alpha"), collect("alpha"));
+        assert_ne!(collect("alpha"), collect("beta"));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1, 50);
+        for _ in 0..100 {
+            let v = g.usize_in(3, 7);
+            assert!((3..=7).contains(&v));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Manifest-driven artifact registry.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) is the
+//! single source of truth for what was lowered: artifact -> HLO file +
+//! typed input/output specs, model -> config + parameter order + weights.
+//! The structs here parse it with the crate's own [`crate::json`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::config::ModelConfig;
+use crate::json::Json;
+
+/// Tensor dtype crossing the boundary (everything is f32 or i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// One named input/output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("spec missing name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(|v| v.as_usize_vec())
+                .context("spec missing shape")?,
+            dtype: Dtype::parse(
+                j.get("dtype").and_then(|v| v.as_str()).context("spec missing dtype")?,
+            )?,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One model definition (config + canonical parameter order + weights).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub task: String,
+    pub attention: String,
+    pub config: ModelConfig,
+    pub raw_config: Json,
+    pub params: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub weights: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Default)]
+pub struct Bundle {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Bundle {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Bundle> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Bundle> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        match j.get("format").and_then(|v| v.as_str()) {
+            Some("hlo-text-v1") => {}
+            other => bail!("unsupported manifest format {other:?}"),
+        }
+        let mut bundle = Bundle::default();
+
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .context("manifest missing artifacts")?;
+        for (name, a) in arts {
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .with_context(|| format!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            bundle.artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .with_context(|| format!("{name}: missing file"))?
+                        .to_string(),
+                    model: a
+                        .get("model")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+
+        let models = j
+            .get("models")
+            .and_then(|v| v.as_obj())
+            .context("manifest missing models")?;
+        for (name, m) in models {
+            let raw_config = m.get("config").cloned().unwrap_or(Json::Null);
+            // bilstm model configs have a different schema; keep raw json
+            // and parse ModelConfig only when the fields exist
+            let config = ModelConfig::from_json(&raw_config).unwrap_or_else(|_| ModelConfig {
+                vocab: 0,
+                d_model: 0,
+                n_heads: 1,
+                n_layers: 0,
+                max_len: 0,
+                d_ff: 0,
+                chunk: 1,
+                causal: false,
+                lsh_rounds: 1,
+                lsh_buckets: 2,
+                lsh_chunk: 1,
+            });
+            let params: Vec<String> = m
+                .get("params")
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("model {name}: missing params"))?
+                .iter()
+                .map(|v| v.as_str().unwrap_or_default().to_string())
+                .collect();
+            let mut param_shapes = BTreeMap::new();
+            if let Some(obj) = m.get("param_shapes").and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    if let Some(shape) = v.as_usize_vec() {
+                        param_shapes.insert(k.clone(), shape);
+                    }
+                }
+            }
+            bundle.models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    task: m
+                        .get("task")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    attention: m
+                        .get("attention")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    config,
+                    raw_config,
+                    params,
+                    param_shapes,
+                    weights: m
+                        .get("weights")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                },
+            );
+        }
+        Ok(bundle)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.get(name)
+    }
+
+    /// Artifact names matching a predicate (e.g. all `*_train`).
+    pub fn artifact_names_where(&self, pred: impl Fn(&str) -> bool) -> Vec<String> {
+        self.artifacts
+            .keys()
+            .filter(|k| pred(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "models": {
+        "copy_linear": {
+          "task": "copy", "attention": "linear",
+          "config": {"vocab": 13, "d_model": 128, "n_heads": 4, "n_layers": 4,
+                     "max_len": 128, "d_ff": 512, "chunk": 16, "causal": true,
+                     "lsh_rounds": 1, "lsh_buckets": 16, "lsh_chunk": 32,
+                     "attention": "linear"},
+          "params": ["embed.tok", "head.w"],
+          "param_shapes": {"embed.tok": [13, 128], "head.w": [128, 13]},
+          "weights": "copy_linear_init.ltw"
+        }
+      },
+      "artifacts": {
+        "copy_linear_train": {
+          "file": "copy_linear_train.hlo.txt",
+          "model": "copy_linear",
+          "inputs": [{"name": "param:embed.tok", "shape": [13, 128], "dtype": "f32"},
+                     {"name": "in:inputs", "shape": [32, 128], "dtype": "i32"}],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let b = Bundle::parse(SAMPLE).unwrap();
+        let a = b.artifact("copy_linear_train").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        let m = b.model("copy_linear").unwrap();
+        assert_eq!(m.config.vocab, 13);
+        assert_eq!(m.params, vec!["embed.tok", "head.w"]);
+        assert_eq!(m.param_shapes["embed.tok"], vec![13, 128]);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Bundle::parse(r#"{"format": "v999", "models": {}, "artifacts": {}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let b = Bundle::parse(&text).unwrap();
+            assert!(b.artifacts.len() >= 30, "expected full artifact set");
+            let m = b.model("copy_linear").unwrap();
+            assert_eq!(m.config.vocab, 13);
+            // every train artifact's input count = 3 * params + 2 + batch
+            let a = b.artifact("copy_linear_train").unwrap();
+            assert_eq!(a.inputs.len(), 3 * m.params.len() + 2 + 3);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! The request path is: manifest.json -> [`Bundle`] (artifact registry) ->
+//! [`Runtime::load`] (HLO text -> `HloModuleProto` -> compile on the CPU
+//! PJRT client, cached) -> [`LoadedArtifact::run`] with [`Value`] tensors.
+//!
+//! HLO *text* is the interchange format — the image's xla_extension 0.5.1
+//! rejects jax>=0.5 serialized protos (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod bundle;
+
+pub use bundle::{ArtifactSpec, Bundle, Dtype, ModelSpec, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::tensor::Tensor;
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32(vec![], vec![x])
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Value {
+        Value::F32(t.shape.clone(), t.data.clone())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(s, _) | Value::I32(s, _) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(..) => Dtype::F32,
+            Value::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Value::F32(_, d) => Ok(d),
+            Value::I32(..) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Value::I32(_, d) => Ok(d),
+            Value::F32(..) => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    pub fn scalar(&self) -> anyhow::Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    pub fn into_tensor(self) -> anyhow::Result<Tensor> {
+        match self {
+            Value::F32(shape, data) => {
+                let shape = if shape.is_empty() { vec![1] } else { shape };
+                Ok(Tensor::from_vec(&shape, data))
+            }
+            Value::I32(..) => bail!("cannot view i32 value as Tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
+            Value::F32(shape, data) => (
+                xla::ElementType::F32,
+                shape,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            Value::I32(shape, data) => (
+                xla::ElementType::S32,
+                shape,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)
+            .context("building literal")
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<Value> {
+        match spec.dtype {
+            Dtype::F32 => Ok(Value::F32(spec.shape.clone(), lit.to_vec::<f32>()?)),
+            Dtype::I32 => Ok(Value::I32(spec.shape.clone(), lit.to_vec::<i32>()?)),
+        }
+    }
+}
+
+/// A compiled artifact, ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// wall time spent in `run` (telemetry for EXPERIMENTS.md §Perf)
+    pub exec_time: std::cell::Cell<std::time::Duration>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl LoadedArtifact {
+    /// Execute with shape/dtype validation against the manifest.
+    pub fn run(&self, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, s) in inputs.iter().zip(&self.spec.inputs) {
+            if v.shape() != s.shape.as_slice() || v.dtype() != s.dtype {
+                bail!(
+                    "{}: input {:?} expects {:?} {:?}, got {:?} {:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    v.dtype(),
+                    v.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let t0 = Instant::now();
+        let buffers = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = buffers[0][0].to_literal_sync()?;
+        self.exec_time
+            .set(self.exec_time.get() + t0.elapsed());
+        self.exec_count.set(self.exec_count.get() + 1);
+        // lowered with return_tuple=True: a single tuple literal
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.spec.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.spec.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// The PJRT runtime: client + manifest + compiled-executable cache.
+pub struct Runtime {
+    pub bundle: Bundle,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<LoadedArtifact>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads manifest.json, creates the CPU
+    /// PJRT client; compilation happens lazily per artifact).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let bundle = Bundle::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            bundle,
+            dir,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact by manifest name; cached.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<std::rc::Rc<LoadedArtifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self
+            .bundle
+            .artifact(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        eprintln!(
+            "[runtime] compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let loaded = std::rc::Rc::new(LoadedArtifact {
+            spec,
+            exe,
+            exec_time: std::cell::Cell::new(std::time::Duration::ZERO),
+            exec_count: std::cell::Cell::new(0),
+        });
+        self.cache.insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Load a model's initial weights bundle.
+    pub fn load_weights(&self, model: &str) -> anyhow::Result<crate::weights::WeightBundle> {
+        let spec = self
+            .bundle
+            .model(model)
+            .with_context(|| format!("model {model:?} not in manifest"))?;
+        crate::weights::WeightBundle::load(self.dir.join(&spec.weights))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.numel(), 4);
+        assert!(v.as_i32().is_err());
+        assert_eq!(v.as_f32().unwrap()[3], 4.0);
+        let s = Value::scalar_f32(7.5);
+        assert_eq!(s.scalar().unwrap(), 7.5);
+        assert!(v.scalar().is_err());
+    }
+
+    #[test]
+    fn value_tensor_roundtrip() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let v = Value::from_tensor(&t);
+        assert_eq!(v.into_tensor().unwrap(), t);
+    }
+
+    #[test]
+    fn i32_value() {
+        let v = Value::I32(vec![3], vec![1, 2, 3]);
+        assert_eq!(v.dtype(), Dtype::I32);
+        assert!(v.into_tensor().is_err());
+    }
+}

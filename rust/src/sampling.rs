@@ -1,0 +1,102 @@
+//! Token sampling for autoregressive generation.
+//!
+//! Temperature 0 = greedy argmax; otherwise softmax-with-temperature
+//! categorical sampling (optionally top-k truncated). Used by the image
+//! generation examples and the serving engine.
+
+use crate::rng::Rng;
+use crate::tensor::softmax_inplace;
+
+/// Sample one token id from unnormalized logits.
+pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let mut probs: Vec<f32> = logits.iter().map(|&x| x / temperature).collect();
+    softmax_inplace(&mut probs);
+    rng.categorical(&probs) as u32
+}
+
+/// Top-k restricted sampling (k = 0 means unrestricted).
+pub fn sample_logits_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 || k == 1 {
+        return argmax(logits);
+    }
+    if k == 0 || k >= logits.len() {
+        return sample_logits(logits, temperature, rng);
+    }
+    // indices of the k largest logits
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    let mut probs: Vec<f32> = idx.iter().map(|&i| logits[i] / temperature).collect();
+    softmax_inplace(&mut probs);
+    idx[rng.categorical(&probs)] as u32
+}
+
+/// Argmax over logits.
+pub fn argmax(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .expect("argmax of empty logits")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = [0.1, 5.0, -2.0, 4.9];
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(sample_logits(&logits, 0.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let logits = [0.0, 3.0, 0.0];
+        let mut rng = Rng::new(1);
+        let hits = (0..200)
+            .filter(|_| sample_logits(&logits, 0.1, &mut rng) == 1)
+            .count();
+        assert!(hits > 195, "hits={hits}");
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let logits = [0.0, 3.0, 0.0];
+        let mut rng = Rng::new(2);
+        let hits = (0..2000)
+            .filter(|_| sample_logits(&logits, 100.0, &mut rng) == 1)
+            .count();
+        // nearly uniform: expect ~1/3
+        assert!(hits < 900, "hits={hits}");
+    }
+
+    #[test]
+    fn topk_never_leaves_topk() {
+        let logits = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let t = sample_logits_topk(&logits, 1.0, 2, &mut rng);
+            assert!(t == 4 || t == 3, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn distribution_roughly_softmax() {
+        let logits = [0.0f32, (2.0f32).ln()]; // probs [1/3, 2/3]
+        let mut rng = Rng::new(4);
+        let n = 30_000;
+        let ones = (0..n)
+            .filter(|_| sample_logits(&logits, 1.0, &mut rng) == 1)
+            .count();
+        let p = ones as f64 / n as f64;
+        assert!((p - 2.0 / 3.0).abs() < 0.02, "p={p}");
+    }
+}

@@ -1,0 +1,297 @@
+//! Training driver: runs `*_train` AOT artifacts step-wise through PJRT.
+//!
+//! The artifact's calling convention (fixed by aot.py and asserted against
+//! the manifest):
+//!   inputs  = params..., opt_m..., opt_v..., opt_step, lr, batch fields...
+//!   outputs = loss, params..., opt_m..., opt_v..., opt_step
+//! The trainer carries the parameter/optimizer state as host `Value`s
+//! between steps, applies the paper's LR schedule, logs a loss CSV
+//! (Figure 2 / Figure 5 curves), and checkpoints LTW1 bundles the native
+//! models can load.
+
+use std::io::Write;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::config::TrainConfig;
+use crate::runtime::{LoadedArtifact, Runtime, Value};
+
+use crate::weights::{NamedTensor, WeightBundle};
+
+/// One step's outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f32,
+    pub step_time: std::time::Duration,
+}
+
+/// The training driver for one `<task>_<variant>` model.
+pub struct Trainer {
+    pub model_key: String,
+    artifact: Rc<LoadedArtifact>,
+    param_names: Vec<String>,
+    params: Vec<Value>,
+    opt_m: Vec<Value>,
+    opt_v: Vec<Value>,
+    opt_step: Value,
+    /// number of fixed (non-batch) inputs = 3P + 2
+    n_state_inputs: usize,
+    pub history: Vec<StepStats>,
+}
+
+impl Trainer {
+    /// Load the train artifact + initial weights for `<task>_<variant>`.
+    pub fn new(rt: &mut Runtime, task: &str, variant: &str) -> anyhow::Result<Trainer> {
+        let model_key = format!("{task}_{variant}");
+        let artifact = rt.load(&format!("{model_key}_train"))?;
+        let spec = rt
+            .bundle
+            .model(&model_key)
+            .with_context(|| format!("model {model_key} not in manifest"))?;
+        let param_names = spec.params.clone();
+        let weights = rt.load_weights(&model_key)?;
+        let params: Vec<Value> = param_names
+            .iter()
+            .map(|n| Value::from_tensor(weights.req(n)))
+            .collect();
+        // sanity: artifact input layout matches the convention
+        let p = param_names.len();
+        let expect = |i: usize, prefix: &str| -> anyhow::Result<()> {
+            let name = &artifact.spec.inputs[i].name;
+            if !name.starts_with(prefix) {
+                bail!("{model_key}_train input {i} is {name:?}, expected {prefix}*");
+            }
+            Ok(())
+        };
+        expect(0, "param:")?;
+        expect(p, "opt_m:")?;
+        expect(2 * p, "opt_v:")?;
+        if artifact.spec.inputs[3 * p].name != "opt_step" {
+            bail!("train artifact layout mismatch at opt_step");
+        }
+        if artifact.spec.inputs[3 * p + 1].name != "lr" {
+            bail!("train artifact layout mismatch at lr");
+        }
+        let opt_m: Vec<Value> = params
+            .iter()
+            .map(|v| Value::F32(v.shape().to_vec(), vec![0.0; v.numel()]))
+            .collect();
+        let opt_v = opt_m.clone();
+        Ok(Trainer {
+            model_key,
+            artifact,
+            param_names,
+            params,
+            opt_m,
+            opt_v,
+            opt_step: Value::scalar_f32(0.0),
+            n_state_inputs: 3 * p + 2,
+            history: Vec::new(),
+        })
+    }
+
+    /// Shapes of the batch inputs the artifact expects (after lr).
+    pub fn batch_specs(&self) -> &[crate::runtime::TensorSpec] {
+        &self.artifact.spec.inputs[self.n_state_inputs..]
+    }
+
+    /// Run one optimizer step with the given batch values.
+    pub fn step(&mut self, lr: f32, batch: Vec<Value>) -> anyhow::Result<StepStats> {
+        let p = self.param_names.len();
+        let mut inputs =
+            Vec::with_capacity(self.n_state_inputs + batch.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.opt_m.iter().cloned());
+        inputs.extend(self.opt_v.iter().cloned());
+        inputs.push(self.opt_step.clone());
+        inputs.push(Value::scalar_f32(lr));
+        inputs.extend(batch);
+        let t0 = Instant::now();
+        let mut out = self.artifact.run(&inputs)?;
+        let step_time = t0.elapsed();
+        let loss = out[0].scalar()?;
+        // outputs: loss, params, m, v, step
+        let mut it = out.drain(1..);
+        self.params = (&mut it).take(p).collect();
+        self.opt_m = (&mut it).take(p).collect();
+        self.opt_v = (&mut it).take(p).collect();
+        self.opt_step = it.next().context("missing opt_step output")?;
+        let stats = StepStats {
+            step: self.history.len() + 1,
+            loss,
+            step_time,
+        };
+        self.history.push(stats);
+        Ok(stats)
+    }
+
+    /// Current parameters as an LTW1 bundle (for checkpointing / native eval).
+    pub fn weights(&self) -> anyhow::Result<WeightBundle> {
+        let tensors = self
+            .param_names
+            .iter()
+            .zip(&self.params)
+            .map(|(n, v)| {
+                Ok(NamedTensor {
+                    name: n.clone(),
+                    tensor: v.clone().into_tensor()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(WeightBundle::new(tensors))
+    }
+
+    pub fn save_checkpoint(&self, path: &str) -> anyhow::Result<()> {
+        self.weights()?.save(path)
+    }
+
+    /// Mean step time over the recorded history.
+    pub fn mean_step_time(&self) -> std::time::Duration {
+        if self.history.is_empty() {
+            return std::time::Duration::ZERO;
+        }
+        self.history.iter().map(|s| s.step_time).sum::<std::time::Duration>()
+            / self.history.len() as u32
+    }
+}
+
+/// Drive a full training run with the paper's LR schedule, logging CSV.
+pub fn train_loop(
+    trainer: &mut Trainer,
+    cfg: &TrainConfig,
+    mut next_batch: impl FnMut(usize) -> Vec<Value>,
+) -> anyhow::Result<()> {
+    let mut csv: Option<std::fs::File> = match &cfg.out_csv {
+        Some(path) => {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let mut f = std::fs::File::create(path)?;
+            writeln!(f, "step,loss,elapsed_s")?;
+            Some(f)
+        }
+        None => None,
+    };
+    let t0 = Instant::now();
+    for step in 0..cfg.steps {
+        let lr = cfg.lr_at(step);
+        let stats = trainer.step(lr, next_batch(step))?;
+        if let Some(f) = csv.as_mut() {
+            writeln!(
+                f,
+                "{},{:.6},{:.3}",
+                stats.step,
+                stats.loss,
+                t0.elapsed().as_secs_f64()
+            )?;
+        }
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            eprintln!(
+                "[train {}] step {:>5} loss {:.4} lr {:.1e} ({:.0} ms/step)",
+                trainer.model_key,
+                stats.step,
+                stats.loss,
+                lr,
+                stats.step_time.as_secs_f64() * 1e3,
+            );
+        }
+    }
+    if let Some(path) = &cfg.checkpoint {
+        trainer.save_checkpoint(path)?;
+        eprintln!("[train {}] checkpoint -> {path}", trainer.model_key);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// batch builders per task (data generators -> artifact Values)
+// ---------------------------------------------------------------------------
+
+/// Copy-task batches.
+pub fn copy_batch_fn(
+    seq_len: usize,
+    batch: usize,
+    seed: u64,
+) -> impl FnMut(usize) -> Vec<Value> {
+    let mut gen = crate::data::CopyTask::new(seq_len, seed);
+    move |_step| {
+        let b = gen.batch(batch);
+        vec![
+            Value::I32(vec![batch, seq_len], b.inputs.iter().map(|&t| t as i32).collect()),
+            Value::I32(vec![batch, seq_len], b.targets.iter().map(|&t| t as i32).collect()),
+            Value::F32(vec![batch, seq_len], b.mask),
+        ]
+    }
+}
+
+/// Image (mnist/cifar) LM batches — mask is all-ones.
+pub fn image_batch_fn(
+    kind: crate::data::ImageKind,
+    batch: usize,
+    seed: u64,
+) -> impl FnMut(usize) -> Vec<Value> {
+    let mut gen = crate::data::ImageDataset::new(kind, seed);
+    let n = kind.seq_len();
+    move |_step| {
+        let (inputs, targets) = gen.lm_batch(batch);
+        vec![
+            Value::I32(vec![batch, n], inputs.iter().map(|&t| t as i32).collect()),
+            Value::I32(vec![batch, n], targets.iter().map(|&t| t as i32).collect()),
+            Value::F32(vec![batch, n], vec![1.0; batch * n]),
+        ]
+    }
+}
+
+/// Speech CTC batches.
+pub fn speech_batch_fn(
+    max_frames: usize,
+    batch: usize,
+    max_labels: usize,
+    seed: u64,
+) -> impl FnMut(usize) -> Vec<Value> {
+    let mut gen = crate::data::SpeechDataset::new(max_frames, seed);
+    move |_step| {
+        let (feats, frame_len, labels, label_len) = gen.batch(batch, max_labels);
+        vec![
+            Value::F32(vec![batch, max_frames, crate::data::speech::N_MELS], feats),
+            Value::I32(vec![batch], frame_len),
+            Value::I32(vec![batch, max_labels], labels),
+            Value::I32(vec![batch], label_len),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_fns_produce_declared_shapes() {
+        let mut f = copy_batch_fn(128, 4, 0);
+        let vals = f(0);
+        assert_eq!(vals.len(), 3);
+        assert_eq!(vals[0].shape(), &[4, 128]);
+        assert_eq!(vals[2].shape(), &[4, 128]);
+
+        let mut g = image_batch_fn(crate::data::ImageKind::MnistLike, 2, 0);
+        let vals = g(0);
+        assert_eq!(vals[0].shape(), &[2, 784]);
+
+        let mut s = speech_batch_fn(64, 3, 16, 0);
+        let vals = s(0);
+        assert_eq!(vals[0].shape(), &[3, 64, 40]);
+        assert_eq!(vals[1].shape(), &[3]);
+        assert_eq!(vals[2].shape(), &[3, 16]);
+    }
+
+    #[test]
+    fn batches_vary_across_steps() {
+        let mut f = copy_batch_fn(64, 2, 1);
+        let a = f(0);
+        let b = f(1);
+        assert_ne!(a[0].as_i32().unwrap(), b[0].as_i32().unwrap());
+    }
+}

@@ -1,0 +1,231 @@
+//! LTW1 tensor-bundle reader/writer — the rust half of `python/compile/ltw.py`.
+//!
+//! Format (little endian):
+//! ```text
+//! b"LTW1"
+//! u32  n_tensors
+//! per tensor:
+//!   u32 name_len, name (utf-8)
+//!   u8  dtype (0 = f32, 1 = i32)
+//!   u32 ndim, u32 dims[ndim]
+//!   raw data
+//! ```
+//! Used for initial parameters from `make artifacts`, trainer checkpoints,
+//! and moving weights into the native [`crate::nn`] models.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"LTW1";
+
+/// One named tensor (f32 only at this level; i32 entries are converted).
+#[derive(Clone, Debug)]
+pub struct NamedTensor {
+    pub name: String,
+    pub tensor: Tensor,
+}
+
+/// An ordered weight bundle with name lookup.
+#[derive(Clone, Debug, Default)]
+pub struct WeightBundle {
+    pub tensors: Vec<NamedTensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl WeightBundle {
+    pub fn new(tensors: Vec<NamedTensor>) -> Self {
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        WeightBundle { tensors, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i].tensor)
+    }
+
+    /// Panicking accessor for required parameters.
+    pub fn req(&self, name: &str) -> &Tensor {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing parameter {name:?} in weight bundle"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.iter().map(|t| t.name.as_str())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.tensor.numel()).sum()
+    }
+
+    // ---- I/O --------------------------------------------------------------
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading weight bundle {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(mut b: &[u8]) -> anyhow::Result<Self> {
+        let mut magic = [0u8; 4];
+        b.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic {:?} (not an LTW1 file)", magic);
+        }
+        let n = read_u32(&mut b)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut b)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            b.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes).context("tensor name not utf-8")?;
+            let mut dt = [0u8; 1];
+            b.read_exact(&mut dt)?;
+            let ndim = read_u32(&mut b)? as usize;
+            if ndim > 8 {
+                bail!("{name}: implausible ndim {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut b)? as usize);
+            }
+            let count: usize = dims.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; count * 4];
+            b.read_exact(&mut raw)?;
+            let data: Vec<f32> = match dt[0] {
+                0 => raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+                1 => raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                    .collect(),
+                d => bail!("{name}: unsupported dtype id {d}"),
+            };
+            let shape = if dims.is_empty() { vec![1] } else { dims };
+            tensors.push(NamedTensor {
+                name,
+                tensor: Tensor::from_vec(&shape, data),
+            });
+        }
+        Ok(WeightBundle::new(tensors))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut out: Vec<u8> = Vec::new();
+        out.write_all(MAGIC)?;
+        out.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            out.write_all(&(t.name.len() as u32).to_le_bytes())?;
+            out.write_all(t.name.as_bytes())?;
+            out.write_all(&[0u8])?; // f32
+            out.write_all(&(t.tensor.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.tensor.shape {
+                out.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in &t.tensor.data {
+                out.write_all(&v.to_le_bytes())?;
+            }
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+}
+
+fn read_u32(b: &mut &[u8]) -> anyhow::Result<u32> {
+    let mut buf = [0u8; 4];
+    b.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample_bundle() -> WeightBundle {
+        let mut rng = Rng::new(0);
+        WeightBundle::new(vec![
+            NamedTensor {
+                name: "a.w".into(),
+                tensor: Tensor::randn(&[3, 4], 1.0, &mut rng),
+            },
+            NamedTensor {
+                name: "b.bias".into(),
+                tensor: Tensor::randn(&[7], 1.0, &mut rng),
+            },
+        ])
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ltw_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ltw");
+        let bundle = sample_bundle();
+        bundle.save(&path).unwrap();
+        let back = WeightBundle::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.req("a.w"), &bundle.tensors[0].tensor);
+        assert_eq!(back.req("b.bias"), &bundle.tensors[1].tensor);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(WeightBundle::from_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join(format!("ltw_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ltw");
+        sample_bundle().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(WeightBundle::from_bytes(&bytes[..bytes.len() - 5]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn order_preserved_and_lookup_works() {
+        let b = sample_bundle();
+        let names: Vec<&str> = b.names().collect();
+        assert_eq!(names, vec!["a.w", "b.bias"]);
+        assert!(b.get("missing").is_none());
+        assert_eq!(b.total_params(), 12 + 7);
+    }
+
+    #[test]
+    fn reads_python_written_bundles_if_present() {
+        // cross-language check against aot.py's exports
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/copy_linear_init.ltw"
+        );
+        if std::path::Path::new(path).exists() {
+            let b = WeightBundle::load(path).unwrap();
+            assert!(b.get("embed.tok").is_some());
+            assert_eq!(b.req("embed.tok").shape, vec![13, 128]);
+            assert!(b.total_params() > 100_000);
+        }
+    }
+}

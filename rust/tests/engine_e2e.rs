@@ -1,0 +1,52 @@
+//! End-to-end serving-engine tests, including the PJRT batched engine.
+
+use linear_transformer::config::ServeConfig;
+use linear_transformer::coordinator::engine::{PjrtEngine, PjrtEngineSpec};
+use linear_transformer::coordinator::request::GenerateRequest;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+#[test]
+fn pjrt_engine_serves_batched_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    // mnist decode artifact exists at b=1 and b=32; use b=1 for speed here
+    let handle = PjrtEngine::spawn(
+        PjrtEngineSpec {
+            artifacts_dir: dir,
+            task: "copy".into(),
+            model_cfg: linear_transformer::config::ModelConfig::small_copy(),
+        },
+        ServeConfig {
+            max_batch: 1,
+            max_wait_us: 100,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..3u64)
+        .map(|id| {
+            handle.submit(GenerateRequest {
+                id,
+                prompt: vec![12, 3, 4, 1],
+                max_new: 6,
+                temperature: 0.0,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 6);
+        assert!(resp.tokens.iter().all(|&t| t < 13));
+    }
+    let st = handle.stats();
+    assert_eq!(st.completed, 3);
+    handle.shutdown();
+}

@@ -1,0 +1,61 @@
+//! Native-vs-PJRT full-forward parity on identical weights (placeholder
+//! extended below; see also runtime_integration.rs).
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::runtime::{Runtime, Value};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+#[test]
+fn eval_loss_parity_all_lm_variants() {
+    // for each lm model with an eval artifact, pjrt eval loss ~= native nll
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    for key in ["copy_linear", "copy_softmax"] {
+        let eval = rt.load(&format!("{key}_eval")).unwrap();
+        let weights = rt.load_weights(key).unwrap();
+        let spec = rt.bundle.model(key).unwrap().clone();
+        let cfg = &spec.config;
+        let kind = match spec.attention.as_str() {
+            "linear" => AttentionKind::Linear,
+            "softmax" => AttentionKind::Softmax,
+            _ => continue,
+        };
+        let params: Vec<Value> = spec
+            .params
+            .iter()
+            .map(|n| Value::from_tensor(weights.req(n)))
+            .collect();
+        let shape = eval.spec.inputs[params.len()].shape.clone();
+        let (b, n) = (shape[0], shape[1]);
+        let mut gen = linear_transformer::data::CopyTask::new(n, 11);
+        let lm = gen.batch(b);
+        let mut inputs = params.clone();
+        inputs.push(Value::I32(vec![b, n], lm.inputs.iter().map(|&t| t as i32).collect()));
+        inputs.push(Value::I32(vec![b, n], lm.targets.iter().map(|&t| t as i32).collect()));
+        inputs.push(Value::F32(vec![b, n], vec![1.0; b * n]));
+        let pjrt_loss = eval.run(&inputs).unwrap()[0].scalar().unwrap() as f64;
+
+        let native = TransformerLM::from_bundle(cfg, kind, &weights).unwrap();
+        let mut total = 0.0;
+        for s in 0..b {
+            total += native.sequence_nll(
+                &lm.inputs[s * n..(s + 1) * n],
+                &lm.targets[s * n..(s + 1) * n],
+            );
+        }
+        let native_nll = total / b as f64;
+        assert!(
+            (native_nll - pjrt_loss).abs() < 0.02,
+            "{key}: native {native_nll:.4} vs pjrt {pjrt_loss:.4}"
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These prove the three layers compose: Pallas kernels (L1) lowered inside
+//! the jax model (L2) execute through the rust PJRT client (L3), and agree
+//! numerically with the pure-rust native model running the same weights.
+//!
+//! All tests skip gracefully when `artifacts/` hasn't been built.
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::runtime::{Runtime, Value};
+use linear_transformer::trainer::{self, Trainer};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn decode_artifact_executes_and_preserves_state_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let art = rt.load("copy_decode_linear_b1").unwrap();
+    let weights = rt.load_weights("copy_linear").unwrap();
+    let spec = rt.bundle.model("copy_linear").unwrap().clone();
+
+    let mut inputs: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let cfg = &spec.config;
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_model / cfg.n_heads);
+    inputs.push(Value::I32(vec![1], vec![12])); // BOS
+    inputs.push(Value::I32(vec![1], vec![0])); // pos
+    inputs.push(Value::F32(vec![l, 1, h, dh, dh], vec![0.0; l * h * dh * dh]));
+    inputs.push(Value::F32(vec![l, 1, h, dh], vec![0.0; l * h * dh]));
+    let out = art.run(&inputs).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].shape(), &[1, cfg.vocab]);
+    assert_eq!(out[1].shape(), &[l, 1, h, dh, dh]);
+    // state must have changed (phi(k) v^T is nonzero almost surely)
+    assert!(out[1].as_f32().unwrap().iter().any(|&x| x != 0.0));
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn pjrt_decode_matches_native_model_on_same_weights() {
+    // The core cross-layer parity check: the jax/Pallas decode step and the
+    // rust-native RNN decode produce the same logits from the same weights.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let art = rt.load("copy_decode_linear_b1").unwrap();
+    let weights = rt.load_weights("copy_linear").unwrap();
+    let spec = rt.bundle.model("copy_linear").unwrap().clone();
+    let cfg = &spec.config;
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_model / cfg.n_heads);
+
+    let native = TransformerLM::from_bundle(cfg, AttentionKind::Linear, &weights).unwrap();
+    let mut sess = native.session();
+
+    let params: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let mut s = vec![0.0f32; l * h * dh * dh];
+    let mut z = vec![0.0f32; l * h * dh];
+    let tokens = [12u32, 5, 3, 7, 1, 5, 3, 7];
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let mut inputs = params.clone();
+        inputs.push(Value::I32(vec![1], vec![tok as i32]));
+        inputs.push(Value::I32(vec![1], vec![pos as i32]));
+        inputs.push(Value::F32(vec![l, 1, h, dh, dh], s.clone()));
+        inputs.push(Value::F32(vec![l, 1, h, dh], z.clone()));
+        let out = art.run(&inputs).unwrap();
+        let pjrt_logits = out[0].as_f32().unwrap().to_vec();
+        s = out[1].as_f32().unwrap().to_vec();
+        z = out[2].as_f32().unwrap().to_vec();
+
+        let native_logits = sess.step(tok);
+        let max_diff = pjrt_logits
+            .iter()
+            .zip(&native_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff < 2e-2,
+            "native/pjrt diverged at pos {pos}: max |Δlogit| = {max_diff}"
+        );
+    }
+}
+
+#[test]
+fn eval_artifact_runs_and_matches_native_nll() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let eval = rt.load("copy_linear_eval").unwrap();
+    let weights = rt.load_weights("copy_linear").unwrap();
+    let spec = rt.bundle.model("copy_linear").unwrap().clone();
+    let cfg = &spec.config;
+
+    let params: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let batch_shape = eval.spec.inputs[params.len()].shape.clone();
+    let (b, n) = (batch_shape[0], batch_shape[1]);
+    let mut gen = linear_transformer::data::CopyTask::new(n, 7);
+    let lm = gen.batch(b);
+    let mut inputs = params.clone();
+    inputs.push(Value::I32(vec![b, n], lm.inputs.iter().map(|&t| t as i32).collect()));
+    inputs.push(Value::I32(vec![b, n], lm.targets.iter().map(|&t| t as i32).collect()));
+    inputs.push(Value::F32(vec![b, n], vec![1.0; b * n])); // full mask
+    let loss = eval.run(&inputs).unwrap()[0].scalar().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+
+    // native NLL of the same batch with the same weights
+    let native = TransformerLM::from_bundle(cfg, AttentionKind::Linear, &weights).unwrap();
+    let mut total = 0.0f64;
+    for s in 0..b {
+        total += native.sequence_nll(
+            &lm.inputs[s * n..(s + 1) * n],
+            &lm.targets[s * n..(s + 1) * n],
+        );
+    }
+    let native_nll = total / b as f64;
+    assert!(
+        (native_nll - loss as f64).abs() < 0.02,
+        "native {native_nll} vs pjrt {loss}"
+    );
+}
+
+#[test]
+fn trainer_reduces_copy_loss() {
+    // End-to-end: the train artifact (fwd+bwd through the Pallas
+    // constant-memory kernel + RAdam) actually learns.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let mut tr = Trainer::new(&mut rt, "copy", "linear").unwrap();
+    let specs = tr.batch_specs().to_vec();
+    let (b, n) = (specs[0].shape[0], specs[0].shape[1]);
+    let mut batch_fn = trainer::copy_batch_fn(n, b, 0);
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..25 {
+        let stats = tr.step(1e-3, batch_fn(step)).unwrap();
+        if first.is_none() {
+            first = Some(stats.loss);
+        }
+        last = stats.loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first,
+        "training did not reduce loss: {first} -> {last}"
+    );
+    // checkpoint roundtrip: weights load into the native model
+    let w = tr.weights().unwrap();
+    let spec = rt.bundle.model("copy_linear").unwrap();
+    let native = TransformerLM::from_bundle(&spec.config, AttentionKind::Linear, &w).unwrap();
+    let logits = native.forward(&[12, 3, 4]);
+    assert!(logits.data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn prefill_state_feeds_decode() {
+    // image-completion path: prefill 384 pixels, continue decoding
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let prefill = rt.load("mnist_prefill_b1").unwrap();
+    let decode = rt.load("mnist_decode_linear_b1").unwrap();
+    let weights = rt.load_weights("mnist_linear").unwrap();
+    let spec = rt.bundle.model("mnist_linear").unwrap().clone();
+    let cfg = &spec.config;
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_model / cfg.n_heads);
+
+    let params: Vec<Value> = spec
+        .params
+        .iter()
+        .map(|n| Value::from_tensor(weights.req(n)))
+        .collect();
+    let plen = prefill.spec.inputs.last().unwrap().shape[1];
+    let mut img = linear_transformer::data::ImageDataset::new(
+        linear_transformer::data::ImageKind::MnistLike,
+        3,
+    );
+    let (px, _) = img.sample();
+    // model inputs are shifted: [0, px0, px1, ...]
+    let mut prompt: Vec<i32> = vec![0];
+    prompt.extend(px[..plen - 1].iter().map(|&p| p as i32));
+
+    let mut inputs = params.clone();
+    inputs.push(Value::I32(vec![1, plen], prompt));
+    let out = prefill.run(&inputs).unwrap();
+    assert_eq!(out[0].shape(), &[1, plen, cfg.vocab]);
+    let s = out[1].as_f32().unwrap().to_vec();
+    let z = out[2].as_f32().unwrap().to_vec();
+    assert_eq!(s.len(), l * h * dh * dh);
+
+    // continue decoding one step from the prefilled state
+    let mut dec_inputs = params.clone();
+    dec_inputs.push(Value::I32(vec![1], vec![px[plen - 1] as i32]));
+    dec_inputs.push(Value::I32(vec![1], vec![plen as i32]));
+    dec_inputs.push(Value::F32(vec![l, 1, h, dh, dh], s));
+    dec_inputs.push(Value::F32(vec![l, 1, h, dh], z));
+    let dout = decode.run(&dec_inputs).unwrap();
+    assert!(dout[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
