@@ -1,17 +1,89 @@
+//! Decode throughput: batched structure-of-arrays decode vs the per-slot
+//! scalar loop, at B ∈ {1, 4, 16, 64}.
+//!
+//! The per-slot loop is what the seed engine did (B independent
+//! `DecodeSession`s advanced one at a time — B GEMVs per projection); the
+//! batched path is one `BatchedDecodeSession` advancing all lanes through
+//! single `[B, ·]` GEMMs. Every weight matrix is read once per tick
+//! instead of B times, which is the whole game on a weight-bandwidth-bound
+//! decode. Emits machine-readable `BENCH_decode.json`.
+//!
+//! Run: cargo run --release --example perf_decode -- [steps]
+
 use linear_transformer::attention::AttentionKind;
 use linear_transformer::config::ModelConfig;
+use linear_transformer::json::{obj, Json};
 use linear_transformer::nn::TransformerLM;
+
 fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
     let cfg = ModelConfig::mnist();
+    let steps = steps.min(cfg.max_len - 1);
     let model = TransformerLM::init(&cfg, AttentionKind::Linear, 1);
-    let mut sess = model.session();
-    let mut logits = sess.step(0);
-    let t0 = std::time::Instant::now();
-    let steps = 2000usize.min(cfg.max_len - 1);
-    for _ in 0..steps {
-        let px = linear_transformer::sampling::argmax(&logits);
-        logits = sess.step(px % 255);
-        if sess.history.len() + 1 >= cfg.max_len { break; }
+
+    println!(
+        "decode throughput, mnist geometry (d_model {}, {} layers), {} steps/lane",
+        cfg.d_model, cfg.n_layers, steps
+    );
+    println!(
+        "{:>5} {:>16} {:>16} {:>9}",
+        "B", "per-slot tok/s", "batched tok/s", "speedup"
+    );
+
+    let mut rows = Vec::new();
+    for &b in &[1usize, 4, 16, 64] {
+        // per-slot: B independent sessions advanced one at a time (seed behavior)
+        let mut sessions: Vec<_> = (0..b).map(|_| model.session()).collect();
+        let mut tokens: Vec<u32> = (0..b).map(|r| (r % cfg.vocab) as u32).collect();
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            for (sess, tok) in sessions.iter_mut().zip(tokens.iter_mut()) {
+                let logits = sess.step(*tok);
+                *tok = linear_transformer::sampling::argmax(&logits);
+            }
+        }
+        let per_slot = (b * steps) as f64 / t0.elapsed().as_secs_f64();
+
+        // batched: one session, all lanes per tick
+        let mut batched = model.batched_session(b);
+        for _ in 0..b {
+            batched.alloc_row().expect("capacity");
+        }
+        let mut tokens: Vec<u32> = (0..b).map(|r| (r % cfg.vocab) as u32).collect();
+        let vocab = cfg.vocab;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let logits = batched.step_batch(&tokens);
+            for (r, tok) in tokens.iter_mut().enumerate() {
+                *tok = linear_transformer::sampling::argmax(&logits[r * vocab..(r + 1) * vocab]);
+            }
+        }
+        let batched_tps = (b * steps) as f64 / t0.elapsed().as_secs_f64();
+
+        let speedup = batched_tps / per_slot;
+        println!("{b:>5} {per_slot:>16.0} {batched_tps:>16.0} {speedup:>8.2}x");
+        rows.push(Json::Obj(
+            [
+                ("batch".to_string(), Json::Num(b as f64)),
+                ("per_slot_tok_s".to_string(), Json::Num(per_slot)),
+                ("batched_tok_s".to_string(), Json::Num(batched_tps)),
+                ("speedup".to_string(), Json::Num(speedup)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
     }
-    println!("linear decode: {:.1} us/token", t0.elapsed().as_secs_f64() * 1e6 / sess.history.len() as f64);
+
+    let report = obj(vec![
+        ("model", Json::Str("mnist".into())),
+        ("steps_per_lane", Json::Num(steps as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_decode.json", report.to_string()) {
+        Ok(()) => println!("[json] BENCH_decode.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_decode.json: {e}"),
+    }
 }

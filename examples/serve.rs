@@ -22,15 +22,26 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
     let max_batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
 
-    // model: copy task with the AOT init weights (or a trained checkpoint)
-    let rt = Runtime::open("artifacts")?;
+    // model: copy task with a trained checkpoint, the AOT init weights,
+    // or (when neither PJRT nor artifacts are available) a random init —
+    // the serving-systems demo only needs real weights for output quality
     let cfg = ModelConfig::small_copy();
-    let weights = std::path::Path::new("results/copy_linear_trained.ltw")
-        .exists()
-        .then(|| linear_transformer::weights::WeightBundle::load("results/copy_linear_trained.ltw"))
-        .transpose()?
-        .unwrap_or(rt.load_weights("copy_linear")?);
-    let model = TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &weights)?;
+    let ckpt = "results/copy_linear_trained.ltw";
+    let weights = if std::path::Path::new(ckpt).exists() {
+        Some(linear_transformer::weights::WeightBundle::load(ckpt)?)
+    } else {
+        match Runtime::open("artifacts").and_then(|rt| rt.load_weights("copy_linear")) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!("[serve] no AOT weights ({e:#}); using random init");
+                None
+            }
+        }
+    };
+    let model = match weights {
+        Some(w) => TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &w)?,
+        None => TransformerLM::init(&cfg, AttentionKind::Linear, 0),
+    };
 
     let engine = Arc::new(NativeEngine::spawn(
         model,

@@ -79,4 +79,43 @@ fn main() {
     }
     table.emit("table45_latency.csv");
     println!("\n(~ = prefix-measured + extrapolated; paper Table 5 CPU column is the comparison point)");
+
+    // ---- batched serving throughput: per-slot loop vs one-GEMM-per-tick ----
+    // The RNN view makes batch-B decode a dense [B, d, m] state block; this
+    // sweep shows what that buys over advancing B sessions one at a time.
+    let steps = if quick { 48 } else { 192 };
+    let cfg = ModelConfig::mnist();
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 1);
+    let mut btable = Table::new(
+        "Batched decode throughput (mnist geometry, tokens/s)",
+        &["batch", "per_slot_tok_s", "batched_tok_s", "speedup"],
+    );
+    for &b in &[1usize, 4, 16, 64] {
+        let mut sessions: Vec<_> = (0..b).map(|_| model.session()).collect();
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            for sess in sessions.iter_mut() {
+                let _ = sess.step((step % cfg.vocab) as u32);
+            }
+        }
+        let per_slot = (b * steps) as f64 / t0.elapsed().as_secs_f64();
+
+        let mut batched = model.batched_session(b);
+        for _ in 0..b {
+            batched.alloc_row().expect("capacity");
+        }
+        let tokens: Vec<u32> = vec![0; b];
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let _ = batched.step_batch(&tokens);
+        }
+        let batched_tps = (b * steps) as f64 / t0.elapsed().as_secs_f64();
+        btable.row(vec![
+            b.to_string(),
+            format!("{per_slot:.0}"),
+            format!("{batched_tps:.0}"),
+            format!("{:.2}x", batched_tps / per_slot),
+        ]);
+    }
+    btable.emit("table45_batched_decode.csv");
 }

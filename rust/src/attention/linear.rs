@@ -5,14 +5,24 @@
 //! * [`forward_backward_causal`] — constant-memory gradients (eqs 13-15
 //!   plus the denominator terms), mirroring the Pallas backward kernel.
 //! * [`forward_noncausal`] — eq. 6 for encoder stacks.
-//! * [`LinearAttnState`] — eqs 16-20: the RNN cell. `step()` is the O(1)
-//!   per-token decode hot path the serving engine batches over; it is THE
-//!   performance-critical function of this crate (see EXPERIMENTS.md §Perf).
+//! * [`LinearAttnState`] — eqs 16-20: the RNN cell. `step()` is one
+//!   autoregressive update in O(D·M), independent of sequence length.
+//! * [`BatchedLinearAttnState`] — the same recurrence over B decode lanes
+//!   in structure-of-arrays layout: all lanes' S matrices live in one
+//!   contiguous `[B, d, m]` block and all Z vectors in one `[B, d]` block,
+//!   so `step_batch()` advances the whole batch with three streaming
+//!   kernels (row-wise phi, batched outer-product accumulate, batched
+//!   contraction) instead of B scalar loops. This is THE hot path of the
+//!   serving engine (see `coordinator::engine`); because every lane is a
+//!   fixed-size row pair, slot churn is plain row insert (`push_row`) and
+//!   swap-remove compaction (`swap_remove_row`) — no cache planning.
 //!
 //! Inputs q, k are *raw* (un-mapped); phi(x) = elu(x)+1 is applied
 //! internally, matching the python wrappers.
 
-use crate::tensor::{axpy, dot, elu_plus_one};
+use crate::tensor::{
+    axpy, batched_contract, batched_outer_acc, dot, elu_plus_one, elu_plus_one_map,
+};
 
 pub const EPS: f32 = 1e-6;
 
@@ -310,6 +320,125 @@ impl LinearAttnState {
     }
 }
 
+/// The RNN view over B decode lanes, structure-of-arrays.
+///
+/// Lane r's state is row r of `s` (`[d, m]`) and row r of `z` (`[d]`);
+/// rows `0..rows` are live and contiguous. The serving engine maps decode
+/// slots onto lanes and keeps them dense with [`Self::push_row`] /
+/// [`Self::swap_remove_row`].
+#[derive(Clone, Debug)]
+pub struct BatchedLinearAttnState {
+    pub d: usize,
+    pub m: usize,
+    cap: usize,
+    rows: usize,
+    /// `[cap, d, m]` — per-lane attention memory (eq. 18)
+    s: Vec<f32>,
+    /// `[cap, d]` — per-lane normalizer memory (eq. 19)
+    z: Vec<f32>,
+    // preallocated phi(q) / phi(k) scratch, [cap, d]
+    qbuf: Vec<f32>,
+    kbuf: Vec<f32>,
+}
+
+impl BatchedLinearAttnState {
+    pub fn new(cap: usize, d: usize, m: usize) -> Self {
+        assert!(cap >= 1);
+        BatchedLinearAttnState {
+            d,
+            m,
+            cap,
+            rows: 0,
+            s: vec![0.0; cap * d * m],
+            z: vec![0.0; cap * d],
+            qbuf: vec![0.0; cap * d],
+            kbuf: vec![0.0; cap * d],
+        }
+    }
+
+    /// Live lanes.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lane r's (S, Z) pair.
+    pub fn lane(&self, r: usize) -> (&[f32], &[f32]) {
+        assert!(r < self.rows);
+        let (d, m) = (self.d, self.m);
+        (&self.s[r * d * m..(r + 1) * d * m], &self.z[r * d..(r + 1) * d])
+    }
+
+    /// Append a zeroed lane; returns its row index, or `None` at capacity.
+    pub fn push_row(&mut self) -> Option<usize> {
+        if self.rows == self.cap {
+            return None;
+        }
+        let r = self.rows;
+        let (d, m) = (self.d, self.m);
+        self.s[r * d * m..(r + 1) * d * m].fill(0.0);
+        self.z[r * d..(r + 1) * d].fill(0.0);
+        self.rows += 1;
+        Some(r)
+    }
+
+    /// Free lane `r`, compacting by moving the last lane into its place.
+    /// Returns the index the moved lane previously had (`None` if `r` was
+    /// already last) so callers can fix their lane maps.
+    pub fn swap_remove_row(&mut self, r: usize) -> Option<usize> {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let last = self.rows - 1;
+        self.rows = last;
+        if r == last {
+            return None;
+        }
+        let (d, m) = (self.d, self.m);
+        self.s.copy_within(last * d * m..(last + 1) * d * m, r * d * m);
+        self.z.copy_within(last * d..(last + 1) * d, r * d);
+        Some(last)
+    }
+
+    /// Memory footprint of the live lanes (constant per lane, per token).
+    pub fn state_bytes(&self) -> usize {
+        self.rows * (self.d * self.m + self.d) * 4
+    }
+
+    /// One decode step for every live lane with raw (un-mapped) inputs.
+    /// `q, k: [rows, d]`, `v, out: [rows, m]`.
+    pub fn step_batch(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        let b = self.rows;
+        let (d, m) = (self.d, self.m);
+        assert_eq!(q.len(), b * d);
+        assert_eq!(k.len(), b * d);
+        assert_eq!(v.len(), b * m);
+        assert_eq!(out.len(), b * m);
+        if b == 0 {
+            return;
+        }
+        let qb = &mut self.qbuf[..b * d];
+        let kb = &mut self.kbuf[..b * d];
+        elu_plus_one_map(qb, q);
+        elu_plus_one_map(kb, k);
+        // S_r += phi(k_r) v_r^T ; Z_r += phi(k_r)   (eqs 18, 19, all lanes)
+        batched_outer_acc(&mut self.s[..b * d * m], kb, v, b, d, m);
+        for (zv, &kv) in self.z[..b * d].iter_mut().zip(kb.iter()) {
+            *zv += kv;
+        }
+        // out_r = (phi(q_r)^T S_r) / (phi(q_r) . Z_r + eps)   (eq. 20)
+        batched_contract(out, qb, &self.s[..b * d * m], b, d, m);
+        for r in 0..b {
+            let den = dot(&qb[r * d..(r + 1) * d], &self.z[r * d..(r + 1) * d]) + EPS;
+            let inv = 1.0 / den;
+            for o in out[r * m..(r + 1) * m].iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,6 +575,94 @@ mod tests {
         st.reset();
         assert!(st.s.iter().all(|&x| x == 0.0));
         assert!(st.z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batched_lanes_match_independent_scalar_states() {
+        let (d, m, b, steps) = (8, 8, 5, 12);
+        let mut rng = Rng::new(6);
+        let mut batched = BatchedLinearAttnState::new(b, d, m);
+        let mut scalars: Vec<LinearAttnState> =
+            (0..b).map(|_| LinearAttnState::new(d, m)).collect();
+        for r in 0..b {
+            assert_eq!(batched.push_row(), Some(r));
+        }
+        let mut out_b = vec![0.0; b * m];
+        let mut out_s = vec![0.0; m];
+        for _ in 0..steps {
+            let q = rand(b * d, &mut rng);
+            let k = rand(b * d, &mut rng);
+            let v = rand(b * m, &mut rng);
+            batched.step_batch(&q, &k, &v, &mut out_b);
+            for (r, st) in scalars.iter_mut().enumerate() {
+                st.step(
+                    &q[r * d..(r + 1) * d],
+                    &k[r * d..(r + 1) * d],
+                    &v[r * m..(r + 1) * m],
+                    &mut out_s,
+                );
+                for e in 0..m {
+                    assert!(
+                        (out_b[r * m + e] - out_s[e]).abs() < 1e-4,
+                        "lane {r} diverged at element {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swap_remove_compaction_preserves_survivors() {
+        let (d, m) = (4, 4);
+        let mut rng = Rng::new(7);
+        let mut batched = BatchedLinearAttnState::new(3, d, m);
+        for _ in 0..3 {
+            batched.push_row();
+        }
+        // independent references for lanes 0 and 2 (lane 1 will be evicted)
+        let mut ref0 = LinearAttnState::new(d, m);
+        let mut ref2 = LinearAttnState::new(d, m);
+        let mut out_b = vec![0.0; 3 * m];
+        let mut out_s = vec![0.0; m];
+        let (q, k, v) = (rand(3 * d, &mut rng), rand(3 * d, &mut rng), rand(3 * m, &mut rng));
+        batched.step_batch(&q, &k, &v, &mut out_b);
+        ref0.step(&q[..d], &k[..d], &v[..m], &mut out_s);
+        ref2.step(&q[2 * d..], &k[2 * d..], &v[2 * m..], &mut out_s);
+
+        // evict lane 1: lane 2 moves into row 1
+        assert_eq!(batched.swap_remove_row(1), Some(2));
+        assert_eq!(batched.rows(), 2);
+
+        // survivors keep their trajectories (row 0 = old lane 0, row 1 = old lane 2)
+        let (q2, k2, v2) = (rand(2 * d, &mut rng), rand(2 * d, &mut rng), rand(2 * m, &mut rng));
+        let mut out2 = vec![0.0; 2 * m];
+        batched.step_batch(&q2, &k2, &v2, &mut out2);
+        ref0.step(&q2[..d], &k2[..d], &v2[..m], &mut out_s);
+        for e in 0..m {
+            assert!((out2[e] - out_s[e]).abs() < 1e-4, "lane 0 broke after compaction");
+        }
+        ref2.step(&q2[d..], &k2[d..], &v2[m..], &mut out_s);
+        for e in 0..m {
+            assert!((out2[m + e] - out_s[e]).abs() < 1e-4, "moved lane broke after compaction");
+        }
+
+        // freed capacity is reusable and comes back zeroed
+        let r = batched.push_row().unwrap();
+        assert_eq!(r, 2);
+        let (s, z) = batched.lane(r);
+        assert!(s.iter().all(|&x| x == 0.0) && z.iter().all(|&x| x == 0.0));
+        assert!(batched.push_row().is_none(), "capacity enforced");
+    }
+
+    #[test]
+    fn batched_state_bytes_track_live_lanes() {
+        let mut st = BatchedLinearAttnState::new(4, 8, 8);
+        assert_eq!(st.state_bytes(), 0);
+        st.push_row();
+        st.push_row();
+        assert_eq!(st.state_bytes(), 2 * (8 * 8 + 8) * 4);
+        st.swap_remove_row(0);
+        assert_eq!(st.state_bytes(), (8 * 8 + 8) * 4);
     }
 
     #[test]

@@ -1,15 +1,23 @@
 //! The serving engine: worker thread + continuous batching decode loop.
 //!
-//! Two interchangeable engines implement the same submit/response API:
+//! One generic tick loop ([`run_engine`]) drives any [`DecodeBackend`]:
+//! a backend owns a set of dense decode *lanes* (0..lanes), each holding
+//! one request's fixed-size RNN state (S, Z — eqs 16-20), and advances
+//! every lane by one token per [`DecodeBackend::step_batch`] call. Because
+//! the paper's decode state is O(1) per lane, admission is "append a
+//! zeroed row" and eviction is "swap-remove compaction" — no paged KV
+//! cache, no prefix planning, and the whole batch stays contiguous so the
+//! per-tick work is a handful of `[B, ·]` GEMMs.
 //!
-//! * [`NativeEngine`] — decodes with the pure-rust [`crate::nn`] model.
-//!   One `DecodeSession` per slot; a tick advances every active slot by
-//!   one token. Because linear attention's decode state is O(1) per slot,
-//!   admission never requires eviction or cache planning.
-//! * [`PjrtEngine`] — decodes with a batched `*_decode_linear_b<B>` AOT
-//!   artifact through the PJRT runtime. All slots advance in one XLA
-//!   execution per tick; per-slot positions ride in the `in:pos` vector
-//!   (this is why the artifact takes pos as [B]).
+//! Two backends implement the trait:
+//!
+//! * the **native** backend — [`crate::nn::BatchedDecodeSession`], the
+//!   pure-rust structure-of-arrays decode path. All slots advance through
+//!   single batched GEMMs per projection instead of per-slot GEMV loops.
+//! * [`PjrtBackend`] — a batched `*_decode_linear_b<B>` AOT artifact
+//!   through the PJRT runtime. All slots advance in one XLA execution per
+//!   tick; per-slot positions ride in the `in:pos` vector. The host-side
+//!   (s, z) blocks are compacted with the same lane discipline.
 //!
 //! PJRT handles are not `Send`, so the PJRT engine constructs its
 //! `Runtime` *inside* the worker thread; only plain data crosses.
@@ -24,7 +32,7 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::request::{GenerateRequest, GenerateResponse};
 use crate::coordinator::sessions::{SlotInfo, SlotTable};
 use crate::metrics::LatencyRecorder;
-use crate::nn::TransformerLM;
+use crate::nn::{BatchedDecodeSession, TransformerLM};
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
 use crate::sampling::sample_logits;
@@ -99,49 +107,103 @@ impl Drop for EngineHandle {
 }
 
 // ---------------------------------------------------------------------------
-// native engine
+// the decode-backend abstraction
 // ---------------------------------------------------------------------------
 
-/// Serving engine over the pure-rust model.
-pub struct NativeEngine;
+/// A batched decoder the engine ticks: a set of dense lanes (0..lanes),
+/// each one request's O(1) recurrent decode state, advanced one token per
+/// call. Implementations keep lanes contiguous; the engine mirrors the
+/// lane order in its own slot map and relies on swap-remove semantics.
+pub trait DecodeBackend {
+    /// Vocabulary size of the logits rows.
+    fn vocab(&self) -> usize;
 
-impl NativeEngine {
-    /// Spawn the worker; the model moves into the thread.
-    pub fn spawn(model: TransformerLM, cfg: ServeConfig) -> anyhow::Result<EngineHandle> {
-        cfg.validate()?;
-        let (tx, rx) = channel::<Msg>();
-        let stats = Arc::new(Mutex::new(EngineStats::default()));
-        let stats_w = stats.clone();
-        let worker = std::thread::Builder::new()
-            .name("lintra-native-engine".into())
-            .spawn(move || native_worker(model, cfg, rx, stats_w))?;
-        Ok(EngineHandle {
-            tx,
-            stats,
-            worker: Some(worker),
-        })
+    /// Maximum sequence position a lane may reach.
+    fn max_len(&self) -> usize;
+
+    /// Number of live lanes.
+    fn lanes(&self) -> usize;
+
+    /// Append a fresh lane with zeroed state at position 0.
+    fn alloc_lane(&mut self) -> anyhow::Result<usize>;
+
+    /// Free `lane`, compacting by moving the last lane into its place.
+    /// Returns the moved lane's previous index (`None` if `lane` was last).
+    fn free_lane(&mut self, lane: usize) -> Option<usize>;
+
+    /// Advance every live lane by one token (`tokens[r]` feeds lane r).
+    /// Returns logits `[lanes * vocab]` row-major.
+    fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>>;
+}
+
+impl DecodeBackend for BatchedDecodeSession<'_> {
+    fn vocab(&self) -> usize {
+        BatchedDecodeSession::vocab(self)
+    }
+
+    fn max_len(&self) -> usize {
+        BatchedDecodeSession::max_len(self)
+    }
+
+    fn lanes(&self) -> usize {
+        self.rows()
+    }
+
+    fn alloc_lane(&mut self) -> anyhow::Result<usize> {
+        self.alloc_row()
+            .ok_or_else(|| anyhow::anyhow!("native decode capacity exhausted"))
+    }
+
+    fn free_lane(&mut self, lane: usize) -> Option<usize> {
+        self.free_row(lane)
+    }
+
+    fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
+        Ok(BatchedDecodeSession::step_batch(self, tokens))
     }
 }
 
-fn native_worker(
-    model: TransformerLM,
-    cfg: ServeConfig,
+// ---------------------------------------------------------------------------
+// the shared tick loop
+// ---------------------------------------------------------------------------
+
+/// Reply to a request with a failure, if its responder is still waiting.
+fn send_failure(
+    responders: &mut std::collections::HashMap<u64, Sender<GenerateResponse>>,
+    id: u64,
+    tokens: Vec<u32>,
+    msg: String,
+) {
+    if let Some(tx) = responders.remove(&id) {
+        let _ = tx.send(GenerateResponse {
+            id,
+            tokens,
+            latency_us: 0,
+            error: Some(msg),
+        });
+    }
+}
+
+/// Drive a backend until shutdown: ingest, admit into lanes, tick all
+/// lanes by one token, retire finished slots with swap-remove compaction.
+fn run_engine<B: DecodeBackend>(
+    backend: &mut B,
+    cfg: &ServeConfig,
     rx: Receiver<Msg>,
     stats: Arc<Mutex<EngineStats>>,
 ) {
-    assert_eq!(
-        model.kind,
-        AttentionKind::Linear,
-        "the native engine decodes with the linear-RNN backend"
-    );
-    let mut batcher = Batcher::new(cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
-    let mut slots = SlotTable::new(cfg.max_batch);
-    let mut sessions: Vec<Option<crate::nn::DecodeSession>> =
-        (0..cfg.max_batch).map(|_| None).collect();
+    let max_batch = cfg.max_batch;
+    let mut batcher = Batcher::new(max_batch, Duration::from_micros(cfg.max_wait_us));
+    let mut slots = SlotTable::new(max_batch);
+    // lane -> slot index, mirrored against the backend's lane order
+    let mut lane_slots: Vec<usize> = Vec::with_capacity(max_batch);
     let mut responders: std::collections::HashMap<u64, Sender<GenerateResponse>> =
         std::collections::HashMap::new();
     let mut rng = Rng::new(cfg.seed);
     let mut shutdown = false;
+    let mut tokens: Vec<u32> = Vec::with_capacity(max_batch);
+    let vocab = backend.vocab();
+    let max_len = backend.max_len();
 
     while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
         // 1. ingest requests (block only when totally idle)
@@ -157,10 +219,7 @@ fn native_worker(
                     }
                 }
             } else {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => None,
-                }
+                rx.try_recv().ok()
             };
             match msg {
                 Some(Msg::Request(req, resp_tx)) => {
@@ -177,62 +236,112 @@ fn native_worker(
             }
         }
 
-        // 2. admit from the batcher into free slots
+        // 2. admit from the batcher into fresh backend lanes
         let now = Instant::now();
-        let capacity = cfg.max_batch - slots.active();
+        let capacity = max_batch - slots.active();
         for req in batcher.poll(now, capacity) {
-            let prompt = req.prompt.clone();
+            // reject prompts the decode loop cannot survive — empty (no
+            // token to feed on the first tick) or longer than the position
+            // embedding — so one bad request cannot take down the worker
+            if req.prompt.is_empty() {
+                let msg = "prompt must not be empty".to_string();
+                send_failure(&mut responders, req.id, Vec::new(), msg);
+                continue;
+            }
+            if req.prompt.len() > max_len {
+                send_failure(
+                    &mut responders,
+                    req.id,
+                    Vec::new(),
+                    format!("prompt length {} exceeds max_len {max_len}", req.prompt.len()),
+                );
+                continue;
+            }
+            let req_id = req.id;
             let idx = slots
-                .alloc(SlotInfo {
-                    request_id: req.id,
-                    started: now,
-                    prompt_left: prompt,
-                    generated: Vec::new(),
-                    max_new: req.max_new,
-                    temperature: req.temperature,
-                    pos: 0,
-                })
+                .alloc(SlotInfo::new(req_id, now, req.prompt, req.max_new, req.temperature))
                 .expect("capacity checked");
-            sessions[idx] = Some(model.session());
+            match backend.alloc_lane() {
+                Ok(lane) => {
+                    debug_assert_eq!(lane, lane_slots.len(), "lanes must stay dense");
+                    lane_slots.push(idx);
+                }
+                Err(e) => {
+                    // lane allocation failed: fail this request, keep serving
+                    let info = slots.release(idx).expect("just allocated");
+                    send_failure(
+                        &mut responders,
+                        info.request_id,
+                        info.generated,
+                        format!("admission failed: {e}"),
+                    );
+                }
+            }
         }
 
         if slots.active() == 0 {
             continue;
         }
 
-        // 3. one decode tick: advance every active slot by one token
-        let active = slots.active_indices();
+        // 3. one decode tick: every lane advances by one token, together
+        tokens.clear();
+        for &slot in &lane_slots {
+            tokens.push(slots.get(slot).expect("lane maps to live slot").next_token());
+        }
         {
             let mut st = stats.lock().unwrap();
             st.ticks += 1;
-            st.batch_occupancy_sum += active.len() as u64;
+            st.batch_occupancy_sum += lane_slots.len() as u64;
         }
-        let mut finished: Vec<usize> = Vec::new();
-        for idx in active {
-            let info = slots.get_mut(idx).unwrap();
-            let sess = sessions[idx].as_mut().unwrap();
-            let token = if !info.prompt_left.is_empty() {
-                info.prompt_left.remove(0)
-            } else {
-                *info.generated.last().unwrap()
-            };
-            let logits = sess.step(token);
+        let logits = match backend.step_batch(&tokens) {
+            Ok(l) => l,
+            Err(e) => {
+                // fail all active requests, clear every lane
+                for &slot in &lane_slots {
+                    if let Some(info) = slots.release(slot) {
+                        send_failure(
+                            &mut responders,
+                            info.request_id,
+                            info.generated,
+                            format!("decode failed: {e}"),
+                        );
+                    }
+                }
+                while backend.lanes() > 0 {
+                    backend.free_lane(backend.lanes() - 1);
+                }
+                lane_slots.clear();
+                continue;
+            }
+        };
+
+        // 4. consume logits: advance cursors, sample past the prompt
+        let mut finished_lanes: Vec<usize> = Vec::new();
+        for (lane, &slot) in lane_slots.iter().enumerate() {
+            let info = slots.get_mut(slot).unwrap();
+            if !info.prompt_done() {
+                info.cursor += 1;
+            }
             info.pos += 1;
-            if info.prompt_left.is_empty() {
-                let next = sample_logits(&logits, info.temperature, &mut rng);
+            if info.prompt_done() {
+                let row = &logits[lane * vocab..(lane + 1) * vocab];
+                let next = sample_logits(row, info.temperature, &mut rng);
                 info.generated.push(next);
                 stats.lock().unwrap().tokens_generated += 1;
-                let at_len_cap = info.pos + 1 >= model.cfg.max_len;
-                if info.generated.len() >= info.max_new || at_len_cap {
-                    finished.push(idx);
+                if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
+                    finished_lanes.push(lane);
                 }
             }
         }
 
-        // 4. complete finished slots
-        for idx in finished {
-            let info = slots.release(idx).unwrap();
-            sessions[idx] = None;
+        // 5. retire finished slots; descending lane order keeps pending
+        // swap-removes valid (each removal only disturbs higher lanes)
+        finished_lanes.sort_unstable_by_key(|&lane| std::cmp::Reverse(lane));
+        for lane in finished_lanes {
+            let slot = lane_slots[lane];
+            backend.free_lane(lane);
+            lane_slots.swap_remove(lane);
+            let info = slots.release(slot).unwrap();
             let latency = info.started.elapsed();
             {
                 let mut st = stats.lock().unwrap();
@@ -248,6 +357,39 @@ fn native_worker(
                 });
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native engine
+// ---------------------------------------------------------------------------
+
+/// Serving engine over the pure-rust batched decode path.
+pub struct NativeEngine;
+
+impl NativeEngine {
+    /// Spawn the worker; the model moves into the thread.
+    pub fn spawn(model: TransformerLM, cfg: ServeConfig) -> anyhow::Result<EngineHandle> {
+        cfg.validate()?;
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
+        let stats_w = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name("lintra-native-engine".into())
+            .spawn(move || {
+                assert_eq!(
+                    model.kind,
+                    AttentionKind::Linear,
+                    "the native engine decodes with the batched linear-RNN backend"
+                );
+                let mut backend = model.batched_session(cfg.max_batch);
+                run_engine(&mut backend, &cfg, rx, stats_w);
+            })?;
+        Ok(EngineHandle {
+            tx,
+            stats,
+            worker: Some(worker),
+        })
     }
 }
 
@@ -289,6 +431,148 @@ impl PjrtEngine {
     }
 }
 
+/// Decode lanes over a batched `*_decode_linear_b<B>` artifact: the host
+/// keeps the `[l, B, h, dh, dh]` / `[l, B, h, dh]` state blocks and the
+/// per-lane positions, compacting lane stripes on eviction exactly like
+/// the native backend compacts its rows. Inactive lanes ride along as
+/// padding (token 0, pos 0) and are re-zeroed on allocation.
+struct PjrtBackend {
+    artifact: std::rc::Rc<crate::runtime::LoadedArtifact>,
+    params: Vec<Value>,
+    mcfg: ModelConfig,
+    /// artifact batch dimension (== ServeConfig::max_batch)
+    b: usize,
+    lanes: usize,
+    l: usize,
+    h: usize,
+    dh: usize,
+    s_shape: Vec<usize>,
+    z_shape: Vec<usize>,
+    s: Vec<f32>,
+    z: Vec<f32>,
+    pos: Vec<i32>,
+    token_buf: Vec<i32>,
+}
+
+impl PjrtBackend {
+    fn new(
+        artifact: std::rc::Rc<crate::runtime::LoadedArtifact>,
+        params: Vec<Value>,
+        mcfg: ModelConfig,
+        b: usize,
+    ) -> Self {
+        let (l, h, dh) = (mcfg.n_layers, mcfg.n_heads, mcfg.d_head());
+        PjrtBackend {
+            artifact,
+            params,
+            mcfg,
+            b,
+            lanes: 0,
+            l,
+            h,
+            dh,
+            s_shape: vec![l, b, h, dh, dh],
+            z_shape: vec![l, b, h, dh],
+            s: vec![0.0; l * b * h * dh * dh],
+            z: vec![0.0; l * b * h * dh],
+            pos: vec![0; b],
+            token_buf: vec![0; b],
+        }
+    }
+
+    /// Zero one lane's stripes in (s, z).
+    fn clear_lane(&mut self, lane: usize) {
+        let (l, b, h, dh) = (self.l, self.b, self.h, self.dh);
+        for li in 0..l {
+            for hi in 0..h {
+                let base = ((li * b + lane) * h + hi) * dh * dh;
+                self.s[base..base + dh * dh].fill(0.0);
+                let zbase = ((li * b + lane) * h + hi) * dh;
+                self.z[zbase..zbase + dh].fill(0.0);
+            }
+        }
+        self.pos[lane] = 0;
+    }
+
+    /// Copy lane `src`'s stripes over lane `dst`.
+    fn copy_lane(&mut self, dst: usize, src: usize) {
+        let (l, b, h, dh) = (self.l, self.b, self.h, self.dh);
+        for li in 0..l {
+            for hi in 0..h {
+                let sb = ((li * b + src) * h + hi) * dh * dh;
+                let db = ((li * b + dst) * h + hi) * dh * dh;
+                self.s.copy_within(sb..sb + dh * dh, db);
+                let szb = ((li * b + src) * h + hi) * dh;
+                let dzb = ((li * b + dst) * h + hi) * dh;
+                self.z.copy_within(szb..szb + dh, dzb);
+            }
+        }
+        self.pos[dst] = self.pos[src];
+    }
+}
+
+impl DecodeBackend for PjrtBackend {
+    fn vocab(&self) -> usize {
+        self.mcfg.vocab
+    }
+
+    fn max_len(&self) -> usize {
+        self.mcfg.max_len
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn alloc_lane(&mut self) -> anyhow::Result<usize> {
+        if self.lanes == self.b {
+            anyhow::bail!("pjrt decode capacity {} exhausted", self.b);
+        }
+        let lane = self.lanes;
+        self.clear_lane(lane);
+        self.lanes += 1;
+        Ok(lane)
+    }
+
+    fn free_lane(&mut self, lane: usize) -> Option<usize> {
+        assert!(lane < self.lanes, "lane {lane} out of {} live lanes", self.lanes);
+        let last = self.lanes - 1;
+        self.lanes = last;
+        if lane == last {
+            self.pos[last] = 0;
+            return None;
+        }
+        self.copy_lane(lane, last);
+        self.pos[last] = 0;
+        Some(last)
+    }
+
+    fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.lanes, "one token per live lane");
+        for lane in 0..self.b {
+            self.token_buf[lane] = if lane < self.lanes {
+                tokens[lane] as i32
+            } else {
+                0 // padding lane: harmless input, state unused until re-zeroed
+            };
+        }
+        let mut inputs = self.params.clone();
+        inputs.push(Value::I32(vec![self.b], self.token_buf.clone()));
+        inputs.push(Value::I32(vec![self.b], self.pos.clone()));
+        inputs.push(Value::F32(self.s_shape.clone(), self.s.clone()));
+        inputs.push(Value::F32(self.z_shape.clone(), self.z.clone()));
+        let outputs = self.artifact.run(&inputs)?;
+        let vocab = self.mcfg.vocab;
+        let logits = outputs[0].as_f32()?;
+        self.s.copy_from_slice(outputs[1].as_f32()?);
+        self.z.copy_from_slice(outputs[2].as_f32()?);
+        for lane in 0..self.lanes {
+            self.pos[lane] += 1;
+        }
+        Ok(logits[..self.lanes * vocab].to_vec())
+    }
+}
+
 fn pjrt_worker(
     spec: PjrtEngineSpec,
     cfg: ServeConfig,
@@ -326,167 +610,8 @@ fn pjrt_worker(
             return;
         }
     };
-
-    let mcfg = &spec.model_cfg;
-    let b = cfg.max_batch;
-    let (l, h, dh) = (mcfg.n_layers, mcfg.n_heads, mcfg.d_head());
-    let s_shape = vec![l, b, h, dh, dh];
-    let z_shape = vec![l, b, h, dh];
-    let mut s = vec![0.0f32; l * b * h * dh * dh];
-    let mut z = vec![0.0f32; l * b * h * dh];
-    let mut token = vec![0i32; b];
-    let mut pos = vec![0i32; b];
-
-    let mut batcher = Batcher::new(b, Duration::from_micros(cfg.max_wait_us));
-    let mut slots = SlotTable::new(b);
-    let mut responders: std::collections::HashMap<u64, Sender<GenerateResponse>> =
-        std::collections::HashMap::new();
-    let mut rng = Rng::new(cfg.seed);
-    let mut shutdown = false;
-
-    // zero one slot's stripes in (s, z)
-    let clear_slot = |s: &mut [f32], z: &mut [f32], slot: usize| {
-        for li in 0..l {
-            for hi in 0..h {
-                let base = ((li * b + slot) * h + hi) * dh * dh;
-                s[base..base + dh * dh].fill(0.0);
-                let zbase = ((li * b + slot) * h + hi) * dh;
-                z[zbase..zbase + dh].fill(0.0);
-            }
-        }
-    };
-
-    while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
-        let idle = slots.active() == 0 && batcher.pending() == 0;
-        loop {
-            let msg = if idle && !shutdown {
-                match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(m) => Some(m),
-                    Err(RecvTimeoutError::Timeout) => None,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        shutdown = true;
-                        None
-                    }
-                }
-            } else {
-                rx.try_recv().ok()
-            };
-            match msg {
-                Some(Msg::Request(req, resp_tx)) => {
-                    responders.insert(req.id, resp_tx);
-                    stats.lock().unwrap().requests += 1;
-                    batcher.push(req, Instant::now());
-                    continue;
-                }
-                Some(Msg::Shutdown) => {
-                    shutdown = true;
-                    continue;
-                }
-                None => break,
-            }
-        }
-
-        let now = Instant::now();
-        let capacity = b - slots.active();
-        for req in batcher.poll(now, capacity) {
-            let idx = slots
-                .alloc(SlotInfo {
-                    request_id: req.id,
-                    started: now,
-                    prompt_left: req.prompt.clone(),
-                    generated: Vec::new(),
-                    max_new: req.max_new,
-                    temperature: req.temperature,
-                    pos: 0,
-                })
-                .expect("capacity checked");
-            clear_slot(&mut s, &mut z, idx);
-            pos[idx] = 0;
-        }
-
-        if slots.active() == 0 {
-            continue;
-        }
-
-        // build the tick inputs: per-slot next token
-        let active = slots.active_indices();
-        for &idx in &active {
-            let info = slots.get_mut(idx).unwrap();
-            token[idx] = if !info.prompt_left.is_empty() {
-                info.prompt_left.remove(0) as i32
-            } else {
-                *info.generated.last().unwrap() as i32
-            };
-            pos[idx] = info.pos as i32;
-        }
-        {
-            let mut st = stats.lock().unwrap();
-            st.ticks += 1;
-            st.batch_occupancy_sum += active.len() as u64;
-        }
-
-        // assemble artifact inputs: params..., token, pos, s, z
-        let mut inputs = params.clone();
-        inputs.push(Value::I32(vec![b], token.clone()));
-        inputs.push(Value::I32(vec![b], pos.clone()));
-        inputs.push(Value::F32(s_shape.clone(), s.clone()));
-        inputs.push(Value::F32(z_shape.clone(), z.clone()));
-        let outputs = match artifact.run(&inputs) {
-            Ok(o) => o,
-            Err(e) => {
-                // fail all active requests
-                for idx in active {
-                    if let Some(info) = slots.release(idx) {
-                        if let Some(tx) = responders.remove(&info.request_id) {
-                            let _ = tx.send(GenerateResponse {
-                                id: info.request_id,
-                                tokens: info.generated,
-                                latency_us: 0,
-                                error: Some(format!("decode failed: {e}")),
-                            });
-                        }
-                    }
-                }
-                continue;
-            }
-        };
-        let logits = outputs[0].as_f32().unwrap();
-        let vocab = mcfg.vocab;
-        s.copy_from_slice(outputs[1].as_f32().unwrap());
-        z.copy_from_slice(outputs[2].as_f32().unwrap());
-
-        let mut finished: Vec<usize> = Vec::new();
-        for &idx in &active {
-            let info = slots.get_mut(idx).unwrap();
-            info.pos += 1;
-            if info.prompt_left.is_empty() {
-                let row = &logits[idx * vocab..(idx + 1) * vocab];
-                let next = sample_logits(row, info.temperature, &mut rng);
-                info.generated.push(next);
-                stats.lock().unwrap().tokens_generated += 1;
-                if info.generated.len() >= info.max_new || info.pos + 1 >= mcfg.max_len {
-                    finished.push(idx);
-                }
-            }
-        }
-        for idx in finished {
-            let info = slots.release(idx).unwrap();
-            let latency = info.started.elapsed();
-            {
-                let mut st = stats.lock().unwrap();
-                st.completed += 1;
-                st.latency.record(latency);
-            }
-            if let Some(tx) = responders.remove(&info.request_id) {
-                let _ = tx.send(GenerateResponse {
-                    id: info.request_id,
-                    tokens: info.generated,
-                    latency_us: latency.as_micros() as u64,
-                    error: None,
-                });
-            }
-        }
-    }
+    let mut backend = PjrtBackend::new(artifact, params, spec.model_cfg, cfg.max_batch);
+    run_engine(&mut backend, &cfg, rx, stats);
 }
 
 #[cfg(test)]
@@ -581,6 +706,90 @@ mod tests {
             temperature: 0.0,
         });
         assert_eq!(resp.tokens, direct);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn ragged_batch_matches_direct_generation_under_churn() {
+        // Requests of very different lengths share the batch, so slots
+        // join mid-stream, finish early, and their lanes get compacted.
+        // Greedy decode must still match per-request direct generation.
+        let model = tiny_model();
+        let cases: Vec<(Vec<u32>, usize)> = vec![
+            (vec![1], 14),
+            (vec![2, 3, 4, 5, 6], 2),
+            (vec![7, 8], 9),
+            (vec![9, 10, 1, 2], 4),
+            (vec![3], 1),
+            (vec![4, 5, 6], 7),
+        ];
+        let direct: Vec<Vec<u32>> = cases
+            .iter()
+            .map(|(p, n)| model.generate(p, *n, 0.0, 0))
+            .collect();
+        let handle = NativeEngine::spawn(
+            tiny_model(),
+            ServeConfig {
+                max_batch: 3, // force waves of admission + eviction
+                max_wait_us: 1000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = cases
+            .iter()
+            .enumerate()
+            .map(|(i, (p, n))| {
+                handle.submit(GenerateRequest {
+                    id: i as u64,
+                    prompt: p.clone(),
+                    max_new: *n,
+                    temperature: 0.0,
+                })
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(
+                resp.tokens, direct[resp.id as usize],
+                "request {i} diverged from direct generation under churn"
+            );
+        }
+        let st = handle.stats();
+        assert_eq!(st.completed, 6);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_not_fatal() {
+        let model = tiny_model();
+        let max_len = model.cfg.max_len;
+        let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 1,
+            prompt: vec![1; max_len + 1],
+            max_new: 4,
+            temperature: 0.0,
+        });
+        assert!(resp.error.is_some(), "oversized prompt must be rejected");
+        assert!(resp.tokens.is_empty());
+        let empty = handle.generate_blocking(GenerateRequest {
+            id: 3,
+            prompt: vec![],
+            max_new: 4,
+            temperature: 0.0,
+        });
+        assert!(empty.error.is_some(), "empty prompt must be rejected");
+        // the worker must still be alive and serving
+        let ok = handle.generate_blocking(GenerateRequest {
+            id: 2,
+            prompt: vec![1, 2],
+            max_new: 3,
+            temperature: 0.0,
+        });
+        assert!(ok.error.is_none());
+        assert_eq!(ok.tokens.len(), 3);
         handle.shutdown();
     }
 

@@ -16,14 +16,18 @@
 //! The paper's property that makes this engine *simple* is the O(1)
 //! per-token, fixed-size recurrent state (eqs 16-20): a decode slot is
 //! just (S, Z) — no paged KV cache, no prefix eviction. Continuous
-//! batching is a gather over slot states; admission is a free-slot pop.
+//! batching keeps every slot's state as a dense row of one contiguous
+//! block ([`engine::DecodeBackend`] lanes); admission appends a zeroed
+//! row, eviction swap-removes it, and one `step_batch` advances the whole
+//! batch through `[B, ·]` GEMMs.
 //!
 //! Modules:
 //! * [`request`]  — request/response types + JSON wire codec
 //! * [`batcher`]  — pure batching policy (deadline + capacity), propchecked
 //! * [`sessions`] — slot allocator with leak-freedom invariants
-//! * [`engine`]   — the worker loop over the native model (Send-safe) and
-//!   the PJRT batched-decode loop (runtime created inside the worker)
+//! * [`engine`]   — the [`engine::DecodeBackend`] trait, the shared
+//!   continuous-batching tick loop, and its two backends (native batched
+//!   GEMM decode; PJRT batched artifact, runtime created in the worker)
 //! * [`server`]   — TCP JSON-lines front-end
 
 pub mod batcher;
@@ -32,5 +36,5 @@ pub mod request;
 pub mod server;
 pub mod sessions;
 
-pub use engine::{EngineHandle, EngineStats, NativeEngine};
+pub use engine::{DecodeBackend, EngineHandle, EngineStats, NativeEngine};
 pub use request::{GenerateRequest, GenerateResponse};

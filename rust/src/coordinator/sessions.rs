@@ -12,14 +12,54 @@ use std::time::Instant;
 pub struct SlotInfo {
     pub request_id: u64,
     pub started: Instant,
-    /// tokens of the prompt not yet consumed
-    pub prompt_left: Vec<u32>,
+    /// the full prompt; `cursor` indexes the next unconsumed token
+    /// (a cursor, not `Vec::remove(0)`, so prompt feed is O(1) per tick)
+    pub prompt: Vec<u32>,
+    /// how many prompt tokens have been fed already
+    pub cursor: usize,
     /// sampled tokens so far
     pub generated: Vec<u32>,
     pub max_new: usize,
     pub temperature: f32,
     /// absolute position of the next token to feed
     pub pos: usize,
+}
+
+impl SlotInfo {
+    /// Fresh slot state for an admitted request.
+    pub fn new(
+        request_id: u64,
+        started: Instant,
+        prompt: Vec<u32>,
+        max_new: usize,
+        temperature: f32,
+    ) -> Self {
+        SlotInfo {
+            request_id,
+            started,
+            prompt,
+            cursor: 0,
+            generated: Vec::new(),
+            max_new,
+            temperature,
+            pos: 0,
+        }
+    }
+
+    /// The token to feed on the next tick: the prompt under the cursor, or
+    /// the last sampled token once the prompt is consumed.
+    pub fn next_token(&self) -> u32 {
+        if self.cursor < self.prompt.len() {
+            self.prompt[self.cursor]
+        } else {
+            *self.generated.last().expect("past the prompt there is always a sampled token")
+        }
+    }
+
+    /// True once every prompt token has been fed.
+    pub fn prompt_done(&self) -> bool {
+        self.cursor >= self.prompt.len()
+    }
 }
 
 /// Fixed-capacity slot allocator.
@@ -87,15 +127,20 @@ mod tests {
     use super::*;
 
     fn info(id: u64) -> SlotInfo {
-        SlotInfo {
-            request_id: id,
-            started: Instant::now(),
-            prompt_left: vec![1, 2],
-            generated: Vec::new(),
-            max_new: 4,
-            temperature: 0.0,
-            pos: 0,
-        }
+        SlotInfo::new(id, Instant::now(), vec![1, 2], 4, 0.0)
+    }
+
+    #[test]
+    fn prompt_cursor_walks_then_repeats_generation() {
+        let mut s = info(1);
+        assert!(!s.prompt_done());
+        assert_eq!(s.next_token(), 1);
+        s.cursor += 1;
+        assert_eq!(s.next_token(), 2);
+        s.cursor += 1;
+        assert!(s.prompt_done());
+        s.generated.push(7);
+        assert_eq!(s.next_token(), 7);
     }
 
     #[test]

@@ -16,7 +16,9 @@ pub mod lstm;
 use crate::attention::{linear, lsh, softmax, stateful_softmax, AttentionKind};
 use crate::config::ModelConfig;
 use crate::rng::Rng;
-use crate::tensor::{gelu, layer_norm_into, vecmat_into, Tensor};
+use crate::tensor::{
+    add_bias_rows, gelu, layer_norm_into, layer_norm_rows, matmul_into, vecmat_into, Tensor,
+};
 use crate::weights::{NamedTensor, WeightBundle};
 
 /// Weights of one transformer block.
@@ -273,14 +275,27 @@ impl TransformerLM {
     // -----------------------------------------------------------------------
 
     /// Create a decode session for this model's natural backend
-    /// (linear -> RNN; softmax -> naive recompute; lsh -> recompute).
+    /// (linear -> batched RNN at B=1; softmax -> naive recompute;
+    /// lsh -> recompute).
     pub fn session(&self) -> DecodeSession<'_> {
         let backend = match self.kind {
-            AttentionKind::Linear => Backend::LinearRnn(RnnState::new(&self.cfg)),
+            AttentionKind::Linear => {
+                let mut batched = self.batched_session(1);
+                batched.alloc_row().expect("capacity 1");
+                Backend::Linear(batched)
+            }
             AttentionKind::Softmax => Backend::Recompute,
             AttentionKind::Lsh { .. } => Backend::Recompute,
         };
         DecodeSession::new(self, backend)
+    }
+
+    /// Create a batched RNN decode session with capacity for `cap` lanes
+    /// (linear models only). This is the serving engine's native backend:
+    /// one `step_batch` advances every lane by one token through single
+    /// `[B, ·]` GEMMs.
+    pub fn batched_session(&self, cap: usize) -> BatchedDecodeSession<'_> {
+        BatchedDecodeSession::new(self, cap)
     }
 
     /// Stateful-softmax session (supplementary C.1) — only for softmax models.
@@ -362,24 +377,248 @@ pub fn random_param_tensors(cfg: &ModelConfig, rng: &mut Rng) -> Vec<NamedTensor
 // decode sessions
 // ---------------------------------------------------------------------------
 
-/// Per-layer, per-head linear RNN states (eqs 16-20).
-#[derive(Clone, Debug)]
-pub struct RnnState {
-    states: Vec<linear::LinearAttnState>, // n_layers * n_heads
+/// Batched autoregressive decode over the linear-attention RNN view.
+///
+/// Holds every lane's recurrent state in structure-of-arrays layout (one
+/// [`linear::BatchedLinearAttnState`] per layer×head, each with `[B, dh,
+/// dh]` / `[B, dh]` blocks) plus `[B, ·]` activation buffers, so one
+/// [`Self::step_batch`] call advances all live lanes by one token: the
+/// embedding gather, QKV/output/FF projections, and the logits head each
+/// run as a single `[B, ·] × [·, ·]` GEMM instead of B GEMVs, and the
+/// attention update runs as three streaming batched kernels.
+///
+/// Lanes are dense rows `0..rows`. Slot churn is [`Self::alloc_row`]
+/// (append a zeroed lane) and [`Self::free_row`] (swap-remove compaction);
+/// both are O(state-per-lane) — possible only because the paper's decode
+/// state is a fixed-size matrix pair per lane (eqs 16-20).
+pub struct BatchedDecodeSession<'m> {
+    model: &'m TransformerLM,
+    cap: usize,
+    rows: usize,
+    /// n_layers * n_heads batched states, lane-for-lane in step
+    states: Vec<linear::BatchedLinearAttnState>,
+    /// absolute position of the next token, per lane
+    pos: Vec<usize>,
+    // preallocated [cap, ·] activation buffers
+    x: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    merged: Vec<f32>,
+    out2: Vec<f32>,
+    ff: Vec<f32>,
+    // per-head gather buffers, [cap, d_head]
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    oh: Vec<f32>,
 }
 
-impl RnnState {
-    fn new(cfg: &ModelConfig) -> Self {
+impl<'m> BatchedDecodeSession<'m> {
+    fn new(model: &'m TransformerLM, cap: usize) -> Self {
+        assert_eq!(
+            model.kind,
+            AttentionKind::Linear,
+            "batched RNN decode requires a linear-attention model"
+        );
+        assert!(cap >= 1);
+        let cfg = &model.cfg;
+        let e = cfg.d_model;
         let dh = cfg.d_head();
-        RnnState {
+        BatchedDecodeSession {
+            model,
+            cap,
+            rows: 0,
             states: (0..cfg.n_layers * cfg.n_heads)
-                .map(|_| linear::LinearAttnState::new(dh, dh))
+                .map(|_| linear::BatchedLinearAttnState::new(cap, dh, dh))
                 .collect(),
+            pos: Vec::with_capacity(cap),
+            x: vec![0.0; cap * e],
+            normed: vec![0.0; cap * e],
+            q: vec![0.0; cap * e],
+            k: vec![0.0; cap * e],
+            v: vec![0.0; cap * e],
+            merged: vec![0.0; cap * e],
+            out2: vec![0.0; cap * e],
+            ff: vec![0.0; cap * cfg.d_ff],
+            qh: vec![0.0; cap * dh],
+            kh: vec![0.0; cap * dh],
+            vh: vec![0.0; cap * dh],
+            oh: vec![0.0; cap * dh],
         }
     }
 
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Live lanes.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Absolute position of the next token lane `row` will consume.
+    pub fn pos(&self, row: usize) -> usize {
+        self.pos[row]
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.model.cfg.vocab
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.model.cfg.max_len
+    }
+
+    /// Append a fresh lane (zero state, position 0); `None` at capacity.
+    pub fn alloc_row(&mut self) -> Option<usize> {
+        if self.rows == self.cap {
+            return None;
+        }
+        for st in &mut self.states {
+            st.push_row().expect("states and session agree on capacity");
+        }
+        self.pos.push(0);
+        self.rows += 1;
+        Some(self.rows - 1)
+    }
+
+    /// Free lane `row`, compacting by moving the last lane into its place.
+    /// Returns the moved lane's previous index (`None` if `row` was last).
+    pub fn free_row(&mut self, row: usize) -> Option<usize> {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        let mut moved = None;
+        for st in &mut self.states {
+            moved = st.swap_remove_row(row);
+        }
+        self.pos.swap_remove(row);
+        self.rows -= 1;
+        moved
+    }
+
+    /// Bytes of recurrent decode state held for the live lanes.
     pub fn state_bytes(&self) -> usize {
         self.states.iter().map(|s| s.state_bytes()).sum()
+    }
+
+    /// Advance every live lane by one token; `tokens[r]` feeds lane r.
+    /// Returns logits `[rows * vocab]` row-major.
+    pub fn step_batch(&mut self, tokens: &[u32]) -> Vec<f32> {
+        let b = self.rows;
+        assert_eq!(tokens.len(), b, "one token per live lane");
+        let model = self.model;
+        let cfg = &model.cfg;
+        let e = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.d_head();
+        if b == 0 {
+            return Vec::new();
+        }
+        // x = tok_embed + pos_embed, gathered per lane
+        for (r, &tok) in tokens.iter().enumerate() {
+            assert!(
+                self.pos[r] < cfg.max_len,
+                "lane {r} exceeds max_len {}",
+                cfg.max_len
+            );
+            let te = model.tok_embed.row(tok as usize);
+            let pe = model.pos_embed.row(self.pos[r]);
+            let xr = &mut self.x[r * e..(r + 1) * e];
+            for j in 0..e {
+                xr[j] = te[j] + pe[j];
+            }
+        }
+        for (li, blk) in model.blocks.iter().enumerate() {
+            // ln1 -> one [B, e] x [e, e] GEMM per projection
+            layer_norm_rows(
+                &mut self.normed[..b * e],
+                &self.x[..b * e],
+                &blk.ln1_g.data,
+                &blk.ln1_b.data,
+                b,
+            );
+            matmul_into(&mut self.q[..b * e], &self.normed[..b * e], &blk.wq.data, b, e, e);
+            matmul_into(&mut self.k[..b * e], &self.normed[..b * e], &blk.wk.data, b, e, e);
+            matmul_into(&mut self.v[..b * e], &self.normed[..b * e], &blk.wv.data, b, e, e);
+            // per head: gather columns, batched RNN update, scatter back
+            for hd in 0..h {
+                let col = hd * dh;
+                for r in 0..b {
+                    self.qh[r * dh..(r + 1) * dh]
+                        .copy_from_slice(&self.q[r * e + col..r * e + col + dh]);
+                    self.kh[r * dh..(r + 1) * dh]
+                        .copy_from_slice(&self.k[r * e + col..r * e + col + dh]);
+                    self.vh[r * dh..(r + 1) * dh]
+                        .copy_from_slice(&self.v[r * e + col..r * e + col + dh]);
+                }
+                self.states[li * h + hd].step_batch(
+                    &self.qh[..b * dh],
+                    &self.kh[..b * dh],
+                    &self.vh[..b * dh],
+                    &mut self.oh[..b * dh],
+                );
+                for r in 0..b {
+                    self.merged[r * e + col..r * e + col + dh]
+                        .copy_from_slice(&self.oh[r * dh..(r + 1) * dh]);
+                }
+            }
+            matmul_into(&mut self.out2[..b * e], &self.merged[..b * e], &blk.wo.data, b, e, e);
+            for (xv, &ov) in self.x[..b * e].iter_mut().zip(&self.out2[..b * e]) {
+                *xv += ov;
+            }
+            // ff: [B, e] x [e, d_ff] and [B, d_ff] x [d_ff, e] GEMMs
+            layer_norm_rows(
+                &mut self.normed[..b * e],
+                &self.x[..b * e],
+                &blk.ln2_g.data,
+                &blk.ln2_b.data,
+                b,
+            );
+            let dff = cfg.d_ff;
+            matmul_into(
+                &mut self.ff[..b * dff],
+                &self.normed[..b * e],
+                &blk.ff_w1.data,
+                b,
+                e,
+                dff,
+            );
+            for r in 0..b {
+                for (hv, &bv) in self.ff[r * dff..(r + 1) * dff].iter_mut().zip(&blk.ff_b1.data)
+                {
+                    *hv = gelu(*hv + bv);
+                }
+            }
+            matmul_into(
+                &mut self.out2[..b * e],
+                &self.ff[..b * dff],
+                &blk.ff_w2.data,
+                b,
+                dff,
+                e,
+            );
+            for (xv, &ov) in self.x[..b * e].iter_mut().zip(&self.out2[..b * e]) {
+                *xv += ov;
+            }
+            add_bias_rows(&mut self.x[..b * e], &blk.ff_b2.data, b);
+        }
+        // final ln + one [B, e] x [e, vocab] GEMM
+        layer_norm_rows(
+            &mut self.normed[..b * e],
+            &self.x[..b * e],
+            &model.final_ln_g.data,
+            &model.final_ln_b.data,
+            b,
+        );
+        let vocab = cfg.vocab;
+        let mut logits = vec![0.0f32; b * vocab];
+        matmul_into(&mut logits, &self.normed[..b * e], &model.head_w.data, b, e, vocab);
+        add_bias_rows(&mut logits, &model.head_b.data, b);
+        for p in self.pos.iter_mut() {
+            *p += 1;
+        }
+        logits
     }
 }
 
@@ -404,9 +643,10 @@ impl KvState {
     }
 }
 
-enum Backend {
-    /// O(1)/token — the paper's contribution.
-    LinearRnn(RnnState),
+enum Backend<'m> {
+    /// O(1)/token — the paper's contribution, as the B=1 case of the
+    /// batched RNN decode path (one code path for serving and sessions).
+    Linear(BatchedDecodeSession<'m>),
     /// O(t)/token — stateful softmax (supplementary C.1).
     KvCache(KvState),
     /// O(t²)/token — rerun the full forward each step (vanilla softmax /
@@ -417,7 +657,7 @@ enum Backend {
 /// A generation session over a model.
 pub struct DecodeSession<'m> {
     model: &'m TransformerLM,
-    backend: Backend,
+    backend: Backend<'m>,
     /// Tokens consumed so far (needed by the recompute backend and for
     /// position indexing everywhere).
     pub history: Vec<u32>,
@@ -433,7 +673,7 @@ pub struct DecodeSession<'m> {
 }
 
 impl<'m> DecodeSession<'m> {
-    fn new(model: &'m TransformerLM, backend: Backend) -> Self {
+    fn new(model: &'m TransformerLM, backend: Backend<'m>) -> Self {
         let e = model.cfg.d_model;
         DecodeSession {
             model,
@@ -453,7 +693,7 @@ impl<'m> DecodeSession<'m> {
     /// Bytes of decode state held right now (Table 4's memory story).
     pub fn state_bytes(&self) -> usize {
         match &self.backend {
-            Backend::LinearRnn(s) => s.state_bytes(),
+            Backend::Linear(s) => s.state_bytes(),
             Backend::KvCache(c) => c.state_bytes(),
             Backend::Recompute => self.history.len() * 4,
         }
@@ -474,7 +714,8 @@ impl<'m> DecodeSession<'m> {
                 let (n, v) = logits.dims2();
                 logits.data[(n - 1) * v..].to_vec()
             }
-            _ => self.step_incremental(token, pos),
+            Backend::Linear(batched) => batched.step_batch(&[token]),
+            Backend::KvCache(_) => self.step_incremental(token, pos),
         }
     }
 
@@ -501,9 +742,9 @@ impl<'m> DecodeSession<'m> {
                 let v = &self.vrow[col..col + dh];
                 let o = &mut self.orow[col..col + dh];
                 match &mut self.backend {
-                    Backend::LinearRnn(st) => st.states[li * h + hd].step(q, k, v, o),
                     Backend::KvCache(st) => st.caches[li * h + hd].step(q, k, v, o),
-                    Backend::Recompute => unreachable!(),
+                    // linear decode goes through BatchedDecodeSession::step_batch
+                    Backend::Linear(_) | Backend::Recompute => unreachable!(),
                 }
             }
             vecmat_into(&mut self.out2, &self.orow, &blk.wo.data, e, e);
@@ -620,6 +861,87 @@ mod tests {
             for (a, b) in logits.iter().zip(full.row(i)) {
                 assert!((a - b).abs() < 2e-3, "divergence at position {i}");
             }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_forward_per_lane() {
+        // three lanes with different token streams, one step_batch per tick
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 21);
+        let streams: Vec<Vec<u32>> =
+            (0..3).map(|s| tokens(12, cfg.vocab, 100 + s as u64)).collect();
+        let fulls: Vec<Tensor> = streams.iter().map(|t| m.forward(t)).collect();
+        let mut sess = m.batched_session(3);
+        for _ in 0..3 {
+            sess.alloc_row().unwrap();
+        }
+        for i in 0..12 {
+            let tick: Vec<u32> = streams.iter().map(|t| t[i]).collect();
+            let logits = sess.step_batch(&tick);
+            for (lane, full) in fulls.iter().enumerate() {
+                for (a, b) in logits[lane * cfg.vocab..(lane + 1) * cfg.vocab]
+                    .iter()
+                    .zip(full.row(i))
+                {
+                    assert!((a - b).abs() < 2e-3, "lane {lane} diverged at position {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_survives_slot_churn() {
+        // lane joins late, another finishes early and is compacted away
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 22);
+        let s0 = tokens(10, cfg.vocab, 200);
+        let s1 = tokens(4, cfg.vocab, 201);
+        let s2 = tokens(6, cfg.vocab, 202);
+        let f0 = m.forward(&s0);
+        let f2 = m.forward(&s2);
+        let mut sess = m.batched_session(3);
+        sess.alloc_row().unwrap(); // lane 0 <- s0
+        sess.alloc_row().unwrap(); // lane 1 <- s1
+        // ticks 0..4: both s0 and s1 active
+        for i in 0..4 {
+            let logits = sess.step_batch(&[s0[i], s1[i]]);
+            for (a, b) in logits[..cfg.vocab].iter().zip(f0.row(i)) {
+                assert!((a - b).abs() < 2e-3, "s0 diverged at {i}");
+            }
+        }
+        // s1 finishes: free lane 1 (it was last, nothing moves)
+        assert_eq!(sess.free_row(1), None);
+        // s2 joins at tick 4 in a fresh lane
+        assert_eq!(sess.alloc_row(), Some(1));
+        for i in 0..6 {
+            let logits = sess.step_batch(&[s0[4 + i], s2[i]]);
+            for (a, b) in logits[..cfg.vocab].iter().zip(f0.row(4 + i)) {
+                assert!((a - b).abs() < 2e-3, "s0 diverged at {} after churn", 4 + i);
+            }
+            for (a, b) in logits[cfg.vocab..].iter().zip(f2.row(i)) {
+                assert!((a - b).abs() < 2e-3, "late-joining s2 diverged at {i}");
+            }
+        }
+        // s0 finishes first now: freeing lane 0 moves lane 1 (s2) into row 0
+        assert_eq!(sess.free_row(0), Some(1));
+        assert_eq!(sess.rows(), 1);
+        assert_eq!(sess.pos(0), 6, "moved lane kept its position");
+    }
+
+    #[test]
+    fn single_slot_session_is_thin_wrapper_over_batched() {
+        // DecodeSession (linear) and a 1-lane batched session must agree bitwise
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 23);
+        let t = tokens(10, cfg.vocab, 300);
+        let mut single = m.session();
+        let mut batched = m.batched_session(1);
+        batched.alloc_row().unwrap();
+        for &tok in &t {
+            let a = single.step(tok);
+            let b = batched.step_batch(&[tok]);
+            assert_eq!(a, b);
         }
     }
 

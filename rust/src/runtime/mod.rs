@@ -7,16 +7,27 @@
 //! HLO *text* is the interchange format — the image's xla_extension 0.5.1
 //! rejects jax>=0.5 serialized protos (64-bit instruction ids); the text
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! The `xla` bindings are only available in environments that bake them
+//! in, so everything touching them is gated behind the `pjrt` cargo
+//! feature. Without it the same API compiles, [`Runtime::open`] returns a
+//! descriptive error, and every PJRT-dependent test/bench skips at runtime.
 
 pub mod bundle;
 
 pub use bundle::{ArtifactSpec, Bundle, Dtype, ModelSpec, TensorSpec};
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
-use anyhow::{bail, Context};
+use anyhow::bail;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::tensor::Tensor;
 
@@ -88,7 +99,10 @@ impl Value {
             Value::I32(..) => bail!("cannot view i32 value as Tensor"),
         }
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl Value {
     fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
             Value::F32(shape, data) => (
@@ -115,6 +129,7 @@ impl Value {
 }
 
 /// A compiled artifact, ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct LoadedArtifact {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
@@ -123,6 +138,7 @@ pub struct LoadedArtifact {
     pub exec_count: std::cell::Cell<u64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedArtifact {
     /// Execute with shape/dtype validation against the manifest.
     pub fn run(&self, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
@@ -185,6 +201,7 @@ impl LoadedArtifact {
 }
 
 /// The PJRT runtime: client + manifest + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub bundle: Bundle,
     dir: PathBuf,
@@ -192,6 +209,7 @@ pub struct Runtime {
     cache: HashMap<String, std::rc::Rc<LoadedArtifact>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (reads manifest.json, creates the CPU
     /// PJRT client; compilation happens lazily per artifact).
@@ -251,6 +269,69 @@ impl Runtime {
             .model(model)
             .with_context(|| format!("model {model:?} not in manifest"))?;
         crate::weights::WeightBundle::load(self.dir.join(&spec.weights))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// no-pjrt stubs: same API, runtime errors instead of XLA execution
+// ---------------------------------------------------------------------------
+
+/// Stub of the compiled artifact when built without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    pub exec_time: std::cell::Cell<std::time::Duration>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedArtifact {
+    pub fn run(&self, _inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        bail!(
+            "cannot execute artifact {:?}: built without the `pjrt` feature",
+            self.spec.name
+        )
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.spec.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.spec.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// Stub runtime when built without the `pjrt` feature: [`Runtime::open`]
+/// always fails, so PJRT-dependent callers degrade with a clear error
+/// while the native decode paths stay fully functional.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub bundle: Bundle,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        bail!(
+            "cannot open artifact dir {}: this build has no PJRT support \
+             (rebuild with --features pjrt and the xla bindings); the native \
+             engine and all pure-rust paths remain available",
+            dir.as_ref().display()
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".into()
+    }
+
+    pub fn load(&mut self, name: &str) -> anyhow::Result<std::rc::Rc<LoadedArtifact>> {
+        bail!("cannot load artifact {name:?}: built without the `pjrt` feature")
+    }
+
+    pub fn load_weights(&self, model: &str) -> anyhow::Result<crate::weights::WeightBundle> {
+        bail!("cannot load weights for {model:?}: built without the `pjrt` feature")
     }
 }
 

@@ -184,6 +184,80 @@ pub fn vecmat_into(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// batched decode kernels (structure-of-arrays over B independent lanes)
+// ---------------------------------------------------------------------------
+
+/// Batched outer-product accumulate: `s[r] += k[r] ⊗ v[r]` for every lane.
+///
+/// `s: [b, d, m]`, `k: [b, d]`, `v: [b, m]` — eq. 18 of the paper applied
+/// to all B decode lanes in one sweep over contiguous memory.
+pub fn batched_outer_acc(s: &mut [f32], k: &[f32], v: &[f32], b: usize, d: usize, m: usize) {
+    assert_eq!(s.len(), b * d * m);
+    assert_eq!(k.len(), b * d);
+    assert_eq!(v.len(), b * m);
+    for r in 0..b {
+        let kr = &k[r * d..(r + 1) * d];
+        let vr = &v[r * m..(r + 1) * m];
+        let sr = &mut s[r * d * m..(r + 1) * d * m];
+        for (t, &kt) in kr.iter().enumerate() {
+            if kt != 0.0 {
+                axpy(&mut sr[t * m..(t + 1) * m], kt, vr);
+            }
+        }
+    }
+}
+
+/// Batched per-lane contraction: `out[r] = q[r]^T · s[r]` for every lane.
+///
+/// `out: [b, m]`, `q: [b, d]`, `s: [b, d, m]` — the numerator of eq. 20
+/// for all B decode lanes.
+pub fn batched_contract(out: &mut [f32], q: &[f32], s: &[f32], b: usize, d: usize, m: usize) {
+    assert_eq!(out.len(), b * m);
+    assert_eq!(q.len(), b * d);
+    assert_eq!(s.len(), b * d * m);
+    for r in 0..b {
+        let qr = &q[r * d..(r + 1) * d];
+        let sr = &s[r * d * m..(r + 1) * d * m];
+        let or = &mut out[r * m..(r + 1) * m];
+        or.fill(0.0);
+        for (t, &qt) in qr.iter().enumerate() {
+            if qt != 0.0 {
+                axpy(or, qt, &sr[t * m..(t + 1) * m]);
+            }
+        }
+    }
+}
+
+/// Row-wise phi: `dst = elu(src) + 1` over a `[b, d]` block.
+pub fn elu_plus_one_map(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (o, &x) in dst.iter_mut().zip(src) {
+        *o = elu_plus_one(x);
+    }
+}
+
+/// Layer norm over the last axis of every row of a `[b, n]` block.
+pub fn layer_norm_rows(out: &mut [f32], x: &[f32], gamma: &[f32], beta: &[f32], b: usize) {
+    let n = gamma.len();
+    assert_eq!(out.len(), b * n);
+    assert_eq!(x.len(), b * n);
+    for r in 0..b {
+        layer_norm_into(&mut out[r * n..(r + 1) * n], &x[r * n..(r + 1) * n], gamma, beta);
+    }
+}
+
+/// Add a bias vector to every row of a `[b, n]` block.
+pub fn add_bias_rows(x: &mut [f32], bias: &[f32], b: usize) {
+    let n = bias.len();
+    assert_eq!(x.len(), b * n);
+    for r in 0..b {
+        for (xv, &bv) in x[r * n..(r + 1) * n].iter_mut().zip(bias) {
+            *xv += bv;
+        }
+    }
+}
+
 /// dot product.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -377,6 +451,77 @@ mod tests {
         assert_eq!(t.row(1), &[4., 5., 6.]);
         let r = t.clone().reshape(&[3, 2]);
         assert_eq!(r.row(2), &[5., 6.]);
+    }
+
+    #[test]
+    fn batched_outer_acc_matches_per_lane_loops() {
+        let (b, d, m) = (3, 4, 5);
+        let mut rng = Rng::new(7);
+        let k = rng.normal_vec(b * d, 1.0);
+        let v = rng.normal_vec(b * m, 1.0);
+        let mut s = rng.normal_vec(b * d * m, 1.0);
+        let mut expect = s.clone();
+        for r in 0..b {
+            for t in 0..d {
+                for e in 0..m {
+                    expect[(r * d + t) * m + e] += k[r * d + t] * v[r * m + e];
+                }
+            }
+        }
+        batched_outer_acc(&mut s, &k, &v, b, d, m);
+        for (a, x) in s.iter().zip(&expect) {
+            assert!((a - x).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batched_contract_matches_per_lane_vecmat() {
+        let (b, d, m) = (3, 4, 5);
+        let mut rng = Rng::new(8);
+        let q = rng.normal_vec(b * d, 1.0);
+        let s = rng.normal_vec(b * d * m, 1.0);
+        let mut out = vec![0.0; b * m];
+        batched_contract(&mut out, &q, &s, b, d, m);
+        for r in 0..b {
+            let mut expect = vec![0.0; m];
+            let (qr, sr) = (&q[r * d..(r + 1) * d], &s[r * d * m..(r + 1) * d * m]);
+            vecmat_into(&mut expect, qr, sr, d, m);
+            for e in 0..m {
+                assert!((out[r * m + e] - expect[e]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn row_helpers_match_scalar_paths() {
+        let (b, n) = (3, 4);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(b * n, 1.0);
+        let gamma = rng.normal_vec(n, 1.0);
+        let beta = rng.normal_vec(n, 1.0);
+        let mut rows = vec![0.0; b * n];
+        layer_norm_rows(&mut rows, &x, &gamma, &beta, b);
+        for r in 0..b {
+            let mut one = vec![0.0; n];
+            layer_norm_into(&mut one, &x[r * n..(r + 1) * n], &gamma, &beta);
+            for e in 0..n {
+                assert!((rows[r * n + e] - one[e]).abs() < 1e-6);
+            }
+        }
+
+        let mut mapped = vec![0.0; b * n];
+        elu_plus_one_map(&mut mapped, &x);
+        for (o, &v) in mapped.iter().zip(&x) {
+            assert_eq!(*o, elu_plus_one(v));
+        }
+
+        let mut biased = x.clone();
+        add_bias_rows(&mut biased, &beta, b);
+        for r in 0..b {
+            for e in 0..n {
+                assert!((biased[r * n + e] - (x[r * n + e] + beta[e])).abs() < 1e-6);
+            }
+        }
     }
 
     #[test]

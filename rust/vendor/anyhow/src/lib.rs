@@ -1,0 +1,165 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! provides the subset of anyhow's API the workspace uses: [`Error`] (a
+//! context-chaining string error), [`Result`], the [`Context`] extension
+//! trait for `Result` and `Option`, and the `anyhow!` / `bail!` macros.
+//! Error text formatting matches anyhow's conventions: `{}` prints the
+//! outermost message, `{:#}` the full `outer: cause: cause` chain, and
+//! `{:?}` the message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// A string error with an ordered chain of underlying causes.
+pub struct Error {
+    msg: String,
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            causes: Vec::new(),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.msg);
+        causes.extend(self.causes);
+        Error {
+            msg: c.to_string(),
+            causes,
+        }
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(|s| s.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let msg = e.to_string();
+        let mut causes = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg, causes }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading weights")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading weights");
+        assert_eq!(format!("{e:#}"), "reading weights: disk on fire");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(format!("{e}"), "bad 7");
+        fn bails() -> Result<()> {
+            bail!("nope");
+        }
+        assert!(bails().is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
