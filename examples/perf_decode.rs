@@ -1,12 +1,15 @@
 //! Decode throughput: batched structure-of-arrays decode vs the per-slot
-//! scalar loop, at B ∈ {1, 4, 16, 64}.
+//! scalar loop, at B ∈ {1, 4, 16, 64} — plus time-to-first-token for a
+//! long prompt, per-tick walk vs chunked prefill.
 //!
 //! The per-slot loop is what the seed engine did (B independent
 //! `DecodeSession`s advanced one at a time — B GEMVs per projection); the
 //! batched path is one `BatchedDecodeSession` advancing all lanes through
 //! single `[B, ·]` GEMMs. Every weight matrix is read once per tick
 //! instead of B times, which is the whole game on a weight-bandwidth-bound
-//! decode. Emits machine-readable `BENCH_decode.json`.
+//! decode. The TTFT section ingests a 512-token prompt both ways: one
+//! engine tick per token (lm-head every tick) vs `prefill_row` (chunked
+//! GEMMs, lm-head once). Emits machine-readable `BENCH_decode.json`.
 //!
 //! Run: cargo run --release --example perf_decode -- [steps]
 
@@ -77,10 +80,52 @@ fn main() {
         ));
     }
 
+    // --- time-to-first-token: per-tick prompt walk vs chunked prefill ---
+    let prompt_len = 512.min(cfg.max_len - 1);
+    let prompt: Vec<u32> = (0..prompt_len).map(|i| (i % cfg.vocab) as u32).collect();
+
+    let mut per_tick = model.batched_session(1);
+    per_tick.alloc_row().expect("capacity");
+    let t0 = std::time::Instant::now();
+    let mut tick_logits = Vec::new();
+    for &t in &prompt {
+        tick_logits = per_tick.step_batch(&[t]);
+    }
+    let per_tick_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut prefilled = model.batched_session(1);
+    prefilled.alloc_row().expect("capacity");
+    let t0 = std::time::Instant::now();
+    let prefill_logits = prefilled.prefill_row(0, &prompt);
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // the two ingestion paths must agree on the first sampled token
+    let tick_tok = linear_transformer::sampling::argmax(&tick_logits);
+    let prefill_tok = linear_transformer::sampling::argmax(&prefill_logits);
+    assert_eq!(
+        tick_tok, prefill_tok,
+        "prefill must reproduce the per-tick first token"
+    );
+
+    let ttft_speedup = per_tick_ms / prefill_ms;
+    println!(
+        "\nTTFT, {prompt_len}-token prompt: per-tick {per_tick_ms:.1} ms, \
+         prefill {prefill_ms:.1} ms ({ttft_speedup:.2}x)"
+    );
+
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
         ("steps_per_lane", Json::Num(steps as f64)),
         ("results", Json::Arr(rows)),
+        (
+            "ttft",
+            obj(vec![
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("per_tick_ms", Json::Num(per_tick_ms)),
+                ("prefill_ms", Json::Num(prefill_ms)),
+                ("speedup", Json::Num(ttft_speedup)),
+            ]),
+        ),
     ]);
     match std::fs::write("BENCH_decode.json", report.to_string()) {
         Ok(()) => println!("[json] BENCH_decode.json"),

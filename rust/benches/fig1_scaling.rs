@@ -60,7 +60,10 @@ fn main() {
                 n.to_string(),
                 "OOB (budget)".into(),
                 "-".into(),
-                fmt_bytes(cost_fwd_bwd(AttentionKind::Softmax, n as u64, D as u64, M as u64).peak_bytes() as usize),
+                fmt_bytes(
+                    cost_fwd_bwd(AttentionKind::Softmax, n as u64, D as u64, M as u64)
+                        .peak_bytes() as usize,
+                ),
             ]);
         }
 

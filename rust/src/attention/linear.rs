@@ -16,6 +16,11 @@
 //!   serving engine (see `coordinator::engine`); because every lane is a
 //!   fixed-size row pair, slot churn is plain row insert (`push_row`) and
 //!   swap-remove compaction (`swap_remove_row`) — no cache planning.
+//!   Prompt ingestion goes through `prefill_row`: one call absorbs a whole
+//!   chunk of tokens into a lane's cumulative (S, Z) — bit-identical to
+//!   ticking the chunk token-by-token, but lets the layers above batch
+//!   their projections over the chunk and skip the lm-head until the
+//!   final prompt position.
 //!
 //! Inputs q, k are *raw* (un-mapped); phi(x) = elu(x)+1 is applied
 //! internally, matching the python wrappers.
@@ -284,6 +289,29 @@ impl LinearAttnState {
         (self.s.len() + self.z.len()) * 4
     }
 
+    /// Absorb a chunk of `n` tokens into the state through the causal
+    /// cumulative recurrence (the prefill path). `q, k: [n, d]`,
+    /// `v, out: [n, m]`; `out` receives every position's attention output.
+    ///
+    /// Equivalent to `n` calls of [`Self::step`] — bit-for-bit, because it
+    /// replays the same per-token update order — but callable once per
+    /// prompt chunk so the layers above can batch their projections.
+    pub fn prefill(&mut self, q: &[f32], k: &[f32], v: &[f32], n: usize, out: &mut [f32]) {
+        let (d, m) = (self.d, self.m);
+        assert_eq!(q.len(), n * d);
+        assert_eq!(k.len(), n * d);
+        assert_eq!(v.len(), n * m);
+        assert_eq!(out.len(), n * m);
+        for i in 0..n {
+            self.step(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * m..(i + 1) * m],
+                &mut out[i * m..(i + 1) * m],
+            );
+        }
+    }
+
     /// One decode step with raw (un-mapped) q, k, v; writes `out` [m].
     pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
         debug_assert_eq!(q.len(), self.d);
@@ -406,6 +434,63 @@ impl BatchedLinearAttnState {
         self.rows * (self.d * self.m + self.d) * 4
     }
 
+    /// Absorb a chunk of `n` tokens into lane `r`'s state through the
+    /// causal cumulative recurrence — the prefill path. `q, k: [n, d]`,
+    /// `v, out: [n, m]`; `out` receives the chunk's attention outputs.
+    ///
+    /// One call ingests one chunk; the carried (S, Z) makes successive
+    /// calls (and a following [`Self::step_batch`] decode) continue the
+    /// same sequence. The per-token update replays exactly the float-op
+    /// order of `step_batch`'s per-lane slice, so prefilling a prompt is
+    /// bit-identical to feeding it one tick at a time.
+    pub fn prefill_row(
+        &mut self,
+        r: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let (d, m) = (self.d, self.m);
+        assert_eq!(q.len(), n * d);
+        assert_eq!(k.len(), n * d);
+        assert_eq!(v.len(), n * m);
+        assert_eq!(out.len(), n * m);
+        let s = &mut self.s[r * d * m..(r + 1) * d * m];
+        let z = &mut self.z[r * d..(r + 1) * d];
+        let qb = &mut self.qbuf[..d];
+        let kb = &mut self.kbuf[..d];
+        for i in 0..n {
+            elu_plus_one_map(qb, &q[i * d..(i + 1) * d]);
+            elu_plus_one_map(kb, &k[i * d..(i + 1) * d]);
+            let vi = &v[i * m..(i + 1) * m];
+            // S += phi(k_i) v_i^T ; Z += phi(k_i)   (eqs 18, 19)
+            for (t, &kt) in kb.iter().enumerate() {
+                if kt != 0.0 {
+                    axpy(&mut s[t * m..(t + 1) * m], kt, vi);
+                }
+            }
+            for (zv, &kt) in z.iter_mut().zip(kb.iter()) {
+                *zv += kt;
+            }
+            // out_i = (phi(q_i)^T S) / (phi(q_i) . Z + eps)   (eq. 20)
+            let orow = &mut out[i * m..(i + 1) * m];
+            orow.fill(0.0);
+            for (t, &qt) in qb.iter().enumerate() {
+                if qt != 0.0 {
+                    axpy(orow, qt, &s[t * m..(t + 1) * m]);
+                }
+            }
+            let den = dot(qb, z) + EPS;
+            let inv = 1.0 / den;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+
     /// One decode step for every live lane with raw (un-mapped) inputs.
     /// `q, k: [rows, d]`, `v, out: [rows, m]`.
     pub fn step_batch(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
@@ -460,7 +545,12 @@ mod tests {
         let mut state = LinearAttnState::new(d, m);
         let mut step_out = vec![0.0; m];
         for i in 0..n {
-            state.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * m..(i + 1) * m], &mut step_out);
+            state.step(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * m..(i + 1) * m],
+                &mut step_out,
+            );
             for e in 0..m {
                 let p = parallel[i * m + e];
                 assert!(
@@ -652,6 +742,77 @@ mod tests {
         let (s, z) = batched.lane(r);
         assert!(s.iter().all(|&x| x == 0.0) && z.iter().all(|&x| x == 0.0));
         assert!(batched.push_row().is_none(), "capacity enforced");
+    }
+
+    #[test]
+    fn scalar_prefill_is_bitwise_stepwise() {
+        let (n, d, m) = (13, 8, 8);
+        let mut rng = Rng::new(20);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let mut stepped = LinearAttnState::new(d, m);
+        let mut expect = vec![0.0; n * m];
+        for i in 0..n {
+            stepped.step(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * m..(i + 1) * m],
+                &mut expect[i * m..(i + 1) * m],
+            );
+        }
+        let mut prefilled = LinearAttnState::new(d, m);
+        let mut out = vec![0.0; n * m];
+        prefilled.prefill(&q, &k, &v, n, &mut out);
+        assert_eq!(out, expect, "prefill outputs must be bit-identical to stepping");
+        assert_eq!(prefilled.s, stepped.s, "prefill S must be bit-identical");
+        assert_eq!(prefilled.z, stepped.z, "prefill Z must be bit-identical");
+    }
+
+    #[test]
+    fn batched_prefill_row_is_bitwise_stepwise_and_carries_state() {
+        // prefill two chunks into lane 1 of a 3-lane state, then keep
+        // decoding with step_batch; a scalar reference fed token-by-token
+        // must agree bit-for-bit at every point
+        let (d, m, b) = (8, 8, 3);
+        let mut rng = Rng::new(21);
+        let mut batched = BatchedLinearAttnState::new(b, d, m);
+        for _ in 0..b {
+            batched.push_row();
+        }
+        let mut reference = LinearAttnState::new(d, m);
+        let mut ref_out = vec![0.0; m];
+        for chunk_len in [5usize, 3] {
+            let q = rand(chunk_len * d, &mut rng);
+            let k = rand(chunk_len * d, &mut rng);
+            let v = rand(chunk_len * m, &mut rng);
+            let mut out = vec![0.0; chunk_len * m];
+            batched.prefill_row(1, &q, &k, &v, chunk_len, &mut out);
+            for i in 0..chunk_len {
+                reference.step(
+                    &q[i * d..(i + 1) * d],
+                    &k[i * d..(i + 1) * d],
+                    &v[i * m..(i + 1) * m],
+                    &mut ref_out,
+                );
+                assert_eq!(
+                    &out[i * m..(i + 1) * m],
+                    &ref_out[..],
+                    "chunk position {i} diverged from stepwise ingestion"
+                );
+            }
+        }
+        let (s1, z1) = batched.lane(1);
+        assert_eq!(s1, &reference.s[..], "lane S must match stepwise state");
+        assert_eq!(z1, &reference.z[..], "lane Z must match stepwise state");
+        // the prefilled lane keeps decoding in lockstep with the reference
+        let mut out_b = vec![0.0; b * m];
+        for _ in 0..4 {
+            let q = rand(b * d, &mut rng);
+            let k = rand(b * d, &mut rng);
+            let v = rand(b * m, &mut rng);
+            batched.step_batch(&q, &k, &v, &mut out_b);
+            reference.step(&q[d..2 * d], &k[d..2 * d], &v[m..2 * m], &mut ref_out);
+            assert_eq!(&out_b[m..2 * m], &ref_out[..], "decode after prefill diverged");
+        }
     }
 
     #[test]

@@ -302,7 +302,11 @@ pub fn forward_backward(
                     crate::tensor::axpy(&mut dv[j * m..(j + 1) * m], w * gscale, gi);
                     let dl = w * (dlog[idx] - wd) * scale * gscale;
                     if dl != 0.0 {
-                        crate::tensor::axpy(&mut dq[i * d..(i + 1) * d], dl, &k[j * d..(j + 1) * d]);
+                        crate::tensor::axpy(
+                            &mut dq[i * d..(i + 1) * d],
+                            dl,
+                            &k[j * d..(j + 1) * d],
+                        );
                         crate::tensor::axpy(&mut dk[j * d..(j + 1) * d], dl, qi);
                     }
                 }

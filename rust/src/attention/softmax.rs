@@ -138,7 +138,11 @@ mod tests {
     fn causality_perturbation() {
         let (n, d, m) = (12, 4, 4);
         let mut rng = Rng::new(2);
-        let (q, mut k, mut v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let (q, mut k, mut v) = (
+            rand(n * d, &mut rng),
+            rand(n * d, &mut rng),
+            rand(n * m, &mut rng),
+        );
         let mut base = vec![0.0; n * m];
         forward(&q, &k, &v, n, d, m, true, &mut base);
         // perturb the last position

@@ -86,7 +86,12 @@ mod tests {
         let mut cache = KvCache::new(d, m, n);
         let mut out = vec![0.0; m];
         for i in 0..n {
-            cache.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * m..(i + 1) * m], &mut out);
+            cache.step(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * m..(i + 1) * m],
+                &mut out,
+            );
             for e in 0..m {
                 assert!(
                     (full[i * m + e] - out[e]).abs() < 1e-4,

@@ -129,7 +129,8 @@ mod tests {
 
     #[test]
     fn conservation_and_fifo_property() {
-        crate::propcheck::check("batcher-conservation-fifo", crate::propcheck::default_cases(), |g| {
+        let cases = crate::propcheck::default_cases();
+        crate::propcheck::check("batcher-conservation-fifo", cases, |g| {
             let max_batch = g.usize_in(1, 8);
             let max_wait = Duration::from_millis(g.usize_in(0, 50) as u64);
             let mut b = Batcher::new(max_batch, max_wait);

@@ -9,6 +9,18 @@
 //! cache, no prefix planning, and the whole batch stays contiguous so the
 //! per-tick work is a handful of `[B, ·]` GEMMs.
 //!
+//! Prompt ingestion is a separate *prefill* phase when the backend
+//! supports it ([`DecodeBackend::prefill`]): at admission the whole
+//! prompt is absorbed into the lane's cumulative state in fixed-size
+//! chunks — the paper's recurrence needs no per-token logits, so the
+//! vocab-sized lm-head runs only for the final prompt position, and the
+//! first generated token is sampled right there. A prompt therefore
+//! costs O(prompt_len / chunk) GEMM blocks instead of `prompt_len` ticks
+//! of the shared loop, which is what makes long-prompt traffic servable
+//! (time-to-first-token no longer scales with the engine tick rate).
+//! Backends without the path (PJRT today) fall back to the per-tick
+//! cursor walk.
+//!
 //! Two backends implement the trait:
 //!
 //! * the **native** backend — [`crate::nn::BatchedDecodeSession`], the
@@ -114,6 +126,11 @@ impl Drop for EngineHandle {
 /// each one request's O(1) recurrent decode state, advanced one token per
 /// call. Implementations keep lanes contiguous; the engine mirrors the
 /// lane order in its own slot map and relies on swap-remove semantics.
+///
+/// A backend may additionally offer a *prefill* path: whole-prompt
+/// ingestion into one lane at admission time ([`Self::prefill`]), so a
+/// prompt costs O(prompt_len / chunk) GEMM blocks instead of occupying a
+/// decode lane for `prompt_len` ticks of the shared loop.
 pub trait DecodeBackend {
     /// Vocabulary size of the logits rows.
     fn vocab(&self) -> usize;
@@ -134,6 +151,21 @@ pub trait DecodeBackend {
     /// Advance every live lane by one token (`tokens[r]` feeds lane r).
     /// Returns logits `[lanes * vocab]` row-major.
     fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>>;
+
+    /// True if [`Self::prefill`] ingests prompts at admission.
+    fn supports_prefill(&self) -> bool {
+        false
+    }
+
+    /// Ingest `prompt` into lane `lane`'s state in one call, returning
+    /// the logits of the final prompt position (`[vocab]`). Only invoked
+    /// when [`Self::supports_prefill`] reports true; the default is a
+    /// hard error so backends without the path fall back to per-tick
+    /// prompt feeding in the engine.
+    fn prefill(&mut self, lane: usize, prompt: &[u32]) -> anyhow::Result<Vec<f32>> {
+        let _ = (lane, prompt);
+        anyhow::bail!("this backend has no prefill path")
+    }
 }
 
 impl DecodeBackend for BatchedDecodeSession<'_> {
@@ -161,6 +193,14 @@ impl DecodeBackend for BatchedDecodeSession<'_> {
     fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
         Ok(BatchedDecodeSession::step_batch(self, tokens))
     }
+
+    fn supports_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill(&mut self, lane: usize, prompt: &[u32]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.prefill_row(lane, prompt))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -179,13 +219,15 @@ fn send_failure(
             id,
             tokens,
             latency_us: 0,
+            truncated: false,
             error: Some(msg),
         });
     }
 }
 
-/// Drive a backend until shutdown: ingest, admit into lanes, tick all
-/// lanes by one token, retire finished slots with swap-remove compaction.
+/// Drive a backend until shutdown: ingest, admit into lanes (prefilling
+/// whole prompts when the backend supports it), tick all lanes by one
+/// token, retire finished slots with swap-remove compaction.
 fn run_engine<B: DecodeBackend>(
     backend: &mut B,
     cfg: &ServeConfig,
@@ -236,7 +278,8 @@ fn run_engine<B: DecodeBackend>(
             }
         }
 
-        // 2. admit from the batcher into fresh backend lanes
+        // 2. admit from the batcher into fresh backend lanes; prompts are
+        // prefilled in one call when the backend has the path
         let now = Instant::now();
         let capacity = max_batch - slots.active();
         for req in batcher.poll(now, capacity) {
@@ -257,15 +300,27 @@ fn run_engine<B: DecodeBackend>(
                 );
                 continue;
             }
+            if req.max_new == 0 {
+                // zero tokens requested: complete immediately, without
+                // burning a lane or sampling a token the client refused
+                stats.lock().unwrap().completed += 1;
+                if let Some(tx) = responders.remove(&req.id) {
+                    let _ = tx.send(GenerateResponse {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        latency_us: 0,
+                        truncated: false,
+                        error: None,
+                    });
+                }
+                continue;
+            }
             let req_id = req.id;
             let idx = slots
                 .alloc(SlotInfo::new(req_id, now, req.prompt, req.max_new, req.temperature))
                 .expect("capacity checked");
-            match backend.alloc_lane() {
-                Ok(lane) => {
-                    debug_assert_eq!(lane, lane_slots.len(), "lanes must stay dense");
-                    lane_slots.push(idx);
-                }
+            let lane = match backend.alloc_lane() {
+                Ok(lane) => lane,
                 Err(e) => {
                     // lane allocation failed: fail this request, keep serving
                     let info = slots.release(idx).expect("just allocated");
@@ -274,6 +329,61 @@ fn run_engine<B: DecodeBackend>(
                         info.request_id,
                         info.generated,
                         format!("admission failed: {e}"),
+                    );
+                    continue;
+                }
+            };
+            debug_assert_eq!(lane, lane_slots.len(), "lanes must stay dense");
+            if !backend.supports_prefill() {
+                // per-tick prompt feeding: the slot's cursor walks the
+                // prompt through the shared decode loop
+                lane_slots.push(idx);
+                continue;
+            }
+            // prefill: the whole prompt enters the lane state now, and the
+            // first generated token is sampled from the returned logits
+            let info = slots.get_mut(idx).expect("just allocated");
+            match backend.prefill(lane, &info.prompt) {
+                Ok(logits) => {
+                    info.complete_prompt();
+                    let next = sample_logits(&logits, info.temperature, &mut rng);
+                    info.generated.push(next);
+                    let finished = info.generated.len() >= info.max_new || info.pos + 1 >= max_len;
+                    stats.lock().unwrap().tokens_generated += 1;
+                    if !finished {
+                        lane_slots.push(idx);
+                        continue;
+                    }
+                    // single-token request (or a prompt that already fills
+                    // max_len): retire at admission; the lane is last, so
+                    // freeing it moves nothing
+                    backend.free_lane(lane);
+                    let info = slots.release(idx).expect("just allocated");
+                    let latency = info.started.elapsed();
+                    let truncated = info.generated.len() < info.max_new;
+                    {
+                        let mut st = stats.lock().unwrap();
+                        st.completed += 1;
+                        st.latency.record(latency);
+                    }
+                    if let Some(tx) = responders.remove(&info.request_id) {
+                        let _ = tx.send(GenerateResponse {
+                            id: info.request_id,
+                            tokens: info.generated,
+                            latency_us: latency.as_micros() as u64,
+                            truncated,
+                            error: None,
+                        });
+                    }
+                }
+                Err(e) => {
+                    backend.free_lane(lane);
+                    let info = slots.release(idx).expect("just allocated");
+                    send_failure(
+                        &mut responders,
+                        info.request_id,
+                        info.generated,
+                        format!("prefill failed: {e}"),
                     );
                 }
             }
@@ -288,11 +398,7 @@ fn run_engine<B: DecodeBackend>(
         for &slot in &lane_slots {
             tokens.push(slots.get(slot).expect("lane maps to live slot").next_token());
         }
-        {
-            let mut st = stats.lock().unwrap();
-            st.ticks += 1;
-            st.batch_occupancy_sum += lane_slots.len() as u64;
-        }
+        let occupancy = lane_slots.len() as u64;
         let logits = match backend.step_batch(&tokens) {
             Ok(l) => l,
             Err(e) => {
@@ -311,11 +417,17 @@ fn run_engine<B: DecodeBackend>(
                     backend.free_lane(backend.lanes() - 1);
                 }
                 lane_slots.clear();
+                let mut st = stats.lock().unwrap();
+                st.ticks += 1;
+                st.batch_occupancy_sum += occupancy;
                 continue;
             }
         };
 
-        // 4. consume logits: advance cursors, sample past the prompt
+        // 4. consume logits: advance cursors, sample past the prompt.
+        // Stats accumulate tick-locally — the lock is taken once per tick
+        // (step 6), not once per generated token.
+        let mut tick_tokens = 0u64;
         let mut finished_lanes: Vec<usize> = Vec::new();
         for (lane, &slot) in lane_slots.iter().enumerate() {
             let info = slots.get_mut(slot).unwrap();
@@ -327,7 +439,7 @@ fn run_engine<B: DecodeBackend>(
                 let row = &logits[lane * vocab..(lane + 1) * vocab];
                 let next = sample_logits(row, info.temperature, &mut rng);
                 info.generated.push(next);
-                stats.lock().unwrap().tokens_generated += 1;
+                tick_tokens += 1;
                 if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
                     finished_lanes.push(lane);
                 }
@@ -337,22 +449,37 @@ fn run_engine<B: DecodeBackend>(
         // 5. retire finished slots; descending lane order keeps pending
         // swap-removes valid (each removal only disturbs higher lanes)
         finished_lanes.sort_unstable_by_key(|&lane| std::cmp::Reverse(lane));
+        let mut retired: Vec<(SlotInfo, Duration)> = Vec::new();
         for lane in finished_lanes {
             let slot = lane_slots[lane];
             backend.free_lane(lane);
             lane_slots.swap_remove(lane);
             let info = slots.release(slot).unwrap();
             let latency = info.started.elapsed();
-            {
-                let mut st = stats.lock().unwrap();
-                st.completed += 1;
-                st.latency.record(latency);
+            retired.push((info, latency));
+        }
+
+        // 6. flush this tick's stats under a single lock acquisition,
+        // *then* answer clients — a client holding its response must
+        // already see its completion reflected in the stats
+        {
+            let mut st = stats.lock().unwrap();
+            st.ticks += 1;
+            st.batch_occupancy_sum += occupancy;
+            st.tokens_generated += tick_tokens;
+            st.completed += retired.len() as u64;
+            for (_, d) in &retired {
+                st.latency.record(*d);
             }
+        }
+        for (info, latency) in retired {
+            let truncated = info.generated.len() < info.max_new;
             if let Some(tx) = responders.remove(&info.request_id) {
                 let _ = tx.send(GenerateResponse {
                     id: info.request_id,
                     tokens: info.generated,
                     latency_us: latency.as_micros() as u64,
+                    truncated,
                     error: None,
                 });
             }
@@ -794,7 +921,7 @@ mod tests {
     }
 
     #[test]
-    fn respects_max_len() {
+    fn respects_max_len_and_reports_truncation() {
         let model = tiny_model();
         let max_len = model.cfg.max_len;
         let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
@@ -805,6 +932,83 @@ mod tests {
             temperature: 0.0,
         });
         assert!(resp.tokens.len() <= max_len - 10);
+        assert!(resp.error.is_none());
+        assert!(resp.truncated, "a max_len cutoff must be reported, not silent");
+        // a request that completes normally is not marked truncated
+        let full = handle.generate_blocking(GenerateRequest {
+            id: 3,
+            prompt: vec![1, 2],
+            max_new: 4,
+            temperature: 0.0,
+        });
+        assert_eq!(full.tokens.len(), 4);
+        assert!(!full.truncated);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn zero_max_new_completes_without_sampling() {
+        // regression: the tick loop used to sample (and return) one token
+        // before noticing max_new was already satisfied
+        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 5,
+            prompt: vec![1, 2, 3],
+            max_new: 0,
+            temperature: 0.0,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.tokens.is_empty(), "asked for zero tokens, got {:?}", resp.tokens);
+        assert!(!resp.truncated);
+        let st = handle.stats();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.tokens_generated, 0, "no token may be sampled for max_new = 0");
+        // the worker keeps serving
+        let ok = handle.generate_blocking(GenerateRequest {
+            id: 6,
+            prompt: vec![4],
+            max_new: 2,
+            temperature: 0.0,
+        });
+        assert_eq!(ok.tokens.len(), 2);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn single_token_request_retires_at_admission() {
+        // max_new = 1 finishes inside the prefill admission path, before
+        // the slot ever joins the tick loop
+        let model = tiny_model();
+        let direct = model.generate(&[2, 3, 4], 1, 0.0, 0);
+        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 7,
+            prompt: vec![2, 3, 4],
+            max_new: 1,
+            temperature: 0.0,
+        });
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, direct);
+        assert!(!resp.truncated);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn full_length_prompt_yields_one_truncated_token() {
+        // a prompt that already fills max_len leaves room to sample
+        // exactly one token from the final position's logits
+        let model = tiny_model();
+        let max_len = model.cfg.max_len;
+        let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 8,
+            prompt: vec![1; max_len],
+            max_new: 5,
+            temperature: 0.0,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 1);
+        assert!(resp.truncated);
         handle.shutdown();
     }
 }

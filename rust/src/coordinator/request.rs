@@ -59,6 +59,10 @@ pub struct GenerateResponse {
     pub tokens: Vec<u32>,
     /// end-to-end latency in microseconds
     pub latency_us: u64,
+    /// true when generation stopped at the model's `max_len` before
+    /// producing `max_new` tokens (previously indistinguishable from a
+    /// normal completion)
+    pub truncated: bool,
     pub error: Option<String>,
 }
 
@@ -72,6 +76,9 @@ impl GenerateResponse {
             ),
             ("latency_us", Json::Num(self.latency_us as f64)),
         ];
+        if self.truncated {
+            pairs.push(("truncated", Json::Bool(true)));
+        }
         if let Some(e) = &self.error {
             pairs.push(("error", Json::Str(e.clone())));
         }
@@ -90,6 +97,7 @@ impl GenerateResponse {
                 .map(|a| a.iter().filter_map(|v| v.as_f64().map(|x| x as u32)).collect())
                 .unwrap_or_default(),
             latency_us: j.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            truncated: j.get("truncated").and_then(|v| v.as_bool()).unwrap_or(false),
             error: j.get("error").and_then(|v| v.as_str()).map(String::from),
         })
     }
@@ -131,9 +139,27 @@ mod tests {
             id: 7,
             tokens: vec![],
             latency_us: 1234,
+            truncated: false,
             error: Some("boom".into()),
         };
         let back = GenerateResponse::from_json(&r.to_json()).unwrap();
         assert_eq!(r, back);
+    }
+
+    #[test]
+    fn truncated_flag_roundtrips_and_defaults_false() {
+        let r = GenerateResponse {
+            id: 8,
+            tokens: vec![1, 2],
+            latency_us: 10,
+            truncated: true,
+            error: None,
+        };
+        let j = r.to_json();
+        assert!(j.to_string().contains("\"truncated\":true"));
+        assert_eq!(GenerateResponse::from_json(&j).unwrap(), r);
+        // absent field parses as not-truncated (wire compat)
+        let legacy = Json::parse(r#"{"id": 1, "tokens": [3], "latency_us": 5}"#).unwrap();
+        assert!(!GenerateResponse::from_json(&legacy).unwrap().truncated);
     }
 }

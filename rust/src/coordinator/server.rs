@@ -128,6 +128,7 @@ fn handle_conn(stream: TcpStream, engine: Arc<EngineHandle>) {
                     id: 0,
                     tokens: vec![],
                     latency_us: 0,
+                    truncated: false,
                     error: Some(format!("bad request from {peer:?}: {e}")),
                 });
             }

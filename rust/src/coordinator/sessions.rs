@@ -1,9 +1,11 @@
 //! Slot table: maps in-flight requests to decode slots.
 //!
-//! A slot is one lane of the batched decode state (one RNN (S, Z) pair in
-//! the PJRT engine, one `DecodeSession` in the native engine). The table
-//! enforces capacity, guarantees a freed slot is reusable, and never hands
-//! the same slot to two requests — invariants propchecked below.
+//! A slot is one lane of the batched decode state (one (S, Z) RNN pair per
+//! layer×head in either engine). The table enforces capacity, guarantees a
+//! freed slot is reusable, and never hands the same slot to two requests —
+//! invariants propchecked below. Prompt ingestion is tracked per slot: a
+//! backend with a prefill path absorbs the whole prompt at admission
+//! (`complete_prompt`), otherwise the `cursor` walks it one tick at a time.
 
 use std::time::Instant;
 
@@ -59,6 +61,15 @@ impl SlotInfo {
     /// True once every prompt token has been fed.
     pub fn prompt_done(&self) -> bool {
         self.cursor >= self.prompt.len()
+    }
+
+    /// Mark the whole prompt as ingested in one shot — the prefill path.
+    /// The cursor jumps past the prompt and `pos` to the first generation
+    /// position, so the slot's next tick feeds its first sampled token
+    /// instead of walking the prompt.
+    pub fn complete_prompt(&mut self) {
+        self.cursor = self.prompt.len();
+        self.pos = self.prompt.len();
     }
 }
 
@@ -141,6 +152,16 @@ mod tests {
         assert!(s.prompt_done());
         s.generated.push(7);
         assert_eq!(s.next_token(), 7);
+    }
+
+    #[test]
+    fn complete_prompt_jumps_to_generation() {
+        let mut s = info(2);
+        s.complete_prompt();
+        assert!(s.prompt_done());
+        assert_eq!(s.pos, 2, "pos must land on the first generation position");
+        s.generated.push(9);
+        assert_eq!(s.next_token(), 9, "next tick feeds the sampled token");
     }
 
     #[test]

@@ -62,8 +62,8 @@ impl SpeechDataset {
 
     /// Sample one utterance (frames zero-padded to max_frames).
     pub fn sample(&mut self) -> Utterance {
-        let n_phones =
-            self.min_phones + self.rng.below((self.max_phones - self.min_phones + 1) as u64) as usize;
+        let n_phones = self.min_phones
+            + self.rng.below((self.max_phones - self.min_phones + 1) as u64) as usize;
         let mut labels = Vec::with_capacity(n_phones);
         let mut spans: Vec<(u32, usize)> = Vec::new();
         let mut total = 0usize;

@@ -327,8 +327,9 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-')
-        {
+        let is_num_byte =
+            |c: u8| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-');
+        while matches!(self.peek(), Some(c) if is_num_byte(c)) {
             self.pos += 1;
         }
         std::str::from_utf8(&self.b[start..self.pos])

@@ -74,11 +74,19 @@ impl BiLstm {
             for d in ["fwd", "bwd"] {
                 tensors.push(NamedTensor {
                     name: format!("lstm{i}.{d}.wx"),
-                    tensor: Tensor::randn(&[d_in, 4 * hidden], 1.0 / (d_in as f32).sqrt(), &mut rng),
+                    tensor: Tensor::randn(
+                        &[d_in, 4 * hidden],
+                        1.0 / (d_in as f32).sqrt(),
+                        &mut rng,
+                    ),
                 });
                 tensors.push(NamedTensor {
                     name: format!("lstm{i}.{d}.wh"),
-                    tensor: Tensor::randn(&[hidden, 4 * hidden], 1.0 / (hidden as f32).sqrt(), &mut rng),
+                    tensor: Tensor::randn(
+                        &[hidden, 4 * hidden],
+                        1.0 / (hidden as f32).sqrt(),
+                        &mut rng,
+                    ),
                 });
                 let mut b = Tensor::zeros(&[4 * hidden]);
                 for j in hidden..2 * hidden {
@@ -92,7 +100,11 @@ impl BiLstm {
         }
         tensors.push(NamedTensor {
             name: "head.w".into(),
-            tensor: Tensor::randn(&[2 * hidden, vocab], 1.0 / ((2 * hidden) as f32).sqrt(), &mut rng),
+            tensor: Tensor::randn(
+                &[2 * hidden, vocab],
+                1.0 / ((2 * hidden) as f32).sqrt(),
+                &mut rng,
+            ),
         });
         tensors.push(NamedTensor {
             name: "head.b".into(),

@@ -17,7 +17,8 @@ use crate::attention::{linear, lsh, softmax, stateful_softmax, AttentionKind};
 use crate::config::ModelConfig;
 use crate::rng::Rng;
 use crate::tensor::{
-    add_bias_rows, gelu, layer_norm_into, layer_norm_rows, matmul_into, vecmat_into, Tensor,
+    add_bias_rows, gather_cols, gelu, layer_norm_into, layer_norm_rows, matmul_into,
+    scatter_cols, vecmat_into, Tensor,
 };
 use crate::weights::{NamedTensor, WeightBundle};
 
@@ -377,6 +378,12 @@ pub fn random_param_tensors(cfg: &ModelConfig, rng: &mut Rng) -> Vec<NamedTensor
 // decode sessions
 // ---------------------------------------------------------------------------
 
+/// How many prompt tokens one prefill pass pushes through the layers at
+/// a time. Buffers are sized for this up front, so prompt ingestion runs
+/// in constant memory regardless of prompt length (the SLiM trick:
+/// blockwise accumulation into the cumulative state).
+pub const PREFILL_CHUNK: usize = 64;
+
 /// Batched autoregressive decode over the linear-attention RNN view.
 ///
 /// Holds every lane's recurrent state in structure-of-arrays layout (one
@@ -386,6 +393,15 @@ pub fn random_param_tensors(cfg: &ModelConfig, rng: &mut Rng) -> Vec<NamedTensor
 /// embedding gather, QKV/output/FF projections, and the logits head each
 /// run as a single `[B, ·] × [·, ·]` GEMM instead of B GEMVs, and the
 /// attention update runs as three streaming batched kernels.
+///
+/// Prompts enter through [`Self::prefill_row`]: a whole prompt is
+/// consumed in [`PREFILL_CHUNK`]-sized chunks, each chunk running the
+/// projections as `[chunk, ·]` GEMMs and the causal recurrence as one
+/// cumulative-state sweep per layer×head — the vocab-sized lm-head runs
+/// only for the final prompt position. Time-to-first-token therefore
+/// costs O(prompt_len / chunk) GEMM blocks instead of O(prompt_len)
+/// engine ticks, and the ingested state is bit-identical to per-tick
+/// feeding (see `prefill_row`).
 ///
 /// Lanes are dense rows `0..rows`. Slot churn is [`Self::alloc_row`]
 /// (append a zeroed lane) and [`Self::free_row`] (swap-remove compaction);
@@ -426,6 +442,10 @@ impl<'m> BatchedDecodeSession<'m> {
         let cfg = &model.cfg;
         let e = cfg.d_model;
         let dh = cfg.d_head();
+        // activation buffers serve both the [B, ·] decode tick and the
+        // [PREFILL_CHUNK, ·] prefill pass (never concurrently), so size
+        // them for whichever is wider
+        let buf_rows = cap.max(PREFILL_CHUNK);
         BatchedDecodeSession {
             model,
             cap,
@@ -434,18 +454,18 @@ impl<'m> BatchedDecodeSession<'m> {
                 .map(|_| linear::BatchedLinearAttnState::new(cap, dh, dh))
                 .collect(),
             pos: Vec::with_capacity(cap),
-            x: vec![0.0; cap * e],
-            normed: vec![0.0; cap * e],
-            q: vec![0.0; cap * e],
-            k: vec![0.0; cap * e],
-            v: vec![0.0; cap * e],
-            merged: vec![0.0; cap * e],
-            out2: vec![0.0; cap * e],
-            ff: vec![0.0; cap * cfg.d_ff],
-            qh: vec![0.0; cap * dh],
-            kh: vec![0.0; cap * dh],
-            vh: vec![0.0; cap * dh],
-            oh: vec![0.0; cap * dh],
+            x: vec![0.0; buf_rows * e],
+            normed: vec![0.0; buf_rows * e],
+            q: vec![0.0; buf_rows * e],
+            k: vec![0.0; buf_rows * e],
+            v: vec![0.0; buf_rows * e],
+            merged: vec![0.0; buf_rows * e],
+            out2: vec![0.0; buf_rows * e],
+            ff: vec![0.0; buf_rows * cfg.d_ff],
+            qh: vec![0.0; buf_rows * dh],
+            kh: vec![0.0; buf_rows * dh],
+            vh: vec![0.0; buf_rows * dh],
+            oh: vec![0.0; buf_rows * dh],
         }
     }
 
@@ -544,24 +564,16 @@ impl<'m> BatchedDecodeSession<'m> {
             // per head: gather columns, batched RNN update, scatter back
             for hd in 0..h {
                 let col = hd * dh;
-                for r in 0..b {
-                    self.qh[r * dh..(r + 1) * dh]
-                        .copy_from_slice(&self.q[r * e + col..r * e + col + dh]);
-                    self.kh[r * dh..(r + 1) * dh]
-                        .copy_from_slice(&self.k[r * e + col..r * e + col + dh]);
-                    self.vh[r * dh..(r + 1) * dh]
-                        .copy_from_slice(&self.v[r * e + col..r * e + col + dh]);
-                }
+                gather_cols(&mut self.qh[..b * dh], &self.q[..b * e], b, e, col, dh);
+                gather_cols(&mut self.kh[..b * dh], &self.k[..b * e], b, e, col, dh);
+                gather_cols(&mut self.vh[..b * dh], &self.v[..b * e], b, e, col, dh);
                 self.states[li * h + hd].step_batch(
                     &self.qh[..b * dh],
                     &self.kh[..b * dh],
                     &self.vh[..b * dh],
                     &mut self.oh[..b * dh],
                 );
-                for r in 0..b {
-                    self.merged[r * e + col..r * e + col + dh]
-                        .copy_from_slice(&self.oh[r * dh..(r + 1) * dh]);
-                }
+                scatter_cols(&mut self.merged[..b * e], &self.oh[..b * dh], b, e, col, dh);
             }
             matmul_into(&mut self.out2[..b * e], &self.merged[..b * e], &blk.wo.data, b, e, e);
             for (xv, &ov) in self.x[..b * e].iter_mut().zip(&self.out2[..b * e]) {
@@ -617,6 +629,136 @@ impl<'m> BatchedDecodeSession<'m> {
         add_bias_rows(&mut logits, &model.head_b.data, b);
         for p in self.pos.iter_mut() {
             *p += 1;
+        }
+        logits
+    }
+
+    /// Ingest a whole `prompt` into lane `row` in [`PREFILL_CHUNK`]-sized
+    /// chunks, returning the logits of the final prompt position
+    /// (`[vocab]`) — what the first generated token is sampled from.
+    ///
+    /// Each chunk runs the QKV/output/FF projections as `[chunk, ·]`
+    /// GEMMs and the attention as a cumulative-state sweep into the
+    /// lane's (S, Z); intermediate positions never touch the final layer
+    /// norm or the vocab-sized lm-head. The float-op order per position
+    /// matches [`Self::step_batch`] exactly, so the resulting state and
+    /// logits are bit-identical to feeding the prompt one tick at a time.
+    pub fn prefill_row(&mut self, row: usize, prompt: &[u32]) -> Vec<f32> {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        assert!(!prompt.is_empty(), "prefill needs at least one prompt token");
+        let model = self.model;
+        let cfg = &model.cfg;
+        let e = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.d_head();
+        let dff = cfg.d_ff;
+        assert!(
+            self.pos[row] + prompt.len() <= cfg.max_len,
+            "lane {row}: prompt of {} at position {} exceeds max_len {}",
+            prompt.len(),
+            self.pos[row],
+            cfg.max_len
+        );
+        let mut logits = vec![0.0f32; cfg.vocab];
+        let mut off = 0;
+        while off < prompt.len() {
+            let n = (prompt.len() - off).min(PREFILL_CHUNK);
+            let chunk = &prompt[off..off + n];
+            let base = self.pos[row];
+            // x = tok_embed + pos_embed for every chunk position
+            for (i, &tok) in chunk.iter().enumerate() {
+                let te = model.tok_embed.row(tok as usize);
+                let pe = model.pos_embed.row(base + i);
+                let xr = &mut self.x[i * e..(i + 1) * e];
+                for j in 0..e {
+                    xr[j] = te[j] + pe[j];
+                }
+            }
+            for (li, blk) in model.blocks.iter().enumerate() {
+                // ln1 -> one [chunk, e] x [e, e] GEMM per projection
+                layer_norm_rows(
+                    &mut self.normed[..n * e],
+                    &self.x[..n * e],
+                    &blk.ln1_g.data,
+                    &blk.ln1_b.data,
+                    n,
+                );
+                matmul_into(&mut self.q[..n * e], &self.normed[..n * e], &blk.wq.data, n, e, e);
+                matmul_into(&mut self.k[..n * e], &self.normed[..n * e], &blk.wk.data, n, e, e);
+                matmul_into(&mut self.v[..n * e], &self.normed[..n * e], &blk.wv.data, n, e, e);
+                // per head: the chunk flows through the causal recurrence
+                // of this lane only; other lanes' states are untouched
+                for hd in 0..h {
+                    let col = hd * dh;
+                    gather_cols(&mut self.qh[..n * dh], &self.q[..n * e], n, e, col, dh);
+                    gather_cols(&mut self.kh[..n * dh], &self.k[..n * e], n, e, col, dh);
+                    gather_cols(&mut self.vh[..n * dh], &self.v[..n * e], n, e, col, dh);
+                    self.states[li * h + hd].prefill_row(
+                        row,
+                        &self.qh[..n * dh],
+                        &self.kh[..n * dh],
+                        &self.vh[..n * dh],
+                        n,
+                        &mut self.oh[..n * dh],
+                    );
+                    scatter_cols(&mut self.merged[..n * e], &self.oh[..n * dh], n, e, col, dh);
+                }
+                matmul_into(&mut self.out2[..n * e], &self.merged[..n * e], &blk.wo.data, n, e, e);
+                for (xv, &ov) in self.x[..n * e].iter_mut().zip(&self.out2[..n * e]) {
+                    *xv += ov;
+                }
+                // ff: [chunk, e] x [e, d_ff] and [chunk, d_ff] x [d_ff, e]
+                layer_norm_rows(
+                    &mut self.normed[..n * e],
+                    &self.x[..n * e],
+                    &blk.ln2_g.data,
+                    &blk.ln2_b.data,
+                    n,
+                );
+                matmul_into(
+                    &mut self.ff[..n * dff],
+                    &self.normed[..n * e],
+                    &blk.ff_w1.data,
+                    n,
+                    e,
+                    dff,
+                );
+                for r in 0..n {
+                    let frow = &mut self.ff[r * dff..(r + 1) * dff];
+                    for (hv, &bv) in frow.iter_mut().zip(&blk.ff_b1.data) {
+                        *hv = gelu(*hv + bv);
+                    }
+                }
+                matmul_into(
+                    &mut self.out2[..n * e],
+                    &self.ff[..n * dff],
+                    &blk.ff_w2.data,
+                    n,
+                    dff,
+                    e,
+                );
+                for (xv, &ov) in self.x[..n * e].iter_mut().zip(&self.out2[..n * e]) {
+                    *xv += ov;
+                }
+                add_bias_rows(&mut self.x[..n * e], &blk.ff_b2.data, n);
+            }
+            self.pos[row] += n;
+            off += n;
+            if off == prompt.len() {
+                // only the last prompt position pays for the final layer
+                // norm and the [e, vocab] lm-head
+                let last = n - 1;
+                layer_norm_into(
+                    &mut self.normed[..e],
+                    &self.x[last * e..(last + 1) * e],
+                    &model.final_ln_g.data,
+                    &model.final_ln_b.data,
+                );
+                vecmat_into(&mut logits, &self.normed[..e], &model.head_w.data, e, cfg.vocab);
+                for (l, bv) in logits.iter_mut().zip(&model.head_b.data) {
+                    *l += bv;
+                }
+            }
         }
         logits
     }
@@ -927,6 +1069,81 @@ mod tests {
         assert_eq!(sess.free_row(0), Some(1));
         assert_eq!(sess.rows(), 1);
         assert_eq!(sess.pos(0), 6, "moved lane kept its position");
+    }
+
+    #[test]
+    fn prefill_row_is_bitwise_token_by_token_across_chunks() {
+        // a prompt longer than PREFILL_CHUNK (to cross chunk boundaries)
+        // must produce the exact logits and greedy continuation of
+        // feeding the same tokens one tick at a time
+        let cfg = ModelConfig {
+            max_len: 192,
+            ..tiny_cfg()
+        };
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 30);
+        let prompt = tokens(PREFILL_CHUNK * 2 + 2, cfg.vocab, 31);
+        let mut stepped = m.batched_session(1);
+        stepped.alloc_row().unwrap();
+        let mut step_logits = Vec::new();
+        for &t in &prompt {
+            step_logits = stepped.step_batch(&[t]);
+        }
+        let mut prefilled = m.batched_session(1);
+        prefilled.alloc_row().unwrap();
+        let pre_logits = prefilled.prefill_row(0, &prompt);
+        assert_eq!(pre_logits, step_logits, "prefill logits must be bit-identical");
+        assert_eq!(prefilled.pos(0), stepped.pos(0));
+        // greedy continuations stay in lockstep
+        let mut a = crate::sampling::argmax(&pre_logits);
+        let mut b = crate::sampling::argmax(&step_logits);
+        for i in 0..8 {
+            assert_eq!(a, b, "greedy continuation diverged at step {i}");
+            let la = prefilled.step_batch(&[a]);
+            let lb = stepped.step_batch(&[b]);
+            assert_eq!(la, lb);
+            a = crate::sampling::argmax(&la);
+            b = crate::sampling::argmax(&lb);
+        }
+    }
+
+    #[test]
+    fn prefill_row_joins_mid_batch_without_disturbing_neighbours() {
+        // lane 0 is mid-decode when lane 1 is admitted by prefill; both
+        // must match independent single-lane references bit-for-bit
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 32);
+        let s0 = tokens(12, cfg.vocab, 33);
+        let s1 = tokens(7, cfg.vocab, 34);
+        let mut sess = m.batched_session(2);
+        sess.alloc_row().unwrap();
+        let mut ref0 = m.batched_session(1);
+        ref0.alloc_row().unwrap();
+        let mut ref1 = m.batched_session(1);
+        ref1.alloc_row().unwrap();
+        // lane 0 consumes 6 tokens alone
+        for &t in &s0[..6] {
+            let a = sess.step_batch(&[t]);
+            let b = ref0.step_batch(&[t]);
+            assert_eq!(a, b);
+        }
+        // lane 1 joins via prefill
+        sess.alloc_row().unwrap();
+        let got = sess.prefill_row(1, &s1);
+        let mut expect = Vec::new();
+        for &t in &s1 {
+            expect = ref1.step_batch(&[t]);
+        }
+        assert_eq!(got, expect, "prefill in an occupied batch diverged");
+        // both lanes keep decoding in lockstep with their references
+        for i in 0..6 {
+            let tick = [s0[6 + i], crate::sampling::argmax(&expect)];
+            let both = sess.step_batch(&tick);
+            let a = ref0.step_batch(&[tick[0]]);
+            let b = ref1.step_batch(&[tick[1]]);
+            assert_eq!(&both[..cfg.vocab], &a[..], "lane 0 disturbed by prefill");
+            assert_eq!(&both[cfg.vocab..], &b[..], "prefilled lane diverged in decode");
+            expect = b;
+        }
     }
 
     #[test]

@@ -3,17 +3,37 @@
 //! Temperature 0 = greedy argmax; otherwise softmax-with-temperature
 //! categorical sampling (optionally top-k truncated). Used by the image
 //! generation examples and the serving engine.
+//!
+//! NaN logits must never panic here: this code runs inside the engine
+//! worker, where a panic kills every in-flight request. Comparisons use
+//! the total order (`f32::total_cmp`) with NaN demoted below every real
+//! logit, and degenerate distributions fall back to greedy.
 
 use crate::rng::Rng;
 use crate::tensor::softmax_inplace;
+
+/// NaN-proof sampling key: a NaN logit ranks below (and contributes no
+/// probability mass against) every real logit.
+#[inline]
+fn nan_as_neg_inf(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
+}
 
 /// Sample one token id from unnormalized logits.
 pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
     if temperature <= 0.0 {
         return argmax(logits);
     }
-    let mut probs: Vec<f32> = logits.iter().map(|&x| x / temperature).collect();
+    let mut probs: Vec<f32> = logits.iter().map(|&x| nan_as_neg_inf(x) / temperature).collect();
     softmax_inplace(&mut probs);
+    if probs.iter().any(|p| !p.is_finite()) {
+        // every logit NaN/-inf (or one +inf): no usable distribution
+        return argmax(logits);
+    }
     rng.categorical(&probs) as u32
 }
 
@@ -25,21 +45,28 @@ pub fn sample_logits_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut 
     if k == 0 || k >= logits.len() {
         return sample_logits(logits, temperature, rng);
     }
-    // indices of the k largest logits
+    // indices of the k largest logits (total order; NaN sorts last)
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.sort_unstable_by(|&a, &b| nan_as_neg_inf(logits[b]).total_cmp(&nan_as_neg_inf(logits[a])));
     idx.truncate(k);
-    let mut probs: Vec<f32> = idx.iter().map(|&i| logits[i] / temperature).collect();
+    let mut probs: Vec<f32> = idx
+        .iter()
+        .map(|&i| nan_as_neg_inf(logits[i]) / temperature)
+        .collect();
     softmax_inplace(&mut probs);
+    if probs.iter().any(|p| !p.is_finite()) {
+        return argmax(logits);
+    }
     idx[rng.categorical(&probs)] as u32
 }
 
-/// Argmax over logits.
+/// Argmax over logits (total order; NaN ranks below every real logit, so
+/// a NaN-bearing row still yields a deterministic in-vocab token).
 pub fn argmax(logits: &[f32]) -> u32 {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| nan_as_neg_inf(*a.1).total_cmp(&nan_as_neg_inf(*b.1)))
         .map(|(i, _)| i as u32)
         .expect("argmax of empty logits")
 }
@@ -86,6 +113,32 @@ mod tests {
             let t = sample_logits_topk(&logits, 1.0, 2, &mut rng);
             assert!(t == 4 || t == 3, "sampled {t} outside top-2");
         }
+    }
+
+    #[test]
+    fn nan_logits_never_panic_and_are_never_selected() {
+        // regression: partial_cmp().unwrap() used to panic the engine
+        // worker on any NaN logit
+        let logits = [0.5, f32::NAN, 3.0, 1.0];
+        assert_eq!(argmax(&logits), 2, "NaN must rank below real logits");
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let t = sample_logits(&logits, 1.0, &mut rng);
+            assert_ne!(t, 1, "NaN logit must carry no probability mass");
+            assert!((t as usize) < logits.len());
+            let t = sample_logits_topk(&logits, 1.0, 2, &mut rng);
+            assert!(t == 2 || t == 3, "top-2 of [0.5, NaN, 3.0, 1.0] is {{2, 3}}, got {t}");
+        }
+    }
+
+    #[test]
+    fn all_nan_logits_fall_back_to_a_deterministic_token() {
+        let logits = [f32::NAN, f32::NAN, f32::NAN];
+        let mut rng = Rng::new(8);
+        let a = argmax(&logits);
+        assert!((a as usize) < logits.len());
+        assert_eq!(sample_logits(&logits, 1.0, &mut rng), a);
+        assert_eq!(sample_logits_topk(&logits, 1.0, 2, &mut rng), a);
     }
 
     #[test]

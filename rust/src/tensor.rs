@@ -2,7 +2,9 @@
 //!
 //! Deliberately small: row-major `Vec<f32>` storage, shape metadata, and
 //! the handful of kernels a transformer needs (GEMM, GEMV, layernorm,
-//! softmax, elu+1, outer-product updates). The GEMM uses the i-k-j loop
+//! softmax, elu+1, outer-product updates, per-head column
+//! gather/scatter for the decode and prefill chunk passes). The GEMM
+//! uses the i-k-j loop
 //! order so the inner loop streams rows of `b` — LLVM auto-vectorizes it;
 //! see EXPERIMENTS.md §Perf for measured numbers.
 
@@ -255,6 +257,48 @@ pub fn add_bias_rows(x: &mut [f32], bias: &[f32], b: usize) {
         for (xv, &bv) in x[r * n..(r + 1) * n].iter_mut().zip(bias) {
             *xv += bv;
         }
+    }
+}
+
+/// Gather a column block out of a `[rows, src_cols]` matrix:
+/// `dst[r, :] = src[r, col0 .. col0 + nc]`.
+///
+/// This is the per-head slice step of both the decode tick and the
+/// prefill chunk pass (pull one head's `[·, d_head]` columns out of the
+/// fused `[·, d_model]` QKV projections).
+pub fn gather_cols(
+    dst: &mut [f32],
+    src: &[f32],
+    rows: usize,
+    src_cols: usize,
+    col0: usize,
+    nc: usize,
+) {
+    assert_eq!(dst.len(), rows * nc);
+    assert!(src.len() >= rows * src_cols);
+    assert!(col0 + nc <= src_cols);
+    for r in 0..rows {
+        let s = r * src_cols + col0;
+        dst[r * nc..(r + 1) * nc].copy_from_slice(&src[s..s + nc]);
+    }
+}
+
+/// Scatter a column block back into a `[rows, dst_cols]` matrix:
+/// `dst[r, col0 .. col0 + nc] = src[r, :]` — the inverse of [`gather_cols`].
+pub fn scatter_cols(
+    dst: &mut [f32],
+    src: &[f32],
+    rows: usize,
+    dst_cols: usize,
+    col0: usize,
+    nc: usize,
+) {
+    assert_eq!(src.len(), rows * nc);
+    assert!(dst.len() >= rows * dst_cols);
+    assert!(col0 + nc <= dst_cols);
+    for r in 0..rows {
+        let d = r * dst_cols + col0;
+        dst[d..d + nc].copy_from_slice(&src[r * nc..(r + 1) * nc]);
     }
 }
 
@@ -520,6 +564,34 @@ mod tests {
         for r in 0..b {
             for e in 0..n {
                 assert!((biased[r * n + e] - (x[r * n + e] + beta[e])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_cols_roundtrip() {
+        let (rows, cols) = (3, 8);
+        let mut rng = Rng::new(10);
+        let src = rng.normal_vec(rows * cols, 1.0);
+        for (col0, nc) in [(0usize, 4usize), (4, 4), (2, 3)] {
+            let mut block = vec![0.0; rows * nc];
+            gather_cols(&mut block, &src, rows, cols, col0, nc);
+            for r in 0..rows {
+                for c in 0..nc {
+                    assert_eq!(block[r * nc + c], src[r * cols + col0 + c]);
+                }
+            }
+            let mut dst = vec![0.0; rows * cols];
+            scatter_cols(&mut dst, &block, rows, cols, col0, nc);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let expect = if c >= col0 && c < col0 + nc {
+                        src[r * cols + c]
+                    } else {
+                        0.0
+                    };
+                    assert_eq!(dst[r * cols + c], expect);
+                }
             }
         }
     }
