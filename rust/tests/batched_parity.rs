@@ -6,6 +6,11 @@
 //! admission (a slot joins at tick t), early finish, and swap-remove
 //! compaction of the freed lane — and the serving engine built on it must
 //! produce the same greedy generations as direct per-request decoding.
+//!
+//! The prefill path carries a stronger contract: ingesting a prompt via
+//! `prefill_row` must be *bit-identical* to feeding it token-by-token —
+//! same final logits, same lane state, same greedy continuation — under
+//! the same ragged admission/eviction churn.
 
 use linear_transformer::attention::AttentionKind;
 use linear_transformer::config::{ModelConfig, ServeConfig};
@@ -106,6 +111,154 @@ fn batched_matches_per_slot_under_ragged_churn() {
         }
     }
     assert_eq!(completed, streams.len(), "every stream must run to completion");
+}
+
+#[test]
+fn prefill_matches_stepwise_under_ragged_churn() {
+    // streams join by prefill at different ticks into a compacting
+    // 3-lane session; every lane's decode logits must equal (bitwise) a
+    // per-slot reference session that ingested the same prompt
+    // token-by-token
+    let cfg = tiny_cfg();
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 77);
+    let vocab = cfg.vocab;
+    let prompt_lens = [9usize, 4, 14, 6, 11];
+    let decode_lens = [7usize, 12, 3, 9, 5];
+    let joins = [0usize, 0, 2, 4, 6];
+    let prompts: Vec<Vec<u32>> = prompt_lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| stream(n, vocab, 3000 + i as u64))
+        .collect();
+
+    // per-slot references: prompt fed one token at a time
+    let mut ref_logits: Vec<Vec<f32>> = Vec::new();
+    for p in &prompts {
+        let mut sess = model.session();
+        let mut logits = Vec::new();
+        for &t in p {
+            logits = sess.step(t);
+        }
+        ref_logits.push(logits);
+    }
+
+    let mut batched = model.batched_session(3);
+    // lane -> (stream id, last logits row, tokens decoded)
+    let mut lanes: Vec<(usize, Vec<f32>, usize)> = Vec::new();
+    let mut ref_sessions: Vec<Option<linear_transformer::nn::DecodeSession>> =
+        prompts.iter().map(|_| None).collect();
+    let mut pending: Vec<usize> = (0..prompts.len()).collect();
+    let mut completed = 0usize;
+
+    for tick in 0..100 {
+        pending.retain(|&sid| {
+            if joins[sid] <= tick && batched.rows() < batched.capacity() {
+                let row = batched.alloc_row().expect("capacity checked");
+                assert_eq!(row, lanes.len(), "lanes must stay dense");
+                let logits = batched.prefill_row(row, &prompts[sid]);
+                assert_eq!(
+                    logits, ref_logits[sid],
+                    "stream {sid}: prefill logits differ from stepwise ingestion"
+                );
+                // reference continues from its own stepwise prompt feed
+                let mut sess = model.session();
+                for &t in &prompts[sid] {
+                    sess.step(t);
+                }
+                ref_sessions[sid] = Some(sess);
+                lanes.push((sid, logits, 0));
+                false
+            } else {
+                true
+            }
+        });
+        if lanes.is_empty() {
+            if pending.is_empty() {
+                break;
+            }
+            continue;
+        }
+
+        // greedy-advance every lane one token
+        let tokens: Vec<u32> = lanes
+            .iter()
+            .map(|(_, logits, _)| linear_transformer::sampling::argmax(logits))
+            .collect();
+        let out = batched.step_batch(&tokens);
+        for (lane, (sid, logits, done)) in lanes.iter_mut().enumerate() {
+            let expect = ref_sessions[*sid].as_mut().unwrap().step(tokens[lane]);
+            let row = &out[lane * vocab..(lane + 1) * vocab];
+            assert_eq!(row, &expect[..], "stream {sid} diverged after prefill admission");
+            *logits = expect;
+            *done += 1;
+        }
+
+        // retire finished streams (descending lane order: swap-remove)
+        for lane in (0..lanes.len()).rev() {
+            let (sid, _, done) = &lanes[lane];
+            if *done == decode_lens[*sid] {
+                batched.free_row(lane);
+                lanes.swap_remove(lane);
+                completed += 1;
+            }
+        }
+    }
+    assert_eq!(completed, prompts.len(), "every stream must run to completion");
+}
+
+#[test]
+fn engine_prefill_matches_direct_generation_with_long_prompts() {
+    // prompts longer than one PREFILL_CHUNK, mixed with short ones, under
+    // a small max_batch (forcing queued admission while lanes decode):
+    // the engine must still reproduce direct per-request greedy decoding
+    let cfg = ModelConfig {
+        max_len: 192,
+        ..tiny_cfg()
+    };
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 88);
+    let cases: Vec<(Vec<u32>, usize)> = vec![
+        (stream(100, cfg.vocab, 4000), 6),
+        (stream(2, cfg.vocab, 4001), 10),
+        (stream(70, cfg.vocab, 4002), 4),
+        (stream(33, cfg.vocab, 4003), 8),
+        (stream(129, cfg.vocab, 4004), 3),
+    ];
+    let direct: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| model.generate(p, *n, 0.0, 0))
+        .collect();
+    let handle = NativeEngine::spawn(
+        model,
+        ServeConfig {
+            max_batch: 2,
+            max_wait_us: 500,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, n))| {
+            handle.submit(GenerateRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: *n,
+                temperature: 0.0,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(!resp.truncated);
+        assert_eq!(
+            resp.tokens, direct[resp.id as usize],
+            "request {} diverged from direct generation",
+            resp.id
+        );
+    }
+    handle.shutdown();
 }
 
 #[test]
