@@ -1,6 +1,7 @@
 //! Decode throughput: batched structure-of-arrays decode vs the per-slot
 //! scalar loop, at B ∈ {1, 4, 16, 64} — plus time-to-first-token for a
-//! long prompt, per-tick walk vs chunked prefill.
+//! long prompt (per-tick walk vs chunked prefill) and a worker-pool
+//! thread sweep over both hot paths.
 //!
 //! The per-slot loop is what the seed engine did (B independent
 //! `DecodeSession`s advanced one at a time — B GEMVs per projection); the
@@ -9,14 +10,21 @@
 //! instead of B times, which is the whole game on a weight-bandwidth-bound
 //! decode. The TTFT section ingests a 512-token prompt both ways: one
 //! engine tick per token (lm-head every tick) vs `prefill_row` (chunked
-//! GEMMs, lm-head once). Emits machine-readable `BENCH_decode.json`.
+//! GEMMs, lm-head once). The thread sweep reruns the B=16 decode tick and
+//! the 512-token prefill at threads ∈ {1, 2, 4, max}; pooled kernels are
+//! bit-identical to serial, so the sweep asserts unchanged first tokens
+//! while measuring the multi-core speedup. Emits machine-readable
+//! `BENCH_decode.json`.
 //!
 //! Run: cargo run --release --example perf_decode -- [steps]
+
+use std::sync::Arc;
 
 use linear_transformer::attention::AttentionKind;
 use linear_transformer::config::ModelConfig;
 use linear_transformer::json::{obj, Json};
 use linear_transformer::nn::TransformerLM;
+use linear_transformer::parallel::ThreadPool;
 
 fn main() {
     let steps: usize = std::env::args()
@@ -50,8 +58,9 @@ fn main() {
         }
         let per_slot = (b * steps) as f64 / t0.elapsed().as_secs_f64();
 
-        // batched: one session, all lanes per tick
-        let mut batched = model.batched_session(b);
+        // batched: one session, all lanes per tick (no pool here — this
+        // table isolates the batching win; see the thread sweep below)
+        let mut batched = model.batched_session_with_pool(b, None);
         for _ in 0..b {
             batched.alloc_row().expect("capacity");
         }
@@ -84,7 +93,7 @@ fn main() {
     let prompt_len = 512.min(cfg.max_len - 1);
     let prompt: Vec<u32> = (0..prompt_len).map(|i| (i % cfg.vocab) as u32).collect();
 
-    let mut per_tick = model.batched_session(1);
+    let mut per_tick = model.batched_session_with_pool(1, None);
     per_tick.alloc_row().expect("capacity");
     let t0 = std::time::Instant::now();
     let mut tick_logits = Vec::new();
@@ -93,7 +102,7 @@ fn main() {
     }
     let per_tick_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-    let mut prefilled = model.batched_session(1);
+    let mut prefilled = model.batched_session_with_pool(1, None);
     prefilled.alloc_row().expect("capacity");
     let t0 = std::time::Instant::now();
     let prefill_logits = prefilled.prefill_row(0, &prompt);
@@ -113,6 +122,86 @@ fn main() {
          prefill {prefill_ms:.1} ms ({ttft_speedup:.2}x)"
     );
 
+    // --- worker-pool thread sweep: B=16 decode tick + 512-token TTFT ---
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut sweep: Vec<usize> = [1usize, 2, 4, max_threads]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    sweep.dedup();
+    println!(
+        "\nthread sweep ({} cores available): B=16 decode + {prompt_len}-token prefill",
+        max_threads
+    );
+    println!(
+        "{:>8} {:>16} {:>9} {:>13} {:>9}",
+        "threads", "b16 tok/s", "speedup", "prefill ms", "speedup"
+    );
+    let sweep_b = 16usize;
+    let mut base_tok_s = 0.0f64;
+    let mut base_prefill_ms = 0.0f64;
+    let mut serial_first_token = None;
+    let mut sweep_rows = Vec::new();
+    for &threads in &sweep {
+        let pool = if threads == 1 {
+            None
+        } else {
+            Some(Arc::new(ThreadPool::new(threads)))
+        };
+
+        // B=16 decode tick
+        let mut sess = model.batched_session_with_pool(sweep_b, pool.clone());
+        for _ in 0..sweep_b {
+            sess.alloc_row().expect("capacity");
+        }
+        let mut tokens: Vec<u32> = (0..sweep_b).map(|r| (r % cfg.vocab) as u32).collect();
+        let vocab = cfg.vocab;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let logits = sess.step_batch(&tokens);
+            for (r, tok) in tokens.iter_mut().enumerate() {
+                *tok = linear_transformer::sampling::argmax(&logits[r * vocab..(r + 1) * vocab]);
+            }
+        }
+        let tok_s = (sweep_b * steps) as f64 / t0.elapsed().as_secs_f64();
+
+        // 512-token TTFT via prefill
+        let mut sess = model.batched_session_with_pool(1, pool);
+        sess.alloc_row().expect("capacity");
+        let t0 = std::time::Instant::now();
+        let logits = sess.prefill_row(0, &prompt);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let first = linear_transformer::sampling::argmax(&logits);
+        match serial_first_token {
+            None => serial_first_token = Some(first),
+            // pooled kernels are bit-identical: the sweep must not move a token
+            Some(t) => assert_eq!(t, first, "thread count changed the first sampled token"),
+        }
+
+        if threads == 1 {
+            base_tok_s = tok_s;
+            base_prefill_ms = ms;
+        }
+        let tok_speedup = tok_s / base_tok_s;
+        let ttft_thread_speedup = base_prefill_ms / ms;
+        println!(
+            "{threads:>8} {tok_s:>16.0} {tok_speedup:>8.2}x {ms:>13.1} {ttft_thread_speedup:>8.2}x"
+        );
+        sweep_rows.push(Json::Obj(
+            [
+                ("threads".to_string(), Json::Num(threads as f64)),
+                ("b16_tok_s".to_string(), Json::Num(tok_s)),
+                ("b16_speedup".to_string(), Json::Num(tok_speedup)),
+                ("prefill_ms".to_string(), Json::Num(ms)),
+                ("prefill_speedup".to_string(), Json::Num(ttft_thread_speedup)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
         ("steps_per_lane", Json::Num(steps as f64)),
@@ -126,6 +215,7 @@ fn main() {
                 ("speedup", Json::Num(ttft_speedup)),
             ]),
         ),
+        ("thread_sweep", Json::Arr(sweep_rows)),
     ]);
     match std::fs::write("BENCH_decode.json", report.to_string()) {
         Ok(()) => println!("[json] BENCH_decode.json"),

@@ -100,7 +100,8 @@ fn main() {
         }
         let per_slot = (b * steps) as f64 / t0.elapsed().as_secs_f64();
 
-        let mut batched = model.batched_session(b);
+        // serial kernels here; the thread sweep below isolates the pool win
+        let mut batched = model.batched_session_with_pool(b, None);
         for _ in 0..b {
             batched.alloc_row().expect("capacity");
         }
@@ -118,4 +119,46 @@ fn main() {
         ]);
     }
     btable.emit("table45_batched_decode.csv");
+
+    // ---- worker-pool thread sweep: the B=16 decode tick at 1..max cores ----
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut sweep: Vec<usize> = [1usize, 2, 4, max_threads]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    sweep.dedup();
+    let mut ttable = Table::new(
+        "Batched decode tick vs GEMM-pool threads (mnist geometry, B=16)",
+        &["threads", "tok_s", "speedup_vs_serial"],
+    );
+    let b = 16usize;
+    let mut base = 0.0f64;
+    for &threads in &sweep {
+        let pool = if threads == 1 {
+            None
+        } else {
+            Some(std::sync::Arc::new(linear_transformer::parallel::ThreadPool::new(threads)))
+        };
+        let mut batched = model.batched_session_with_pool(b, pool);
+        for _ in 0..b {
+            batched.alloc_row().expect("capacity");
+        }
+        let tokens: Vec<u32> = vec![0; b];
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let _ = batched.step_batch(&tokens);
+        }
+        let tok_s = (b * steps) as f64 / t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            base = tok_s;
+        }
+        ttable.row(vec![
+            threads.to_string(),
+            format!("{tok_s:.0}"),
+            format!("{:.2}x", tok_s / base),
+        ]);
+    }
+    ttable.emit("table45_gemm_threads.csv");
 }

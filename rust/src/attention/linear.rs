@@ -25,8 +25,9 @@
 //! Inputs q, k are *raw* (un-mapped); phi(x) = elu(x)+1 is applied
 //! internally, matching the python wrappers.
 
+use crate::parallel::ThreadPool;
 use crate::tensor::{
-    axpy, batched_contract, batched_outer_acc, dot, elu_plus_one, elu_plus_one_map,
+    axpy, batched_contract_pooled, batched_outer_acc_pooled, dot, elu_plus_one, elu_plus_one_map,
 };
 
 pub const EPS: f32 = 1e-6;
@@ -494,6 +495,21 @@ impl BatchedLinearAttnState {
     /// One decode step for every live lane with raw (un-mapped) inputs.
     /// `q, k: [rows, d]`, `v, out: [rows, m]`.
     pub fn step_batch(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        self.step_batch_pooled(None, q, k, v, out)
+    }
+
+    /// [`Self::step_batch`] with the two streaming batched kernels
+    /// (outer-product accumulate, contraction) partitioned over lanes on
+    /// `pool`. Lanes are independent, so the result is bit-identical to
+    /// the serial call under any thread count.
+    pub fn step_batch_pooled(
+        &mut self,
+        pool: Option<&ThreadPool>,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) {
         let b = self.rows;
         let (d, m) = (self.d, self.m);
         assert_eq!(q.len(), b * d);
@@ -508,12 +524,12 @@ impl BatchedLinearAttnState {
         elu_plus_one_map(qb, q);
         elu_plus_one_map(kb, k);
         // S_r += phi(k_r) v_r^T ; Z_r += phi(k_r)   (eqs 18, 19, all lanes)
-        batched_outer_acc(&mut self.s[..b * d * m], kb, v, b, d, m);
+        batched_outer_acc_pooled(pool, &mut self.s[..b * d * m], kb, v, b, d, m);
         for (zv, &kv) in self.z[..b * d].iter_mut().zip(kb.iter()) {
             *zv += kv;
         }
         // out_r = (phi(q_r)^T S_r) / (phi(q_r) . Z_r + eps)   (eq. 20)
-        batched_contract(out, qb, &self.s[..b * d * m], b, d, m);
+        batched_contract_pooled(pool, out, qb, &self.s[..b * d * m], b, d, m);
         for r in 0..b {
             let den = dot(&qb[r * d..(r + 1) * d], &self.z[r * d..(r + 1) * d]) + EPS;
             let inv = 1.0 / den;

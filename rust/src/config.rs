@@ -172,6 +172,11 @@ pub struct ServeConfig {
     pub bind: String,
     pub temperature: f32,
     pub seed: u64,
+    /// Worker threads for the GEMM pool the decode/prefill kernels run
+    /// on. `0` = auto (`LINTRA_NUM_THREADS`, else one per core); `1` =
+    /// pure serial. Results are bit-identical at any setting — threads
+    /// only partition output rows, never reductions.
+    pub num_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -183,9 +188,23 @@ impl Default for ServeConfig {
             bind: String::new(),
             temperature: 1.0,
             seed: 0,
+            num_threads: 0,
         }
     }
 }
+
+/// Upper bound on an explicit `num_threads` request. Far above any real
+/// core count; a typo like `--num-threads 500000` must fail validation
+/// (surfaced synchronously at engine spawn) instead of panicking thread
+/// creation inside the already-running worker.
+/// `crate::parallel::resolve_threads` clamps every other path to this.
+pub const MAX_NUM_THREADS: usize = 1024;
+
+/// Upper bound on `max_wait_us` (one hour). The engine computes
+/// `Instant + max_wait` for batch deadlines, which panics on overflow;
+/// a bounded wait keeps that arithmetic safe and rejects nonsense like
+/// `--max-wait-us 18446744073709551615` up front.
+pub const MAX_WAIT_US_LIMIT: u64 = 3_600_000_000;
 
 impl ServeConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -194,6 +213,12 @@ impl ServeConfig {
         }
         if self.max_sessions < self.max_batch {
             bail!("max_sessions must be >= max_batch");
+        }
+        if self.num_threads > MAX_NUM_THREADS {
+            bail!("num_threads {} exceeds the limit {MAX_NUM_THREADS}", self.num_threads);
+        }
+        if self.max_wait_us > MAX_WAIT_US_LIMIT {
+            bail!("max_wait_us {} exceeds the limit {MAX_WAIT_US_LIMIT}", self.max_wait_us);
         }
         Ok(())
     }
@@ -254,6 +279,30 @@ mod tests {
         assert_eq!(tc.lr_at(0), 1e-3);
         assert_eq!(tc.lr_at(99), 1e-3);
         assert!((tc.lr_at(100) - 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_config_num_threads_settings_are_valid() {
+        for n in [0usize, 1, 4, 64, MAX_NUM_THREADS] {
+            let cfg = ServeConfig {
+                num_threads: n,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "num_threads = {n} must validate");
+        }
+        let absurd = ServeConfig {
+            num_threads: MAX_NUM_THREADS + 1,
+            ..Default::default()
+        };
+        assert!(absurd.validate().is_err(), "an absurd num_threads must be rejected at spawn");
+        let overflow_wait = ServeConfig {
+            max_wait_us: u64::MAX,
+            ..Default::default()
+        };
+        assert!(
+            overflow_wait.validate().is_err(),
+            "a max_wait_us that would overflow deadline arithmetic must be rejected"
+        );
     }
 
     #[test]

@@ -84,28 +84,53 @@ pub struct EngineHandle {
 
 impl EngineHandle {
     /// Submit a request; returns a receiver for the response.
+    ///
+    /// Never panics: if the worker has shut down or died, the receiver
+    /// yields an error [`GenerateResponse`] instead — a TCP connection
+    /// thread calling this must not take the whole server down with it.
     pub fn submit(&self, req: GenerateRequest) -> Receiver<GenerateResponse> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Msg::Request(req, tx))
-            .expect("engine worker gone");
+        if let Err(std::sync::mpsc::SendError(msg)) = self.tx.send(Msg::Request(req, tx)) {
+            // the worker's receiver is gone; recover the responder from
+            // the bounced message and answer with an error
+            if let Msg::Request(req, tx) = msg {
+                let _ = tx.send(engine_gone_response(req.id));
+            }
+        }
         rx
     }
 
-    /// Submit and wait.
+    /// Submit and wait. Like [`Self::submit`], resolves to an error
+    /// response (not a panic) if the worker is gone.
     pub fn generate_blocking(&self, req: GenerateRequest) -> GenerateResponse {
-        self.submit(req).recv().expect("engine dropped response")
+        let id = req.id;
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| engine_gone_response(id))
     }
 
     pub fn stats(&self) -> EngineStats {
         self.stats.lock().unwrap().clone()
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop the worker and wait for it to drain. Idempotent; the handle
+    /// stays usable afterwards (submissions resolve to error responses).
+    pub fn shutdown(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// The response a request resolves to when the engine worker is gone.
+pub(crate) fn engine_gone_response(id: u64) -> GenerateResponse {
+    GenerateResponse {
+        id,
+        tokens: Vec::new(),
+        latency_us: 0,
+        truncated: false,
+        error: Some("engine unavailable: worker has shut down".to_string()),
     }
 }
 
@@ -248,20 +273,40 @@ fn run_engine<B: DecodeBackend>(
     let max_len = backend.max_len();
 
     while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
-        // 1. ingest requests (block only when totally idle)
-        let idle = slots.active() == 0 && batcher.pending() == 0;
+        // 1. ingest requests. Block whenever there is nothing to tick:
+        // totally idle, or every pending request is waiting out the
+        // batcher deadline (this loop used to busy-spin on try_recv at
+        // 100% CPU until max_wait elapsed in that second case).
+        let mut block_for: Option<Duration> = None;
+        if !shutdown && slots.active() == 0 {
+            let now = Instant::now();
+            block_for = if batcher.pending() == 0 {
+                Some(Duration::from_millis(50))
+            } else if batcher.ready(now) {
+                // a batch is already releasable (full, or past its
+                // deadline): admit it now, don't sleep on it
+                None
+            } else {
+                // sleep until the batch deadline (or a new request)
+                batcher
+                    .next_deadline()
+                    .map(|d| d.saturating_duration_since(now))
+                    .filter(|d| !d.is_zero())
+            };
+        }
         loop {
-            let msg = if idle && !shutdown {
-                match rx.recv_timeout(Duration::from_millis(50)) {
+            // the timed wait applies to the first receive only; further
+            // queued messages drain without blocking
+            let msg = match block_for.take() {
+                Some(timeout) => match rx.recv_timeout(timeout) {
                     Ok(m) => Some(m),
                     Err(RecvTimeoutError::Timeout) => None,
                     Err(RecvTimeoutError::Disconnected) => {
                         shutdown = true;
                         None
                     }
-                }
-            } else {
-                rx.try_recv().ok()
+                },
+                None => rx.try_recv().ok(),
             };
             match msg {
                 Some(Msg::Request(req, resp_tx)) => {
@@ -279,10 +324,13 @@ fn run_engine<B: DecodeBackend>(
         }
 
         // 2. admit from the batcher into fresh backend lanes; prompts are
-        // prefilled in one call when the backend has the path
+        // prefilled in one call when the backend has the path. During
+        // shutdown the deadline is moot (no more requests can join the
+        // batch), so poll as if it had already fired.
         let now = Instant::now();
+        let poll_now = if shutdown { now + batcher.max_wait } else { now };
         let capacity = max_batch - slots.active();
-        for req in batcher.poll(now, capacity) {
+        for req in batcher.poll(poll_now, capacity) {
             // reject prompts the decode loop cannot survive — empty (no
             // token to feed on the first tick) or longer than the position
             // embedding — so one bad request cannot take down the worker
@@ -509,7 +557,11 @@ impl NativeEngine {
                     AttentionKind::Linear,
                     "the native engine decodes with the batched linear-RNN backend"
                 );
-                let mut backend = model.batched_session(cfg.max_batch);
+                // GEMM worker pool: cfg.num_threads (0 = auto). Pooled
+                // kernels are bit-identical to serial, so thread count
+                // never changes what a request gets back.
+                let pool = crate::parallel::pool_for(cfg.num_threads);
+                let mut backend = model.batched_session_with_pool(cfg.max_batch, pool);
                 run_engine(&mut backend, &cfg, rx, stats_w);
             })?;
         Ok(EngineHandle {
@@ -765,7 +817,7 @@ mod tests {
 
     #[test]
     fn serves_single_request() {
-        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 1,
             prompt: vec![1, 2, 3],
@@ -783,7 +835,7 @@ mod tests {
 
     #[test]
     fn serves_concurrent_requests_batched() {
-        let handle = NativeEngine::spawn(
+        let mut handle = NativeEngine::spawn(
             tiny_model(),
             ServeConfig {
                 max_batch: 4,
@@ -825,7 +877,7 @@ mod tests {
     fn deterministic_greedy_responses_match_direct_generation() {
         let model = tiny_model();
         let direct = model.generate(&[1, 2, 3], 5, 0.0, 0);
-        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 9,
             prompt: vec![1, 2, 3],
@@ -854,7 +906,7 @@ mod tests {
             .iter()
             .map(|(p, n)| model.generate(p, *n, 0.0, 0))
             .collect();
-        let handle = NativeEngine::spawn(
+        let mut handle = NativeEngine::spawn(
             tiny_model(),
             ServeConfig {
                 max_batch: 3, // force waves of admission + eviction
@@ -892,7 +944,7 @@ mod tests {
     fn oversized_prompt_is_rejected_not_fatal() {
         let model = tiny_model();
         let max_len = model.cfg.max_len;
-        let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 1,
             prompt: vec![1; max_len + 1],
@@ -924,7 +976,7 @@ mod tests {
     fn respects_max_len_and_reports_truncation() {
         let model = tiny_model();
         let max_len = model.cfg.max_len;
-        let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 2,
             prompt: vec![1; 10],
@@ -950,7 +1002,7 @@ mod tests {
     fn zero_max_new_completes_without_sampling() {
         // regression: the tick loop used to sample (and return) one token
         // before noticing max_new was already satisfied
-        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 5,
             prompt: vec![1, 2, 3],
@@ -980,7 +1032,7 @@ mod tests {
         // the slot ever joins the tick loop
         let model = tiny_model();
         let direct = model.generate(&[2, 3, 4], 1, 0.0, 0);
-        let handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 7,
             prompt: vec![2, 3, 4],
@@ -994,12 +1046,105 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_shutdown_returns_error_response_not_panic() {
+        // regression: submit used to expect("engine worker gone"), so a
+        // connection thread racing a shutdown panicked — and with it the
+        // whole server process
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let ok = handle.generate_blocking(GenerateRequest {
+            id: 1,
+            prompt: vec![1, 2],
+            max_new: 2,
+            temperature: 0.0,
+        });
+        assert!(ok.error.is_none());
+        handle.shutdown();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 42,
+            prompt: vec![1],
+            max_new: 2,
+            temperature: 0.0,
+        });
+        assert_eq!(resp.id, 42);
+        assert!(resp.tokens.is_empty());
+        assert!(
+            resp.error.as_deref().unwrap_or("").contains("engine unavailable"),
+            "expected an engine-unavailable error, got {:?}",
+            resp.error
+        );
+        // shutdown is idempotent
+        handle.shutdown();
+    }
+
+    #[test]
+    fn lone_request_is_admitted_at_the_batcher_deadline() {
+        // with pending batcher entries and no active lanes the loop used
+        // to busy-spin on try_recv until max_wait elapsed; it now blocks
+        // until the deadline — and must still admit the request there
+        let mut handle = NativeEngine::spawn(
+            tiny_model(),
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 60_000, // 60 ms: long enough to observe the wait
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 11,
+            prompt: vec![1, 2],
+            max_new: 2,
+            temperature: 0.0,
+        });
+        let waited = t0.elapsed();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 2);
+        assert!(
+            waited >= Duration::from_millis(55),
+            "an underfull batch must wait out the deadline, waited {waited:?}"
+        );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn explicit_worker_pool_plumbing_matches_serial_engine_output() {
+        // wiring-only check: tiny_model's shapes sit below PAR_MIN_WORK,
+        // so both engines run the serial kernels — this covers the
+        // num_threads -> pool_for -> session plumbing, not pooled
+        // dispatch itself. Kernel-level pooled parity lives in
+        // tensor.rs::pooled_* and rust/tests/batched_parity.rs
+        // (d_model = 128 geometry that crosses the threshold).
+        let mut outs = Vec::new();
+        for num_threads in [1usize, 4] {
+            let mut handle = NativeEngine::spawn(
+                tiny_model(),
+                ServeConfig {
+                    num_threads,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let resp = handle.generate_blocking(GenerateRequest {
+                id: 1,
+                prompt: vec![3, 1, 4, 1, 5],
+                max_new: 8,
+                temperature: 0.0,
+            });
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            outs.push(resp.tokens);
+            handle.shutdown();
+        }
+        assert_eq!(outs[0], outs[1], "thread count must never change generations");
+    }
+
+    #[test]
     fn full_length_prompt_yields_one_truncated_token() {
         // a prompt that already fills max_len leaves room to sample
         // exactly one token from the final position's logits
         let model = tiny_model();
         let max_len = model.cfg.max_len;
-        let handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+        let mut handle = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
         let resp = handle.generate_blocking(GenerateRequest {
             id: 8,
             prompt: vec![1; max_len],

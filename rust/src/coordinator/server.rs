@@ -35,6 +35,10 @@ impl Server {
             .spawn(move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 while !stop_l.load(std::sync::atomic::Ordering::Relaxed) {
+                    // reap finished connection threads: a long-lived
+                    // server must not accumulate one JoinHandle (and its
+                    // retained thread resources) per past connection
+                    conns.retain(|c| !c.is_finished());
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let engine = engine.clone();
@@ -103,6 +107,9 @@ fn handle_conn(stream: TcpStream, engine: Arc<EngineHandle>) {
 
     let mut in_flight: Vec<std::thread::JoinHandle<()>> = Vec::new();
     for line in reader.lines() {
+        // reap completed per-request threads so a connection that
+        // streams many requests stays bounded
+        in_flight.retain(|h| !h.is_finished());
         let line = match line {
             Ok(l) => l,
             Err(_) => break,
@@ -115,12 +122,17 @@ fn handle_conn(stream: TcpStream, engine: Arc<EngineHandle>) {
             .and_then(|j| GenerateRequest::from_json(&j));
         match parsed {
             Ok(req) => {
+                let id = req.id;
                 let rx = engine.submit(req);
                 let tx = resp_tx.clone();
                 in_flight.push(std::thread::spawn(move || {
-                    if let Ok(resp) = rx.recv() {
-                        let _ = tx.send(resp);
-                    }
+                    // a worker that dies after submit drops the responder;
+                    // answer with an error line instead of leaving the
+                    // client waiting forever for this id
+                    let resp = rx
+                        .recv()
+                        .unwrap_or_else(|_| crate::coordinator::engine::engine_gone_response(id));
+                    let _ = tx.send(resp);
                 }));
             }
             Err(e) => {
@@ -216,6 +228,32 @@ mod tests {
         for r in &resps {
             assert_eq!(r.tokens.len(), 4);
             assert!(r.error.is_none());
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn many_sequential_connections_stay_healthy() {
+        // exercises the reaping path: each connection's thread finishes
+        // and is retained-out before the next accept; the server keeps
+        // answering correctly throughout
+        let engine = tiny_engine();
+        let server = Server::start("127.0.0.1:0", engine).unwrap();
+        let addr = server.addr.to_string();
+        for i in 0..20u64 {
+            let resps = request_over_tcp(
+                &addr,
+                &[GenerateRequest {
+                    id: i,
+                    prompt: vec![1, 2],
+                    max_new: 2,
+                    temperature: 0.0,
+                }],
+            )
+            .unwrap();
+            assert_eq!(resps.len(), 1);
+            assert_eq!(resps[0].id, i);
+            assert!(resps[0].error.is_none(), "{:?}", resps[0].error);
         }
         server.stop();
     }

@@ -32,6 +32,7 @@ pub mod data;
 pub mod json;
 pub mod metrics;
 pub mod nn;
+pub mod parallel;
 pub mod propcheck;
 pub mod rng;
 pub mod runtime;

@@ -25,8 +25,8 @@ use linear_transformer::trainer::{self, Trainer};
 const FLAGS: &[&str] = &[
     "task", "variant", "steps", "lr", "lr-drop", "batch-log", "log-every", "csv",
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
-    "prompt-len", "max-new", "temperature", "count", "backend", "weights",
-    "batches", "help-flags",
+    "num-threads", "prompt-len", "max-new", "temperature", "count", "backend",
+    "weights", "batches", "help-flags",
 ];
 
 fn main() {
@@ -187,6 +187,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         bind: args.flag_or("bind", "127.0.0.1:7411"),
         temperature: args.f32_flag("temperature", 1.0)?,
         seed: args.u64_flag("seed", 0)?,
+        // 0 = auto: LINTRA_NUM_THREADS if set, else one thread per core
+        // (resolved by parallel::resolve_threads at pool construction)
+        num_threads: args.usize_flag("num-threads", 0)?,
     };
     let backend = args.flag_or("backend", "native");
     let handle = match backend.as_str() {
@@ -208,8 +211,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let server = Server::start(&serve_cfg.bind, engine.clone())
         .with_context(|| format!("binding {}", serve_cfg.bind))?;
     println!(
-        "serving task={task} backend={backend} on {} (max_batch={})",
-        server.addr, serve_cfg.max_batch
+        "serving task={task} backend={backend} on {} (max_batch={}, gemm_threads={})",
+        server.addr,
+        serve_cfg.max_batch,
+        linear_transformer::parallel::resolve_threads(serve_cfg.num_threads)
     );
     println!("protocol: one json per line: {{\"id\":1,\"prompt\":[0],\"max_new\":16}}");
     // run until ctrl-c

@@ -63,18 +63,17 @@ pub fn phoneme_error_rate(pairs: &[(Vec<u32>, Vec<u32>)]) -> f64 {
 }
 
 /// CTC greedy decode: argmax per frame, collapse repeats, drop blanks.
+///
+/// Per-frame argmax uses the shared NaN-below-all total order
+/// ([`crate::sampling::argmax`]): a NaN log-prob must never panic this
+/// path — it runs inside worker threads, where a panic takes every
+/// in-flight request down — and must never be selected over a real one.
 pub fn ctc_greedy_decode(logp: &[f32], frames: usize, vocab: usize, blank: u32) -> Vec<u32> {
     assert_eq!(logp.len(), frames * vocab);
     let mut out = Vec::new();
     let mut prev = u32::MAX;
     for f in 0..frames {
-        let row = &logp[f * vocab..(f + 1) * vocab];
-        let arg = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0 as u32;
+        let arg = crate::sampling::argmax(&logp[f * vocab..(f + 1) * vocab]);
         if arg != prev && arg != blank {
             out.push(arg);
         }
@@ -83,39 +82,98 @@ pub fn ctc_greedy_decode(logp: &[f32], frames: usize, vocab: usize, blank: u32) 
     out
 }
 
-/// Online latency statistics (stores samples; fine for bench-scale counts).
-#[derive(Debug, Default, Clone)]
+/// Online latency statistics, bounded for long-lived serving.
+///
+/// Keeps a fixed-size reservoir (Algorithm R) of at most
+/// [`LATENCY_RESERVOIR`] samples plus an exact running count/sum, so a
+/// server that has answered millions of requests holds the same few KiB
+/// it held after the first thousand (the previous version stored every
+/// sample forever). The first `LATENCY_RESERVOIR` samples are kept
+/// exactly; past that, percentiles are an unbiased uniform-sample
+/// estimate while `count`/`mean` stay exact.
+#[derive(Debug, Clone)]
 pub struct LatencyRecorder {
     samples: Vec<Duration>,
+    seen: u64,
+    sum: Duration,
+    /// deterministic xorshift state for reservoir replacement
+    rng: u64,
+}
+
+/// Upper bound on samples a [`LatencyRecorder`] retains.
+pub const LATENCY_RESERVOIR: usize = 4096;
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl LatencyRecorder {
     pub fn new() -> Self {
-        Self::default()
+        LatencyRecorder {
+            samples: Vec::new(),
+            seen: 0,
+            sum: Duration::ZERO,
+            rng: 0x243F_6A88_85A3_08D3, // pi digits; any nonzero seed works
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*: cheap, deterministic, good enough for reservoir slots
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples.push(d);
+        self.seen += 1;
+        self.sum += d;
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(d);
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability by replacing a random slot
+            let j = self.next_u64() % self.seen;
+            if (j as usize) < LATENCY_RESERVOIR {
+                self.samples[j as usize] = d;
+            }
+        }
     }
 
+    /// Total samples observed (exact, not capped by the reservoir).
     pub fn count(&self) -> usize {
+        self.seen as usize
+    }
+
+    /// Samples currently held (≤ [`LATENCY_RESERVOIR`]).
+    pub fn stored(&self) -> usize {
         self.samples.len()
     }
 
+    /// Exact mean over every recorded sample.
     pub fn mean(&self) -> Duration {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             return Duration::ZERO;
         }
-        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+        Duration::from_secs_f64(self.sum.as_secs_f64() / self.seen as f64)
+    }
+
+    /// Several percentiles with one clone + sort of the reservoir — the
+    /// path for callers that read p50/p95/p99 together.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<Duration> {
+        let mut s = self.samples.clone();
+        s.sort();
+        qs.iter().map(|&q| percentile_of(&s, q)).collect()
     }
 
     pub fn percentile(&self, q: f64) -> Duration {
-        if self.samples.is_empty() {
-            return Duration::ZERO;
-        }
         let mut s = self.samples.clone();
         s.sort();
-        s[((s.len() - 1) as f64 * q).round() as usize]
+        percentile_of(&s, q)
     }
 
     pub fn p50(&self) -> Duration {
@@ -131,15 +189,25 @@ impl LatencyRecorder {
     }
 
     pub fn summary(&self) -> String {
+        // one sort serves all three percentiles
+        let p = self.percentiles(&[0.50, 0.95, 0.99]);
         format!(
             "n={} mean={:?} p50={:?} p95={:?} p99={:?}",
             self.count(),
             self.mean(),
-            self.p50(),
-            self.p95(),
-            self.p99()
+            p[0],
+            p[1],
+            p[2]
         )
     }
+}
+
+/// Nearest-rank percentile of an already-sorted sample slice.
+fn percentile_of(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
 /// Throughput counter over a wall-clock window.
@@ -245,6 +313,52 @@ mod tests {
         let frames = [1usize, 1, 0, 2, 2, 0, 2];
         let logp: Vec<f32> = frames.iter().flat_map(|&c| mk(c)).collect();
         assert_eq!(ctc_greedy_decode(&logp, frames.len(), v, 0), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn ctc_greedy_survives_nan_frames() {
+        // regression: partial_cmp().unwrap() panicked on any NaN frame —
+        // the exact pattern that used to kill the engine worker in
+        // sampling.rs. NaN must rank below every real log-prob, and an
+        // all-NaN frame must still resolve to a deterministic symbol
+        // (the tie over -inf keys goes to the last index, 2 here).
+        let v = 3;
+        #[rustfmt::skip]
+        let logp = vec![
+            0.0, 1.0, -1.0,               // argmax 1
+            f32::NAN, f32::NAN, f32::NAN, // all NaN -> deterministic 2
+            2.0, f32::NAN, -1.0,          // NaN never beats a real: 0 = blank
+            -1.0, f32::NAN, 2.0,          // NaN ranks below real -> argmax 2
+        ];
+        assert_eq!(ctc_greedy_decode(&logp, 4, v, 0), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn latency_recorder_is_bounded_with_exact_count_and_mean() {
+        let mut r = LatencyRecorder::new();
+        let n = 20_000u64;
+        for i in 1..=n {
+            r.record(Duration::from_micros(i % 1000 + 1));
+        }
+        assert_eq!(r.count() as u64, n, "count must stay exact past the reservoir");
+        assert!(
+            r.stored() <= LATENCY_RESERVOIR,
+            "reservoir must cap retained samples, holds {}",
+            r.stored()
+        );
+        // mean of (1..=1000)µs repeating is ~500.5µs, tracked exactly
+        let mean = r.mean();
+        assert!(
+            mean >= Duration::from_micros(495) && mean <= Duration::from_micros(506),
+            "mean {mean:?} must stay exact"
+        );
+        // percentile estimates stay in the sampled range and ordered
+        assert!(r.p50() >= Duration::from_micros(1));
+        assert!(r.p50() <= r.p95() && r.p95() <= r.p99());
+        assert!(r.p99() <= Duration::from_micros(1000));
+        // the single-sort batch path agrees with the per-call getters
+        let p = r.percentiles(&[0.50, 0.95, 0.99]);
+        assert_eq!(p, vec![r.p50(), r.p95(), r.p99()]);
     }
 
     #[test]

@@ -13,12 +13,15 @@
 
 pub mod lstm;
 
+use std::sync::Arc;
+
 use crate::attention::{linear, lsh, softmax, stateful_softmax, AttentionKind};
 use crate::config::ModelConfig;
+use crate::parallel::ThreadPool;
 use crate::rng::Rng;
 use crate::tensor::{
-    add_bias_rows, gather_cols, gelu, layer_norm_into, layer_norm_rows, matmul_into,
-    scatter_cols, vecmat_into, Tensor,
+    add_bias_rows, gather_cols, gelu, layer_norm_into, layer_norm_rows_pooled,
+    matmul_into_pooled, scatter_cols, vecmat_into, Tensor,
 };
 use crate::weights::{NamedTensor, WeightBundle};
 
@@ -294,9 +297,21 @@ impl TransformerLM {
     /// Create a batched RNN decode session with capacity for `cap` lanes
     /// (linear models only). This is the serving engine's native backend:
     /// one `step_batch` advances every lane by one token through single
-    /// `[B, ·]` GEMMs.
+    /// `[B, ·]` GEMMs. The session's hot kernels run on the process-wide
+    /// worker pool ([`crate::parallel::default_pool`]); results are
+    /// bit-identical to the serial kernels under any thread count.
     pub fn batched_session(&self, cap: usize) -> BatchedDecodeSession<'_> {
-        BatchedDecodeSession::new(self, cap)
+        BatchedDecodeSession::new(self, cap, crate::parallel::default_pool())
+    }
+
+    /// [`Self::batched_session`] with an explicit worker pool (`None`
+    /// runs the plain single-threaded kernels with zero dispatch cost).
+    pub fn batched_session_with_pool(
+        &self,
+        cap: usize,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> BatchedDecodeSession<'_> {
+        BatchedDecodeSession::new(self, cap, pool)
     }
 
     /// Stateful-softmax session (supplementary C.1) — only for softmax models.
@@ -411,6 +426,8 @@ pub struct BatchedDecodeSession<'m> {
     model: &'m TransformerLM,
     cap: usize,
     rows: usize,
+    /// worker pool for the hot kernels (None = pure serial)
+    pool: Option<Arc<ThreadPool>>,
     /// n_layers * n_heads batched states, lane-for-lane in step
     states: Vec<linear::BatchedLinearAttnState>,
     /// absolute position of the next token, per lane
@@ -432,7 +449,7 @@ pub struct BatchedDecodeSession<'m> {
 }
 
 impl<'m> BatchedDecodeSession<'m> {
-    fn new(model: &'m TransformerLM, cap: usize) -> Self {
+    fn new(model: &'m TransformerLM, cap: usize, pool: Option<Arc<ThreadPool>>) -> Self {
         assert_eq!(
             model.kind,
             AttentionKind::Linear,
@@ -450,6 +467,7 @@ impl<'m> BatchedDecodeSession<'m> {
             model,
             cap,
             rows: 0,
+            pool,
             states: (0..cfg.n_layers * cfg.n_heads)
                 .map(|_| linear::BatchedLinearAttnState::new(cap, dh, dh))
                 .collect(),
@@ -471,6 +489,11 @@ impl<'m> BatchedDecodeSession<'m> {
 
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// Threads the session's kernels fan out over (1 = serial).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
     }
 
     /// Live lanes.
@@ -535,6 +558,7 @@ impl<'m> BatchedDecodeSession<'m> {
         if b == 0 {
             return Vec::new();
         }
+        let pool = self.pool.as_deref();
         // x = tok_embed + pos_embed, gathered per lane
         for (r, &tok) in tokens.iter().enumerate() {
             assert!(
@@ -551,23 +575,26 @@ impl<'m> BatchedDecodeSession<'m> {
         }
         for (li, blk) in model.blocks.iter().enumerate() {
             // ln1 -> one [B, e] x [e, e] GEMM per projection
-            layer_norm_rows(
+            layer_norm_rows_pooled(
+                pool,
                 &mut self.normed[..b * e],
                 &self.x[..b * e],
                 &blk.ln1_g.data,
                 &blk.ln1_b.data,
                 b,
             );
-            matmul_into(&mut self.q[..b * e], &self.normed[..b * e], &blk.wq.data, b, e, e);
-            matmul_into(&mut self.k[..b * e], &self.normed[..b * e], &blk.wk.data, b, e, e);
-            matmul_into(&mut self.v[..b * e], &self.normed[..b * e], &blk.wv.data, b, e, e);
+            let normed = &self.normed[..b * e];
+            matmul_into_pooled(pool, &mut self.q[..b * e], normed, &blk.wq.data, b, e, e);
+            matmul_into_pooled(pool, &mut self.k[..b * e], normed, &blk.wk.data, b, e, e);
+            matmul_into_pooled(pool, &mut self.v[..b * e], normed, &blk.wv.data, b, e, e);
             // per head: gather columns, batched RNN update, scatter back
             for hd in 0..h {
                 let col = hd * dh;
                 gather_cols(&mut self.qh[..b * dh], &self.q[..b * e], b, e, col, dh);
                 gather_cols(&mut self.kh[..b * dh], &self.k[..b * e], b, e, col, dh);
                 gather_cols(&mut self.vh[..b * dh], &self.v[..b * e], b, e, col, dh);
-                self.states[li * h + hd].step_batch(
+                self.states[li * h + hd].step_batch_pooled(
+                    pool,
                     &self.qh[..b * dh],
                     &self.kh[..b * dh],
                     &self.vh[..b * dh],
@@ -575,12 +602,21 @@ impl<'m> BatchedDecodeSession<'m> {
                 );
                 scatter_cols(&mut self.merged[..b * e], &self.oh[..b * dh], b, e, col, dh);
             }
-            matmul_into(&mut self.out2[..b * e], &self.merged[..b * e], &blk.wo.data, b, e, e);
+            matmul_into_pooled(
+                pool,
+                &mut self.out2[..b * e],
+                &self.merged[..b * e],
+                &blk.wo.data,
+                b,
+                e,
+                e,
+            );
             for (xv, &ov) in self.x[..b * e].iter_mut().zip(&self.out2[..b * e]) {
                 *xv += ov;
             }
             // ff: [B, e] x [e, d_ff] and [B, d_ff] x [d_ff, e] GEMMs
-            layer_norm_rows(
+            layer_norm_rows_pooled(
+                pool,
                 &mut self.normed[..b * e],
                 &self.x[..b * e],
                 &blk.ln2_g.data,
@@ -588,7 +624,8 @@ impl<'m> BatchedDecodeSession<'m> {
                 b,
             );
             let dff = cfg.d_ff;
-            matmul_into(
+            matmul_into_pooled(
+                pool,
                 &mut self.ff[..b * dff],
                 &self.normed[..b * e],
                 &blk.ff_w1.data,
@@ -602,7 +639,8 @@ impl<'m> BatchedDecodeSession<'m> {
                     *hv = gelu(*hv + bv);
                 }
             }
-            matmul_into(
+            matmul_into_pooled(
+                pool,
                 &mut self.out2[..b * e],
                 &self.ff[..b * dff],
                 &blk.ff_w2.data,
@@ -616,7 +654,8 @@ impl<'m> BatchedDecodeSession<'m> {
             add_bias_rows(&mut self.x[..b * e], &blk.ff_b2.data, b);
         }
         // final ln + one [B, e] x [e, vocab] GEMM
-        layer_norm_rows(
+        layer_norm_rows_pooled(
+            pool,
             &mut self.normed[..b * e],
             &self.x[..b * e],
             &model.final_ln_g.data,
@@ -625,7 +664,8 @@ impl<'m> BatchedDecodeSession<'m> {
         );
         let vocab = cfg.vocab;
         let mut logits = vec![0.0f32; b * vocab];
-        matmul_into(&mut logits, &self.normed[..b * e], &model.head_w.data, b, e, vocab);
+        let normed = &self.normed[..b * e];
+        matmul_into_pooled(pool, &mut logits, normed, &model.head_w.data, b, e, vocab);
         add_bias_rows(&mut logits, &model.head_b.data, b);
         for p in self.pos.iter_mut() {
             *p += 1;
@@ -659,6 +699,7 @@ impl<'m> BatchedDecodeSession<'m> {
             self.pos[row],
             cfg.max_len
         );
+        let pool = self.pool.as_deref();
         let mut logits = vec![0.0f32; cfg.vocab];
         let mut off = 0;
         while off < prompt.len() {
@@ -676,16 +717,18 @@ impl<'m> BatchedDecodeSession<'m> {
             }
             for (li, blk) in model.blocks.iter().enumerate() {
                 // ln1 -> one [chunk, e] x [e, e] GEMM per projection
-                layer_norm_rows(
+                layer_norm_rows_pooled(
+                    pool,
                     &mut self.normed[..n * e],
                     &self.x[..n * e],
                     &blk.ln1_g.data,
                     &blk.ln1_b.data,
                     n,
                 );
-                matmul_into(&mut self.q[..n * e], &self.normed[..n * e], &blk.wq.data, n, e, e);
-                matmul_into(&mut self.k[..n * e], &self.normed[..n * e], &blk.wk.data, n, e, e);
-                matmul_into(&mut self.v[..n * e], &self.normed[..n * e], &blk.wv.data, n, e, e);
+                let normed = &self.normed[..n * e];
+                matmul_into_pooled(pool, &mut self.q[..n * e], normed, &blk.wq.data, n, e, e);
+                matmul_into_pooled(pool, &mut self.k[..n * e], normed, &blk.wk.data, n, e, e);
+                matmul_into_pooled(pool, &mut self.v[..n * e], normed, &blk.wv.data, n, e, e);
                 // per head: the chunk flows through the causal recurrence
                 // of this lane only; other lanes' states are untouched
                 for hd in 0..h {
@@ -703,19 +746,22 @@ impl<'m> BatchedDecodeSession<'m> {
                     );
                     scatter_cols(&mut self.merged[..n * e], &self.oh[..n * dh], n, e, col, dh);
                 }
-                matmul_into(&mut self.out2[..n * e], &self.merged[..n * e], &blk.wo.data, n, e, e);
+                let merged = &self.merged[..n * e];
+                matmul_into_pooled(pool, &mut self.out2[..n * e], merged, &blk.wo.data, n, e, e);
                 for (xv, &ov) in self.x[..n * e].iter_mut().zip(&self.out2[..n * e]) {
                     *xv += ov;
                 }
                 // ff: [chunk, e] x [e, d_ff] and [chunk, d_ff] x [d_ff, e]
-                layer_norm_rows(
+                layer_norm_rows_pooled(
+                    pool,
                     &mut self.normed[..n * e],
                     &self.x[..n * e],
                     &blk.ln2_g.data,
                     &blk.ln2_b.data,
                     n,
                 );
-                matmul_into(
+                matmul_into_pooled(
+                    pool,
                     &mut self.ff[..n * dff],
                     &self.normed[..n * e],
                     &blk.ff_w1.data,
@@ -729,7 +775,8 @@ impl<'m> BatchedDecodeSession<'m> {
                         *hv = gelu(*hv + bv);
                     }
                 }
-                matmul_into(
+                matmul_into_pooled(
+                    pool,
                     &mut self.out2[..n * e],
                     &self.ff[..n * dff],
                     &blk.ff_w2.data,

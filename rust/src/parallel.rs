@@ -1,0 +1,465 @@
+//! Persistent worker pool for the hot decode/prefill kernels.
+//!
+//! The paper's recurrence makes decode compute-bound on a handful of
+//! `[B, ·]` GEMMs per tick; this module supplies the threads that keep
+//! every core busy during those GEMMs without changing a single float.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bit-identical results.** The pool never splits a reduction: work
+//!    is partitioned over *output rows/lanes only* (see
+//!    [`ThreadPool::for_row_blocks`]), so each row is produced by exactly
+//!    the serial kernel's float-op order and `parallel == serial` holds
+//!    bitwise. The parity suites assert this directly.
+//! 2. **Spawn once.** Threads are created at pool construction and live
+//!    until drop — a decode tick dispatches ~dozens of kernels, and
+//!    per-kernel thread spawning would dwarf the work.
+//! 3. **Low dispatch latency, no idle burn.** Workers spin briefly on an
+//!    atomic epoch (microseconds) before parking on a condvar, so
+//!    back-to-back kernels within one tick stay hot while an idle engine
+//!    costs no CPU.
+//!
+//! Thread-count resolution (see [`resolve_threads`]): an explicit count
+//! wins, `0` means "auto" — the `LINTRA_NUM_THREADS` environment variable
+//! if set, else one thread per available core. The process-wide
+//! [`default_pool`] backs sessions that don't pick a pool themselves; CI
+//! runs the test suite both with `LINTRA_NUM_THREADS=1` (pure serial
+//! paths) and unset (pooled paths).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Spin iterations before a waiter parks on its condvar. At ~1 ns per
+/// iteration this bridges the gap between consecutive kernels of one
+/// decode tick; an idle engine parks its workers within microseconds.
+const SPIN_BEFORE_PARK: usize = 8 * 1024;
+
+/// Lifetime-erased pointer to the dispatcher's job closure.
+///
+/// Only ever dereferenced by pool workers *while the dispatcher blocks
+/// inside [`ThreadPool::broadcast`]*, which does not return until every
+/// worker has finished the job — so the pointee outlives every call.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (concurrent shared calls are allowed) and
+// `broadcast` keeps it alive until all workers are done with it.
+unsafe impl Send for JobPtr {}
+
+/// The current job, present only while a broadcast is in flight.
+struct JobSlot {
+    f: Option<JobPtr>,
+}
+
+struct Shared {
+    /// Published under this lock *before* `epoch` is bumped.
+    job: Mutex<JobSlot>,
+    /// Workers park here when the spin budget runs out.
+    start: Condvar,
+    /// Bumped once per broadcast (Release after the job is published).
+    epoch: AtomicU64,
+    /// Workers that have not yet finished the current job.
+    remaining: AtomicUsize,
+    /// Set by a worker whose job closure panicked; re-raised by the
+    /// dispatcher so pooled kernels keep serial panic semantics.
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+    /// Dispatcher parks here waiting for `remaining` to hit zero.
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+/// A spawn-once pool of `threads - 1` workers plus the dispatching
+/// thread itself (the dispatcher always runs worker index 0, so a pool
+/// of N threads uses exactly N cores during a job).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes broadcasts so the pool can be shared across engines.
+    dispatch: Mutex<()>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool that uses `threads` cores per job (clamped to >= 1;
+    /// a 1-thread pool runs every job inline on the dispatcher).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            job: Mutex::new(JobSlot { f: None }),
+            start: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for i in 1..threads {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("lintra-pool-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool {
+            shared,
+            handles,
+            dispatch: Mutex::new(()),
+            threads,
+        }
+    }
+
+    /// Cores this pool uses per job (including the dispatching thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker_index)` once per pool thread (indices `0..threads`),
+    /// returning only after every call has completed. `f` may borrow
+    /// stack data: the borrow is safe because this call blocks until all
+    /// workers are done with it. Panics in any `f` call are re-raised
+    /// here (after all workers finished), matching serial semantics.
+    ///
+    /// Do not call `broadcast` from inside a job closure — the dispatch
+    /// lock is not reentrant.
+    pub fn broadcast(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        let _dispatch = self.dispatch.lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: the erased borrow is only reachable through `JobPtr`
+        // while this function blocks (see `wait_done` below), so the
+        // closure strictly outlives every worker's use of it.
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        {
+            let mut slot = self.shared.job.lock().unwrap_or_else(|p| p.into_inner());
+            slot.f = Some(JobPtr(erased as *const (dyn Fn(usize) + Sync)));
+            self.shared.remaining.store(self.threads - 1, Ordering::Release);
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            self.shared.start.notify_all();
+        }
+        // the dispatcher is worker 0; catch a local panic so we still
+        // wait for the workers (they borrow f's captures) before unwinding
+        let local = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        self.wait_done();
+        self.shared.job.lock().unwrap_or_else(|p| p.into_inner()).f = None;
+        if self.shared.panicked.swap(false, Ordering::AcqRel) {
+            panic!("pool worker panicked during a broadcast job");
+        }
+        if let Err(p) = local {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Partition `out` (a `[rows, width]` row-major block) into one
+    /// contiguous row range per pool thread and run
+    /// `f(first_row, block)` on each range concurrently.
+    ///
+    /// Rows are never split, so a kernel that computes each output row
+    /// exactly like its serial counterpart stays bit-identical under any
+    /// thread count — the partition only decides ownership.
+    pub fn for_row_blocks<F>(&self, rows: usize, width: usize, out: &mut [f32], f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        assert_eq!(out.len(), rows * width, "for_row_blocks: out is not [rows, width]");
+        if rows == 0 {
+            return;
+        }
+        let parts = self.threads.min(rows);
+        if parts <= 1 {
+            f(0, out);
+            return;
+        }
+        // split at row boundaries into one cell per participating worker
+        let mut cells: Vec<Mutex<Option<(usize, &mut [f32])>>> = Vec::with_capacity(parts);
+        let mut rest = out;
+        for i in 0..parts {
+            let lo = i * rows / parts;
+            let hi = (i + 1) * rows / parts;
+            let (blk, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * width);
+            cells.push(Mutex::new(Some((lo, blk))));
+            rest = tail;
+        }
+        self.broadcast(&|wi| {
+            if let Some(cell) = cells.get(wi) {
+                let taken = cell.lock().unwrap_or_else(|p| p.into_inner()).take();
+                if let Some((row0, blk)) = taken {
+                    f(row0, blk);
+                }
+            }
+        });
+    }
+
+    /// Block until every worker has finished the current job: spin
+    /// briefly (workers usually finish within microseconds of the
+    /// dispatcher's own share), then park on the done condvar.
+    fn wait_done(&self) {
+        let sh = &self.shared;
+        let mut spins = 0usize;
+        while sh.remaining.load(Ordering::Acquire) != 0 {
+            spins += 1;
+            if spins < SPIN_BEFORE_PARK {
+                std::hint::spin_loop();
+            } else {
+                let guard = sh.done.lock().unwrap_or_else(|p| p.into_inner());
+                if sh.remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                // timed wait: belt-and-suspenders against a lost notify
+                let (_guard, _timeout) = sh
+                    .done_cv
+                    .wait_timeout(guard, Duration::from_millis(1))
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let _slot = self.shared.job.lock().unwrap_or_else(|p| p.into_inner());
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        // 1. wait for a fresh epoch: bounded spin, then park
+        let mut spins = 0usize;
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let e = shared.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break;
+            }
+            spins += 1;
+            if spins < SPIN_BEFORE_PARK {
+                std::hint::spin_loop();
+            } else {
+                // recheck under the job lock: the dispatcher bumps the
+                // epoch while holding it, so no wakeup can be lost
+                let guard = shared.job.lock().unwrap_or_else(|p| p.into_inner());
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if shared.epoch.load(Ordering::Acquire) == seen {
+                    let _g = shared.start.wait(guard).unwrap_or_else(|p| p.into_inner());
+                }
+                spins = 0;
+            }
+        }
+        // 2. run the job for this worker's index
+        let job = shared.job.lock().unwrap_or_else(|p| p.into_inner()).f;
+        if let Some(JobPtr(ptr)) = job {
+            // SAFETY: see JobPtr — the dispatcher blocks until
+            // `remaining` hits zero, keeping the closure alive.
+            let call = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (unsafe { &*ptr })(index)
+            }));
+            if call.is_err() {
+                shared.panicked.store(true, Ordering::Release);
+            }
+        }
+        // 3. report completion; the last finisher wakes the dispatcher
+        if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = shared.done.lock().unwrap_or_else(|p| p.into_inner());
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread-count resolution + the process-wide default pool
+// ---------------------------------------------------------------------------
+
+/// Resolve a thread-count request: `n >= 1` is explicit, `0` means auto
+/// (`LINTRA_NUM_THREADS` if set to a positive integer, else one thread
+/// per available core). Every path is clamped to
+/// [`crate::config::MAX_NUM_THREADS`] so an absurd request degrades to a
+/// large pool instead of panicking thread creation mid-serve.
+pub fn resolve_threads(requested: usize) -> usize {
+    let cap = crate::config::MAX_NUM_THREADS;
+    if requested >= 1 {
+        return requested.min(cap);
+    }
+    if let Ok(v) = std::env::var("LINTRA_NUM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(cap);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cap)
+}
+
+static DEFAULT_POOL: OnceLock<Option<Arc<ThreadPool>>> = OnceLock::new();
+
+/// The process-wide pool, sized by [`resolve_threads`]`(0)` on first
+/// use. `None` when the resolved count is 1 — callers then run the
+/// plain serial kernels with zero dispatch overhead.
+pub fn default_pool() -> Option<Arc<ThreadPool>> {
+    DEFAULT_POOL
+        .get_or_init(|| {
+            let n = resolve_threads(0);
+            if n <= 1 {
+                None
+            } else {
+                Some(Arc::new(ThreadPool::new(n)))
+            }
+        })
+        .clone()
+}
+
+/// Pool for an explicit request: `0` shares [`default_pool`], `1` is
+/// pure serial (no pool at all), `n > 1` builds a dedicated pool
+/// (clamped like every [`resolve_threads`] path).
+pub fn pool_for(requested: usize) -> Option<Arc<ThreadPool>> {
+    match requested {
+        0 => default_pool(),
+        1 => None,
+        n => Some(Arc::new(ThreadPool::new(resolve_threads(n)))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_runs_every_worker_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.broadcast(&|wi| {
+                hits[wi].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (wi, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 50, "worker {wi} ran a wrong number of jobs");
+        }
+    }
+
+    #[test]
+    fn for_row_blocks_covers_every_row_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for rows in [1usize, 2, 3, 7, 64] {
+            let width = 5;
+            let mut out = vec![-1.0f32; rows * width];
+            pool.for_row_blocks(rows, width, &mut out, |row0, blk| {
+                let nrows = blk.len() / width;
+                for r in 0..nrows {
+                    for c in 0..width {
+                        assert_eq!(blk[r * width + c], -1.0, "row visited twice");
+                        blk[r * width + c] = (row0 + r) as f32;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..width {
+                    assert_eq!(out[r * width + c], r as f32, "row {r} missing or misrouted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_workers_without_leaking() {
+        let pool = ThreadPool::new(4);
+        pool.broadcast(&|_| {});
+        let shared = pool.shared.clone();
+        drop(pool);
+        // drop joined every worker thread, so ours is the only Arc left
+        assert_eq!(Arc::strong_count(&shared), 1, "a pool worker outlived drop");
+    }
+
+    #[test]
+    fn one_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut out = vec![0.0f32; 8];
+        pool.for_row_blocks(4, 2, &mut out, |row0, blk| {
+            for v in blk.iter_mut() {
+                *v = row0 as f32 + 1.0;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1.0), "inline path must see row0 == 0");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_stays_usable() {
+        let pool = ThreadPool::new(3);
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.broadcast(&|wi| {
+                if wi == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err(), "a worker panic must surface on the dispatcher");
+        // the pool must still dispatch correctly afterwards
+        let count = AtomicUsize::new(0);
+        pool.broadcast(&|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_are_serialized_safely() {
+        let pool = ThreadPool::new(4);
+        std::thread::scope(|s| {
+            for t in 0..3 {
+                let pool = &pool;
+                s.spawn(move || {
+                    let width = 8;
+                    let rows = 16;
+                    for round in 0..25 {
+                        let mut out = vec![0.0f32; rows * width];
+                        pool.for_row_blocks(rows, width, &mut out, |row0, blk| {
+                            let nrows = blk.len() / width;
+                            for r in 0..nrows {
+                                for c in 0..width {
+                                    blk[r * width + c] = (t * 1000 + round + row0 + r) as f32;
+                                }
+                            }
+                        });
+                        for r in 0..rows {
+                            for c in 0..width {
+                                assert_eq!(out[r * width + c], (t * 1000 + round + r) as f32);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn resolve_threads_explicit_wins() {
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1), 1);
+        assert!(resolve_threads(0) >= 1, "auto must resolve to at least one thread");
+    }
+}

@@ -154,6 +154,136 @@ pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: u
     }
 }
 
+// ---------------------------------------------------------------------------
+// pooled kernel variants (multi-core, bit-identical to the serial forms)
+// ---------------------------------------------------------------------------
+//
+// Each `_pooled` kernel partitions its work over *output rows/lanes only*
+// and runs the plain serial kernel on every block, so the float-op order
+// of each output row is unchanged and `pooled == serial` holds bitwise
+// under any thread count (asserted by the `pooled_*` tests below and the
+// batched-parity suites). `None` (or work under the fan-out threshold)
+// falls straight through to the serial kernel.
+
+use crate::parallel::ThreadPool;
+
+/// Mul-add count below which a pooled GEMM-shaped kernel stays serial:
+/// one pool dispatch costs a few microseconds, so only real work fans out.
+pub const PAR_MIN_WORK: usize = 16 * 1024;
+
+/// Element count below which pooled row-wise kernels (layer norm) stay
+/// serial — cheaper per element than a GEMM row, so the bar is lower.
+pub const PAR_MIN_ROW_ELEMS: usize = 2048;
+
+/// [`matmul_into`] partitioned over row blocks of `c` across the pool.
+pub fn matmul_into_pooled(
+    pool: Option<&ThreadPool>,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && m >= 2 && m * k * n >= PAR_MIN_WORK => {
+            assert_eq!(a.len(), m * k);
+            assert_eq!(b.len(), k * n);
+            assert_eq!(c.len(), m * n);
+            p.for_row_blocks(m, n, c, |row0, cblk| {
+                let rows = cblk.len() / n;
+                matmul_into(cblk, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
+            });
+        }
+        _ => matmul_into(c, a, b, m, k, n),
+    }
+}
+
+/// [`batched_outer_acc`] partitioned over lanes of `s` across the pool.
+pub fn batched_outer_acc_pooled(
+    pool: Option<&ThreadPool>,
+    s: &mut [f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    d: usize,
+    m: usize,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && b >= 2 && b * d * m >= PAR_MIN_WORK => {
+            assert_eq!(s.len(), b * d * m);
+            assert_eq!(k.len(), b * d);
+            assert_eq!(v.len(), b * m);
+            p.for_row_blocks(b, d * m, s, |r0, sblk| {
+                let lanes = sblk.len() / (d * m);
+                batched_outer_acc(
+                    sblk,
+                    &k[r0 * d..(r0 + lanes) * d],
+                    &v[r0 * m..(r0 + lanes) * m],
+                    lanes,
+                    d,
+                    m,
+                );
+            });
+        }
+        _ => batched_outer_acc(s, k, v, b, d, m),
+    }
+}
+
+/// [`batched_contract`] partitioned over lanes of `out` across the pool.
+pub fn batched_contract_pooled(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    q: &[f32],
+    s: &[f32],
+    b: usize,
+    d: usize,
+    m: usize,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && b >= 2 && b * d * m >= PAR_MIN_WORK => {
+            assert_eq!(out.len(), b * m);
+            assert_eq!(q.len(), b * d);
+            assert_eq!(s.len(), b * d * m);
+            p.for_row_blocks(b, m, out, |r0, oblk| {
+                let lanes = oblk.len() / m;
+                batched_contract(
+                    oblk,
+                    &q[r0 * d..(r0 + lanes) * d],
+                    &s[r0 * d * m..(r0 + lanes) * d * m],
+                    lanes,
+                    d,
+                    m,
+                );
+            });
+        }
+        _ => batched_contract(out, q, s, b, d, m),
+    }
+}
+
+/// [`layer_norm_rows`] partitioned over rows of `out` across the pool.
+pub fn layer_norm_rows_pooled(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    b: usize,
+) {
+    let n = gamma.len();
+    match pool {
+        Some(p) if p.threads() > 1 && b >= 2 && b * n >= PAR_MIN_ROW_ELEMS => {
+            assert_eq!(out.len(), b * n);
+            assert_eq!(x.len(), b * n);
+            p.for_row_blocks(b, n, out, |r0, oblk| {
+                let rows = oblk.len() / n;
+                layer_norm_rows(oblk, &x[r0 * n..(r0 + rows) * n], gamma, beta, rows);
+            });
+        }
+        _ => layer_norm_rows(out, x, gamma, beta, b),
+    }
+}
+
 /// a[m,k] @ b[k,n] allocating the output.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
@@ -593,6 +723,65 @@ mod tests {
                     assert_eq!(dst[r * cols + c], expect);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pooled_matmul_is_bitwise_serial() {
+        // shapes on both sides of the fan-out threshold, odd sizes included
+        let pool = crate::parallel::ThreadPool::new(4);
+        let mut rng = Rng::new(40);
+        for &(m, k, n) in &[(1usize, 8usize, 8usize), (7, 33, 65), (33, 64, 96), (64, 128, 128)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut serial = vec![0.0; m * n];
+            matmul_into(&mut serial, &a, &b, m, k, n);
+            let mut pooled = vec![0.0; m * n];
+            matmul_into_pooled(Some(&pool), &mut pooled, &a, &b, m, k, n);
+            assert_eq!(pooled, serial, "pooled matmul {m}x{k}x{n} must be bit-identical");
+            let mut unpooled = vec![0.0; m * n];
+            matmul_into_pooled(None, &mut unpooled, &a, &b, m, k, n);
+            assert_eq!(unpooled, serial, "None pool must run the serial kernel");
+        }
+    }
+
+    #[test]
+    fn pooled_batched_kernels_are_bitwise_serial() {
+        let pool = crate::parallel::ThreadPool::new(4);
+        let mut rng = Rng::new(41);
+        for &(b, d, m) in &[(3usize, 4usize, 5usize), (9, 32, 48), (16, 32, 64), (5, 64, 64)] {
+            let k = rng.normal_vec(b * d, 1.0);
+            let v = rng.normal_vec(b * m, 1.0);
+            let q = rng.normal_vec(b * d, 1.0);
+            let s0 = rng.normal_vec(b * d * m, 1.0);
+
+            let mut s_serial = s0.clone();
+            batched_outer_acc(&mut s_serial, &k, &v, b, d, m);
+            let mut s_pooled = s0.clone();
+            batched_outer_acc_pooled(Some(&pool), &mut s_pooled, &k, &v, b, d, m);
+            assert_eq!(s_pooled, s_serial, "outer_acc [{b},{d},{m}] must be bit-identical");
+
+            let mut o_serial = vec![0.0; b * m];
+            batched_contract(&mut o_serial, &q, &s_serial, b, d, m);
+            let mut o_pooled = vec![0.0; b * m];
+            batched_contract_pooled(Some(&pool), &mut o_pooled, &q, &s_pooled, b, d, m);
+            assert_eq!(o_pooled, o_serial, "contract [{b},{d},{m}] must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn pooled_layer_norm_is_bitwise_serial() {
+        let pool = crate::parallel::ThreadPool::new(4);
+        let mut rng = Rng::new(42);
+        for &(b, n) in &[(3usize, 8usize), (17, 96), (64, 64)] {
+            let x = rng.normal_vec(b * n, 1.0);
+            let gamma = rng.normal_vec(n, 1.0);
+            let beta = rng.normal_vec(n, 1.0);
+            let mut serial = vec![0.0; b * n];
+            layer_norm_rows(&mut serial, &x, &gamma, &beta, b);
+            let mut pooled = vec![0.0; b * n];
+            layer_norm_rows_pooled(Some(&pool), &mut pooled, &x, &gamma, &beta, b);
+            assert_eq!(pooled, serial, "layer norm [{b},{n}] must be bit-identical");
         }
     }
 

@@ -227,7 +227,7 @@ fn engine_prefill_matches_direct_generation_with_long_prompts() {
         .iter()
         .map(|(p, n)| model.generate(p, *n, 0.0, 0))
         .collect();
-    let handle = NativeEngine::spawn(
+    let mut handle = NativeEngine::spawn(
         model,
         ServeConfig {
             max_batch: 2,
@@ -262,6 +262,118 @@ fn engine_prefill_matches_direct_generation_with_long_prompts() {
 }
 
 #[test]
+fn pooled_session_is_bitwise_identical_to_serial_session() {
+    // same model, same token streams: a session on a 4-thread pool must
+    // produce the exact bits of a session with no pool, for both the
+    // decode tick and chunk-crossing prefill
+    let cfg = ModelConfig {
+        vocab: 32,
+        d_model: 128,
+        n_heads: 4,
+        n_layers: 2,
+        max_len: 192,
+        d_ff: 256,
+        chunk: 16,
+        causal: true,
+        lsh_rounds: 1,
+        lsh_buckets: 8,
+        lsh_chunk: 8,
+    };
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 7);
+    let pool = std::sync::Arc::new(linear_transformer::parallel::ThreadPool::new(4));
+    let mut serial = model.batched_session_with_pool(3, None);
+    let mut pooled = model.batched_session_with_pool(3, Some(pool));
+    assert_eq!(pooled.pool_threads(), 4);
+    for _ in 0..3 {
+        serial.alloc_row().unwrap();
+        pooled.alloc_row().unwrap();
+    }
+    // prefill lane 1 across a PREFILL_CHUNK boundary
+    let prompt = stream(100, cfg.vocab, 6000);
+    let a = serial.prefill_row(1, &prompt);
+    let b = pooled.prefill_row(1, &prompt);
+    assert_eq!(a, b, "pooled prefill logits must be bit-identical");
+    // then tick all three lanes together for a while
+    for t in 0..12 {
+        let mut tick = Vec::new();
+        for r in 0..3usize {
+            tick.push(((t * 3 + r) % cfg.vocab) as u32);
+        }
+        let la = serial.step_batch(&tick);
+        let lb = pooled.step_batch(&tick);
+        assert_eq!(la, lb, "pooled decode tick {t} must be bit-identical");
+    }
+}
+
+#[test]
+fn engine_with_worker_pool_matches_direct_generation_under_churn() {
+    // num_threads = 4, on a geometry wide enough that the decode tick and
+    // the prefill chunk pass actually cross the pooled kernels' fan-out
+    // threshold (d_model 128: a [3, 128] x [128, 128] projection GEMM is
+    // ~49k mul-adds). Ragged prompt/decode lengths against max_batch = 3
+    // force queued admission, early finishes, and lane compaction while
+    // the pool is live; greedy outputs must equal direct generation
+    // bit-for-bit because pooled kernels partition output rows only.
+    let cfg = ModelConfig {
+        vocab: 32,
+        d_model: 128,
+        n_heads: 4,
+        n_layers: 2,
+        max_len: 192,
+        d_ff: 256,
+        chunk: 16,
+        causal: true,
+        lsh_rounds: 1,
+        lsh_buckets: 8,
+        lsh_chunk: 8,
+    };
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 99);
+    let cases: Vec<(Vec<u32>, usize)> = vec![
+        (stream(100, cfg.vocab, 5000), 6), // crosses a PREFILL_CHUNK boundary
+        (stream(2, cfg.vocab, 5001), 12),
+        (stream(70, cfg.vocab, 5002), 4),
+        (stream(9, cfg.vocab, 5003), 9),
+        (stream(33, cfg.vocab, 5004), 1),
+    ];
+    let direct: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| model.generate(p, *n, 0.0, 0))
+        .collect();
+    let mut handle = NativeEngine::spawn(
+        model,
+        ServeConfig {
+            max_batch: 3,
+            max_wait_us: 500,
+            num_threads: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, n))| {
+            handle.submit(GenerateRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: *n,
+                temperature: 0.0,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(
+            resp.tokens, direct[resp.id as usize],
+            "request {} diverged from direct generation under a 4-thread pool",
+            resp.id
+        );
+    }
+    handle.shutdown();
+}
+
+#[test]
 fn engine_greedy_outputs_invariant_to_batch_size() {
     // the same request mix must produce identical greedy generations at
     // max_batch 1 (fully sequential) and max_batch 8 (fully batched)
@@ -272,7 +384,7 @@ fn engine_greedy_outputs_invariant_to_batch_size() {
     let mut per_batch: Vec<Vec<Vec<u32>>> = Vec::new();
     for max_batch in [1usize, 8] {
         let model = TransformerLM::init(&cfg, AttentionKind::Linear, 42);
-        let handle = NativeEngine::spawn(
+        let mut handle = NativeEngine::spawn(
             model,
             ServeConfig {
                 max_batch,

@@ -17,7 +17,7 @@ fn artifacts_dir() -> Option<String> {
 fn pjrt_engine_serves_batched_requests() {
     let Some(dir) = artifacts_dir() else { return };
     // mnist decode artifact exists at b=1 and b=32; use b=1 for speed here
-    let handle = PjrtEngine::spawn(
+    let mut handle = PjrtEngine::spawn(
         PjrtEngineSpec {
             artifacts_dir: dir,
             task: "copy".into(),
