@@ -13,8 +13,11 @@
 //! GEMMs, lm-head once). The thread sweep reruns the B=16 decode tick and
 //! the 512-token prefill at threads ∈ {1, 2, 4, max}; pooled kernels are
 //! bit-identical to serial, so the sweep asserts unchanged first tokens
-//! while measuring the multi-core speedup. Emits machine-readable
-//! `BENCH_decode.json`.
+//! while measuring the multi-core speedup. The mixed-traffic section
+//! measures what incremental prefill scheduling buys: resident-lane
+//! decode tick latency (p50/max) while a 512-token prompt admits, with
+//! the prompt landing in one shot vs one `PREFILL_CHUNK` per tick.
+//! Emits machine-readable `BENCH_decode.json`.
 //!
 //! Run: cargo run --release --example perf_decode -- [steps]
 
@@ -202,6 +205,83 @@ fn main() {
         ));
     }
 
+    // --- mixed traffic: resident decode tick latency while a 512-token
+    // prompt admits, one-shot vs incremental (1 chunk/tick) ---
+    //
+    // Mirrors the engine's schedule at the session level so the numbers
+    // are deterministic: B_RES resident lanes prefix-step every tick; a
+    // new lane admits its prompt either in one prefill_row call (the
+    // tick that admits it stalls for the whole prompt) or one
+    // PREFILL_CHUNK per tick via prefill_row_partial (admission work
+    // bounded per tick). Reported: resident per-tick latency p50/max in
+    // each mode. The admitted lane's first token is asserted identical.
+    const B_RES: usize = 8;
+    let chunk = linear_transformer::nn::PREFILL_CHUNK;
+    let n_chunks = prompt_len.div_ceil(chunk);
+    let warm = 16usize;
+
+    let run_mixed = |incremental: bool| -> (Vec<f64>, u32) {
+        let vocab = cfg.vocab;
+        let mut sess = model.batched_session_with_pool(B_RES + 1, None);
+        for _ in 0..B_RES {
+            sess.alloc_row().expect("capacity");
+        }
+        let mut tokens: Vec<u32> = (0..B_RES).map(|r| (r % cfg.vocab) as u32).collect();
+        let mut tick_ms = Vec::new();
+        let mut first_token = 0u32;
+        // warm ticks, then the admission ticks, then a few cool-down ticks
+        for tick in 0..warm + n_chunks + 4 {
+            let t0 = std::time::Instant::now();
+            if tick == warm {
+                let admitted = sess.alloc_row().expect("capacity");
+                if !incremental {
+                    // one-shot: the whole prompt lands inside this tick
+                    let logits = sess.prefill_row(admitted, &prompt);
+                    first_token = linear_transformer::sampling::argmax(&logits);
+                }
+            }
+            if incremental && (warm..warm + n_chunks).contains(&tick) {
+                let off = (tick - warm) * chunk;
+                let end = (off + chunk).min(prompt_len);
+                let finish = end == prompt_len;
+                let logits = sess.prefill_row_partial(B_RES, &prompt[off..end], finish);
+                if let Some(l) = logits {
+                    first_token = linear_transformer::sampling::argmax(&l);
+                }
+            }
+            // the resident lanes' decode tick (prefix step: the admitting
+            // lane joins only after its final prompt position lands)
+            let logits = sess.step_batch(&tokens);
+            for (r, tok) in tokens.iter_mut().enumerate() {
+                *tok = linear_transformer::sampling::argmax(&logits[r * vocab..(r + 1) * vocab]);
+            }
+            tick_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        (tick_ms, first_token)
+    };
+
+    let (oneshot_ticks, oneshot_first) = run_mixed(false);
+    let (incr_ticks, incr_first) = run_mixed(true);
+    assert_eq!(
+        oneshot_first, incr_first,
+        "incremental admission must reproduce the one-shot first token"
+    );
+    let stats_of = |ticks: &[f64]| {
+        let mut s: Vec<f64> = ticks.to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        (s[s.len() / 2], s[s.len() - 1]) // (p50, max)
+    };
+    let (oneshot_p50, oneshot_max) = stats_of(&oneshot_ticks);
+    let (incr_p50, incr_max) = stats_of(&incr_ticks);
+    println!("\nmixed traffic ({B_RES} resident lanes, {prompt_len}-token prompt admitting):");
+    println!("{:>12} {:>14} {:>14}", "mode", "tick p50 ms", "tick max ms");
+    println!("{:>12} {oneshot_p50:>13.2} {oneshot_max:>13.2}", "one-shot");
+    println!("{:>12} {incr_p50:>13.2} {incr_max:>13.2}", "incremental");
+    println!(
+        "(one-shot's max tick absorbs the whole prompt; incremental bounds it \
+         to one {chunk}-token chunk per tick)"
+    );
+
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
         ("steps_per_lane", Json::Num(steps as f64)),
@@ -216,6 +296,18 @@ fn main() {
             ]),
         ),
         ("thread_sweep", Json::Arr(sweep_rows)),
+        (
+            "mixed_traffic",
+            obj(vec![
+                ("resident_lanes", Json::Num(B_RES as f64)),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("oneshot_tick_p50_ms", Json::Num(oneshot_p50)),
+                ("oneshot_tick_max_ms", Json::Num(oneshot_max)),
+                ("incremental_tick_p50_ms", Json::Num(incr_p50)),
+                ("incremental_tick_max_ms", Json::Num(incr_max)),
+                ("stall_reduction", Json::Num(oneshot_max / incr_max)),
+            ]),
+        ),
     ]);
     match std::fs::write("BENCH_decode.json", report.to_string()) {
         Ok(()) => println!("[json] BENCH_decode.json"),

@@ -414,6 +414,24 @@ impl BatchedLinearAttnState {
         Some(r)
     }
 
+    /// Swap lanes `a` and `b` (state and normalizer rows). O(d·m), the
+    /// same cost as a [`Self::swap_remove_row`] compaction move. The
+    /// serving engine uses this to keep decoding lanes as a contiguous
+    /// prefix while later lanes are still mid-prefill.
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        assert!(a < self.rows && b < self.rows, "swap_rows out of {} live lanes", self.rows);
+        if a == b {
+            return;
+        }
+        let (d, m) = (self.d, self.m);
+        for t in 0..d * m {
+            self.s.swap(a * d * m + t, b * d * m + t);
+        }
+        for t in 0..d {
+            self.z.swap(a * d + t, b * d + t);
+        }
+    }
+
     /// Free lane `r`, compacting by moving the last lane into its place.
     /// Returns the index the moved lane previously had (`None` if `r` was
     /// already last) so callers can fix their lane maps.
@@ -492,16 +510,19 @@ impl BatchedLinearAttnState {
         }
     }
 
-    /// One decode step for every live lane with raw (un-mapped) inputs.
-    /// `q, k: [rows, d]`, `v, out: [rows, m]`.
+    /// One decode step for the first `q.len() / d` live lanes with raw
+    /// (un-mapped) inputs. `q, k: [b, d]`, `v, out: [b, m]` for any
+    /// `b <= rows`; lanes `b..rows` are left untouched (the serving
+    /// engine keeps lanes that are still mid-prefill in that suffix).
     pub fn step_batch(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
         self.step_batch_pooled(None, q, k, v, out)
     }
 
     /// [`Self::step_batch`] with the two streaming batched kernels
     /// (outer-product accumulate, contraction) partitioned over lanes on
-    /// `pool`. Lanes are independent, so the result is bit-identical to
-    /// the serial call under any thread count.
+    /// `pool`. Lanes are independent and each lane's float-op order never
+    /// depends on `b` or the thread count, so stepping a prefix on a pool
+    /// is bit-identical to stepping the same lanes serially, full-width.
     pub fn step_batch_pooled(
         &mut self,
         pool: Option<&ThreadPool>,
@@ -510,9 +531,10 @@ impl BatchedLinearAttnState {
         v: &[f32],
         out: &mut [f32],
     ) {
-        let b = self.rows;
         let (d, m) = (self.d, self.m);
-        assert_eq!(q.len(), b * d);
+        assert_eq!(q.len() % d, 0, "q is not [b, d]");
+        let b = q.len() / d;
+        assert!(b <= self.rows, "stepping {b} lanes of {} live", self.rows);
         assert_eq!(k.len(), b * d);
         assert_eq!(v.len(), b * m);
         assert_eq!(out.len(), b * m);
@@ -829,6 +851,72 @@ mod tests {
             reference.step(&q[d..2 * d], &k[d..2 * d], &v[m..2 * m], &mut ref_out);
             assert_eq!(&out_b[m..2 * m], &ref_out[..], "decode after prefill diverged");
         }
+    }
+
+    #[test]
+    fn swap_rows_exchanges_lane_trajectories_exactly() {
+        // after swapping lanes 0 and 2, feeding swapped inputs must
+        // reproduce the unswapped run bit-for-bit
+        let (d, m, b) = (4, 4, 3);
+        let mut rng = Rng::new(23);
+        let mut plain = BatchedLinearAttnState::new(b, d, m);
+        let mut swapped = BatchedLinearAttnState::new(b, d, m);
+        for _ in 0..b {
+            plain.push_row();
+            swapped.push_row();
+        }
+        let (q, k, v) = (rand(b * d, &mut rng), rand(b * d, &mut rng), rand(b * m, &mut rng));
+        let mut out_a = vec![0.0; b * m];
+        let mut out_b = vec![0.0; b * m];
+        plain.step_batch(&q, &k, &v, &mut out_a);
+        swapped.step_batch(&q, &k, &v, &mut out_b);
+        swapped.swap_rows(0, 2);
+        swapped.swap_rows(0, 0); // self-swap is a no-op
+        // route lane 0's stream to row 2 and vice versa
+        let perm = |x: &[f32], w: usize| {
+            let mut y = x.to_vec();
+            for t in 0..w {
+                y.swap(t, 2 * w + t);
+            }
+            y
+        };
+        let (q2, k2, v2) = (rand(b * d, &mut rng), rand(b * d, &mut rng), rand(b * m, &mut rng));
+        plain.step_batch(&q2, &k2, &v2, &mut out_a);
+        swapped.step_batch(&perm(&q2, d), &perm(&k2, d), &perm(&v2, m), &mut out_b);
+        let unswapped = perm(&out_b, m);
+        assert_eq!(&out_a[..m], &unswapped[..m], "lane 0 trajectory broke under swap");
+        assert_eq!(&out_a[2 * m..], &unswapped[2 * m..], "lane 2 trajectory broke under swap");
+        assert_eq!(&out_a[m..2 * m], &out_b[m..2 * m], "bystander lane disturbed by swap");
+    }
+
+    #[test]
+    fn prefix_step_leaves_suffix_lanes_untouched() {
+        // stepping only the first 2 of 3 lanes must not move lane 2's
+        // state, and must be bit-identical to a 2-lane session
+        let (d, m) = (4, 4);
+        let mut rng = Rng::new(24);
+        let mut full = BatchedLinearAttnState::new(3, d, m);
+        let mut two = BatchedLinearAttnState::new(2, d, m);
+        for _ in 0..3 {
+            full.push_row();
+        }
+        for _ in 0..2 {
+            two.push_row();
+        }
+        let snapshot = {
+            let (s, z) = full.lane(2);
+            (s.to_vec(), z.to_vec())
+        };
+        let mut out_a = vec![0.0; 2 * m];
+        let mut out_b = vec![0.0; 2 * m];
+        for _ in 0..5 {
+            let (q, k, v) = (rand(2 * d, &mut rng), rand(2 * d, &mut rng), rand(2 * m, &mut rng));
+            full.step_batch(&q, &k, &v, &mut out_a);
+            two.step_batch(&q, &k, &v, &mut out_b);
+            assert_eq!(out_a, out_b, "prefix step must match the narrow session bitwise");
+        }
+        let (s, z) = full.lane(2);
+        assert_eq!((s.to_vec(), z.to_vec()), snapshot, "suffix lane state moved");
     }
 
     #[test]

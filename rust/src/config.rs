@@ -5,6 +5,24 @@
 //! agree with the lowered HLO about shapes. [`TrainConfig`] / [`ServeConfig`]
 //! configure the trainer and the serving engine; both can be loaded from a
 //! JSON file and overridden by CLI flags.
+//!
+//! # Example
+//!
+//! Engine configs are plain structs with validated invariants — build
+//! them with struct-update syntax off the defaults:
+//!
+//! ```
+//! use linear_transformer::config::ServeConfig;
+//!
+//! let cfg = ServeConfig {
+//!     max_batch: 16,
+//!     num_threads: 4,            // GEMM pool width (0 = auto)
+//!     prefill_chunks_per_tick: 2, // bound admission work per tick
+//!     ..Default::default()
+//! };
+//! assert!(cfg.validate().is_ok());
+//! assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
+//! ```
 
 use anyhow::{bail, Context};
 
@@ -177,6 +195,19 @@ pub struct ServeConfig {
     /// pure serial. Results are bit-identical at any setting — threads
     /// only partition output rows, never reductions.
     pub num_threads: usize,
+    /// How many prompt chunks (of the backend's prefill granularity —
+    /// `nn::PREFILL_CHUNK` tokens for the native engine) a slot that is
+    /// still ingesting its prompt may absorb per engine tick. This
+    /// bounds admission-time work so resident decode lanes keep
+    /// producing one token per tick while long prompts stream in; raise
+    /// it to trade decode-tick latency for time-to-first-token. Logits
+    /// are bit-identical at any setting, so greedy (temperature 0)
+    /// outputs never depend on it; with temperature > 0 the worker's
+    /// sampling RNG draws in schedule order, so sampled streams can
+    /// differ (as they already do with batch composition). Must be
+    /// >= 1; a huge value effectively restores
+    /// whole-prompt-at-admission behavior.
+    pub prefill_chunks_per_tick: usize,
 }
 
 impl Default for ServeConfig {
@@ -189,6 +220,7 @@ impl Default for ServeConfig {
             temperature: 1.0,
             seed: 0,
             num_threads: 0,
+            prefill_chunks_per_tick: 1,
         }
     }
 }
@@ -219,6 +251,9 @@ impl ServeConfig {
         }
         if self.max_wait_us > MAX_WAIT_US_LIMIT {
             bail!("max_wait_us {} exceeds the limit {MAX_WAIT_US_LIMIT}", self.max_wait_us);
+        }
+        if self.prefill_chunks_per_tick == 0 {
+            bail!("prefill_chunks_per_tick must be >= 1 (a prefilling slot must make progress)");
         }
         Ok(())
     }
@@ -303,6 +338,23 @@ mod tests {
             overflow_wait.validate().is_err(),
             "a max_wait_us that would overflow deadline arithmetic must be rejected"
         );
+    }
+
+    #[test]
+    fn prefill_chunks_per_tick_must_be_positive() {
+        assert_eq!(ServeConfig::default().prefill_chunks_per_tick, 1);
+        for n in [1usize, 2, 64, usize::MAX] {
+            let cfg = ServeConfig {
+                prefill_chunks_per_tick: n,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "prefill_chunks_per_tick = {n} must validate");
+        }
+        let stuck = ServeConfig {
+            prefill_chunks_per_tick: 0,
+            ..Default::default()
+        };
+        assert!(stuck.validate().is_err(), "0 chunks/tick would never finish a prompt");
     }
 
     #[test]

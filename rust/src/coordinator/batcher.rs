@@ -2,7 +2,26 @@
 //!
 //! Requests queue until either (a) `max_batch` are waiting or (b) the
 //! oldest has waited `max_wait`; then a batch is released. The policy is
-//! driven by an injected clock so tests control time.
+//! driven by an injected clock so tests control time. Released requests
+//! are *admitted*, not necessarily fully ingested: on prefill-capable
+//! backends the engine streams each admitted prompt into its lane over
+//! subsequent ticks (`prefill_chunks_per_tick` chunks at a time), so a
+//! released batch of long prompts does not stall the decode loop.
+//!
+//! # Example
+//!
+//! ```
+//! use std::time::{Duration, Instant};
+//! use linear_transformer::coordinator::batcher::Batcher;
+//! use linear_transformer::coordinator::request::GenerateRequest;
+//!
+//! let mut b = Batcher::new(4, Duration::from_millis(10));
+//! let t0 = Instant::now();
+//! b.push(GenerateRequest { id: 1, prompt: vec![3], max_new: 4, temperature: 0.0 }, t0);
+//! assert!(!b.ready(t0)); // underfull and before the deadline
+//! let later = t0 + Duration::from_millis(10);
+//! assert_eq!(b.poll(later, usize::MAX).len(), 1); // deadline releases it
+//! ```
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

@@ -1,6 +1,6 @@
 //! The serving engine: worker thread + continuous batching decode loop.
 //!
-//! One generic tick loop ([`run_engine`]) drives any [`DecodeBackend`]:
+//! One generic tick loop (`run_engine`) drives any [`DecodeBackend`]:
 //! a backend owns a set of dense decode *lanes* (0..lanes), each holding
 //! one request's fixed-size RNN state (S, Z — eqs 16-20), and advances
 //! every lane by one token per [`DecodeBackend::step_batch`] call. Because
@@ -9,30 +9,65 @@
 //! cache, no prefix planning, and the whole batch stays contiguous so the
 //! per-tick work is a handful of `[B, ·]` GEMMs.
 //!
-//! Prompt ingestion is a separate *prefill* phase when the backend
-//! supports it ([`DecodeBackend::prefill`]): at admission the whole
-//! prompt is absorbed into the lane's cumulative state in fixed-size
-//! chunks — the paper's recurrence needs no per-token logits, so the
-//! vocab-sized lm-head runs only for the final prompt position, and the
-//! first generated token is sampled right there. A prompt therefore
-//! costs O(prompt_len / chunk) GEMM blocks instead of `prompt_len` ticks
-//! of the shared loop, which is what makes long-prompt traffic servable
-//! (time-to-first-token no longer scales with the engine tick rate).
-//! Backends without the path (PJRT today) fall back to the per-tick
-//! cursor walk.
+//! Prompt ingestion is an *incremental prefill* phase when the backend
+//! supports it ([`DecodeBackend::prefill_partial`]): the linear-attention
+//! recurrence makes prefill a cumulative-state scan, so a prompt can be
+//! paused and resumed at any chunk boundary. The engine exploits that by
+//! treating prefill as a first-class, resumable scheduler state: an
+//! admitted slot occupies a lane in the *prefill suffix* of the lane
+//! array and absorbs at most `prefill_chunks_per_tick` fixed-size chunks
+//! per tick, interleaved with the decode tick of the resident lanes (the
+//! *decode prefix*, the only lanes [`DecodeBackend::step_batch`] sees).
+//! The vocab-sized lm-head runs only for the final prompt position; when
+//! it lands, the first token is sampled right there and the lane is
+//! swapped into the decode prefix ([`DecodeBackend::swap_lanes`]) — or
+//! retired on the spot for `max_new == 1` / max_len-filling prompts. A
+//! long prompt therefore costs O(prompt_len / chunk) GEMM blocks spread
+//! across ticks: time-to-first-token no longer scales with the engine
+//! tick rate, *and* resident decode lanes keep producing one token per
+//! tick at a flat cadence while it streams in (the
+//! [`crate::metrics::TickLatencySplit`] in [`EngineStats`] measures
+//! exactly this). Every schedule produces bit-identical logits — chunked,
+//! one-shot, and per-tick ingestion share the same per-position float-op
+//! order — so greedy (temperature 0) outputs never depend on the
+//! schedule. (With temperature > 0 the worker's sampling RNG draws in
+//! schedule order, so sampled streams vary with scheduling, as they
+//! always have with batch composition.) Backends without the path (PJRT
+//! today) fall back to the per-tick cursor walk.
 //!
 //! Two backends implement the trait:
 //!
 //! * the **native** backend — [`crate::nn::BatchedDecodeSession`], the
 //!   pure-rust structure-of-arrays decode path. All slots advance through
 //!   single batched GEMMs per projection instead of per-slot GEMV loops.
-//! * [`PjrtBackend`] — a batched `*_decode_linear_b<B>` AOT artifact
+//! * `PjrtBackend` — a batched `*_decode_linear_b<B>` AOT artifact
 //!   through the PJRT runtime. All slots advance in one XLA execution per
 //!   tick; per-slot positions ride in the `in:pos` vector. The host-side
 //!   (s, z) blocks are compacted with the same lane discipline.
 //!
 //! PJRT handles are not `Send`, so the PJRT engine constructs its
 //! `Runtime` *inside* the worker thread; only plain data crosses.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use linear_transformer::attention::AttentionKind;
+//! use linear_transformer::config::{ModelConfig, ServeConfig};
+//! use linear_transformer::coordinator::engine::NativeEngine;
+//! use linear_transformer::coordinator::request::GenerateRequest;
+//! use linear_transformer::nn::TransformerLM;
+//!
+//! let model = TransformerLM::init(&ModelConfig::small_copy(), AttentionKind::Linear, 0);
+//! let mut engine = NativeEngine::spawn(model, ServeConfig::default()).unwrap();
+//! let resp = engine.generate_blocking(GenerateRequest {
+//!     id: 1,
+//!     prompt: vec![12, 3, 4],
+//!     max_new: 16,
+//!     temperature: 0.0,
+//! });
+//! assert!(resp.error.is_none());
+//! engine.shutdown();
+//! ```
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -42,8 +77,8 @@ use crate::attention::AttentionKind;
 use crate::config::{ModelConfig, ServeConfig};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::request::{GenerateRequest, GenerateResponse};
-use crate::coordinator::sessions::{SlotInfo, SlotTable};
-use crate::metrics::LatencyRecorder;
+use crate::coordinator::sessions::{SlotInfo, SlotPhase, SlotTable};
+use crate::metrics::{LatencyRecorder, TickLatencySplit};
 use crate::nn::{BatchedDecodeSession, TransformerLM};
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
@@ -56,8 +91,18 @@ pub struct EngineStats {
     pub completed: u64,
     pub tokens_generated: u64,
     pub ticks: u64,
+    /// Ticks that ingested at least one prompt chunk (a subset of
+    /// `ticks`; the rest were pure decode ticks).
+    pub prefill_ticks: u64,
+    /// Prompt tokens absorbed through the incremental prefill path.
+    pub prompt_tokens_ingested: u64,
     pub batch_occupancy_sum: u64,
+    /// End-to-end request latency (admission to completion).
     pub latency: LatencyRecorder,
+    /// Per-tick wall time, split into prefill-carrying vs pure-decode
+    /// ticks — the evidence that resident decode latency stays flat
+    /// while long prompts admit.
+    pub tick_latency: TickLatencySplit,
 }
 
 impl EngineStats {
@@ -152,10 +197,17 @@ impl Drop for EngineHandle {
 /// call. Implementations keep lanes contiguous; the engine mirrors the
 /// lane order in its own slot map and relies on swap-remove semantics.
 ///
-/// A backend may additionally offer a *prefill* path: whole-prompt
-/// ingestion into one lane at admission time ([`Self::prefill`]), so a
-/// prompt costs O(prompt_len / chunk) GEMM blocks instead of occupying a
-/// decode lane for `prompt_len` ticks of the shared loop.
+/// A backend may additionally offer a *resumable prefill* path
+/// ([`Self::prefill_partial`]): prompt slices absorbed into one lane's
+/// cumulative state across multiple calls, so a prompt costs
+/// O(prompt_len / chunk) GEMM blocks — scheduled a bounded amount per
+/// tick — instead of occupying a decode lane for `prompt_len` ticks of
+/// the shared loop. Prefill-capable backends must also support *prefix
+/// stepping* ([`Self::step_batch`] with fewer tokens than lanes) and
+/// lane swaps ([`Self::swap_lanes`]): the engine keeps actively decoding
+/// lanes as a contiguous prefix `0..n_dec` and mid-prefill lanes as the
+/// suffix `n_dec..lanes`, so one `step_batch` call advances exactly the
+/// resident lanes while prompts stream into the suffix.
 pub trait DecodeBackend {
     /// Vocabulary size of the logits rows.
     fn vocab(&self) -> usize;
@@ -173,23 +225,59 @@ pub trait DecodeBackend {
     /// Returns the moved lane's previous index (`None` if `lane` was last).
     fn free_lane(&mut self, lane: usize) -> Option<usize>;
 
-    /// Advance every live lane by one token (`tokens[r]` feeds lane r).
-    /// Returns logits `[lanes * vocab]` row-major.
+    /// Advance the first `tokens.len()` lanes by one token (`tokens[r]`
+    /// feeds lane r), leaving lanes `tokens.len()..lanes()` untouched —
+    /// the engine parks mid-prefill lanes there. Returns logits
+    /// `[tokens.len() * vocab]` row-major. Backends reporting
+    /// [`Self::supports_prefill`] `== false` never see a partial width
+    /// and may require `tokens.len() == lanes()`.
     fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>>;
 
-    /// True if [`Self::prefill`] ingests prompts at admission.
+    /// True if [`Self::prefill_partial`] ingests prompts chunk by chunk.
     fn supports_prefill(&self) -> bool {
         false
     }
 
-    /// Ingest `prompt` into lane `lane`'s state in one call, returning
-    /// the logits of the final prompt position (`[vocab]`). Only invoked
-    /// when [`Self::supports_prefill`] reports true; the default is a
-    /// hard error so backends without the path fall back to per-tick
-    /// prompt feeding in the engine.
-    fn prefill(&mut self, lane: usize, prompt: &[u32]) -> anyhow::Result<Vec<f32>> {
-        let _ = (lane, prompt);
+    /// The backend's natural prefill granularity in tokens: the engine
+    /// slices prompts into chunks of this size, and
+    /// `prefill_chunks_per_tick` is counted in these units. Only
+    /// meaningful when [`Self::supports_prefill`] reports true; a
+    /// backend built around a different quantum (e.g. an AOT artifact
+    /// compiled for a fixed slice length) overrides this.
+    fn prefill_chunk(&self) -> usize {
+        crate::nn::PREFILL_CHUNK
+    }
+
+    /// Resumable prefill hook: absorb `chunk` — the next slice of a
+    /// prompt — into lane `lane`'s state, continuing from the lane's
+    /// current position. `finish` marks the slice carrying the final
+    /// prompt token; only that call returns logits (`Some([vocab])`, what
+    /// the first generated token is sampled from) — interior slices skip
+    /// the vocab-sized lm-head entirely and return `None`. Slicing must
+    /// not change results: any chunking of a prompt, including one-shot,
+    /// must produce bit-identical state and logits. Only invoked when
+    /// [`Self::supports_prefill`] reports true; the default is a hard
+    /// error so backends without the path fall back to per-tick prompt
+    /// feeding in the engine.
+    fn prefill_partial(
+        &mut self,
+        lane: usize,
+        chunk: &[u32],
+        finish: bool,
+    ) -> anyhow::Result<Option<Vec<f32>>> {
+        let _ = (lane, chunk, finish);
         anyhow::bail!("this backend has no prefill path")
+    }
+
+    /// Swap lanes `a` and `b` (state and position) in place. The engine
+    /// only calls this on prefill-capable backends, to move a lane whose
+    /// prompt just finished into the decode prefix (and to keep the
+    /// prefix contiguous when a resident lane retires); the default
+    /// therefore panics — implement it whenever
+    /// [`Self::supports_prefill`] reports true.
+    fn swap_lanes(&mut self, a: usize, b: usize) {
+        let _ = (a, b);
+        unreachable!("swap_lanes is only invoked on prefill-capable backends")
     }
 }
 
@@ -223,8 +311,21 @@ impl DecodeBackend for BatchedDecodeSession<'_> {
         true
     }
 
-    fn prefill(&mut self, lane: usize, prompt: &[u32]) -> anyhow::Result<Vec<f32>> {
-        Ok(self.prefill_row(lane, prompt))
+    fn prefill_chunk(&self) -> usize {
+        crate::nn::PREFILL_CHUNK
+    }
+
+    fn prefill_partial(
+        &mut self,
+        lane: usize,
+        chunk: &[u32],
+        finish: bool,
+    ) -> anyhow::Result<Option<Vec<f32>>> {
+        Ok(self.prefill_row_partial(lane, chunk, finish))
+    }
+
+    fn swap_lanes(&mut self, a: usize, b: usize) {
+        self.swap_rows(a, b)
     }
 }
 
@@ -250,9 +351,10 @@ fn send_failure(
     }
 }
 
-/// Drive a backend until shutdown: ingest, admit into lanes (prefilling
-/// whole prompts when the backend supports it), tick all lanes by one
-/// token, retire finished slots with swap-remove compaction.
+/// Drive a backend until shutdown: ingest, admit into lanes, stream
+/// queued prompts into the prefill suffix a bounded number of chunks per
+/// tick, tick the decode prefix by one token, retire finished slots with
+/// swap-remove compaction.
 fn run_engine<B: DecodeBackend>(
     backend: &mut B,
     cfg: &ServeConfig,
@@ -262,8 +364,13 @@ fn run_engine<B: DecodeBackend>(
     let max_batch = cfg.max_batch;
     let mut batcher = Batcher::new(max_batch, Duration::from_micros(cfg.max_wait_us));
     let mut slots = SlotTable::new(max_batch);
-    // lane -> slot index, mirrored against the backend's lane order
+    // lane -> slot index, mirrored against the backend's lane order.
+    // Lanes 0..n_dec are decoding (stepped together each tick); lanes
+    // n_dec..len are mid-prefill (advanced chunkwise, excluded from the
+    // decode step and from sampling). On backends without a prefill path
+    // the suffix is always empty (n_dec == lane_slots.len()).
     let mut lane_slots: Vec<usize> = Vec::with_capacity(max_batch);
+    let mut n_dec: usize = 0;
     let mut responders: std::collections::HashMap<u64, Sender<GenerateResponse>> =
         std::collections::HashMap::new();
     let mut rng = Rng::new(cfg.seed);
@@ -271,6 +378,7 @@ fn run_engine<B: DecodeBackend>(
     let mut tokens: Vec<u32> = Vec::with_capacity(max_batch);
     let vocab = backend.vocab();
     let max_len = backend.max_len();
+    let prefill_chunk = backend.prefill_chunk().max(1);
 
     while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
         // 1. ingest requests. Block whenever there is nothing to tick:
@@ -382,140 +490,209 @@ fn run_engine<B: DecodeBackend>(
                 }
             };
             debug_assert_eq!(lane, lane_slots.len(), "lanes must stay dense");
-            if !backend.supports_prefill() {
-                // per-tick prompt feeding: the slot's cursor walks the
-                // prompt through the shared decode loop
+            if backend.supports_prefill() {
+                // resumable prefill: the slot joins the prefill suffix
+                // and its first chunks flow in this very tick (step 3)
+                slots.get_mut(idx).expect("just allocated").start_prefill();
                 lane_slots.push(idx);
-                continue;
-            }
-            // prefill: the whole prompt enters the lane state now, and the
-            // first generated token is sampled from the returned logits
-            let info = slots.get_mut(idx).expect("just allocated");
-            match backend.prefill(lane, &info.prompt) {
-                Ok(logits) => {
-                    info.complete_prompt();
-                    let next = sample_logits(&logits, info.temperature, &mut rng);
-                    info.generated.push(next);
-                    let finished = info.generated.len() >= info.max_new || info.pos + 1 >= max_len;
-                    stats.lock().unwrap().tokens_generated += 1;
-                    if !finished {
-                        lane_slots.push(idx);
-                        continue;
-                    }
-                    // single-token request (or a prompt that already fills
-                    // max_len): retire at admission; the lane is last, so
-                    // freeing it moves nothing
-                    backend.free_lane(lane);
-                    let info = slots.release(idx).expect("just allocated");
-                    let latency = info.started.elapsed();
-                    let truncated = info.generated.len() < info.max_new;
-                    {
-                        let mut st = stats.lock().unwrap();
-                        st.completed += 1;
-                        st.latency.record(latency);
-                    }
-                    if let Some(tx) = responders.remove(&info.request_id) {
-                        let _ = tx.send(GenerateResponse {
-                            id: info.request_id,
-                            tokens: info.generated,
-                            latency_us: latency.as_micros() as u64,
-                            truncated,
-                            error: None,
-                        });
-                    }
-                }
-                Err(e) => {
-                    backend.free_lane(lane);
-                    let info = slots.release(idx).expect("just allocated");
-                    send_failure(
-                        &mut responders,
-                        info.request_id,
-                        info.generated,
-                        format!("prefill failed: {e}"),
-                    );
-                }
+            } else {
+                // per-tick prompt feeding: the slot's cursor walks the
+                // prompt through the shared decode loop, so it joins the
+                // decode prefix directly (no suffix exists here)
+                debug_assert_eq!(n_dec, lane_slots.len(), "suffix must stay empty");
+                lane_slots.push(idx);
+                n_dec += 1;
             }
         }
 
-        if slots.active() == 0 {
+        if lane_slots.is_empty() {
             continue;
         }
-
-        // 3. one decode tick: every lane advances by one token, together
-        tokens.clear();
-        for &slot in &lane_slots {
-            tokens.push(slots.get(slot).expect("lane maps to live slot").next_token());
-        }
+        let tick_started = Instant::now();
         let occupancy = lane_slots.len() as u64;
-        let logits = match backend.step_batch(&tokens) {
-            Ok(l) => l,
-            Err(e) => {
-                // fail all active requests, clear every lane
-                for &slot in &lane_slots {
-                    if let Some(info) = slots.release(slot) {
+        let mut tick_tokens = 0u64;
+        let mut tick_chunks = 0u64;
+        let mut tick_prompt_tokens = 0u64;
+        let mut retired: Vec<(SlotInfo, Duration)> = Vec::new();
+
+        // 3. prefill phase: every mid-prefill lane ingests at most
+        // `prefill_chunks_per_tick` chunks. A lane whose final prompt
+        // position lands samples its first token from the returned
+        // logits and either retires on the spot or swaps into the
+        // decode prefix; everyone else resumes next tick. This bounds
+        // admission-time work per tick, which is what keeps resident
+        // decode lanes producing one token per tick while long prompts
+        // stream in.
+        let mut lane = n_dec;
+        'suffix: while lane < lane_slots.len() {
+            let slot = lane_slots[lane];
+            let mut last_logits: Option<Vec<f32>> = None;
+            for _ in 0..cfg.prefill_chunks_per_tick {
+                let info = slots.get_mut(slot).expect("suffix lane maps to live slot");
+                debug_assert_eq!(info.phase, SlotPhase::Prefilling);
+                let take = info.prefill_remaining().min(prefill_chunk);
+                let finish = take == info.prefill_remaining();
+                let chunk = &info.prompt[info.cursor..info.cursor + take];
+                match backend.prefill_partial(lane, chunk, finish) {
+                    Ok(opt) => {
+                        info.advance_prefill(take);
+                        tick_chunks += 1;
+                        tick_prompt_tokens += take as u64;
+                        if finish {
+                            last_logits = Some(opt.expect("finishing chunk returns logits"));
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        // the lane is dead: compact it out of the suffix.
+                        // The moved-in lane (previously last, also a
+                        // suffix lane) is re-examined at this same index.
+                        backend.free_lane(lane);
+                        lane_slots.swap_remove(lane);
+                        let info = slots.release(slot).expect("live slot");
                         send_failure(
                             &mut responders,
                             info.request_id,
                             info.generated,
-                            format!("decode failed: {e}"),
+                            format!("prefill failed: {e}"),
                         );
+                        continue 'suffix;
                     }
                 }
-                while backend.lanes() > 0 {
-                    backend.free_lane(backend.lanes() - 1);
-                }
-                lane_slots.clear();
-                let mut st = stats.lock().unwrap();
-                st.ticks += 1;
-                st.batch_occupancy_sum += occupancy;
+            }
+            let Some(logits) = last_logits else {
+                // chunk budget exhausted mid-prompt: resume next tick
+                lane += 1;
+                continue;
+            };
+            // final prompt position landed: sample the first token
+            let info = slots.get_mut(slot).expect("live slot");
+            let next = sample_logits(&logits, info.temperature, &mut rng);
+            info.generated.push(next);
+            tick_tokens += 1;
+            if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
+                // single-token request (or a prompt that already fills
+                // max_len): retire straight from prefill, never touching
+                // a decode tick; the moved-in suffix lane (if any) is
+                // re-examined at this index
+                backend.free_lane(lane);
+                lane_slots.swap_remove(lane);
+                let info = slots.release(slot).expect("live slot");
+                let latency = info.started.elapsed();
+                retired.push((info, latency));
                 continue;
             }
-        };
+            // transition Prefilling -> Decoding: swap into the decode
+            // prefix. Position n_dec holds either this lane itself or a
+            // suffix lane already advanced this tick, so no lane is
+            // skipped or advanced twice.
+            backend.swap_lanes(lane, n_dec);
+            lane_slots.swap(lane, n_dec);
+            n_dec += 1;
+            lane += 1;
+        }
 
-        // 4. consume logits: advance cursors, sample past the prompt.
-        // Stats accumulate tick-locally — the lock is taken once per tick
-        // (step 6), not once per generated token.
-        let mut tick_tokens = 0u64;
-        let mut finished_lanes: Vec<usize> = Vec::new();
-        for (lane, &slot) in lane_slots.iter().enumerate() {
-            let info = slots.get_mut(slot).unwrap();
-            if !info.prompt_done() {
-                info.cursor += 1;
+        // 4. one decode tick over the prefix: every decoding lane
+        // advances by one token, together; suffix lanes are untouched
+        let mut decode_logits: Option<Vec<f32>> = None;
+        if n_dec > 0 {
+            tokens.clear();
+            for &slot in &lane_slots[..n_dec] {
+                tokens.push(slots.get(slot).expect("lane maps to live slot").next_token());
             }
-            info.pos += 1;
-            if info.prompt_done() {
-                let row = &logits[lane * vocab..(lane + 1) * vocab];
-                let next = sample_logits(row, info.temperature, &mut rng);
-                info.generated.push(next);
-                tick_tokens += 1;
-                if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
-                    finished_lanes.push(lane);
+            match backend.step_batch(&tokens) {
+                Ok(l) => decode_logits = Some(l),
+                Err(e) => {
+                    // fail all active requests (mid-prefill ones too),
+                    // clear every lane
+                    for &slot in &lane_slots {
+                        if let Some(info) = slots.release(slot) {
+                            send_failure(
+                                &mut responders,
+                                info.request_id,
+                                info.generated,
+                                format!("decode failed: {e}"),
+                            );
+                        }
+                    }
+                    while backend.lanes() > 0 {
+                        backend.free_lane(backend.lanes() - 1);
+                    }
+                    lane_slots.clear();
+                    n_dec = 0;
                 }
             }
         }
 
-        // 5. retire finished slots; descending lane order keeps pending
-        // swap-removes valid (each removal only disturbs higher lanes)
-        finished_lanes.sort_unstable_by_key(|&lane| std::cmp::Reverse(lane));
-        let mut retired: Vec<(SlotInfo, Duration)> = Vec::new();
-        for lane in finished_lanes {
-            let slot = lane_slots[lane];
-            backend.free_lane(lane);
-            lane_slots.swap_remove(lane);
-            let info = slots.release(slot).unwrap();
-            let latency = info.started.elapsed();
-            retired.push((info, latency));
+        if let Some(logits) = decode_logits {
+            // 5. consume logits: advance cursors, sample past the prompt.
+            // Stats accumulate tick-locally — the lock is taken once per
+            // tick (step 7), not once per generated token.
+            let mut finished_lanes: Vec<usize> = Vec::new();
+            for (lane, &slot) in lane_slots[..n_dec].iter().enumerate() {
+                let info = slots.get_mut(slot).unwrap();
+                if !info.prompt_done() {
+                    info.cursor += 1;
+                }
+                info.pos += 1;
+                if info.prompt_done() {
+                    let row = &logits[lane * vocab..(lane + 1) * vocab];
+                    let next = sample_logits(row, info.temperature, &mut rng);
+                    info.generated.push(next);
+                    tick_tokens += 1;
+                    if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
+                        finished_lanes.push(lane);
+                    }
+                }
+            }
+
+            // 6. retire finished slots; descending lane order keeps the
+            // bookkeeping valid (each removal only disturbs higher
+            // lanes). With no prefill suffix this is plain swap-remove
+            // compaction; with mid-prefill lanes parked behind the
+            // prefix, the retiring lane is first swapped to the end of
+            // the decode prefix so that the backend's swap-remove (which
+            // moves the overall-last lane — a mid-prefill one) lands the
+            // moved lane exactly on the new prefix/suffix boundary.
+            finished_lanes.sort_unstable_by_key(|&lane| std::cmp::Reverse(lane));
+            for lane in finished_lanes {
+                let slot = lane_slots[lane];
+                if n_dec == lane_slots.len() {
+                    backend.free_lane(lane);
+                    lane_slots.swap_remove(lane);
+                } else {
+                    let last_dec = n_dec - 1;
+                    if lane != last_dec {
+                        backend.swap_lanes(lane, last_dec);
+                        lane_slots.swap(lane, last_dec);
+                    }
+                    backend.free_lane(last_dec);
+                    lane_slots.swap_remove(last_dec);
+                }
+                n_dec -= 1;
+                let info = slots.release(slot).unwrap();
+                let latency = info.started.elapsed();
+                retired.push((info, latency));
+            }
         }
 
-        // 6. flush this tick's stats under a single lock acquisition,
+        // 7. flush this tick's stats under a single lock acquisition,
         // *then* answer clients — a client holding its response must
         // already see its completion reflected in the stats
+        let tick_dur = tick_started.elapsed();
         {
             let mut st = stats.lock().unwrap();
             st.ticks += 1;
             st.batch_occupancy_sum += occupancy;
             st.tokens_generated += tick_tokens;
+            st.prompt_tokens_ingested += tick_prompt_tokens;
             st.completed += retired.len() as u64;
+            if tick_chunks > 0 {
+                st.prefill_ticks += 1;
+                st.tick_latency.prefill.record(tick_dur);
+            } else {
+                st.tick_latency.decode.record(tick_dur);
+            }
             for (_, d) in &retired {
                 st.latency.record(*d);
             }
@@ -1136,6 +1313,231 @@ mod tests {
             handle.shutdown();
         }
         assert_eq!(outs[0], outs[1], "thread count must never change generations");
+    }
+
+    /// tiny geometry with room for multi-chunk prompts (max_len 192 spans
+    /// three PREFILL_CHUNK-sized chunks)
+    fn long_model() -> TransformerLM {
+        let cfg = ModelConfig {
+            vocab: 11,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            max_len: 192,
+            d_ff: 64,
+            chunk: 16,
+            causal: true,
+            lsh_rounds: 1,
+            lsh_buckets: 8,
+            lsh_chunk: 8,
+        };
+        TransformerLM::init(&cfg, AttentionKind::Linear, 17)
+    }
+
+    fn prompt_of(len: usize, vocab: usize, seed: u64) -> Vec<u32> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..len).map(|_| rng.below(vocab as u64) as u32).collect()
+    }
+
+    #[test]
+    fn long_prompt_admits_over_multiple_ticks_while_residents_decode() {
+        // a 150-token prompt (3 chunks, budget 1 chunk/tick) must admit
+        // incrementally while a resident lane keeps decoding — and both
+        // outputs must equal direct per-request generation exactly
+        let model = long_model();
+        let vocab = model.cfg.vocab;
+        let resident_prompt = vec![1, 2, 3];
+        let long_prompt = prompt_of(150, vocab, 70);
+        let direct_resident = model.generate(&resident_prompt, 24, 0.0, 0);
+        let direct_long = model.generate(&long_prompt, 5, 0.0, 0);
+
+        // max_batch 2 + a generous deadline: both requests land in the
+        // same released batch, so the resident lane is guaranteed to be
+        // decoding while the long prompt absorbs its 3 chunks
+        let mut handle = NativeEngine::spawn(
+            long_model(),
+            ServeConfig {
+                max_batch: 2,
+                max_wait_us: 50_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx_resident = handle.submit(GenerateRequest {
+            id: 1,
+            prompt: resident_prompt,
+            max_new: 24,
+            temperature: 0.0,
+        });
+        let rx_long = handle.submit(GenerateRequest {
+            id: 2,
+            prompt: long_prompt.clone(),
+            max_new: 5,
+            temperature: 0.0,
+        });
+        let resident = rx_resident.recv().unwrap();
+        let long = rx_long.recv().unwrap();
+        assert!(resident.error.is_none(), "{:?}", resident.error);
+        assert!(long.error.is_none(), "{:?}", long.error);
+        assert_eq!(resident.tokens, direct_resident, "resident lane disturbed by prefill");
+        assert_eq!(long.tokens, direct_long, "incremental prefill changed the output");
+
+        let st = handle.stats();
+        // 150 tokens at one 64-token chunk per tick is at least 3
+        // prefill-carrying ticks (plus the resident's own admission tick)
+        assert!(st.prefill_ticks >= 3, "prefill_ticks = {}", st.prefill_ticks);
+        // a per-tick cursor walk would burn 150+ ticks on the prompt;
+        // chunked ingestion adds at most ceil(150/64) = 3 on top of the
+        // ~24 decode ticks the resident needs
+        assert!(st.ticks <= 40, "prompt ingestion leaked into the tick budget: {}", st.ticks);
+        assert_eq!(
+            st.prompt_tokens_ingested,
+            150 + 3,
+            "every prompt token must enter through the prefill path"
+        );
+        assert_eq!(
+            st.tick_latency.prefill.count() as u64,
+            st.prefill_ticks,
+            "every prefill tick must be recorded in the latency split"
+        );
+        assert!(
+            st.tick_latency.decode.count() > 0,
+            "pure decode ticks must be recorded in the latency split"
+        );
+        assert_eq!(st.ticks, st.prefill_ticks + st.tick_latency.decode.count() as u64);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn slots_retiring_and_rejections_leave_mid_prefill_lanes_intact() {
+        // while a long prompt is mid-prefill: a resident slot retires
+        // (forcing compaction across the prefix/suffix boundary), an
+        // oversized prompt and an empty prompt are rejected — and the
+        // mid-prefill request still decodes exactly like direct generation
+        let model = long_model();
+        let vocab = model.cfg.vocab;
+        let max_len = model.cfg.max_len;
+        let long_prompt = prompt_of(170, vocab, 71);
+        let short_prompt = vec![4, 5];
+        let direct_long = model.generate(&long_prompt, 6, 0.0, 0);
+        let direct_short = model.generate(&short_prompt, 2, 0.0, 0);
+
+        let mut handle = NativeEngine::spawn(
+            long_model(),
+            ServeConfig {
+                max_batch: 3,
+                max_wait_us: 100,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // short request first so it is decoding (and retires) while the
+        // long prompt is still absorbing chunks
+        let rx_short = handle.submit(GenerateRequest {
+            id: 1,
+            prompt: short_prompt,
+            max_new: 2,
+            temperature: 0.0,
+        });
+        let rx_long = handle.submit(GenerateRequest {
+            id: 2,
+            prompt: long_prompt,
+            max_new: 6,
+            temperature: 0.0,
+        });
+        let rx_oversized = handle.submit(GenerateRequest {
+            id: 3,
+            prompt: vec![1; max_len + 1],
+            max_new: 2,
+            temperature: 0.0,
+        });
+        let rx_empty = handle.submit(GenerateRequest {
+            id: 4,
+            prompt: vec![],
+            max_new: 2,
+            temperature: 0.0,
+        });
+        assert_eq!(rx_short.recv().unwrap().tokens, direct_short);
+        assert!(rx_oversized.recv().unwrap().error.is_some());
+        assert!(rx_empty.recv().unwrap().error.is_some());
+        let long = rx_long.recv().unwrap();
+        assert!(long.error.is_none(), "{:?}", long.error);
+        assert_eq!(long.tokens, direct_long, "churn around a mid-prefill lane broke it");
+        let st = handle.stats();
+        assert_eq!(st.completed, 2);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_a_prompt_still_in_prefill() {
+        // shutdown lands while the prompt is (at best) barely admitted;
+        // the engine must drain it to a complete, correct response
+        let model = long_model();
+        let long_prompt = prompt_of(160, model.cfg.vocab, 72);
+        let direct = model.generate(&long_prompt, 4, 0.0, 0);
+        let mut handle = NativeEngine::spawn(long_model(), ServeConfig::default()).unwrap();
+        let rx = handle.submit(GenerateRequest {
+            id: 9,
+            prompt: long_prompt,
+            max_new: 4,
+            temperature: 0.0,
+        });
+        handle.shutdown(); // joins the worker: drain must finish the request
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, direct, "shutdown drain corrupted a mid-prefill request");
+        assert!(!resp.truncated);
+        let st = handle.stats();
+        assert_eq!(st.completed, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn prefill_chunk_budget_never_changes_tokens() {
+        // the scheduler knob trades latency shape only: outputs at
+        // 1, 2, and effectively-unbounded chunks per tick are identical
+        let model = long_model();
+        let vocab = model.cfg.vocab;
+        let cases: Vec<(Vec<u32>, usize)> = vec![
+            (prompt_of(150, vocab, 73), 5),
+            (vec![7, 8], 8),
+            (prompt_of(65, vocab, 74), 1), // finishes inside prefill (max_new = 1)
+        ];
+        let mut outs_per_budget = Vec::new();
+        for budget in [1usize, 2, 1_000_000] {
+            let mut handle = NativeEngine::spawn(
+                long_model(),
+                ServeConfig {
+                    max_batch: 3,
+                    max_wait_us: 100,
+                    prefill_chunks_per_tick: budget,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let rxs: Vec<_> = cases
+                .iter()
+                .enumerate()
+                .map(|(i, (p, n))| {
+                    handle.submit(GenerateRequest {
+                        id: i as u64,
+                        prompt: p.clone(),
+                        max_new: *n,
+                        temperature: 0.0,
+                    })
+                })
+                .collect();
+            let mut outs = vec![Vec::new(); cases.len()];
+            for rx in rxs {
+                let resp = rx.recv().unwrap();
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                outs[resp.id as usize] = resp.tokens;
+            }
+            handle.shutdown();
+            outs_per_budget.push(outs);
+        }
+        assert_eq!(outs_per_budget[0], outs_per_budget[1]);
+        assert_eq!(outs_per_budget[0], outs_per_budget[2]);
     }
 
     #[test]

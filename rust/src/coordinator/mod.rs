@@ -21,13 +21,23 @@
 //! row, eviction swap-removes it, and one `step_batch` advances the whole
 //! batch through `[B, ·]` GEMMs.
 //!
+//! The same recurrence makes prompt ingestion *pausable*: prefill is a
+//! cumulative-state scan, so the engine streams each admitted prompt
+//! into its lane a bounded number of chunks per tick (the `Prefilling`
+//! slot phase), interleaved with the decode tick of resident lanes —
+//! long prompts never stall the batch, and the schedule never changes a
+//! single logit (so greedy outputs are schedule-independent). See
+//! `ARCHITECTURE.md` at the repo root for the full request lifecycle.
+//!
 //! Modules:
 //! * [`request`]  — request/response types + JSON wire codec
 //! * [`batcher`]  — pure batching policy (deadline + capacity), propchecked
-//! * [`sessions`] — slot allocator with leak-freedom invariants
+//! * [`sessions`] — slot allocator with leak-freedom invariants + the
+//!   per-slot prompt-ingestion state machine ([`sessions::SlotPhase`])
 //! * [`engine`]   — the [`engine::DecodeBackend`] trait, the shared
-//!   continuous-batching tick loop, and its two backends (native batched
-//!   GEMM decode; PJRT batched artifact, runtime created in the worker)
+//!   continuous-batching tick loop with incremental prefill scheduling,
+//!   and its two backends (native batched GEMM decode; PJRT batched
+//!   artifact, runtime created in the worker)
 //! * [`server`]   — TCP JSON-lines front-end
 
 pub mod batcher;

@@ -1,4 +1,17 @@
 //! Request/response types and the JSON-lines wire codec.
+//!
+//! # Example
+//!
+//! ```
+//! use linear_transformer::coordinator::request::GenerateRequest;
+//! use linear_transformer::json::Json;
+//!
+//! let wire = r#"{"id": 7, "prompt": [12, 3, 4], "max_new": 8}"#;
+//! let req = GenerateRequest::from_json(&Json::parse(wire).unwrap()).unwrap();
+//! assert_eq!(req.prompt, vec![12, 3, 4]);
+//! assert_eq!(req.max_new, 8);
+//! assert_eq!(req.temperature, 1.0); // omitted fields take defaults
+//! ```
 
 use crate::json::{obj, Json};
 

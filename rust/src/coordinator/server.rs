@@ -1,10 +1,37 @@
 //! TCP JSON-lines front-end for the serving engine.
 //!
 //! Protocol: one JSON object per line.
-//!   -> {"id": 1, "prompt": [12, 3, 4], "max_new": 16, "temperature": 0.8}
-//!   <- {"id": 1, "tokens": [5, 6, ...], "latency_us": 1234}
-//! Malformed lines get {"id": 0, "error": "..."}. One thread per
+//!
+//! ```text
+//! -> {"id": 1, "prompt": [12, 3, 4], "max_new": 16, "temperature": 0.8}
+//! <- {"id": 1, "tokens": [5, 6, ...], "latency_us": 1234}
+//! ```
+//!
+//! Malformed lines get `{"id": 0, "error": "..."}`. One thread per
 //! connection; responses are written in completion order.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use linear_transformer::attention::AttentionKind;
+//! use linear_transformer::config::{ModelConfig, ServeConfig};
+//! use linear_transformer::coordinator::engine::NativeEngine;
+//! use linear_transformer::coordinator::request::GenerateRequest;
+//! use linear_transformer::coordinator::server::{request_over_tcp, Server};
+//! use linear_transformer::nn::TransformerLM;
+//!
+//! let model = TransformerLM::init(&ModelConfig::small_copy(), AttentionKind::Linear, 0);
+//! let engine = Arc::new(NativeEngine::spawn(model, ServeConfig::default()).unwrap());
+//! let server = Server::start("127.0.0.1:0", engine).unwrap();
+//! let resps = request_over_tcp(
+//!     &server.addr.to_string(),
+//!     &[GenerateRequest { id: 1, prompt: vec![12, 3], max_new: 4, temperature: 0.0 }],
+//! )
+//! .unwrap();
+//! assert_eq!(resps[0].tokens.len(), 4);
+//! server.stop();
+//! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

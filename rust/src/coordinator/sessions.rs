@@ -3,11 +3,49 @@
 //! A slot is one lane of the batched decode state (one (S, Z) RNN pair per
 //! layer×head in either engine). The table enforces capacity, guarantees a
 //! freed slot is reusable, and never hands the same slot to two requests —
-//! invariants propchecked below. Prompt ingestion is tracked per slot: a
-//! backend with a prefill path absorbs the whole prompt at admission
-//! (`complete_prompt`), otherwise the `cursor` walks it one tick at a time.
+//! invariants propchecked below.
+//!
+//! Prompt ingestion is a per-slot state machine ([`SlotPhase`]):
+//!
+//! * a backend with a resumable prefill path admits the slot in
+//!   [`SlotPhase::Prefilling`] ([`SlotInfo::start_prefill`]) and absorbs
+//!   the prompt chunk by chunk across engine ticks
+//!   ([`SlotInfo::advance_prefill`]); when the final prompt token lands
+//!   the slot flips to [`SlotPhase::Decoding`] on its own;
+//! * a backend without the path admits straight into
+//!   [`SlotPhase::Decoding`] and the `cursor` walks the prompt through
+//!   the shared tick loop one token at a time. (One-shot ingestion is
+//!   just the degenerate schedule: a single `advance_prefill` covering
+//!   the whole prompt.)
+//!
+//! # Example
+//!
+//! ```
+//! use std::time::Instant;
+//! use linear_transformer::coordinator::sessions::{SlotInfo, SlotPhase};
+//!
+//! let mut slot = SlotInfo::new(1, Instant::now(), vec![7, 8, 9], 4, 0.0);
+//! slot.start_prefill();
+//! slot.advance_prefill(2); // first chunk: two prompt tokens ingested
+//! assert_eq!(slot.phase, SlotPhase::Prefilling);
+//! slot.advance_prefill(1); // final token lands
+//! assert_eq!(slot.phase, SlotPhase::Decoding);
+//! assert!(slot.prompt_done());
+//! ```
 
 use std::time::Instant;
+
+/// Where a slot's prompt ingestion stands (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    /// The prompt is entering the lane's state via resumable prefill
+    /// chunks; the lane is excluded from `step_batch` and from sampling
+    /// until the final prompt position lands.
+    Prefilling,
+    /// The lane ticks through `step_batch` (this includes cursor-walk
+    /// prompt feeding on backends without a prefill path).
+    Decoding,
+}
 
 /// Metadata of an active decode slot.
 #[derive(Debug, Clone)]
@@ -25,6 +63,8 @@ pub struct SlotInfo {
     pub temperature: f32,
     /// absolute position of the next token to feed
     pub pos: usize,
+    /// prompt-ingestion phase (see [`SlotPhase`])
+    pub phase: SlotPhase,
 }
 
 impl SlotInfo {
@@ -45,6 +85,35 @@ impl SlotInfo {
             max_new,
             temperature,
             pos: 0,
+            phase: SlotPhase::Decoding,
+        }
+    }
+
+    /// Enter the resumable-prefill phase. Must be called before any
+    /// prompt token has been fed; the slot stays [`SlotPhase::Prefilling`]
+    /// until [`Self::advance_prefill`] consumes the final prompt token.
+    pub fn start_prefill(&mut self) {
+        assert_eq!(self.cursor, 0, "start_prefill on a partially fed slot");
+        assert!(!self.prompt.is_empty(), "nothing to prefill");
+        self.phase = SlotPhase::Prefilling;
+    }
+
+    /// Prompt tokens not yet ingested.
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt.len() - self.cursor
+    }
+
+    /// Record that `n` more prompt tokens entered the lane state via the
+    /// prefill path. Flips the slot to [`SlotPhase::Decoding`] when the
+    /// final prompt token lands: `cursor` and `pos` sit just past the
+    /// prompt, so the slot's next tick feeds its first sampled token.
+    pub fn advance_prefill(&mut self, n: usize) {
+        assert_eq!(self.phase, SlotPhase::Prefilling, "advance_prefill outside prefill");
+        assert!(n >= 1 && self.cursor + n <= self.prompt.len(), "chunk overruns the prompt");
+        self.cursor += n;
+        self.pos += n;
+        if self.cursor == self.prompt.len() {
+            self.phase = SlotPhase::Decoding;
         }
     }
 
@@ -63,14 +132,6 @@ impl SlotInfo {
         self.cursor >= self.prompt.len()
     }
 
-    /// Mark the whole prompt as ingested in one shot — the prefill path.
-    /// The cursor jumps past the prompt and `pos` to the first generation
-    /// position, so the slot's next tick feeds its first sampled token
-    /// instead of walking the prompt.
-    pub fn complete_prompt(&mut self) {
-        self.cursor = self.prompt.len();
-        self.pos = self.prompt.len();
-    }
 }
 
 /// Fixed-capacity slot allocator.
@@ -155,13 +216,53 @@ mod tests {
     }
 
     #[test]
-    fn complete_prompt_jumps_to_generation() {
+    fn one_shot_prefill_jumps_to_generation() {
+        // the degenerate schedule: one advance covering the whole prompt
         let mut s = info(2);
-        s.complete_prompt();
+        s.start_prefill();
+        s.advance_prefill(2);
         assert!(s.prompt_done());
         assert_eq!(s.pos, 2, "pos must land on the first generation position");
+        assert_eq!(s.phase, SlotPhase::Decoding);
         s.generated.push(9);
         assert_eq!(s.next_token(), 9, "next tick feeds the sampled token");
+    }
+
+    #[test]
+    fn incremental_prefill_reaches_the_same_state_as_one_shot() {
+        // chunked advance must land on exactly the single-advance state
+        let mut chunked = SlotInfo::new(3, Instant::now(), vec![1, 2, 3, 4, 5], 4, 0.0);
+        chunked.start_prefill();
+        assert_eq!(chunked.phase, SlotPhase::Prefilling);
+        assert_eq!(chunked.prefill_remaining(), 5);
+        chunked.advance_prefill(2);
+        assert_eq!(chunked.phase, SlotPhase::Prefilling, "mid-prompt stays prefilling");
+        assert_eq!(chunked.prefill_remaining(), 3);
+        assert_eq!((chunked.cursor, chunked.pos), (2, 2));
+        chunked.advance_prefill(3);
+        let mut one_shot = SlotInfo::new(3, chunked.started, vec![1, 2, 3, 4, 5], 4, 0.0);
+        one_shot.start_prefill();
+        one_shot.advance_prefill(5);
+        assert_eq!(chunked.phase, SlotPhase::Decoding);
+        assert_eq!((chunked.cursor, chunked.pos), (one_shot.cursor, one_shot.pos));
+        assert!(chunked.prompt_done());
+        chunked.generated.push(9);
+        assert_eq!(chunked.next_token(), 9, "post-prefill tick feeds the sampled token");
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk overruns the prompt")]
+    fn prefill_overrun_is_rejected() {
+        let mut s = info(4);
+        s.start_prefill();
+        s.advance_prefill(3); // prompt is only 2 tokens long
+    }
+
+    #[test]
+    #[should_panic(expected = "advance_prefill outside prefill")]
+    fn prefill_advance_requires_prefill_phase() {
+        let mut s = info(5); // fresh slots default to Decoding (cursor walk)
+        s.advance_prefill(1);
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   level playing field for the paper's Figure 1 / Tables 1–5 sweeps,
 //!   and the demonstration of the supplementary's claim that linear-RNN
 //!   inference is CPU-friendly.
+//!
+//! `ARCHITECTURE.md` at the repo root walks the serving stack end to
+//! end (request lifecycle, the `DecodeBackend` contract, incremental
+//! prefill scheduling, the thread-pool bitwise-parity invariant);
+//! `README.md` has the serve-binary quickstart.
 
 pub mod attention;
 pub mod benchkit;

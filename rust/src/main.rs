@@ -25,8 +25,8 @@ use linear_transformer::trainer::{self, Trainer};
 const FLAGS: &[&str] = &[
     "task", "variant", "steps", "lr", "lr-drop", "batch-log", "log-every", "csv",
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
-    "num-threads", "prompt-len", "max-new", "temperature", "count", "backend",
-    "weights", "batches", "help-flags",
+    "num-threads", "prefill-chunks-per-tick", "prompt-len", "max-new", "temperature",
+    "count", "backend", "weights", "batches", "help-flags",
 ];
 
 fn main() {
@@ -190,6 +190,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         // 0 = auto: LINTRA_NUM_THREADS if set, else one thread per core
         // (resolved by parallel::resolve_threads at pool construction)
         num_threads: args.usize_flag("num-threads", 0)?,
+        // chunks of prompt a still-admitting slot may ingest per engine
+        // tick; bounds admission work so resident decode latency stays
+        // flat under long-prompt traffic (greedy outputs identical at
+        // any value; see ServeConfig::prefill_chunks_per_tick)
+        prefill_chunks_per_tick: args.usize_flag("prefill-chunks-per-tick", 1)?,
     };
     let backend = args.flag_or("backend", "native");
     let handle = match backend.as_str() {
@@ -223,13 +228,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let st = engine.stats();
         if st.requests > 0 {
             eprintln!(
-                "[stats] req={} done={} tokens={} occupancy={:.2} {}",
+                "[stats] req={} done={} tokens={} prompt-tokens={} occupancy={:.2} {}",
                 st.requests,
                 st.completed,
                 st.tokens_generated,
+                st.prompt_tokens_ingested,
                 st.mean_batch_occupancy(),
                 st.latency.summary()
             );
+            eprintln!("[ticks] {}", st.tick_latency.summary());
         }
     }
 }

@@ -3,7 +3,9 @@
 //! * [`bits_per_dim`] — image-modeling metric of Tables 1–2.
 //! * [`edit_distance`] / [`phoneme_error_rate`] — Table 3's PER.
 //! * [`LatencyRecorder`] — p50/p95/p99 request latency for the engine.
-//! * [`Counter`]-style throughput accounting used by the coordinator.
+//! * [`TickLatencySplit`] — engine tick durations, split by whether the
+//!   tick ingested prompt chunks (the flat-decode-latency evidence).
+//! * [`Throughput`] — wall-clock throughput accounting for the coordinator.
 
 use std::time::Duration;
 
@@ -210,6 +212,36 @@ fn percentile_of(sorted: &[Duration], q: f64) -> Duration {
     sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
+/// Engine tick durations, split by what the tick did.
+///
+/// The incremental-prefill scheduler bounds how much prompt ingestion a
+/// single engine tick may perform (`prefill_chunks_per_tick`), so that
+/// resident decode lanes keep producing a token per tick at a flat
+/// cadence while a long prompt admits. This split makes that claim
+/// measurable: `decode` records ticks that only stepped resident lanes,
+/// `prefill` records ticks that also ingested prompt chunks. A healthy
+/// engine shows `prefill` p99 within roughly one chunk's GEMM cost of
+/// `decode` p99 — not a multi-hundred-tick stall per long prompt.
+#[derive(Debug, Default, Clone)]
+pub struct TickLatencySplit {
+    /// Ticks that ingested at least one prompt chunk (plus any decode
+    /// work they also did).
+    pub prefill: LatencyRecorder,
+    /// Pure decode ticks (no prompt ingestion).
+    pub decode: LatencyRecorder,
+}
+
+impl TickLatencySplit {
+    /// One-line report of both distributions.
+    pub fn summary(&self) -> String {
+        format!(
+            "decode-ticks[{}] prefill-ticks[{}]",
+            self.decode.summary(),
+            self.prefill.summary()
+        )
+    }
+}
+
 /// Throughput counter over a wall-clock window.
 #[derive(Debug, Clone)]
 pub struct Throughput {
@@ -370,6 +402,20 @@ mod tests {
         assert!(r.p50() <= r.p95() && r.p95() <= r.p99());
         assert_eq!(r.count(), 100);
         assert!(r.p50() >= Duration::from_millis(45) && r.p50() <= Duration::from_millis(55));
+    }
+
+    #[test]
+    fn tick_latency_split_keeps_kinds_apart() {
+        let mut split = TickLatencySplit::default();
+        for _ in 0..10 {
+            split.decode.record(Duration::from_micros(100));
+        }
+        split.prefill.record(Duration::from_micros(900));
+        assert_eq!(split.decode.count(), 10);
+        assert_eq!(split.prefill.count(), 1);
+        assert!(split.prefill.mean() > split.decode.mean());
+        let s = split.summary();
+        assert!(s.contains("decode-ticks[") && s.contains("prefill-ticks["), "{s}");
     }
 
     #[test]

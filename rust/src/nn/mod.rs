@@ -409,14 +409,18 @@ pub const PREFILL_CHUNK: usize = 64;
 /// run as a single `[B, ·] × [·, ·]` GEMM instead of B GEMVs, and the
 /// attention update runs as three streaming batched kernels.
 ///
-/// Prompts enter through [`Self::prefill_row`]: a whole prompt is
-/// consumed in [`PREFILL_CHUNK`]-sized chunks, each chunk running the
-/// projections as `[chunk, ·]` GEMMs and the causal recurrence as one
-/// cumulative-state sweep per layer×head — the vocab-sized lm-head runs
-/// only for the final prompt position. Time-to-first-token therefore
-/// costs O(prompt_len / chunk) GEMM blocks instead of O(prompt_len)
-/// engine ticks, and the ingested state is bit-identical to per-tick
-/// feeding (see `prefill_row`).
+/// Prompts enter through [`Self::prefill_row`] (one-shot) or
+/// [`Self::prefill_row_partial`] (resumable): the prompt is consumed in
+/// [`PREFILL_CHUNK`]-sized chunks, each chunk running the projections as
+/// `[chunk, ·]` GEMMs and the causal recurrence as one cumulative-state
+/// sweep per layer×head — the vocab-sized lm-head runs only for the
+/// final prompt position. Time-to-first-token therefore costs
+/// O(prompt_len / chunk) GEMM blocks instead of O(prompt_len) engine
+/// ticks, and the ingested state is bit-identical to per-tick feeding
+/// regardless of how the prompt is sliced across calls. The resumable
+/// form plus prefix [`Self::step_batch`] (and [`Self::swap_rows`] for
+/// lane ordering) is what lets the serving engine interleave bounded
+/// prompt chunks with decode ticks.
 ///
 /// Lanes are dense rows `0..rows`. Slot churn is [`Self::alloc_row`]
 /// (append a zeroed lane) and [`Self::free_row`] (swap-remove compaction);
@@ -545,11 +549,19 @@ impl<'m> BatchedDecodeSession<'m> {
         self.states.iter().map(|s| s.state_bytes()).sum()
     }
 
-    /// Advance every live lane by one token; `tokens[r]` feeds lane r.
-    /// Returns logits `[rows * vocab]` row-major.
+    /// Advance the first `tokens.len()` live lanes by one token;
+    /// `tokens[r]` feeds lane r. Returns logits `[tokens.len() * vocab]`
+    /// row-major.
+    ///
+    /// Callers may step a *prefix* of the live lanes (`tokens.len() <
+    /// rows`): the suffix lanes are left completely untouched. The
+    /// serving engine relies on this to keep lanes that are still
+    /// mid-prefill out of the decode tick. Each lane's float-op order is
+    /// independent of how many lanes step together, so a prefix step is
+    /// bit-identical to the same lanes stepping in a narrower session.
     pub fn step_batch(&mut self, tokens: &[u32]) -> Vec<f32> {
-        let b = self.rows;
-        assert_eq!(tokens.len(), b, "one token per live lane");
+        let b = tokens.len();
+        assert!(b <= self.rows, "stepping {b} lanes of {} live", self.rows);
         let model = self.model;
         let cfg = &model.cfg;
         let e = cfg.d_model;
@@ -558,7 +570,11 @@ impl<'m> BatchedDecodeSession<'m> {
         if b == 0 {
             return Vec::new();
         }
-        let pool = self.pool.as_deref();
+        // A single output row is GEMV-shaped — the pool partitions output
+        // rows, so there is nothing to split at B = 1. Skip dispatch
+        // entirely instead of paying per-kernel threshold checks (see the
+        // single-row threshold notes in `crate::parallel`).
+        let pool = if b == 1 { None } else { self.pool.as_deref() };
         // x = tok_embed + pos_embed, gathered per lane
         for (r, &tok) in tokens.iter().enumerate() {
             assert!(
@@ -667,10 +683,26 @@ impl<'m> BatchedDecodeSession<'m> {
         let normed = &self.normed[..b * e];
         matmul_into_pooled(pool, &mut logits, normed, &model.head_w.data, b, e, vocab);
         add_bias_rows(&mut logits, &model.head_b.data, b);
-        for p in self.pos.iter_mut() {
+        for p in self.pos[..b].iter_mut() {
             *p += 1;
         }
         logits
+    }
+
+    /// Swap lanes `a` and `b` (every layer×head state pair plus the
+    /// position cursors). O(state-per-lane), the same cost as a
+    /// [`Self::free_row`] compaction move. The serving engine uses this
+    /// to move a lane whose prompt just finished prefilling into the
+    /// decoding prefix (see [`Self::step_batch`] on prefix stepping).
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        assert!(a < self.rows && b < self.rows, "swap_rows out of {} live lanes", self.rows);
+        if a == b {
+            return;
+        }
+        for st in &mut self.states {
+            st.swap_rows(a, b);
+        }
+        self.pos.swap(a, b);
     }
 
     /// Ingest a whole `prompt` into lane `row` in [`PREFILL_CHUNK`]-sized
@@ -683,9 +715,37 @@ impl<'m> BatchedDecodeSession<'m> {
     /// norm or the vocab-sized lm-head. The float-op order per position
     /// matches [`Self::step_batch`] exactly, so the resulting state and
     /// logits are bit-identical to feeding the prompt one tick at a time.
+    ///
+    /// This is the one-shot form of [`Self::prefill_row_partial`]; the
+    /// resumable form lets a scheduler bound how much prompt enters the
+    /// lane per engine tick.
     pub fn prefill_row(&mut self, row: usize, prompt: &[u32]) -> Vec<f32> {
+        self.prefill_row_partial(row, prompt, true)
+            .expect("finish = true always returns logits")
+    }
+
+    /// Resumable prefill: absorb `tokens` — any slice of a prompt — into
+    /// lane `row`'s cumulative state, continuing from wherever the lane's
+    /// position cursor stands. Pass `finish = false` for interior slices
+    /// (the final layer norm and the vocab-sized lm-head are skipped
+    /// entirely and `None` is returned); pass `finish = true` with the
+    /// last slice to get the final position's logits (`Some([vocab])`).
+    ///
+    /// The lane state after `prefill_row_partial(row, a, false)` followed
+    /// by `prefill_row_partial(row, b, true)` is bit-identical to
+    /// `prefill_row(row, a ++ b)` *and* to feeding every token one
+    /// [`Self::step_batch`] tick at a time: each position's float-op
+    /// order never depends on how the prompt was sliced. The serving
+    /// engine leans on this to interleave bounded prompt chunks with
+    /// decode ticks without changing a single logit.
+    pub fn prefill_row_partial(
+        &mut self,
+        row: usize,
+        tokens: &[u32],
+        finish: bool,
+    ) -> Option<Vec<f32>> {
         assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
-        assert!(!prompt.is_empty(), "prefill needs at least one prompt token");
+        assert!(!tokens.is_empty(), "prefill needs at least one prompt token");
         let model = self.model;
         let cfg = &model.cfg;
         let e = cfg.d_model;
@@ -693,18 +753,18 @@ impl<'m> BatchedDecodeSession<'m> {
         let dh = cfg.d_head();
         let dff = cfg.d_ff;
         assert!(
-            self.pos[row] + prompt.len() <= cfg.max_len,
+            self.pos[row] + tokens.len() <= cfg.max_len,
             "lane {row}: prompt of {} at position {} exceeds max_len {}",
-            prompt.len(),
+            tokens.len(),
             self.pos[row],
             cfg.max_len
         );
         let pool = self.pool.as_deref();
-        let mut logits = vec![0.0f32; cfg.vocab];
+        let mut logits = None;
         let mut off = 0;
-        while off < prompt.len() {
-            let n = (prompt.len() - off).min(PREFILL_CHUNK);
-            let chunk = &prompt[off..off + n];
+        while off < tokens.len() {
+            let n = (tokens.len() - off).min(PREFILL_CHUNK);
+            let chunk = &tokens[off..off + n];
             let base = self.pos[row];
             // x = tok_embed + pos_embed for every chunk position
             for (i, &tok) in chunk.iter().enumerate() {
@@ -791,7 +851,7 @@ impl<'m> BatchedDecodeSession<'m> {
             }
             self.pos[row] += n;
             off += n;
-            if off == prompt.len() {
+            if finish && off == tokens.len() {
                 // only the last prompt position pays for the final layer
                 // norm and the [e, vocab] lm-head
                 let last = n - 1;
@@ -801,10 +861,12 @@ impl<'m> BatchedDecodeSession<'m> {
                     &model.final_ln_g.data,
                     &model.final_ln_b.data,
                 );
-                vecmat_into(&mut logits, &self.normed[..e], &model.head_w.data, e, cfg.vocab);
-                for (l, bv) in logits.iter_mut().zip(&model.head_b.data) {
+                let mut out = vec![0.0f32; cfg.vocab];
+                vecmat_into(&mut out, &self.normed[..e], &model.head_w.data, e, cfg.vocab);
+                for (l, bv) in out.iter_mut().zip(&model.head_b.data) {
                     *l += bv;
                 }
+                logits = Some(out);
             }
         }
         logits
@@ -1150,6 +1212,108 @@ mod tests {
             assert_eq!(la, lb);
             a = crate::sampling::argmax(&la);
             b = crate::sampling::argmax(&lb);
+        }
+    }
+
+    #[test]
+    fn partial_prefill_is_bitwise_one_shot_regardless_of_slicing() {
+        // the same prompt sliced three different ways — one-shot, aligned
+        // 64-token chunks, ragged slices that straddle chunk boundaries —
+        // must land on identical logits and identical greedy continuations
+        let cfg = ModelConfig {
+            max_len: 256,
+            ..tiny_cfg()
+        };
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 40);
+        let prompt = tokens(PREFILL_CHUNK * 2 + 17, cfg.vocab, 41);
+        let mut one_shot = m.batched_session(1);
+        one_shot.alloc_row().unwrap();
+        let expect = one_shot.prefill_row(0, &prompt);
+
+        for splits in [
+            vec![PREFILL_CHUNK, PREFILL_CHUNK, 17], // the engine's schedule
+            vec![5, PREFILL_CHUNK, PREFILL_CHUNK + 12], // ragged, straddling
+            vec![1, prompt.len() - 1],
+        ] {
+            assert_eq!(splits.iter().sum::<usize>(), prompt.len());
+            let mut sess = m.batched_session(1);
+            sess.alloc_row().unwrap();
+            let mut off = 0;
+            let mut logits = None;
+            for (i, &n) in splits.iter().enumerate() {
+                let last = i == splits.len() - 1;
+                let got = sess.prefill_row_partial(0, &prompt[off..off + n], last);
+                assert_eq!(got.is_some(), last, "logits only on the finishing slice");
+                logits = got;
+                off += n;
+            }
+            assert_eq!(
+                logits.as_deref(),
+                Some(&expect[..]),
+                "slicing {splits:?} changed the prefill logits"
+            );
+            assert_eq!(sess.pos(0), one_shot.pos(0));
+            // greedy continuation stays in lockstep too
+            let mut a = crate::sampling::argmax(&expect);
+            let mut b = a;
+            for _ in 0..4 {
+                let la = one_shot.step_batch(&[a]);
+                let lb = sess.step_batch(&[b]);
+                assert_eq!(la, lb, "continuation diverged after sliced prefill");
+                a = crate::sampling::argmax(&la);
+                b = crate::sampling::argmax(&lb);
+            }
+            // reset the one-shot session for the next slicing
+            one_shot.free_row(0);
+            one_shot.alloc_row().unwrap();
+            one_shot.prefill_row(0, &prompt);
+        }
+    }
+
+    #[test]
+    fn prefix_step_with_swap_matches_dedicated_sessions() {
+        // lane 1 prefills over two partial calls while lane 0 keeps
+        // decoding via prefix steps; after swap_rows moves lane 1 into
+        // the prefix, both match single-lane references bitwise
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 50);
+        let s0 = tokens(4, cfg.vocab, 51);
+        let s1 = tokens(9, cfg.vocab, 52);
+        let mut sess = m.batched_session(2);
+        sess.alloc_row().unwrap();
+        let mut ref0 = m.batched_session(1);
+        ref0.alloc_row().unwrap();
+        let mut ref1 = m.batched_session(1);
+        ref1.alloc_row().unwrap();
+        // lane 0 ingests its prompt and decodes two tokens
+        let mut l0 = sess.prefill_row(0, &s0);
+        assert_eq!(l0, ref0.prefill_row(0, &s0));
+        // lane 1 joins and prefills incrementally while lane 0 prefix-steps
+        sess.alloc_row().unwrap();
+        assert!(sess.prefill_row_partial(1, &s1[..5], false).is_none());
+        let mut t0 = crate::sampling::argmax(&l0);
+        l0 = sess.step_batch(&[t0]); // prefix step: lane 1 untouched
+        assert_eq!(l0, ref0.step_batch(&[t0]));
+        let l1 = sess.prefill_row_partial(1, &s1[5..], true).expect("finishing slice");
+        let mut expect1 = Vec::new();
+        for &t in &s1 {
+            expect1 = ref1.step_batch(&[t]);
+        }
+        assert_eq!(l1, expect1, "interleaved partial prefill diverged");
+        // move the freshly prefilled lane into the decode prefix: the
+        // engine swaps it with the first prefilling lane (here: itself),
+        // but exercise a real swap by putting it at row 0 instead
+        sess.swap_rows(0, 1);
+        let mut t1 = crate::sampling::argmax(&l1);
+        t0 = crate::sampling::argmax(&l0);
+        for _ in 0..5 {
+            let both = sess.step_batch(&[t1, t0]); // row 0 = stream 1 now
+            let a = ref1.step_batch(&[t1]);
+            let b = ref0.step_batch(&[t0]);
+            assert_eq!(&both[..cfg.vocab], &a[..], "swapped-in lane diverged");
+            assert_eq!(&both[cfg.vocab..], &b[..], "swapped-out lane diverged");
+            t1 = crate::sampling::argmax(&a);
+            t0 = crate::sampling::argmax(&b);
         }
     }
 

@@ -25,6 +25,43 @@
 //! [`default_pool`] backs sessions that don't pick a pool themselves; CI
 //! runs the test suite both with `LINTRA_NUM_THREADS=1` (pure serial
 //! paths) and unset (pooled paths).
+//!
+//! # Dispatch thresholds — when work does *not* fan out
+//!
+//! Because the unit of partition is an output row, a job with a single
+//! output row is a GEMV in disguise and **cannot** be split — splitting
+//! its reduction would change float order and break rule 1. Three layers
+//! of defense keep such shapes off the pool:
+//!
+//! * **B = 1 decode ticks skip the pool entirely.** The batched decode
+//!   session passes `pool = None` for single-lane ticks (see
+//!   `BatchedDecodeSession::step_batch`), so a B=1 engine pays zero
+//!   dispatch overhead — not even the per-kernel threshold checks. (The
+//!   ROADMAP's speculative column-split `vecmat` with per-thread partial
+//!   outputs is the only way to ever parallelize that shape, and it
+//!   would violate bit-identity; it stays out.)
+//! * **Single-row kernels stay serial** (`rows >= 2` guards in every
+//!   `*_pooled` kernel in `crate::tensor`).
+//! * **Tiny kernels stay serial**: below `PAR_MIN_WORK` (~16k mul-adds
+//!   for GEMM shapes) or `PAR_MIN_ROW_ELEMS` (row-wise kernels), one
+//!   dispatch (microseconds) would rival the work itself.
+//!
+//! # Example
+//!
+//! ```
+//! use linear_transformer::parallel::ThreadPool;
+//!
+//! let pool = ThreadPool::new(4);
+//! // fill a [8, 3] block in parallel; rows are never split, so each
+//! // row's values match what a serial loop would produce exactly
+//! let mut out = vec![0.0f32; 8 * 3];
+//! pool.for_row_blocks(8, 3, &mut out, |row0, block| {
+//!     for (i, row) in block.chunks_mut(3).enumerate() {
+//!         row.fill((row0 + i) as f32);
+//!     }
+//! });
+//! assert_eq!(out[7 * 3], 7.0);
+//! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};

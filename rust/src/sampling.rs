@@ -8,6 +8,21 @@
 //! worker, where a panic kills every in-flight request. Comparisons use
 //! the total order (`f32::total_cmp`) with NaN demoted below every real
 //! logit, and degenerate distributions fall back to greedy.
+//!
+//! # Example
+//!
+//! ```
+//! use linear_transformer::rng::Rng;
+//! use linear_transformer::sampling::{argmax, sample_logits};
+//!
+//! let logits = [0.1, 5.0, -2.0];
+//! assert_eq!(argmax(&logits), 1);
+//! // temperature 0 is deterministic greedy; > 0 samples the softmax
+//! let mut rng = Rng::new(0);
+//! assert_eq!(sample_logits(&logits, 0.0, &mut rng), 1);
+//! let t = sample_logits(&logits, 1.0, &mut rng);
+//! assert!((t as usize) < logits.len());
+//! ```
 
 use crate::rng::Rng;
 use crate::tensor::softmax_inplace;

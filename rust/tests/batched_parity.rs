@@ -10,7 +10,9 @@
 //! The prefill path carries a stronger contract: ingesting a prompt via
 //! `prefill_row` must be *bit-identical* to feeding it token-by-token —
 //! same final logits, same lane state, same greedy continuation — under
-//! the same ragged admission/eviction churn.
+//! the same ragged admission/eviction churn. The engine's incremental
+//! prefill scheduler (bounded chunks per tick, interleaved with decode)
+//! is a third ingestion schedule and must hit the same bits as both.
 
 use linear_transformer::attention::AttentionKind;
 use linear_transformer::config::{ModelConfig, ServeConfig};
@@ -258,6 +260,102 @@ fn engine_prefill_matches_direct_generation_with_long_prompts() {
             resp.id
         );
     }
+    handle.shutdown();
+}
+
+#[test]
+fn incremental_prefill_matches_oneshot_and_per_tick_paths_under_churn() {
+    // the acceptance bar for incremental prefill scheduling: prompts
+    // longer than prefill_chunks_per_tick * PREFILL_CHUNK admit over
+    // multiple ticks (budget 1 chunk/tick, max_batch 2 forcing churn:
+    // slots retire while others are mid-prefill) and every request's
+    // greedy tokens are IDENTICAL to both reference ingestion paths —
+    // (a) per-tick feeding (model.generate walks the prompt one step at
+    // a time) and (b) one-shot prefill_row + greedy continuation
+    let cfg = ModelConfig {
+        max_len: 192,
+        ..tiny_cfg()
+    };
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 123);
+    let vocab = cfg.vocab;
+    // 100- and 129-token prompts span 2-3 chunks; the 1-token max_new
+    // retires inside the prefill phase itself
+    let cases: Vec<(Vec<u32>, usize)> = vec![
+        (stream(100, vocab, 9000), 6),
+        (stream(3, vocab, 9001), 12),
+        (stream(129, vocab, 9002), 4),
+        (stream(65, vocab, 9003), 1),
+        (stream(40, vocab, 9004), 8),
+    ];
+
+    // reference (a): per-tick feeding
+    let per_tick: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| model.generate(p, *n, 0.0, 0))
+        .collect();
+
+    // reference (b): one-shot prefill + greedy continuation
+    let one_shot: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| {
+            let mut sess = model.batched_session(1);
+            sess.alloc_row().unwrap();
+            let mut logits = sess.prefill_row(0, p);
+            let mut out = vec![linear_transformer::sampling::argmax(&logits)];
+            while out.len() < *n {
+                logits = sess.step_batch(&[*out.last().unwrap()]);
+                out.push(linear_transformer::sampling::argmax(&logits));
+            }
+            out
+        })
+        .collect();
+    assert_eq!(per_tick, one_shot, "the two reference ingestion paths disagree");
+
+    // the engine: incremental prefill, 1 chunk per tick, heavy churn
+    let mut handle = NativeEngine::spawn(
+        model,
+        ServeConfig {
+            max_batch: 2,
+            max_wait_us: 300,
+            prefill_chunks_per_tick: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, n))| {
+            handle.submit(GenerateRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: *n,
+                temperature: 0.0,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(
+            resp.tokens, per_tick[resp.id as usize],
+            "request {}: incremental prefill diverged from the reference paths",
+            resp.id
+        );
+    }
+    let st = handle.stats();
+    assert_eq!(st.completed, cases.len() as u64);
+    assert!(
+        st.prefill_ticks >= 3,
+        "the 129-token prompt alone needs three 1-chunk ticks to admit \
+         (prefill_ticks = {})",
+        st.prefill_ticks
+    );
+    assert_eq!(
+        st.prompt_tokens_ingested,
+        cases.iter().map(|(p, _)| p.len() as u64).sum::<u64>(),
+        "every prompt token must be ingested through the prefill path"
+    );
     handle.shutdown();
 }
 
