@@ -17,6 +17,10 @@
 //! measures what incremental prefill scheduling buys: resident-lane
 //! decode tick latency (p50/max) while a 512-token prompt admits, with
 //! the prompt landing in one shot vs one `PREFILL_CHUNK` per tick.
+//! The prefix-cache section measures what the prefix-reuse state cache
+//! buys: cold vs warm TTFT for a request sharing a 512-token prefix
+//! (warm = restore the fixed-size lane snapshot, prefill only the
+//! suffix), first logits asserted bit-identical.
 //! Emits machine-readable `BENCH_decode.json`.
 //!
 //! Run: cargo run --release --example perf_decode -- [steps]
@@ -282,6 +286,53 @@ fn main() {
          to one {chunk}-token chunk per tick)"
     );
 
+    // --- prefix cache: cold vs warm TTFT for a shared 512-token prefix ---
+    //
+    // The serving engine's --state-cache-mb path at the session level:
+    // a donor request ingests a shared prefix (system prompt / few-shot
+    // template) once and its fixed-size lane state is snapshotted
+    // (export_lane); a warm admission restores the snapshot (a memcpy)
+    // and prefills only its private suffix, where a cold admission
+    // prefills prefix + suffix. Restore is bit-identical to prefilling
+    // the prefix in place, asserted on the full logits row.
+    let shared_len = prompt_len;
+    let suffix_len = 32.min(cfg.max_len - shared_len - 1);
+    let shared: Vec<u32> = (0..shared_len).map(|i| ((i * 7) % cfg.vocab) as u32).collect();
+    let suffix: Vec<u32> = (0..suffix_len).map(|i| ((i * 11 + 3) % cfg.vocab) as u32).collect();
+    let full: Vec<u32> = shared.iter().chain(&suffix).copied().collect();
+
+    let mut cold = model.batched_session_with_pool(1, None);
+    cold.alloc_row().expect("capacity");
+    let t0 = std::time::Instant::now();
+    let cold_logits = cold.prefill_row(0, &full);
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // the donor's one-time ingestion (what the first request pays anyway)
+    let mut donor = model.batched_session_with_pool(1, None);
+    donor.alloc_row().expect("capacity");
+    donor.prefill_row_partial(0, &shared, false);
+    let snap = donor.export_lane(0);
+
+    let mut warm = model.batched_session_with_pool(1, None);
+    warm.alloc_row().expect("capacity");
+    let t0 = std::time::Instant::now();
+    warm.import_lane(0, &snap);
+    let warm_logits = warm
+        .prefill_row_partial(0, &suffix, true)
+        .expect("finishing slice returns logits");
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(
+        warm_logits, cold_logits,
+        "restored-prefix TTFT must be bit-identical to the cold path"
+    );
+    let prefix_speedup = cold_ms / warm_ms;
+    println!(
+        "\nprefix cache, {shared_len}-token shared prefix + {suffix_len}-token suffix: \
+         cold {cold_ms:.1} ms, warm {warm_ms:.1} ms ({prefix_speedup:.2}x; \
+         snapshot {} KiB)",
+        snap.bytes() / 1024
+    );
+
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
         ("steps_per_lane", Json::Num(steps as f64)),
@@ -306,6 +357,17 @@ fn main() {
                 ("incremental_tick_p50_ms", Json::Num(incr_p50)),
                 ("incremental_tick_max_ms", Json::Num(incr_max)),
                 ("stall_reduction", Json::Num(oneshot_max / incr_max)),
+            ]),
+        ),
+        (
+            "prefix_cache",
+            obj(vec![
+                ("prefix_len", Json::Num(shared_len as f64)),
+                ("suffix_len", Json::Num(suffix_len as f64)),
+                ("cold_ttft_ms", Json::Num(cold_ms)),
+                ("warm_ttft_ms", Json::Num(warm_ms)),
+                ("speedup", Json::Num(prefix_speedup)),
+                ("snapshot_bytes", Json::Num(snap.bytes() as f64)),
             ]),
         ),
     ]);

@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                         prompt: vec![12, 3, 4, 5, 1],
                         max_new: 32,
                         temperature: 0.8,
+                        top_k: 0,
                     })
                     .collect();
                 request_over_tcp(&addr, &reqs).expect("client io")

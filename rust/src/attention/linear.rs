@@ -20,7 +20,10 @@
 //!   chunk of tokens into a lane's cumulative (S, Z) — bit-identical to
 //!   ticking the chunk token-by-token, but lets the layers above batch
 //!   their projections over the chunk and skip the lm-head until the
-//!   final prompt position.
+//!   final prompt position. Because the state is a fixed-size row pair,
+//!   a lane is also *portable*: `export_row`/`import_row` copy one
+//!   lane's exact (S, Z) bits out into / back from a flat buffer, which
+//!   is what the serving engine's prefix-reuse state cache snapshots.
 //!
 //! Inputs q, k are *raw* (un-mapped); phi(x) = elu(x)+1 is applied
 //! internally, matching the python wrappers.
@@ -451,6 +454,40 @@ impl BatchedLinearAttnState {
     /// Memory footprint of the live lanes (constant per lane, per token).
     pub fn state_bytes(&self) -> usize {
         self.rows * (self.d * self.m + self.d) * 4
+    }
+
+    /// Floats in one lane's snapshot: the `[d, m]` S block followed by
+    /// the `[d]` Z block (the layout [`Self::export_row`] writes and
+    /// [`Self::import_row`] expects).
+    pub fn lane_len(&self) -> usize {
+        self.d * self.m + self.d
+    }
+
+    /// Copy lane `r`'s (S, Z) pair into `out` (`[lane_len()]`: s
+    /// row-major, then z). The lane itself is untouched; the copy is the
+    /// exact f32 bits of the state, so importing it later resumes the
+    /// recurrence bit-identically (snapshot/restore is plain memcpy —
+    /// the paper's fixed-size state makes the whole attention memory of
+    /// a prefix a small flat buffer).
+    pub fn export_row(&self, r: usize, out: &mut [f32]) {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let (d, m) = (self.d, self.m);
+        assert_eq!(out.len(), d * m + d, "snapshot buffer has the wrong length");
+        out[..d * m].copy_from_slice(&self.s[r * d * m..(r + 1) * d * m]);
+        out[d * m..].copy_from_slice(&self.z[r * d..(r + 1) * d]);
+    }
+
+    /// Overwrite lane `r`'s (S, Z) pair from a buffer written by
+    /// [`Self::export_row`]. Bitwise: after the import the lane is
+    /// indistinguishable from the lane the snapshot was taken from, so
+    /// any continuation ([`Self::step_batch`] / [`Self::prefill_row`])
+    /// produces the exact floats the source lane would have produced.
+    pub fn import_row(&mut self, r: usize, snap: &[f32]) {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let (d, m) = (self.d, self.m);
+        assert_eq!(snap.len(), d * m + d, "snapshot buffer has the wrong length");
+        self.s[r * d * m..(r + 1) * d * m].copy_from_slice(&snap[..d * m]);
+        self.z[r * d..(r + 1) * d].copy_from_slice(&snap[d * m..]);
     }
 
     /// Absorb a chunk of `n` tokens into lane `r`'s state through the
@@ -917,6 +954,71 @@ mod tests {
         }
         let (s, z) = full.lane(2);
         assert_eq!((s.to_vec(), z.to_vec()), snapshot, "suffix lane state moved");
+    }
+
+    #[test]
+    fn export_import_row_resumes_bitwise() {
+        // snapshot a lane mid-stream, perturb the world, restore into a
+        // different lane of a different state: the restored lane must
+        // continue the source trajectory bit-for-bit
+        let (d, m, b) = (8, 8, 3);
+        let mut rng = Rng::new(25);
+        let mut src = BatchedLinearAttnState::new(b, d, m);
+        for _ in 0..b {
+            src.push_row();
+        }
+        let mut out = vec![0.0; b * m];
+        for _ in 0..6 {
+            let (q, k, v) = (rand(b * d, &mut rng), rand(b * d, &mut rng), rand(b * m, &mut rng));
+            src.step_batch(&q, &k, &v, &mut out);
+        }
+        let mut snap = vec![0.0f32; src.lane_len()];
+        src.export_row(1, &mut snap);
+        // export must not disturb the source lane
+        let (s1, z1) = src.lane(1);
+        assert_eq!(&snap[..d * m], s1);
+        assert_eq!(&snap[d * m..], z1);
+
+        let mut dst = BatchedLinearAttnState::new(2, d, m);
+        dst.push_row();
+        dst.push_row();
+        // dirty the destination lane first: import must fully overwrite
+        let (q, k, v) = (rand(2 * d, &mut rng), rand(2 * d, &mut rng), rand(2 * m, &mut rng));
+        let mut out2 = vec![0.0; 2 * m];
+        dst.step_batch(&q, &k, &v, &mut out2);
+        dst.import_row(0, &snap);
+        let (s0, z0) = dst.lane(0);
+        assert_eq!(s0, &snap[..d * m], "import must land the exact S bits");
+        assert_eq!(z0, &snap[d * m..], "import must land the exact Z bits");
+
+        // both lanes now decode in bitwise lockstep
+        let mut out_src = vec![0.0; b * m];
+        let mut out_dst = vec![0.0; 2 * m];
+        for _ in 0..4 {
+            let (q, k, v) = (rand(b * d, &mut rng), rand(b * d, &mut rng), rand(b * m, &mut rng));
+            src.step_batch(&q, &k, &v, &mut out_src);
+            // route the same stream lane 1 sees into dst lane 0
+            let mut q2 = q[..2 * d].to_vec();
+            let mut k2 = k[..2 * d].to_vec();
+            let mut v2 = v[..2 * m].to_vec();
+            q2[..d].copy_from_slice(&q[d..2 * d]);
+            k2[..d].copy_from_slice(&k[d..2 * d]);
+            v2[..m].copy_from_slice(&v[m..2 * m]);
+            dst.step_batch(&q2, &k2, &v2, &mut out_dst);
+            assert_eq!(
+                &out_src[m..2 * m],
+                &out_dst[..m],
+                "restored lane diverged from the source trajectory"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong length")]
+    fn import_row_rejects_mismatched_snapshot() {
+        let mut st = BatchedLinearAttnState::new(1, 4, 4);
+        st.push_row();
+        st.import_row(0, &[0.0; 7]);
     }
 
     #[test]

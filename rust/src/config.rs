@@ -208,6 +208,26 @@ pub struct ServeConfig {
     /// >= 1; a huge value effectively restores
     /// whole-prompt-at-admission behavior.
     pub prefill_chunks_per_tick: usize,
+    /// Global cap on prompt chunks ingested per engine tick across *all*
+    /// admitting slots (`prefill_chunks_per_tick` stays the per-slot
+    /// cap). `0` = unlimited. With K slots admitting simultaneously the
+    /// per-slot cap alone still lets one tick absorb K chunks; a global
+    /// budget of 1 bounds every tick to one chunk's latency no matter
+    /// how many prompts are streaming in (slots past the budget simply
+    /// resume on later ticks, earliest-admitted first). Like the
+    /// per-slot knob this only reshapes latency: logits are
+    /// bit-identical under any budget.
+    pub prefill_chunk_budget: usize,
+    /// Prefix-reuse state cache budget in MiB; `0` = off (the default —
+    /// explicit values win, else the `LINTRA_STATE_CACHE_MB` environment
+    /// variable is consulted, mirroring `num_threads` /
+    /// `LINTRA_NUM_THREADS` resolution; see [`resolve_state_cache_mb`]).
+    /// When on, the engine snapshots each prefilling lane's fixed-size
+    /// recurrent state at prefill-chunk boundaries, keyed by the token
+    /// prefix, and restores the longest cached prefix at admission —
+    /// requests sharing a system prompt / few-shot template / chat
+    /// history skip that prefix's prefill entirely, bit-identically.
+    pub state_cache_mb: usize,
 }
 
 impl Default for ServeConfig {
@@ -221,6 +241,8 @@ impl Default for ServeConfig {
             seed: 0,
             num_threads: 0,
             prefill_chunks_per_tick: 1,
+            prefill_chunk_budget: 0,
+            state_cache_mb: 0,
         }
     }
 }
@@ -238,6 +260,31 @@ pub const MAX_NUM_THREADS: usize = 1024;
 /// `--max-wait-us 18446744073709551615` up front.
 pub const MAX_WAIT_US_LIMIT: u64 = 3_600_000_000;
 
+/// Upper bound on `state_cache_mb` (1 TiB). The engine multiplies by
+/// 2^20 to get a byte budget; bounding the MiB count keeps that
+/// arithmetic overflow-free and rejects typos up front.
+pub const MAX_STATE_CACHE_MB: usize = 1 << 20;
+
+/// Resolve the state-cache size: an explicit `state_cache_mb >= 1` wins;
+/// `0` consults `LINTRA_STATE_CACHE_MB` (a positive integer enables the
+/// cache at that many MiB — how CI exercises the cached path without
+/// touching every config literal), else the cache stays off. Mirrors
+/// [`crate::parallel::resolve_threads`]' `LINTRA_NUM_THREADS` handling;
+/// every path is clamped to [`MAX_STATE_CACHE_MB`].
+pub fn resolve_state_cache_mb(requested: usize) -> usize {
+    if requested >= 1 {
+        return requested.min(MAX_STATE_CACHE_MB);
+    }
+    if let Ok(v) = std::env::var("LINTRA_STATE_CACHE_MB") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_STATE_CACHE_MB);
+            }
+        }
+    }
+    0
+}
+
 impl ServeConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.max_batch == 0 {
@@ -254,6 +301,13 @@ impl ServeConfig {
         }
         if self.prefill_chunks_per_tick == 0 {
             bail!("prefill_chunks_per_tick must be >= 1 (a prefilling slot must make progress)");
+        }
+        // prefill_chunk_budget: every value is meaningful (0 = unlimited,
+        // n >= 1 caps chunks per tick across all admitting slots) — the
+        // per-slot cap above already guarantees progress, and a global
+        // budget of 1 still ingests one chunk per tick
+        if self.state_cache_mb > MAX_STATE_CACHE_MB {
+            bail!("state_cache_mb {} exceeds the limit {MAX_STATE_CACHE_MB}", self.state_cache_mb);
         }
         Ok(())
     }
@@ -355,6 +409,49 @@ mod tests {
             ..Default::default()
         };
         assert!(stuck.validate().is_err(), "0 chunks/tick would never finish a prompt");
+    }
+
+    #[test]
+    fn prefill_chunk_budget_accepts_zero_as_unlimited() {
+        assert_eq!(ServeConfig::default().prefill_chunk_budget, 0, "default is unlimited");
+        for n in [0usize, 1, 4, usize::MAX] {
+            let cfg = ServeConfig {
+                prefill_chunk_budget: n,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "prefill_chunk_budget = {n} must validate");
+        }
+    }
+
+    #[test]
+    fn state_cache_mb_validates_and_resolves() {
+        assert_eq!(ServeConfig::default().state_cache_mb, 0, "cache defaults to off");
+        for n in [0usize, 1, 64, MAX_STATE_CACHE_MB] {
+            let cfg = ServeConfig {
+                state_cache_mb: n,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "state_cache_mb = {n} must validate");
+        }
+        let absurd = ServeConfig {
+            state_cache_mb: MAX_STATE_CACHE_MB + 1,
+            ..Default::default()
+        };
+        assert!(absurd.validate().is_err(), "an absurd state_cache_mb must be rejected");
+        // explicit values win and are clamped
+        assert_eq!(resolve_state_cache_mb(64), 64);
+        assert_eq!(resolve_state_cache_mb(usize::MAX), MAX_STATE_CACHE_MB);
+        // 0 falls back to the environment (mirroring LINTRA_NUM_THREADS);
+        // read the ambient value rather than mutating process env from a
+        // parallel test — CI exports LINTRA_STATE_CACHE_MB=64 in one run
+        // to steer exactly this path
+        let ambient = std::env::var("LINTRA_STATE_CACHE_MB")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .map(|n| n.min(MAX_STATE_CACHE_MB))
+            .unwrap_or(0);
+        assert_eq!(resolve_state_cache_mb(0), ambient);
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //!
 //! let mut b = Batcher::new(4, Duration::from_millis(10));
 //! let t0 = Instant::now();
-//! b.push(GenerateRequest { id: 1, prompt: vec![3], max_new: 4, temperature: 0.0 }, t0);
+//! let req = GenerateRequest { id: 1, prompt: vec![3], max_new: 4, temperature: 0.0, top_k: 0 };
+//! b.push(req, t0);
 //! assert!(!b.ready(t0)); // underfull and before the deadline
 //! let later = t0 + Duration::from_millis(10);
 //! assert_eq!(b.poll(later, usize::MAX).len(), 1); // deadline releases it
@@ -106,6 +107,7 @@ mod tests {
             prompt: vec![1],
             max_new: 4,
             temperature: 0.0,
+            top_k: 0,
         }
     }
 

@@ -35,6 +35,23 @@
 //! always have with batch composition.) Backends without the path (PJRT
 //! today) fall back to the per-tick cursor walk.
 //!
+//! Because that recurrent state is *fixed-size*, a lane is also
+//! snapshottable: [`DecodeBackend::snapshot_lane`] /
+//! [`DecodeBackend::restore_lane`] move one lane's complete state in
+//! and out as a [`crate::nn::LaneSnapshot`]. With `--state-cache-mb`
+//! (or `LINTRA_STATE_CACHE_MB`) the engine keeps a **prefix-reuse state
+//! cache** ([`crate::coordinator::state_cache::StateCache`]) on top of
+//! those hooks: as a prompt streams in, the lane is snapshotted at
+//! every prefill-chunk boundary, keyed by the exact token prefix; at
+//! admission the cache is consulted and the longest cached prefix of
+//! the new prompt is restored into the fresh lane, so only the
+//! non-shared suffix is prefilled. Restore is a memcpy and
+//! bit-identical to having prefilled the prefix in place, so a cache
+//! hit can never change a logit — it only deletes ingestion work
+//! (`EngineStats::prompt_tokens_skipped` counts how much). Two knobs
+//! bound admission work per tick: `prefill_chunks_per_tick` (per slot)
+//! and `prefill_chunk_budget` (global across all admitting slots).
+//!
 //! Two backends implement the trait:
 //!
 //! * the **native** backend — [`crate::nn::BatchedDecodeSession`], the
@@ -64,6 +81,7 @@
 //!     prompt: vec![12, 3, 4],
 //!     max_new: 16,
 //!     temperature: 0.0,
+//!     top_k: 0,
 //! });
 //! assert!(resp.error.is_none());
 //! engine.shutdown();
@@ -74,15 +92,16 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::attention::AttentionKind;
-use crate::config::{ModelConfig, ServeConfig};
+use crate::config::{resolve_state_cache_mb, ModelConfig, ServeConfig};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::request::{GenerateRequest, GenerateResponse};
 use crate::coordinator::sessions::{SlotInfo, SlotPhase, SlotTable};
-use crate::metrics::{LatencyRecorder, TickLatencySplit};
-use crate::nn::{BatchedDecodeSession, TransformerLM};
+use crate::coordinator::state_cache::StateCache;
+use crate::metrics::{LatencyRecorder, StateCacheCounters, TickLatencySplit};
+use crate::nn::{BatchedDecodeSession, LaneSnapshot, TransformerLM};
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
-use crate::sampling::sample_logits;
+use crate::sampling::sample_logits_topk;
 
 /// Aggregate serving statistics.
 #[derive(Debug, Default, Clone)]
@@ -96,6 +115,13 @@ pub struct EngineStats {
     pub prefill_ticks: u64,
     /// Prompt tokens absorbed through the incremental prefill path.
     pub prompt_tokens_ingested: u64,
+    /// Prompt tokens *not* prefilled because a cached prefix snapshot
+    /// was restored instead (the prefix-reuse cache's win; disjoint
+    /// from `prompt_tokens_ingested`).
+    pub prompt_tokens_skipped: u64,
+    /// Prefix-reuse state-cache consultations and evictions (all zero
+    /// when the cache is off).
+    pub state_cache: StateCacheCounters,
     pub batch_occupancy_sum: u64,
     /// End-to-end request latency (admission to completion).
     pub latency: LatencyRecorder,
@@ -279,6 +305,34 @@ pub trait DecodeBackend {
         let _ = (a, b);
         unreachable!("swap_lanes is only invoked on prefill-capable backends")
     }
+
+    /// True if [`Self::snapshot_lane`] / [`Self::restore_lane`] are
+    /// implemented. Together with [`Self::supports_prefill`] this is
+    /// the prerequisite for the engine's prefix-reuse state cache.
+    fn supports_snapshot(&self) -> bool {
+        false
+    }
+
+    /// Export `lane`'s complete recurrent state (every layer×head (S, Z)
+    /// pair plus the position cursor) as a [`LaneSnapshot`]. The lane is
+    /// untouched; the snapshot is an exact-bits copy, O(state-per-lane).
+    /// `None` when the backend has no snapshot path.
+    fn snapshot_lane(&self, lane: usize) -> Option<LaneSnapshot> {
+        let _ = lane;
+        None
+    }
+
+    /// Overwrite `lane`'s state and position from a snapshot previously
+    /// produced by [`Self::snapshot_lane`] **on this backend** (the
+    /// engine never crosses backends or model geometries). After the
+    /// restore the lane must be bit-identical to having prefilled the
+    /// snapshot's tokens in place, so any continuation produces the
+    /// exact logits of a cold full prefill — the invariant the
+    /// prefix-reuse cache's correctness rests on.
+    fn restore_lane(&mut self, lane: usize, snap: &LaneSnapshot) -> anyhow::Result<()> {
+        let _ = (lane, snap);
+        anyhow::bail!("this backend has no snapshot path")
+    }
 }
 
 impl DecodeBackend for BatchedDecodeSession<'_> {
@@ -326,6 +380,21 @@ impl DecodeBackend for BatchedDecodeSession<'_> {
 
     fn swap_lanes(&mut self, a: usize, b: usize) {
         self.swap_rows(a, b)
+    }
+
+    fn supports_snapshot(&self) -> bool {
+        true
+    }
+
+    fn snapshot_lane(&self, lane: usize) -> Option<LaneSnapshot> {
+        Some(self.export_lane(lane))
+    }
+
+    fn restore_lane(&mut self, lane: usize, snap: &LaneSnapshot) -> anyhow::Result<()> {
+        // import_lane asserts geometry; the engine only restores
+        // snapshots this very session exported, so the contract holds
+        self.import_lane(lane, snap);
+        Ok(())
     }
 }
 
@@ -379,6 +448,28 @@ fn run_engine<B: DecodeBackend>(
     let vocab = backend.vocab();
     let max_len = backend.max_len();
     let prefill_chunk = backend.prefill_chunk().max(1);
+    // prefix-reuse state cache: explicit --state-cache-mb wins, else the
+    // LINTRA_STATE_CACHE_MB env var, else off. Needs both the resumable
+    // prefill path (to resume from a restored cursor) and the snapshot
+    // hooks.
+    let cache_mb = resolve_state_cache_mb(cfg.state_cache_mb);
+    let mut state_cache: Option<StateCache> =
+        if cache_mb > 0 && backend.supports_prefill() && backend.supports_snapshot() {
+            // saturating: a 32-bit usize cannot wrap a large MiB count
+            // to a zero-byte (silently inert) budget
+            Some(StateCache::new(cache_mb.saturating_mul(1 << 20), prefill_chunk))
+        } else {
+            if cache_mb > 0 {
+                // requested but unusable (e.g. the PJRT backend has no
+                // snapshot/prefill path yet): say so instead of letting
+                // the operator believe prefix caching is active
+                eprintln!(
+                    "[engine] state cache ({cache_mb} MiB) requested but this backend has \
+                     no snapshot/prefill path; prefix caching disabled"
+                );
+            }
+            None
+        };
 
     while !shutdown || slots.active() > 0 || batcher.pending() > 0 {
         // 1. ingest requests. Block whenever there is nothing to tick:
@@ -438,6 +529,10 @@ fn run_engine<B: DecodeBackend>(
         let now = Instant::now();
         let poll_now = if shutdown { now + batcher.max_wait } else { now };
         let capacity = max_batch - slots.active();
+        let mut cache_hits = 0u64;
+        let mut cache_misses = 0u64;
+        let mut cache_evictions = 0u64;
+        let mut tokens_skipped = 0u64;
         for req in batcher.poll(poll_now, capacity) {
             // reject prompts the decode loop cannot survive — empty (no
             // token to feed on the first tick) or longer than the position
@@ -453,6 +548,18 @@ fn run_engine<B: DecodeBackend>(
                     req.id,
                     Vec::new(),
                     format!("prompt length {} exceeds max_len {max_len}", req.prompt.len()),
+                );
+                continue;
+            }
+            if !req.temperature.is_finite() || req.temperature < 0.0 {
+                // NaN/inf/negative temperatures have no sensible
+                // distribution; reject instead of silently degrading to
+                // greedy inside the sampler
+                send_failure(
+                    &mut responders,
+                    req.id,
+                    Vec::new(),
+                    format!("temperature must be finite and >= 0, got {}", req.temperature),
                 );
                 continue;
             }
@@ -473,7 +580,14 @@ fn run_engine<B: DecodeBackend>(
             }
             let req_id = req.id;
             let idx = slots
-                .alloc(SlotInfo::new(req_id, now, req.prompt, req.max_new, req.temperature))
+                .alloc(SlotInfo::new(
+                    req_id,
+                    now,
+                    req.prompt,
+                    req.max_new,
+                    req.temperature,
+                    req.top_k,
+                ))
                 .expect("capacity checked");
             let lane = match backend.alloc_lane() {
                 Ok(lane) => lane,
@@ -493,7 +607,30 @@ fn run_engine<B: DecodeBackend>(
             if backend.supports_prefill() {
                 // resumable prefill: the slot joins the prefill suffix
                 // and its first chunks flow in this very tick (step 3)
-                slots.get_mut(idx).expect("just allocated").start_prefill();
+                let info = slots.get_mut(idx).expect("just allocated");
+                info.start_prefill();
+                // prefix reuse: restore the longest cached prefix of
+                // this prompt into the fresh lane and advance the slot's
+                // cursor past it — those tokens are never prefilled.
+                // Restore lands the exact state bits prefill would have,
+                // so a hit cannot change a single logit.
+                if let Some(cache) = state_cache.as_mut() {
+                    match cache.lookup(&info.prompt) {
+                        Some((skip, snap)) => match backend.restore_lane(lane, &snap) {
+                            Ok(()) => {
+                                info.advance_prefill(skip);
+                                cache_hits += 1;
+                                tokens_skipped += skip as u64;
+                            }
+                            Err(_) => {
+                                // the lane is still freshly zeroed:
+                                // fall back to a cold prefill
+                                cache_misses += 1;
+                            }
+                        },
+                        None => cache_misses += 1,
+                    }
+                }
                 lane_slots.push(idx);
             } else {
                 // per-tick prompt feeding: the slot's cursor walks the
@@ -516,18 +653,30 @@ fn run_engine<B: DecodeBackend>(
         let mut retired: Vec<(SlotInfo, Duration)> = Vec::new();
 
         // 3. prefill phase: every mid-prefill lane ingests at most
-        // `prefill_chunks_per_tick` chunks. A lane whose final prompt
-        // position lands samples its first token from the returned
-        // logits and either retires on the spot or swaps into the
-        // decode prefix; everyone else resumes next tick. This bounds
-        // admission-time work per tick, which is what keeps resident
-        // decode lanes producing one token per tick while long prompts
-        // stream in.
+        // `prefill_chunks_per_tick` chunks, and the tick as a whole at
+        // most `prefill_chunk_budget` chunks (0 = unlimited) across all
+        // admitting slots — K simultaneous admissions can then add at
+        // most one budget's worth of latency, not K chunks. A lane whose
+        // final prompt position lands samples its first token from the
+        // returned logits and either retires on the spot or swaps into
+        // the decode prefix; everyone else (including lanes the global
+        // budget starved this tick, earliest-admitted lanes first)
+        // resumes next tick. This bounds admission-time work per tick,
+        // which is what keeps resident decode lanes producing one token
+        // per tick while long prompts stream in.
+        let mut chunk_budget = if cfg.prefill_chunk_budget == 0 {
+            u64::MAX
+        } else {
+            cfg.prefill_chunk_budget as u64
+        };
         let mut lane = n_dec;
         'suffix: while lane < lane_slots.len() {
             let slot = lane_slots[lane];
             let mut last_logits: Option<Vec<f32>> = None;
             for _ in 0..cfg.prefill_chunks_per_tick {
+                if chunk_budget == 0 {
+                    break; // global budget exhausted: resume next tick
+                }
                 let info = slots.get_mut(slot).expect("suffix lane maps to live slot");
                 debug_assert_eq!(info.phase, SlotPhase::Prefilling);
                 let take = info.prefill_remaining().min(prefill_chunk);
@@ -536,8 +685,22 @@ fn run_engine<B: DecodeBackend>(
                 match backend.prefill_partial(lane, chunk, finish) {
                     Ok(opt) => {
                         info.advance_prefill(take);
+                        chunk_budget -= 1;
                         tick_chunks += 1;
                         tick_prompt_tokens += take as u64;
+                        // deposit a prefix snapshot whenever the cursor
+                        // lands on a chunk boundary (interior chunks
+                        // always do; a ragged finishing slice does not):
+                        // the next request sharing this prefix restores
+                        // it instead of prefilling
+                        if let Some(cache) = state_cache.as_mut() {
+                            let prefix = &info.prompt[..info.cursor];
+                            if info.cursor % prefill_chunk == 0 && !cache.contains(prefix) {
+                                if let Some(snap) = backend.snapshot_lane(lane) {
+                                    cache_evictions += cache.insert(prefix, snap) as u64;
+                                }
+                            }
+                        }
                         if finish {
                             last_logits = Some(opt.expect("finishing chunk returns logits"));
                             break;
@@ -567,7 +730,7 @@ fn run_engine<B: DecodeBackend>(
             };
             // final prompt position landed: sample the first token
             let info = slots.get_mut(slot).expect("live slot");
-            let next = sample_logits(&logits, info.temperature, &mut rng);
+            let next = sample_logits_topk(&logits, info.temperature, info.top_k, &mut rng);
             info.generated.push(next);
             tick_tokens += 1;
             if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
@@ -637,7 +800,7 @@ fn run_engine<B: DecodeBackend>(
                 info.pos += 1;
                 if info.prompt_done() {
                     let row = &logits[lane * vocab..(lane + 1) * vocab];
-                    let next = sample_logits(row, info.temperature, &mut rng);
+                    let next = sample_logits_topk(row, info.temperature, info.top_k, &mut rng);
                     info.generated.push(next);
                     tick_tokens += 1;
                     if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
@@ -686,6 +849,10 @@ fn run_engine<B: DecodeBackend>(
             st.batch_occupancy_sum += occupancy;
             st.tokens_generated += tick_tokens;
             st.prompt_tokens_ingested += tick_prompt_tokens;
+            st.prompt_tokens_skipped += tokens_skipped;
+            st.state_cache.hits += cache_hits;
+            st.state_cache.misses += cache_misses;
+            st.state_cache.evictions += cache_evictions;
             st.completed += retired.len() as u64;
             if tick_chunks > 0 {
                 st.prefill_ticks += 1;
@@ -1000,6 +1167,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 5,
             temperature: 0.0,
+            top_k: 0,
         });
         assert_eq!(resp.id, 1);
         assert_eq!(resp.tokens.len(), 5);
@@ -1028,6 +1196,7 @@ mod tests {
                     prompt: vec![1, (i % 10) as u32],
                     max_new: 6,
                     temperature: 0.0,
+                    top_k: 0,
                 })
             })
             .collect();
@@ -1060,6 +1229,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 5,
             temperature: 0.0,
+            top_k: 0,
         });
         assert_eq!(resp.tokens, direct);
         handle.shutdown();
@@ -1101,6 +1271,7 @@ mod tests {
                     prompt: p.clone(),
                     max_new: *n,
                     temperature: 0.0,
+                    top_k: 0,
                 })
             })
             .collect();
@@ -1127,6 +1298,7 @@ mod tests {
             prompt: vec![1; max_len + 1],
             max_new: 4,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(resp.error.is_some(), "oversized prompt must be rejected");
         assert!(resp.tokens.is_empty());
@@ -1135,6 +1307,7 @@ mod tests {
             prompt: vec![],
             max_new: 4,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(empty.error.is_some(), "empty prompt must be rejected");
         // the worker must still be alive and serving
@@ -1143,6 +1316,7 @@ mod tests {
             prompt: vec![1, 2],
             max_new: 3,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(ok.error.is_none());
         assert_eq!(ok.tokens.len(), 3);
@@ -1159,6 +1333,7 @@ mod tests {
             prompt: vec![1; 10],
             max_new: 10_000,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(resp.tokens.len() <= max_len - 10);
         assert!(resp.error.is_none());
@@ -1169,6 +1344,7 @@ mod tests {
             prompt: vec![1, 2],
             max_new: 4,
             temperature: 0.0,
+            top_k: 0,
         });
         assert_eq!(full.tokens.len(), 4);
         assert!(!full.truncated);
@@ -1185,6 +1361,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 0,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert!(resp.tokens.is_empty(), "asked for zero tokens, got {:?}", resp.tokens);
@@ -1198,6 +1375,7 @@ mod tests {
             prompt: vec![4],
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         assert_eq!(ok.tokens.len(), 2);
         handle.shutdown();
@@ -1215,6 +1393,7 @@ mod tests {
             prompt: vec![2, 3, 4],
             max_new: 1,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(resp.error.is_none());
         assert_eq!(resp.tokens, direct);
@@ -1233,6 +1412,7 @@ mod tests {
             prompt: vec![1, 2],
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(ok.error.is_none());
         handle.shutdown();
@@ -1241,6 +1421,7 @@ mod tests {
             prompt: vec![1],
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         assert_eq!(resp.id, 42);
         assert!(resp.tokens.is_empty());
@@ -1273,6 +1454,7 @@ mod tests {
             prompt: vec![1, 2],
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         let waited = t0.elapsed();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -1307,6 +1489,7 @@ mod tests {
                 prompt: vec![3, 1, 4, 1, 5],
                 max_new: 8,
                 temperature: 0.0,
+                top_k: 0,
             });
             assert!(resp.error.is_none(), "{:?}", resp.error);
             outs.push(resp.tokens);
@@ -1368,12 +1551,14 @@ mod tests {
             prompt: resident_prompt,
             max_new: 24,
             temperature: 0.0,
+            top_k: 0,
         });
         let rx_long = handle.submit(GenerateRequest {
             id: 2,
             prompt: long_prompt.clone(),
             max_new: 5,
             temperature: 0.0,
+            top_k: 0,
         });
         let resident = rx_resident.recv().unwrap();
         let long = rx_long.recv().unwrap();
@@ -1438,24 +1623,28 @@ mod tests {
             prompt: short_prompt,
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         let rx_long = handle.submit(GenerateRequest {
             id: 2,
             prompt: long_prompt,
             max_new: 6,
             temperature: 0.0,
+            top_k: 0,
         });
         let rx_oversized = handle.submit(GenerateRequest {
             id: 3,
             prompt: vec![1; max_len + 1],
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         let rx_empty = handle.submit(GenerateRequest {
             id: 4,
             prompt: vec![],
             max_new: 2,
             temperature: 0.0,
+            top_k: 0,
         });
         assert_eq!(rx_short.recv().unwrap().tokens, direct_short);
         assert!(rx_oversized.recv().unwrap().error.is_some());
@@ -1481,6 +1670,7 @@ mod tests {
             prompt: long_prompt,
             max_new: 4,
             temperature: 0.0,
+            top_k: 0,
         });
         handle.shutdown(); // joins the worker: drain must finish the request
         let resp = rx.recv().unwrap();
@@ -1524,6 +1714,7 @@ mod tests {
                         prompt: p.clone(),
                         max_new: *n,
                         temperature: 0.0,
+                        top_k: 0,
                     })
                 })
                 .collect();
@@ -1541,6 +1732,195 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_restore_skips_prefill_and_matches_cold_run() {
+        // the acceptance bar for the prefix-reuse state cache: a second
+        // request sharing a chunk-aligned prompt prefix must produce
+        // BIT-IDENTICAL greedy output to a cold run while ingesting only
+        // the non-shared suffix tokens — observed through
+        // prompt_tokens_skipped, the hit/miss counters, and the prefill
+        // tick count dropping from 3 (148 tokens) to 1 (35 tokens)
+        let model = long_model();
+        let vocab = model.cfg.vocab;
+        let shared = prompt_of(2 * crate::nn::PREFILL_CHUNK, vocab, 90); // 128: 2 chunks
+        let mut p1 = shared.clone();
+        p1.extend(prompt_of(20, vocab, 91));
+        let mut p2 = shared.clone();
+        p2.extend(prompt_of(35, vocab, 92));
+        let direct1 = model.generate(&p1, 6, 0.0, 0);
+        let direct2 = model.generate(&p2, 6, 0.0, 0);
+
+        let mut handle = NativeEngine::spawn(
+            long_model(),
+            ServeConfig {
+                state_cache_mb: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r1 = handle.generate_blocking(GenerateRequest {
+            id: 1,
+            prompt: p1.clone(),
+            max_new: 6,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert_eq!(r1.tokens, direct1, "cold run must match direct generation");
+        let st1 = handle.stats();
+        assert_eq!(st1.state_cache.hits, 0, "nothing cached yet");
+        assert_eq!(st1.state_cache.misses, 1);
+        assert_eq!(st1.prompt_tokens_skipped, 0);
+        assert_eq!(st1.prompt_tokens_ingested, p1.len() as u64);
+        assert_eq!(st1.prefill_ticks, 3, "148 tokens = 3 chunks at 1 chunk/tick");
+
+        let r2 = handle.generate_blocking(GenerateRequest {
+            id: 2,
+            prompt: p2.clone(),
+            max_new: 6,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        assert!(r2.error.is_none(), "{:?}", r2.error);
+        assert_eq!(
+            r2.tokens, direct2,
+            "warm (restored-prefix) run must be bit-identical to a cold run"
+        );
+        let st2 = handle.stats();
+        assert_eq!(st2.state_cache.hits, 1, "the shared prefix must hit");
+        assert_eq!(
+            st2.prompt_tokens_skipped,
+            shared.len() as u64,
+            "exactly the shared prefix must be skipped"
+        );
+        assert_eq!(
+            st2.prompt_tokens_ingested,
+            (p1.len() + p2.len() - shared.len()) as u64,
+            "the second request must ingest only its non-shared suffix"
+        );
+        assert_eq!(
+            st2.prefill_ticks - st1.prefill_ticks,
+            1,
+            "the 35-token suffix needs a single prefill tick"
+        );
+        assert_eq!(st2.state_cache.evictions, 0, "a 16 MiB budget fits two tiny entries");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn global_prefill_chunk_budget_caps_work_per_tick_without_changing_tokens() {
+        // three 128-token prompts admitted in the same batch: the
+        // per-slot cap alone lets one tick absorb 3 chunks; a global
+        // budget of 1 spreads the same 6 chunks over >= 6 ticks — and
+        // neither schedule may move a single output token
+        let model = long_model();
+        let vocab = model.cfg.vocab;
+        let cases: Vec<Vec<u32>> = (0..3).map(|i| prompt_of(128, vocab, 95 + i)).collect();
+        let direct: Vec<Vec<u32>> = cases.iter().map(|p| model.generate(p, 4, 0.0, 0)).collect();
+        let mut prefill_ticks = Vec::new();
+        for budget in [1usize, 0] {
+            let mut handle = NativeEngine::spawn(
+                long_model(),
+                ServeConfig {
+                    max_batch: 3,
+                    max_wait_us: 50_000, // all three land in one released batch
+                    prefill_chunks_per_tick: 1_000_000, // per-slot effectively unbounded
+                    prefill_chunk_budget: budget,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let rxs: Vec<_> = cases
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    handle.submit(GenerateRequest {
+                        id: i as u64,
+                        prompt: p.clone(),
+                        max_new: 4,
+                        temperature: 0.0,
+                        top_k: 0,
+                    })
+                })
+                .collect();
+            for rx in rxs {
+                let resp = rx.recv().unwrap();
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                assert_eq!(
+                    resp.tokens, direct[resp.id as usize],
+                    "the global chunk budget must never change tokens (budget {budget})"
+                );
+            }
+            let st = handle.stats();
+            assert_eq!(st.prompt_tokens_ingested, 3 * 128);
+            prefill_ticks.push(st.prefill_ticks);
+            handle.shutdown();
+        }
+        assert!(
+            prefill_ticks[0] >= 6,
+            "budget 1 must spread 6 chunks over >= 6 ticks, took {}",
+            prefill_ticks[0]
+        );
+        assert!(
+            prefill_ticks[1] <= 3,
+            "unlimited budget + unbounded per-slot cap must ingest in the admission \
+             tick(s), took {}",
+            prefill_ticks[1]
+        );
+    }
+
+    #[test]
+    fn invalid_temperature_is_rejected_at_admission() {
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.5] {
+            let resp = handle.generate_blocking(GenerateRequest {
+                id: 1,
+                prompt: vec![1, 2],
+                max_new: 2,
+                temperature: bad,
+                top_k: 0,
+            });
+            assert!(
+                resp.error.as_deref().unwrap_or("").contains("temperature"),
+                "temperature {bad} must be rejected, got {:?}",
+                resp.error
+            );
+            assert!(resp.tokens.is_empty());
+        }
+        // the worker keeps serving, and temperature 0 is still fine
+        let ok = handle.generate_blocking(GenerateRequest {
+            id: 2,
+            prompt: vec![1, 2],
+            max_new: 3,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(ok.tokens.len(), 3);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn top_k_one_is_deterministic_greedy_at_any_temperature() {
+        // per-request top_k plumbing: k = 1 collapses sampling to argmax
+        // no matter the temperature, so it must reproduce greedy direct
+        // generation exactly — including across the prefill-sampled
+        // first token and the per-tick sampled rest
+        let model = tiny_model();
+        let greedy = model.generate(&[3, 1, 4], 8, 0.0, 0);
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 1,
+            prompt: vec![3, 1, 4],
+            max_new: 8,
+            temperature: 5.0,
+            top_k: 1,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, greedy, "top_k = 1 must be greedy regardless of temperature");
+        handle.shutdown();
+    }
+
+    #[test]
     fn full_length_prompt_yields_one_truncated_token() {
         // a prompt that already fills max_len leaves room to sample
         // exactly one token from the final position's logits
@@ -1552,6 +1932,7 @@ mod tests {
             prompt: vec![1; max_len],
             max_new: 5,
             temperature: 0.0,
+            top_k: 0,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_eq!(resp.tokens.len(), 1);

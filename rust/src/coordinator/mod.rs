@@ -29,6 +29,14 @@
 //! single logit (so greedy outputs are schedule-independent). See
 //! `ARCHITECTURE.md` at the repo root for the full request lifecycle.
 //!
+//! And because the recurrent state is *fixed-size*, the whole attention
+//! memory of a prompt prefix is one small snapshot: the engine can
+//! deposit lane snapshots at chunk boundaries into a prefix-reuse
+//! [`state_cache::StateCache`] and, on admission, restore the longest
+//! cached prefix of a new prompt instead of prefilling it — multi-turn
+//! chats and shared system prompts skip straight past their common
+//! prefix, bit-identically (`--state-cache-mb` sizes it; 0 = off).
+//!
 //! Modules:
 //! * [`request`]  — request/response types + JSON wire codec
 //! * [`batcher`]  — pure batching policy (deadline + capacity), propchecked
@@ -38,6 +46,8 @@
 //!   continuous-batching tick loop with incremental prefill scheduling,
 //!   and its two backends (native batched GEMM decode; PJRT batched
 //!   artifact, runtime created in the worker)
+//! * [`state_cache`] — chunk-aligned prefix → lane-snapshot map with
+//!   LRU byte-budget eviction (the prefix-reuse cache)
 //! * [`server`]   — TCP JSON-lines front-end
 
 pub mod batcher;
@@ -45,6 +55,7 @@ pub mod engine;
 pub mod request;
 pub mod server;
 pub mod sessions;
+pub mod state_cache;
 
 pub use engine::{DecodeBackend, EngineHandle, EngineStats, NativeEngine};
 pub use request::{GenerateRequest, GenerateResponse};

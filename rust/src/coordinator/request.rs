@@ -11,6 +11,7 @@
 //! assert_eq!(req.prompt, vec![12, 3, 4]);
 //! assert_eq!(req.max_new, 8);
 //! assert_eq!(req.temperature, 1.0); // omitted fields take defaults
+//! assert_eq!(req.top_k, 0); // 0 = unrestricted sampling
 //! ```
 
 use crate::json::{obj, Json};
@@ -21,12 +22,18 @@ pub struct GenerateRequest {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Per-request sampling temperature (`0` = greedy argmax). Must be
+    /// finite and non-negative; the engine rejects anything else at
+    /// admission.
     pub temperature: f32,
+    /// Per-request top-k sampling cutoff (`0` = unrestricted, the
+    /// default — preserving pre-top-k behavior exactly; `1` = greedy).
+    pub top_k: usize,
 }
 
 impl GenerateRequest {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("id", Json::Num(self.id as f64)),
             (
                 "prompt",
@@ -34,7 +41,11 @@ impl GenerateRequest {
             ),
             ("max_new", Json::Num(self.max_new as f64)),
             ("temperature", Json::Num(self.temperature as f64)),
-        ])
+        ];
+        if self.top_k != 0 {
+            pairs.push(("top_k", Json::Num(self.top_k as f64)));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<GenerateRequest> {
@@ -53,6 +64,20 @@ impl GenerateRequest {
         if prompt.is_empty() {
             anyhow::bail!("prompt must not be empty");
         }
+        let top_k = match j.get("top_k") {
+            None => 0,
+            Some(v) => {
+                // a negative or fractional top_k silently cast to usize
+                // would sample from the wrong support — fail loudly
+                let n = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("top_k must be a non-negative integer"))?;
+                if !n.is_finite() || n < 0.0 || n.fract() != 0.0 {
+                    anyhow::bail!("top_k must be a non-negative integer, got {n}");
+                }
+                n as usize
+            }
+        };
         Ok(GenerateRequest {
             id,
             prompt,
@@ -61,6 +86,7 @@ impl GenerateRequest {
                 .get("temperature")
                 .and_then(|v| v.as_f64())
                 .unwrap_or(1.0) as f32,
+            top_k,
         })
     }
 }
@@ -127,6 +153,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 8,
             temperature: 0.5,
+            top_k: 40,
         };
         let back = GenerateRequest::from_json(&r.to_json()).unwrap();
         assert_eq!(r, back);
@@ -138,6 +165,20 @@ mod tests {
         let r = GenerateRequest::from_json(&j).unwrap();
         assert_eq!(r.max_new, 16);
         assert_eq!(r.temperature, 1.0);
+        assert_eq!(r.top_k, 0, "omitted top_k must mean unrestricted sampling");
+        // top_k == 0 stays off the wire (legacy-clients compat)
+        assert!(!r.to_json().to_string().contains("top_k"));
+    }
+
+    #[test]
+    fn invalid_top_k_is_rejected_at_parse() {
+        for bad in [r#"{"id":1,"prompt":[5],"top_k":-3}"#, r#"{"id":1,"prompt":[5],"top_k":1.5}"#]
+        {
+            let j = Json::parse(bad).unwrap();
+            assert!(GenerateRequest::from_json(&j).is_err(), "{bad} must be rejected");
+        }
+        let ok = Json::parse(r#"{"id":1,"prompt":[5],"top_k":2}"#).unwrap();
+        assert_eq!(GenerateRequest::from_json(&ok).unwrap().top_k, 2);
     }
 
     #[test]

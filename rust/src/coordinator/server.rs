@@ -26,7 +26,7 @@
 //! let server = Server::start("127.0.0.1:0", engine).unwrap();
 //! let resps = request_over_tcp(
 //!     &server.addr.to_string(),
-//!     &[GenerateRequest { id: 1, prompt: vec![12, 3], max_new: 4, temperature: 0.0 }],
+//!     &[GenerateRequest { id: 1, prompt: vec![12, 3], max_new: 4, temperature: 0.0, top_k: 0 }],
 //! )
 //! .unwrap();
 //! assert_eq!(resps[0].tokens.len(), 4);
@@ -245,6 +245,7 @@ mod tests {
                 prompt: vec![1, 2],
                 max_new: 4,
                 temperature: 0.0,
+                top_k: 0,
             })
             .collect();
         let resps = request_over_tcp(&addr, &reqs).unwrap();
@@ -275,6 +276,7 @@ mod tests {
                     prompt: vec![1, 2],
                     max_new: 2,
                     temperature: 0.0,
+                    top_k: 0,
                 }],
             )
             .unwrap();

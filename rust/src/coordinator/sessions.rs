@@ -24,7 +24,7 @@
 //! use std::time::Instant;
 //! use linear_transformer::coordinator::sessions::{SlotInfo, SlotPhase};
 //!
-//! let mut slot = SlotInfo::new(1, Instant::now(), vec![7, 8, 9], 4, 0.0);
+//! let mut slot = SlotInfo::new(1, Instant::now(), vec![7, 8, 9], 4, 0.0, 0);
 //! slot.start_prefill();
 //! slot.advance_prefill(2); // first chunk: two prompt tokens ingested
 //! assert_eq!(slot.phase, SlotPhase::Prefilling);
@@ -61,6 +61,8 @@ pub struct SlotInfo {
     pub generated: Vec<u32>,
     pub max_new: usize,
     pub temperature: f32,
+    /// per-request top-k sampling cutoff (0 = unrestricted)
+    pub top_k: usize,
     /// absolute position of the next token to feed
     pub pos: usize,
     /// prompt-ingestion phase (see [`SlotPhase`])
@@ -75,6 +77,7 @@ impl SlotInfo {
         prompt: Vec<u32>,
         max_new: usize,
         temperature: f32,
+        top_k: usize,
     ) -> Self {
         SlotInfo {
             request_id,
@@ -84,6 +87,7 @@ impl SlotInfo {
             generated: Vec::new(),
             max_new,
             temperature,
+            top_k,
             pos: 0,
             phase: SlotPhase::Decoding,
         }
@@ -103,10 +107,13 @@ impl SlotInfo {
         self.prompt.len() - self.cursor
     }
 
-    /// Record that `n` more prompt tokens entered the lane state via the
-    /// prefill path. Flips the slot to [`SlotPhase::Decoding`] when the
-    /// final prompt token lands: `cursor` and `pos` sit just past the
-    /// prompt, so the slot's next tick feeds its first sampled token.
+    /// Record that `n` more prompt tokens entered the lane state — via
+    /// the prefill path, or via a restored prefix snapshot (the engine's
+    /// state cache advances the cursor past the restored tokens with
+    /// this same call, so they are never prefilled). Flips the slot to
+    /// [`SlotPhase::Decoding`] when the final prompt token lands:
+    /// `cursor` and `pos` sit just past the prompt, so the slot's next
+    /// tick feeds its first sampled token.
     pub fn advance_prefill(&mut self, n: usize) {
         assert_eq!(self.phase, SlotPhase::Prefilling, "advance_prefill outside prefill");
         assert!(n >= 1 && self.cursor + n <= self.prompt.len(), "chunk overruns the prompt");
@@ -199,7 +206,7 @@ mod tests {
     use super::*;
 
     fn info(id: u64) -> SlotInfo {
-        SlotInfo::new(id, Instant::now(), vec![1, 2], 4, 0.0)
+        SlotInfo::new(id, Instant::now(), vec![1, 2], 4, 0.0, 0)
     }
 
     #[test]
@@ -231,7 +238,7 @@ mod tests {
     #[test]
     fn incremental_prefill_reaches_the_same_state_as_one_shot() {
         // chunked advance must land on exactly the single-advance state
-        let mut chunked = SlotInfo::new(3, Instant::now(), vec![1, 2, 3, 4, 5], 4, 0.0);
+        let mut chunked = SlotInfo::new(3, Instant::now(), vec![1, 2, 3, 4, 5], 4, 0.0, 0);
         chunked.start_prefill();
         assert_eq!(chunked.phase, SlotPhase::Prefilling);
         assert_eq!(chunked.prefill_remaining(), 5);
@@ -240,7 +247,7 @@ mod tests {
         assert_eq!(chunked.prefill_remaining(), 3);
         assert_eq!((chunked.cursor, chunked.pos), (2, 2));
         chunked.advance_prefill(3);
-        let mut one_shot = SlotInfo::new(3, chunked.started, vec![1, 2, 3, 4, 5], 4, 0.0);
+        let mut one_shot = SlotInfo::new(3, chunked.started, vec![1, 2, 3, 4, 5], 4, 0.0, 0);
         one_shot.start_prefill();
         one_shot.advance_prefill(5);
         assert_eq!(chunked.phase, SlotPhase::Decoding);

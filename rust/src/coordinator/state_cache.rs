@@ -1,0 +1,413 @@
+//! Prefix-reuse state cache: skip prefill for shared prompt prefixes.
+//!
+//! The paper's decode state is a **fixed-size** (S, Z) pair per
+//! layer×head (eqs 16-20), so the entire attention memory of a prompt
+//! prefix is one small flat buffer — a [`LaneSnapshot`] — no matter how
+//! long the prefix is. This cache keys such snapshots by the exact token
+//! prefix that produced them; a later request whose prompt shares a
+//! cached prefix (system prompts, few-shot templates, multi-turn chat)
+//! restores the snapshot into its lane and ingests only the non-shared
+//! suffix. Restore is a memcpy and bit-identical to having prefilled the
+//! prefix in place, so outputs never depend on whether a request hit the
+//! cache.
+//!
+//! Design points:
+//!
+//! * **Chunk alignment.** Entries exist only at multiples of the
+//!   backend's prefill granularity (`PREFILL_CHUNK` tokens for the
+//!   native engine): the engine deposits snapshots exactly when a
+//!   prefilling lane's cursor crosses a chunk boundary, so lookups only
+//!   ever need to probe `prompt_len / chunk` candidate lengths.
+//! * **Hash-keyed, collision-safe.** The primary key is an FNV-1a hash
+//!   of the token prefix; each hash bucket stores the full token slice
+//!   and verifies it on lookup, so a hash collision degrades to a probe,
+//!   never to restoring the wrong state.
+//! * **LRU under a byte budget.** `insert` evicts least-recently-used
+//!   entries until the new snapshot fits; an entry larger than the whole
+//!   budget is refused outright.
+//! * **Eviction never races a restore.** Snapshots are handed out as
+//!   [`Arc`] clones; evicting an entry drops only the cache's reference,
+//!   so a restore that is mid-flight (or merely scheduled) keeps its
+//!   snapshot alive until it is done with it.
+//!
+//! The cache is owned by the engine worker thread (one per engine) and
+//! is purely in-memory; `--state-cache-mb` / `LINTRA_STATE_CACHE_MB`
+//! size it (0 = off, the default).
+//!
+//! # Example
+//!
+//! ```
+//! use linear_transformer::attention::AttentionKind;
+//! use linear_transformer::config::ModelConfig;
+//! use linear_transformer::coordinator::state_cache::StateCache;
+//! use linear_transformer::nn::TransformerLM;
+//!
+//! let model = TransformerLM::init(&ModelConfig::small_copy(), AttentionKind::Linear, 0);
+//! let mut sess = model.batched_session(1);
+//! sess.alloc_row();
+//! let prompt = [7u32, 8, 9, 10, 11, 12];
+//! sess.prefill_row_partial(0, &prompt[..4], false); // ingest the prefix
+//! let mut cache = StateCache::new(1 << 20, 4);
+//! cache.insert(&prompt[..4], sess.export_lane(0));
+//! // a prompt sharing the 4-token prefix restores it and skips ahead
+//! let (skip, snap) = cache.lookup(&prompt).expect("prefix cached");
+//! assert_eq!(skip, 4);
+//! assert_eq!(snap.pos, 4); // the snapshot carries the lane's cursor
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::nn::LaneSnapshot;
+
+/// FNV-1a offset basis / prime (64-bit).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a_extend(mut h: u64, token: u32) -> u64 {
+    for b in token.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash of a whole token prefix. `lookup` keeps its own incremental
+/// per-boundary fold of [`fnv1a_extend`]; every other key computation
+/// must go through this so the schemes can never desynchronize.
+fn hash_tokens(tokens: &[u32]) -> u64 {
+    tokens.iter().fold(FNV_OFFSET, |h, &t| fnv1a_extend(h, t))
+}
+
+/// One cached prefix: the exact tokens (collision verification), the
+/// snapshot, a recency stamp, and the entry's accounted byte cost.
+struct Entry {
+    tokens: Box<[u32]>,
+    snap: Arc<LaneSnapshot>,
+    last_used: u64,
+    bytes: usize,
+}
+
+impl Entry {
+    fn cost(tokens: &[u32], snap: &LaneSnapshot) -> usize {
+        // snapshot payload + key tokens + a flat allowance for the
+        // entry/bucket/Arc bookkeeping, so the budget tracks real memory
+        snap.bytes() + tokens.len() * std::mem::size_of::<u32>() + 128
+    }
+}
+
+/// Chunk-aligned prefix → lane-snapshot map with LRU byte-budget
+/// eviction. See the module docs for the contract.
+pub struct StateCache {
+    budget: usize,
+    chunk: usize,
+    buckets: HashMap<u64, Vec<Entry>>,
+    bytes: usize,
+    entries: usize,
+    clock: u64,
+}
+
+impl StateCache {
+    /// A cache holding at most `budget` bytes of entries, keyed at
+    /// multiples of `chunk` tokens (the backend's prefill granularity).
+    pub fn new(budget: usize, chunk: usize) -> Self {
+        assert!(chunk >= 1, "chunk alignment must be at least one token");
+        StateCache {
+            budget,
+            chunk,
+            buckets: HashMap::new(),
+            bytes: 0,
+            entries: 0,
+            clock: 0,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Accounted bytes currently held (always <= the budget).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The byte budget this cache evicts down to.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Longest cached chunk-aligned prefix of `prompt` that is *strictly
+    /// shorter* than the prompt (at least one token must remain to
+    /// prefill, so the finishing slice can produce the first-token
+    /// logits). Returns the prefix length and the snapshot; bumps the
+    /// entry's recency. O(prompt_len / chunk) probes, one forward hash
+    /// pass over the prompt.
+    pub fn lookup(&mut self, prompt: &[u32]) -> Option<(usize, Arc<LaneSnapshot>)> {
+        if self.entries == 0 || prompt.len() <= self.chunk {
+            return None;
+        }
+        // prefix hashes at every aligned length, one forward FNV pass
+        let max_k = (prompt.len() - 1) / self.chunk; // k*chunk < prompt.len()
+        let mut hashes = Vec::with_capacity(max_k);
+        let mut h = FNV_OFFSET;
+        for (i, &t) in prompt[..max_k * self.chunk].iter().enumerate() {
+            h = fnv1a_extend(h, t);
+            if (i + 1) % self.chunk == 0 {
+                hashes.push(h);
+            }
+        }
+        for k in (1..=max_k).rev() {
+            let n = k * self.chunk;
+            let Some(bucket) = self.buckets.get_mut(&hashes[k - 1]) else {
+                continue;
+            };
+            if let Some(e) = bucket.iter_mut().find(|e| *e.tokens == prompt[..n]) {
+                self.clock += 1;
+                e.last_used = self.clock;
+                return Some((n, e.snap.clone()));
+            }
+        }
+        None
+    }
+
+    /// True if exactly this prefix is already cached (no recency bump).
+    pub fn contains(&self, prefix: &[u32]) -> bool {
+        self.buckets
+            .get(&hash_tokens(prefix))
+            .is_some_and(|b| b.iter().any(|e| *e.tokens == *prefix))
+    }
+
+    /// Deposit a snapshot for `prefix` (which must be a non-empty
+    /// multiple of the chunk alignment — the engine only calls this at
+    /// chunk boundaries). Evicts LRU entries until the snapshot fits.
+    /// Returns how many entries were evicted. A duplicate prefix only
+    /// refreshes recency; a snapshot larger than the whole budget is
+    /// refused (nothing is evicted for it).
+    pub fn insert(&mut self, prefix: &[u32], snap: LaneSnapshot) -> usize {
+        debug_assert!(
+            !prefix.is_empty() && prefix.len() % self.chunk == 0,
+            "cache keys must be non-empty chunk-aligned prefixes"
+        );
+        debug_assert_eq!(
+            snap.pos,
+            prefix.len(),
+            "snapshot position must match the prefix it claims to hold"
+        );
+        let h = hash_tokens(prefix);
+        self.clock += 1;
+        if let Some(bucket) = self.buckets.get_mut(&h) {
+            if let Some(e) = bucket.iter_mut().find(|e| *e.tokens == *prefix) {
+                e.last_used = self.clock;
+                return 0;
+            }
+        }
+        let cost = Entry::cost(prefix, &snap);
+        if cost > self.budget {
+            return 0; // would evict everything and still not fit
+        }
+        let mut evicted = 0;
+        while self.bytes + cost > self.budget {
+            self.evict_lru();
+            evicted += 1;
+        }
+        self.bytes += cost;
+        self.entries += 1;
+        self.buckets.entry(h).or_default().push(Entry {
+            tokens: prefix.into(),
+            snap: Arc::new(snap),
+            last_used: self.clock,
+            bytes: cost,
+        });
+        evicted
+    }
+
+    /// Drop the least-recently-used entry. The snapshot itself survives
+    /// in any [`Arc`] a caller still holds — eviction only releases the
+    /// cache's reference, so it can never invalidate an in-flight
+    /// restore.
+    fn evict_lru(&mut self) {
+        debug_assert!(self.entries > 0, "evict_lru on an empty cache");
+        let mut victim: Option<(u64, usize, u64)> = None; // (hash, idx, last_used)
+        for (&h, bucket) in &self.buckets {
+            for (i, e) in bucket.iter().enumerate() {
+                if victim.is_none_or(|(_, _, lu)| e.last_used < lu) {
+                    victim = Some((h, i, e.last_used));
+                }
+            }
+        }
+        let (h, i, _) = victim.expect("non-empty cache has a victim");
+        let bucket = self.buckets.get_mut(&h).expect("victim bucket exists");
+        let e = bucket.swap_remove(i);
+        self.bytes -= e.bytes;
+        self.entries -= 1;
+        if bucket.is_empty() {
+            self.buckets.remove(&h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttentionKind;
+    use crate::config::ModelConfig;
+    use crate::nn::TransformerLM;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 11,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            max_len: 64,
+            d_ff: 64,
+            chunk: 16,
+            causal: true,
+            lsh_rounds: 1,
+            lsh_buckets: 8,
+            lsh_chunk: 8,
+        }
+    }
+
+    /// A real snapshot whose `pos` matches `n` ingested tokens.
+    fn snap_at(model: &TransformerLM, tokens: &[u32]) -> LaneSnapshot {
+        let mut sess = model.batched_session(1);
+        sess.alloc_row().unwrap();
+        if !tokens.is_empty() {
+            sess.prefill_row_partial(0, tokens, false);
+        }
+        sess.export_lane(0)
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(11) as u32).collect()
+    }
+
+    #[test]
+    fn lookup_finds_longest_aligned_prefix_only() {
+        let model = TransformerLM::init(&tiny_cfg(), AttentionKind::Linear, 1);
+        let mut cache = StateCache::new(1 << 20, 4);
+        let prompt = toks(14, 10);
+        cache.insert(&prompt[..4], snap_at(&model, &prompt[..4]));
+        cache.insert(&prompt[..12], snap_at(&model, &prompt[..12]));
+        // a foreign prefix of the same length must not match
+        let mut other = prompt[..8].to_vec();
+        other[0] ^= 1;
+        cache.insert(&other, snap_at(&model, &other));
+        assert_eq!(cache.len(), 3);
+
+        let (n, snap) = cache.lookup(&prompt).expect("hit");
+        assert_eq!(n, 12, "the longest cached aligned prefix wins");
+        assert_eq!(snap.pos, 12);
+        // a prompt exactly as long as its cached prefix cannot hit it —
+        // at least one token must remain for the finishing prefill slice
+        let (n, _) = cache.lookup(&prompt[..12]).expect("shorter entry still hits");
+        assert_eq!(n, 4);
+        assert!(cache.lookup(&prompt[..4]).is_none());
+        // a prompt differing inside the first chunk (and not matching
+        // the `other` entry either) shares no cached prefix: miss
+        let mut foreign = prompt.clone();
+        foreign[1] ^= 1;
+        assert!(cache.lookup(&foreign).is_none());
+    }
+
+    #[test]
+    fn eviction_under_pressure_is_lru_and_budget_bounded() {
+        let model = TransformerLM::init(&tiny_cfg(), AttentionKind::Linear, 2);
+        let probe = snap_at(&model, &[1, 2, 3, 4]);
+        let cost = Entry::cost(&[1, 2, 3, 4], &probe);
+        // room for exactly two entries
+        let mut cache = StateCache::new(2 * cost + cost / 2, 4);
+        let (a, b, c) = (vec![1u32, 2, 3, 4], vec![5u32, 6, 7, 8], vec![9u32, 10, 0, 1]);
+        assert_eq!(cache.insert(&a, snap_at(&model, &a)), 0);
+        assert_eq!(cache.insert(&b, snap_at(&model, &b)), 0);
+        assert_eq!(cache.len(), 2);
+        // touch `a` so `b` becomes the LRU victim
+        let mut probe_a = a.clone();
+        probe_a.push(0);
+        assert!(cache.lookup(&probe_a).is_some());
+        assert_eq!(cache.insert(&c, snap_at(&model, &c)), 1, "one eviction to fit");
+        assert_eq!(cache.len(), 2);
+        assert!(cache.bytes() <= cache.budget());
+        assert!(cache.contains(&a), "recently used entry must survive");
+        assert!(!cache.contains(&b), "LRU entry must be the victim");
+        assert!(cache.contains(&c));
+        // a snapshot bigger than the whole budget is refused, evicting nothing
+        let mut tiny = StateCache::new(8, 4);
+        assert_eq!(tiny.insert(&a, snap_at(&model, &a)), 0);
+        assert!(tiny.is_empty());
+    }
+
+    #[test]
+    fn eviction_never_invalidates_a_handed_out_snapshot() {
+        // the refcount-vs-evict contract: an Arc obtained from lookup
+        // stays alive and intact after the entry is evicted
+        let model = TransformerLM::init(&tiny_cfg(), AttentionKind::Linear, 3);
+        let a = vec![1u32, 2, 3, 4];
+        let probe = snap_at(&model, &a);
+        let cost = Entry::cost(&a, &probe);
+        let mut cache = StateCache::new(cost + cost / 4, 4); // exactly one entry fits
+        cache.insert(&a, probe.clone());
+        let mut probe_a = a.clone();
+        probe_a.push(0);
+        let (_, held) = cache.lookup(&probe_a).expect("hit");
+        // force the eviction of `a`
+        let b = vec![5u32, 6, 7, 8];
+        assert_eq!(cache.insert(&b, snap_at(&model, &b)), 1);
+        assert!(!cache.contains(&a), "entry evicted");
+        // the handed-out snapshot is still the exact state we inserted
+        assert_eq!(*held, probe, "evicted snapshot must survive via its Arc");
+        assert_eq!(Arc::strong_count(&held), 1, "cache reference released");
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes_recency_without_growth() {
+        let model = TransformerLM::init(&tiny_cfg(), AttentionKind::Linear, 4);
+        let probe = snap_at(&model, &[1, 2, 3, 4]);
+        let cost = Entry::cost(&[1, 2, 3, 4], &probe);
+        let mut cache = StateCache::new(2 * cost + cost / 2, 4);
+        let (a, b, c) = (vec![1u32, 2, 3, 4], vec![5u32, 6, 7, 8], vec![9u32, 10, 0, 1]);
+        cache.insert(&a, snap_at(&model, &a));
+        let bytes = cache.bytes();
+        cache.insert(&a, snap_at(&model, &a));
+        assert_eq!(cache.len(), 1, "duplicate insert must not duplicate the entry");
+        assert_eq!(cache.bytes(), bytes);
+        // the refresh protects `a` from the next eviction
+        cache.insert(&b, snap_at(&model, &b));
+        cache.insert(&a, snap_at(&model, &a)); // refresh again: b is now LRU
+        cache.insert(&c, snap_at(&model, &c));
+        assert!(cache.contains(&a) && !cache.contains(&b) && cache.contains(&c));
+    }
+
+    #[test]
+    fn hash_collisions_degrade_to_probes_not_wrong_state() {
+        // force two different prefixes into the same bucket by hand:
+        // verification against the stored tokens must keep them apart
+        let model = TransformerLM::init(&tiny_cfg(), AttentionKind::Linear, 5);
+        let a = vec![1u32, 2, 3, 4];
+        let mut cache = StateCache::new(1 << 20, 4);
+        cache.insert(&a, snap_at(&model, &a));
+        let h = hash_tokens(&a);
+        let b = vec![5u32, 6, 7, 8];
+        let fake = snap_at(&model, &b);
+        cache.buckets.get_mut(&h).unwrap().push(Entry {
+            bytes: Entry::cost(&b, &fake),
+            tokens: b.clone().into_boxed_slice(),
+            snap: Arc::new(fake),
+            last_used: 0,
+        });
+        cache.entries += 1;
+        let mut probe = a.clone();
+        probe.push(0);
+        let (n, snap) = cache.lookup(&probe).expect("hit");
+        assert_eq!(n, 4);
+        assert_eq!(*snap, snap_at(&model, &a), "collision must never return foreign state");
+    }
+}

@@ -24,7 +24,8 @@
 //!
 //! `ARCHITECTURE.md` at the repo root walks the serving stack end to
 //! end (request lifecycle, the `DecodeBackend` contract, incremental
-//! prefill scheduling, the thread-pool bitwise-parity invariant);
+//! prefill scheduling, the snapshot/restore contract behind the
+//! prefix-reuse state cache, the thread-pool bitwise-parity invariant);
 //! `README.md` has the serve-binary quickstart.
 
 pub mod attention;

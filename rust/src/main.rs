@@ -25,8 +25,9 @@ use linear_transformer::trainer::{self, Trainer};
 const FLAGS: &[&str] = &[
     "task", "variant", "steps", "lr", "lr-drop", "batch-log", "log-every", "csv",
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
-    "num-threads", "prefill-chunks-per-tick", "prompt-len", "max-new", "temperature",
-    "count", "backend", "weights", "batches", "help-flags",
+    "num-threads", "prefill-chunks-per-tick", "prefill-chunk-budget", "state-cache-mb",
+    "prompt-len", "max-new", "temperature", "count", "backend", "weights", "batches",
+    "help-flags",
 ];
 
 fn main() {
@@ -195,6 +196,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         // flat under long-prompt traffic (greedy outputs identical at
         // any value; see ServeConfig::prefill_chunks_per_tick)
         prefill_chunks_per_tick: args.usize_flag("prefill-chunks-per-tick", 1)?,
+        // global cap across all admitting slots per tick (0 = unlimited):
+        // K simultaneous admissions then cost at most the budget, not K
+        // chunks (see ServeConfig::prefill_chunk_budget)
+        prefill_chunk_budget: args.usize_flag("prefill-chunk-budget", 0)?,
+        // prefix-reuse state cache in MiB; 0 = off unless
+        // LINTRA_STATE_CACHE_MB is set (config::resolve_state_cache_mb)
+        state_cache_mb: args.usize_flag("state-cache-mb", 0)?,
     };
     let backend = args.flag_or("backend", "native");
     let handle = match backend.as_str() {
@@ -237,6 +245,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 st.latency.summary()
             );
             eprintln!("[ticks] {}", st.tick_latency.summary());
+            if st.state_cache.hits + st.state_cache.misses > 0 {
+                eprintln!(
+                    "[prefix-cache] {} tokens-skipped={}",
+                    st.state_cache.summary(),
+                    st.prompt_tokens_skipped
+                );
+            }
         }
     }
 }

@@ -5,6 +5,8 @@
 //! * [`LatencyRecorder`] — p50/p95/p99 request latency for the engine.
 //! * [`TickLatencySplit`] — engine tick durations, split by whether the
 //!   tick ingested prompt chunks (the flat-decode-latency evidence).
+//! * [`StateCacheCounters`] — prefix-reuse state-cache hit/miss/evict
+//!   telemetry for the engine.
 //! * [`Throughput`] — wall-clock throughput accounting for the coordinator.
 
 use std::time::Duration;
@@ -242,6 +244,45 @@ impl TickLatencySplit {
     }
 }
 
+/// Prefix-reuse state-cache telemetry (the engine's
+/// `--state-cache-mb` path): admission-time cache consultations and the
+/// evictions the byte budget forced. `hits + misses` counts admissions
+/// that consulted the cache (prefill-capable backend, cache enabled);
+/// the companion `EngineStats::prompt_tokens_skipped` counter records
+/// how many prompt tokens those hits avoided re-prefilling.
+#[derive(Debug, Default, Clone)]
+pub struct StateCacheCounters {
+    /// Admissions that restored a cached prefix snapshot.
+    pub hits: u64,
+    /// Admissions that consulted the cache and found no usable prefix.
+    pub misses: u64,
+    /// Entries evicted by the LRU byte budget.
+    pub evictions: u64,
+}
+
+impl StateCacheCounters {
+    /// Fraction of consultations that hit (0.0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// One-line report.
+    pub fn summary(&self) -> String {
+        format!(
+            "hits={} misses={} evictions={} hit-rate={:.2}",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.hit_rate()
+        )
+    }
+}
+
 /// Throughput counter over a wall-clock window.
 #[derive(Debug, Clone)]
 pub struct Throughput {
@@ -416,6 +457,18 @@ mod tests {
         assert!(split.prefill.mean() > split.decode.mean());
         let s = split.summary();
         assert!(s.contains("decode-ticks[") && s.contains("prefill-ticks["), "{s}");
+    }
+
+    #[test]
+    fn state_cache_counters_report() {
+        let mut c = StateCacheCounters::default();
+        assert_eq!(c.hit_rate(), 0.0, "no consultations: rate must not divide by zero");
+        c.hits = 3;
+        c.misses = 1;
+        c.evictions = 2;
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        let s = c.summary();
+        assert!(s.contains("hits=3") && s.contains("evictions=2"), "{s}");
     }
 
     #[test]

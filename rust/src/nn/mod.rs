@@ -399,6 +399,40 @@ pub fn random_param_tensors(cfg: &ModelConfig, rng: &mut Rng) -> Vec<NamedTensor
 /// blockwise accumulation into the cumulative state).
 pub const PREFILL_CHUNK: usize = 64;
 
+/// One decode lane's complete recurrent state, exported as a flat
+/// buffer: every layer×head's (S, Z) pair (in layer-major order, the
+/// exact f32 bits) plus the lane's position cursor.
+///
+/// Because the paper's decode state is **fixed-size** (eqs 16-20), this
+/// is the *entire* attention memory of everything the lane has consumed
+/// — a few hundred KB regardless of how many tokens went in, where a
+/// softmax KV cache would grow with length. That is what makes prefix
+/// caching nearly free: snapshot a lane after a prompt prefix, key it
+/// by the tokens, and any later request sharing that prefix restores
+/// the snapshot and skips the prefix's prefill entirely.
+///
+/// Produced by [`BatchedDecodeSession::export_lane`]; consumed by
+/// [`BatchedDecodeSession::import_lane`]. Import is bit-identical to
+/// having prefilled the same tokens in place: both paths land the same
+/// f32 state bits, and every continuation's float-op order depends only
+/// on the state and the inputs — never on how the state got there.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneSnapshot {
+    /// Absolute position of the next token the lane would consume
+    /// (i.e. how many tokens the snapshot has absorbed).
+    pub pos: usize,
+    /// Concatenated per-layer×head (S, Z) blocks, in
+    /// [`linear::BatchedLinearAttnState::export_row`] layout.
+    data: Vec<f32>,
+}
+
+impl LaneSnapshot {
+    /// Heap bytes this snapshot holds (the cache's budget currency).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
 /// Batched autoregressive decode over the linear-attention RNN view.
 ///
 /// Holds every lane's recurrent state in structure-of-arrays layout (one
@@ -425,7 +459,12 @@ pub const PREFILL_CHUNK: usize = 64;
 /// Lanes are dense rows `0..rows`. Slot churn is [`Self::alloc_row`]
 /// (append a zeroed lane) and [`Self::free_row`] (swap-remove compaction);
 /// both are O(state-per-lane) — possible only because the paper's decode
-/// state is a fixed-size matrix pair per lane (eqs 16-20).
+/// state is a fixed-size matrix pair per lane (eqs 16-20). The same
+/// property makes a lane *portable*: [`Self::export_lane`] /
+/// [`Self::import_lane`] move one lane's complete state in and out as a
+/// flat [`LaneSnapshot`], the substrate of the serving engine's
+/// prefix-reuse state cache (restore is bit-identical to having
+/// prefilled the snapshot's tokens in place).
 pub struct BatchedDecodeSession<'m> {
     model: &'m TransformerLM,
     cap: usize,
@@ -703,6 +742,61 @@ impl<'m> BatchedDecodeSession<'m> {
             st.swap_rows(a, b);
         }
         self.pos.swap(a, b);
+    }
+
+    /// Bytes of one lane's [`LaneSnapshot`] payload for this model
+    /// geometry (constant — independent of how many tokens went in).
+    pub fn lane_snapshot_bytes(&self) -> usize {
+        self.states.len() * self.states[0].lane_len() * std::mem::size_of::<f32>()
+    }
+
+    /// Export lane `row`'s complete recurrent state — every layer×head's
+    /// (S, Z) bits plus the position cursor — as a [`LaneSnapshot`]. The
+    /// lane itself is untouched; the snapshot is a plain copy, so taking
+    /// one costs O(state-per-lane) (the same as a [`Self::free_row`]
+    /// compaction move) and nothing else.
+    pub fn export_lane(&self, row: usize) -> LaneSnapshot {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        let per = self.states[0].lane_len();
+        let mut data = vec![0.0f32; self.states.len() * per];
+        for (i, st) in self.states.iter().enumerate() {
+            st.export_row(row, &mut data[i * per..(i + 1) * per]);
+        }
+        LaneSnapshot {
+            pos: self.pos[row],
+            data,
+        }
+    }
+
+    /// Overwrite lane `row`'s state and position from a snapshot taken
+    /// by [`Self::export_lane`] on a session of the same model geometry.
+    ///
+    /// After the import the lane is **bit-identical** to having prefilled
+    /// the snapshot's tokens in place: restore lands the exact f32 state
+    /// bits the prefill path would have produced (same float-op order
+    /// guarantee prefill already maintains), so any continuation —
+    /// [`Self::prefill_row_partial`] of the remaining suffix, then
+    /// decode ticks — produces the exact logits of a cold full prefill.
+    /// This is what lets the serving engine skip the shared prefix of a
+    /// prompt entirely.
+    pub fn import_lane(&mut self, row: usize, snap: &LaneSnapshot) {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        let per = self.states[0].lane_len();
+        assert_eq!(
+            snap.data.len(),
+            self.states.len() * per,
+            "snapshot geometry does not match this model"
+        );
+        assert!(
+            snap.pos <= self.model.cfg.max_len,
+            "snapshot position {} exceeds max_len {}",
+            snap.pos,
+            self.model.cfg.max_len
+        );
+        for (i, st) in self.states.iter_mut().enumerate() {
+            st.import_row(row, &snap.data[i * per..(i + 1) * per]);
+        }
+        self.pos[row] = snap.pos;
     }
 
     /// Ingest a whole `prompt` into lane `row` in [`PREFILL_CHUNK`]-sized
@@ -1268,6 +1362,85 @@ mod tests {
             one_shot.alloc_row().unwrap();
             one_shot.prefill_row(0, &prompt);
         }
+    }
+
+    #[test]
+    fn export_import_lane_is_bitwise_equivalent_to_prefilling_in_place() {
+        // prefill a shared prefix, snapshot it, restore into a fresh
+        // session, finish with the suffix: logits, positions, and the
+        // greedy continuation must be bit-identical to one cold prefill
+        // of prefix ++ suffix
+        let cfg = ModelConfig {
+            max_len: 192,
+            ..tiny_cfg()
+        };
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 60);
+        let prefix = tokens(PREFILL_CHUNK * 2, cfg.vocab, 61);
+        let suffix = tokens(23, cfg.vocab, 62);
+        let full: Vec<u32> = prefix.iter().chain(&suffix).copied().collect();
+
+        let mut cold = m.batched_session(1);
+        cold.alloc_row().unwrap();
+        let cold_logits = cold.prefill_row(0, &full);
+
+        // donor session ingests only the prefix and exports its lane
+        let mut donor = m.batched_session(2);
+        donor.alloc_row().unwrap();
+        donor.alloc_row().unwrap();
+        assert!(donor.prefill_row_partial(1, &prefix, false).is_none());
+        let snap = donor.export_lane(1);
+        assert_eq!(snap.pos, prefix.len());
+        assert_eq!(snap.bytes(), donor.lane_snapshot_bytes());
+
+        // warm session: restore the snapshot, ingest only the suffix
+        let mut warm = m.batched_session(1);
+        warm.alloc_row().unwrap();
+        // dirty the lane first: import must fully overwrite
+        warm.prefill_row_partial(0, &tokens(5, cfg.vocab, 63), false);
+        warm.import_lane(0, &snap);
+        assert_eq!(warm.pos(0), prefix.len());
+        let warm_logits = warm
+            .prefill_row_partial(0, &suffix, true)
+            .expect("finishing slice returns logits");
+        assert_eq!(
+            warm_logits, cold_logits,
+            "restored-prefix prefill must be bit-identical to a cold full prefill"
+        );
+        assert_eq!(warm.pos(0), cold.pos(0));
+        // greedy continuations stay in bitwise lockstep
+        let mut a = crate::sampling::argmax(&cold_logits);
+        let mut b = a;
+        for i in 0..6 {
+            let la = cold.step_batch(&[a]);
+            let lb = warm.step_batch(&[b]);
+            assert_eq!(la, lb, "continuation diverged at step {i} after restore");
+            a = crate::sampling::argmax(&la);
+            b = crate::sampling::argmax(&lb);
+        }
+        // the donor lane is untouched by the export
+        let snap2 = donor.export_lane(1);
+        assert_eq!(snap, snap2, "export must not mutate the source lane");
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshot geometry")]
+    fn import_lane_rejects_wrong_geometry() {
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Linear, 64);
+        let wide = TransformerLM::init(
+            &ModelConfig {
+                d_model: 64,
+                ..tiny_cfg()
+            },
+            AttentionKind::Linear,
+            65,
+        );
+        let mut a = m.batched_session(1);
+        a.alloc_row().unwrap();
+        let snap = a.export_lane(0);
+        let mut b = wide.batched_session(1);
+        b.alloc_row().unwrap();
+        b.import_lane(0, &snap);
     }
 
     #[test]

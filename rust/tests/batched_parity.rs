@@ -13,6 +13,10 @@
 //! the same ragged admission/eviction churn. The engine's incremental
 //! prefill scheduler (bounded chunks per tick, interleaved with decode)
 //! is a third ingestion schedule and must hit the same bits as both.
+//! Snapshot/restore (`export_lane`/`import_lane`, the substrate of the
+//! prefix-reuse state cache) is a fourth: a prefix ingested in one
+//! session, restored in another, and finished there must also hit the
+//! same bits — under churn on both sides.
 
 use linear_transformer::attention::AttentionKind;
 use linear_transformer::config::{ModelConfig, ServeConfig};
@@ -247,6 +251,7 @@ fn engine_prefill_matches_direct_generation_with_long_prompts() {
                 prompt: p.clone(),
                 max_new: *n,
                 temperature: 0.0,
+                top_k: 0,
             })
         })
         .collect();
@@ -331,6 +336,7 @@ fn incremental_prefill_matches_oneshot_and_per_tick_paths_under_churn() {
                 prompt: p.clone(),
                 max_new: *n,
                 temperature: 0.0,
+                top_k: 0,
             })
         })
         .collect();
@@ -357,6 +363,87 @@ fn incremental_prefill_matches_oneshot_and_per_tick_paths_under_churn() {
         "every prompt token must be ingested through the prefill path"
     );
     handle.shutdown();
+}
+
+#[test]
+fn restored_prefix_decode_is_bitwise_full_prefill_under_ragged_churn() {
+    // the snapshot/restore contract under slot churn: a lane state
+    // exported mid-prefill from a busy session and imported into a
+    // *different* busy session (different lane index, neighbours joining
+    // and retiring throughout) must finish its prompt and decode
+    // bit-identically to a fresh one-shot full prefill
+    let cfg = ModelConfig {
+        max_len: 192,
+        ..tiny_cfg()
+    };
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 55);
+    let vocab = cfg.vocab;
+    let prefix = stream(96, vocab, 7000); // crosses a PREFILL_CHUNK boundary
+    let suffix = stream(21, vocab, 7001);
+    let full: Vec<u32> = prefix.iter().chain(&suffix).copied().collect();
+
+    // reference: cold one-shot prefill of the whole prompt
+    let mut cold = model.batched_session(1);
+    cold.alloc_row().unwrap();
+    let cold_logits = cold.prefill_row(0, &full);
+
+    // donor: a churning 3-lane session ingests the prefix into lane 1
+    let mut donor = model.batched_session(3);
+    donor.alloc_row().unwrap(); // lane 0: a decoding neighbour
+    for t in 0..6 {
+        donor.step_batch(&[(t % vocab) as u32]);
+    }
+    donor.alloc_row().unwrap(); // lane 1: the prefix carrier
+    donor.alloc_row().unwrap(); // lane 2: joins, then retires mid-way
+    donor.prefill_row_partial(1, &prefix[..40], false);
+    donor.free_row(2); // churn: swap-remove around the mid-prefill lane
+    donor.step_batch(&[(7 % vocab) as u32]); // neighbour keeps decoding
+    donor.prefill_row_partial(1, &prefix[40..], false);
+    let snap = donor.export_lane(1);
+    assert_eq!(snap.pos, prefix.len());
+
+    // recipient: another churning session; the snapshot lands in lane 2
+    let mut recipient = model.batched_session(3);
+    for _ in 0..3 {
+        recipient.alloc_row().unwrap();
+    }
+    for t in 0..4 {
+        recipient.step_batch(&[(t % vocab) as u32, ((t + 1) % vocab) as u32]); // prefix step
+    }
+    recipient.import_lane(2, &snap);
+    let warm_logits = recipient
+        .prefill_row_partial(2, &suffix, true)
+        .expect("finishing slice returns logits");
+    assert_eq!(
+        warm_logits, cold_logits,
+        "restored-prefix prefill must be bit-identical to a cold full prefill"
+    );
+
+    // greedy decode stays in bitwise lockstep while neighbours churn
+    let mut a = linear_transformer::sampling::argmax(&cold_logits);
+    let mut b = a;
+    for i in 0..6 {
+        let la = cold.step_batch(&[a]);
+        if i == 2 {
+            // retire neighbour lane 0 mid-decode: swap-remove compaction
+            // moves the last lane — the restored one — into its place
+            assert_eq!(recipient.free_row(0), Some(2));
+        }
+        let ours = if i < 2 { 2 } else { 0 };
+        let width = if i < 2 { 3 } else { 2 };
+        let mut tick = vec![0u32; width];
+        for (r, t) in tick.iter_mut().enumerate() {
+            *t = if r == ours { b } else { ((i + r) % vocab) as u32 };
+        }
+        let lb = recipient.step_batch(&tick);
+        assert_eq!(
+            &lb[ours * vocab..(ours + 1) * vocab],
+            &la[..],
+            "restored lane diverged at decode step {i} under churn"
+        );
+        a = linear_transformer::sampling::argmax(&la);
+        b = a;
+    }
 }
 
 #[test]
@@ -456,6 +543,7 @@ fn engine_with_worker_pool_matches_direct_generation_under_churn() {
                 prompt: p.clone(),
                 max_new: *n,
                 temperature: 0.0,
+                top_k: 0,
             })
         })
         .collect();
@@ -500,6 +588,7 @@ fn engine_greedy_outputs_invariant_to_batch_size() {
                     prompt: p.clone(),
                     max_new: 5 + i,
                     temperature: 0.0,
+                    top_k: 0,
                 })
             })
             .collect();

@@ -37,6 +37,7 @@ fn pjrt_engine_serves_batched_requests() {
                 prompt: vec![12, 3, 4, 1],
                 max_new: 6,
                 temperature: 0.0,
+                top_k: 0,
             })
         })
         .collect();
