@@ -21,6 +21,11 @@
 //! buys: cold vs warm TTFT for a request sharing a 512-token prefix
 //! (warm = restore the fixed-size lane snapshot, prefill only the
 //! suffix), first logits asserted bit-identical.
+//! The dtype sweep reruns the B=1 decode tick with weights stored at
+//! f32/f16/bf16/int8: the tick streams every projection matrix once, so
+//! `weight_bytes_per_token` IS the bytes moved per tick, and halving it
+//! (f16) is the point on a weight-bandwidth-bound decode. Activations
+//! stay f32 throughout; tok/s plus the bytes ratio vs f32 are reported.
 //! Emits machine-readable `BENCH_decode.json`.
 //!
 //! Run: cargo run --release --example perf_decode -- [steps]
@@ -32,6 +37,7 @@ use linear_transformer::config::ModelConfig;
 use linear_transformer::json::{obj, Json};
 use linear_transformer::nn::TransformerLM;
 use linear_transformer::parallel::ThreadPool;
+use linear_transformer::tensor::WeightDtype;
 
 fn main() {
     let steps: usize = std::env::args()
@@ -333,6 +339,69 @@ fn main() {
         snap.bytes() / 1024
     );
 
+    // --- weight-dtype sweep: B=1 decode, weight bytes moved per tick ---
+    //
+    // B=1 is the weight-bandwidth-bound extreme: every tick reads every
+    // projection matrix once to produce one token, so tok/s tracks
+    // 1 / weight_bytes_per_token. f32 is the bitwise reference; the
+    // narrow dtypes trade the documented logit tolerance for bandwidth.
+    println!("\nweight-dtype sweep: B=1 decode, {steps} ticks");
+    println!(
+        "{:>6} {:>14} {:>12} {:>13}",
+        "dtype", "KiB/tick", "tok/s", "bytes vs f32"
+    );
+    let mut dtype_rows = Vec::new();
+    let mut f32_bytes = 0usize;
+    let mut f16_bytes = 0usize;
+    for dtype in [
+        WeightDtype::F32,
+        WeightDtype::F16,
+        WeightDtype::Bf16,
+        WeightDtype::Int8,
+    ] {
+        let mut m = TransformerLM::init(&cfg, AttentionKind::Linear, 1);
+        m.cast_weights(dtype);
+        let bytes = m.weight_bytes_per_token();
+        if dtype == WeightDtype::F32 {
+            f32_bytes = bytes;
+        }
+        if dtype == WeightDtype::F16 {
+            f16_bytes = bytes;
+        }
+        let mut sess = m.batched_session_with_pool(1, None);
+        sess.alloc_row().expect("capacity");
+        let mut tok = 0u32;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let logits = sess.step_batch(&[tok]);
+            tok = linear_transformer::sampling::argmax(&logits);
+        }
+        let tok_s = steps as f64 / t0.elapsed().as_secs_f64();
+        let ratio = bytes as f64 / f32_bytes as f64;
+        println!(
+            "{:>6} {:>14.1} {:>12.0} {:>12.2}x",
+            dtype.name(),
+            bytes as f64 / 1024.0,
+            tok_s,
+            ratio
+        );
+        dtype_rows.push(Json::Obj(
+            [
+                ("dtype".to_string(), Json::Str(dtype.name().into())),
+                ("weight_bytes_per_tick".to_string(), Json::Num(bytes as f64)),
+                ("tok_s".to_string(), Json::Num(tok_s)),
+                ("bytes_vs_f32".to_string(), Json::Num(ratio)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+    assert!(
+        f32_bytes >= 2 * f16_bytes,
+        "f16 must at least halve the weight bytes per tick \
+         ({f32_bytes} vs {f16_bytes})"
+    );
+
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
         ("steps_per_lane", Json::Num(steps as f64)),
@@ -347,6 +416,7 @@ fn main() {
             ]),
         ),
         ("thread_sweep", Json::Arr(sweep_rows)),
+        ("dtype_sweep", Json::Arr(dtype_rows)),
         (
             "mixed_traffic",
             obj(vec![

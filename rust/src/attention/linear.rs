@@ -27,6 +27,15 @@
 //!
 //! Inputs q, k are *raw* (un-mapped); phi(x) = elu(x)+1 is applied
 //! internally, matching the python wrappers.
+//!
+//! Numeric contract under weight quantization: these kernels never see
+//! quantized values. Weight storage precision (`tensor::WeightDtype`) only
+//! changes the *projection* matrices feeding q/k/v; activations, the (S, Z)
+//! recurrent state, and every accumulation in this module stay f32, so a
+//! cached state snapshot taken under one weight dtype is meaningless under
+//! another (the cache is per-process and the dtype is fixed at engine spawn,
+//! so this cannot arise in practice). See ARCHITECTURE.md, "Weight storage
+//! & numeric contract".
 
 use crate::parallel::ThreadPool;
 use crate::tensor::{

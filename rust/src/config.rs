@@ -228,6 +228,14 @@ pub struct ServeConfig {
     /// requests sharing a system prompt / few-shot template / chat
     /// history skip that prefix's prefill entirely, bit-identically.
     pub state_cache_mb: usize,
+    /// Storage precision for the projection/FF/lm-head weight matrices.
+    /// `None` = auto: the `LINTRA_WEIGHT_DTYPE` environment variable if
+    /// set (`f32`/`f16`/`bf16`/`int8`), else f32 — see
+    /// [`resolve_weight_dtype`]. f32 is the bitwise reference path;
+    /// narrow dtypes halve/quarter the weight bytes each decode tick
+    /// streams (the B=1 bottleneck) at a documented numeric tolerance
+    /// (ARCHITECTURE.md §Weight storage & numeric contract).
+    pub weight_dtype: Option<crate::tensor::WeightDtype>,
 }
 
 impl Default for ServeConfig {
@@ -243,6 +251,7 @@ impl Default for ServeConfig {
             prefill_chunks_per_tick: 1,
             prefill_chunk_budget: 0,
             state_cache_mb: 0,
+            weight_dtype: None,
         }
     }
 }
@@ -283,6 +292,27 @@ pub fn resolve_state_cache_mb(requested: usize) -> usize {
         }
     }
     0
+}
+
+/// Resolve the weight storage precision: an explicit choice wins; `None`
+/// consults `LINTRA_WEIGHT_DTYPE` (`f32`/`f16`/`bf16`/`int8`,
+/// case-insensitive — how CI runs the whole suite on the widening
+/// kernels without touching every config literal), else f32. Mirrors
+/// [`resolve_state_cache_mb`] / `LINTRA_NUM_THREADS` resolution. An
+/// unparseable environment value falls back to f32 rather than erroring:
+/// dtype selection is a performance knob, never a correctness switch.
+pub fn resolve_weight_dtype(
+    requested: Option<crate::tensor::WeightDtype>,
+) -> crate::tensor::WeightDtype {
+    if let Some(d) = requested {
+        return d;
+    }
+    if let Ok(v) = std::env::var("LINTRA_WEIGHT_DTYPE") {
+        if let Some(d) = crate::tensor::WeightDtype::parse(&v) {
+            return d;
+        }
+    }
+    crate::tensor::WeightDtype::F32
 }
 
 impl ServeConfig {
@@ -452,6 +482,31 @@ mod tests {
             .map(|n| n.min(MAX_STATE_CACHE_MB))
             .unwrap_or(0);
         assert_eq!(resolve_state_cache_mb(0), ambient);
+    }
+
+    #[test]
+    fn weight_dtype_resolves_explicit_then_env_then_f32() {
+        use crate::tensor::WeightDtype;
+        assert_eq!(ServeConfig::default().weight_dtype, None, "default is auto");
+        // explicit choices always win
+        for d in [WeightDtype::F32, WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8] {
+            assert_eq!(resolve_weight_dtype(Some(d)), d);
+        }
+        // None falls back to the environment (mirroring the state-cache
+        // knob); read the ambient value rather than mutating process env
+        // from a parallel test — CI exports LINTRA_WEIGHT_DTYPE=f16 in
+        // one run to steer exactly this path
+        let ambient = std::env::var("LINTRA_WEIGHT_DTYPE")
+            .ok()
+            .and_then(|v| WeightDtype::parse(&v))
+            .unwrap_or(WeightDtype::F32);
+        assert_eq!(resolve_weight_dtype(None), ambient);
+        // a dtype never invalidates a config
+        let cfg = ServeConfig {
+            weight_dtype: Some(WeightDtype::Int8),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

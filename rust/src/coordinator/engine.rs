@@ -42,10 +42,13 @@
 //! (or `LINTRA_STATE_CACHE_MB`) the engine keeps a **prefix-reuse state
 //! cache** ([`crate::coordinator::state_cache::StateCache`]) on top of
 //! those hooks: as a prompt streams in, the lane is snapshotted at
-//! every prefill-chunk boundary, keyed by the exact token prefix; at
-//! admission the cache is consulted and the longest cached prefix of
-//! the new prompt is restored into the fresh lane, so only the
-//! non-shared suffix is prefilled. Restore is a memcpy and
+//! prefill-chunk boundaries whose prefix has been *seen before*
+//! (second-chance admission — a first-ever prefix only registers its
+//! running hash, so one-off prompts never pay the snapshot copy),
+//! keyed by the exact token prefix; at admission the cache is
+//! consulted and the longest cached prefix of the new prompt is
+//! restored into the fresh lane, so only the non-shared suffix is
+//! prefilled. Restore is a memcpy and
 //! bit-identical to having prefilled the prefix in place, so a cache
 //! hit can never change a logit — it only deletes ingestion work
 //! (`EngineStats::prompt_tokens_skipped` counts how much). Two knobs
@@ -688,16 +691,26 @@ fn run_engine<B: DecodeBackend>(
                         chunk_budget -= 1;
                         tick_chunks += 1;
                         tick_prompt_tokens += take as u64;
-                        // deposit a prefix snapshot whenever the cursor
-                        // lands on a chunk boundary (interior chunks
-                        // always do; a ragged finishing slice does not):
-                        // the next request sharing this prefix restores
-                        // it instead of prefilling
+                        // deposit a prefix snapshot when the cursor lands
+                        // on a chunk boundary (interior chunks always do;
+                        // a ragged finishing slice does not) AND this
+                        // prefix has been sighted before — second-chance
+                        // admission, so one-off prompts never pay the
+                        // snapshot copy or churn the LRU budget. The key
+                        // is the slot's running prefix hash, extended
+                        // chunk by chunk in advance_prefill, so no rehash
+                        // from position 0 happens here.
                         if let Some(cache) = state_cache.as_mut() {
-                            let prefix = &info.prompt[..info.cursor];
-                            if info.cursor % prefill_chunk == 0 && !cache.contains(prefix) {
-                                if let Some(snap) = backend.snapshot_lane(lane) {
-                                    cache_evictions += cache.insert(prefix, snap) as u64;
+                            if info.cursor % prefill_chunk == 0 {
+                                let h = info.prefix_hash;
+                                let prefix = &info.prompt[..info.cursor];
+                                if cache.note_and_should_deposit(h)
+                                    && !cache.contains_hashed(h, prefix)
+                                {
+                                    if let Some(snap) = backend.snapshot_lane(lane) {
+                                        cache_evictions +=
+                                            cache.insert_hashed(h, prefix, snap) as u64;
+                                    }
                                 }
                             }
                         }
@@ -901,6 +914,12 @@ impl NativeEngine {
                     AttentionKind::Linear,
                     "the native engine decodes with the batched linear-RNN backend"
                 );
+                // Weight storage dtype: explicit ServeConfig wins, else
+                // LINTRA_WEIGHT_DTYPE, else f32. Casting is idempotent
+                // (always from the retained f32 tensors), so re-casting a
+                // model the loader already quantized is harmless.
+                let mut model = model;
+                model.cast_weights(crate::config::resolve_weight_dtype(cfg.weight_dtype));
                 // GEMM worker pool: cfg.num_threads (0 = auto). Pooled
                 // kernels are bit-identical to serial, so thread count
                 // never changes what a request gets back.
@@ -1733,12 +1752,13 @@ mod tests {
 
     #[test]
     fn shared_prefix_restore_skips_prefill_and_matches_cold_run() {
-        // the acceptance bar for the prefix-reuse state cache: a second
-        // request sharing a chunk-aligned prompt prefix must produce
-        // BIT-IDENTICAL greedy output to a cold run while ingesting only
-        // the non-shared suffix tokens — observed through
-        // prompt_tokens_skipped, the hit/miss counters, and the prefill
-        // tick count dropping from 3 (148 tokens) to 1 (35 tokens)
+        // the acceptance bar for the prefix-reuse state cache, including
+        // second-chance deposit admission: the FIRST request carrying a
+        // prefix only registers it (no snapshot is deposited, so a
+        // repeat of the same prompt still misses), the SECOND deposits,
+        // and the THIRD — sharing the chunk-aligned prefix — restores
+        // it, producing BIT-IDENTICAL greedy output to a cold run while
+        // ingesting only the non-shared suffix tokens
         let model = long_model();
         let vocab = model.cfg.vocab;
         let shared = prompt_of(2 * crate::nn::PREFILL_CHUNK, vocab, 90); // 128: 2 chunks
@@ -1773,8 +1793,29 @@ mod tests {
         assert_eq!(st1.prompt_tokens_ingested, p1.len() as u64);
         assert_eq!(st1.prefill_ticks, 3, "148 tokens = 3 chunks at 1 chunk/tick");
 
-        let r2 = handle.generate_blocking(GenerateRequest {
+        // identical prompt again: its prefixes were only first-sighted
+        // above, so nothing was deposited and this run must fully
+        // prefill again (a miss) — the deposits happen during THIS run
+        let r1b = handle.generate_blocking(GenerateRequest {
             id: 2,
+            prompt: p1.clone(),
+            max_new: 6,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        assert!(r1b.error.is_none(), "{:?}", r1b.error);
+        assert_eq!(r1b.tokens, direct1, "greedy outputs never depend on the cache");
+        let st1b = handle.stats();
+        assert_eq!(
+            st1b.state_cache.hits, 0,
+            "first sighting must not have deposited a snapshot"
+        );
+        assert_eq!(st1b.state_cache.misses, 2);
+        assert_eq!(st1b.prompt_tokens_skipped, 0);
+        assert_eq!(st1b.prompt_tokens_ingested, 2 * p1.len() as u64);
+
+        let r2 = handle.generate_blocking(GenerateRequest {
+            id: 3,
             prompt: p2.clone(),
             max_new: 6,
             temperature: 0.0,
@@ -1794,11 +1835,11 @@ mod tests {
         );
         assert_eq!(
             st2.prompt_tokens_ingested,
-            (p1.len() + p2.len() - shared.len()) as u64,
-            "the second request must ingest only its non-shared suffix"
+            (2 * p1.len() + p2.len() - shared.len()) as u64,
+            "the third request must ingest only its non-shared suffix"
         );
         assert_eq!(
-            st2.prefill_ticks - st1.prefill_ticks,
+            st2.prefill_ticks - st1b.prefill_ticks,
             1,
             "the 35-token suffix needs a single prefill tick"
         );

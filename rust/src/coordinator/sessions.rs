@@ -67,6 +67,14 @@ pub struct SlotInfo {
     pub pos: usize,
     /// prompt-ingestion phase (see [`SlotPhase`])
     pub phase: SlotPhase,
+    /// Running FNV-1a hash of `prompt[..cursor]`, maintained by
+    /// [`Self::advance_prefill`] — i.e. only while the slot is in the
+    /// resumable-prefill phase, which is the only place the engine needs
+    /// it. At any chunk boundary it equals
+    /// `state_cache::hash_tokens(&prompt[..cursor])`, so the state-cache
+    /// deposit path gets its key in O(chunk) incremental work instead of
+    /// rehashing the whole prefix from position 0 at every boundary.
+    pub prefix_hash: u64,
 }
 
 impl SlotInfo {
@@ -90,6 +98,7 @@ impl SlotInfo {
             top_k,
             pos: 0,
             phase: SlotPhase::Decoding,
+            prefix_hash: crate::coordinator::state_cache::FNV_OFFSET,
         }
     }
 
@@ -117,6 +126,12 @@ impl SlotInfo {
     pub fn advance_prefill(&mut self, n: usize) {
         assert_eq!(self.phase, SlotPhase::Prefilling, "advance_prefill outside prefill");
         assert!(n >= 1 && self.cursor + n <= self.prompt.len(), "chunk overruns the prompt");
+        // extend the running prefix hash over exactly the tokens entering
+        // the lane (restored prefixes flow through here too, so the hash
+        // always covers prompt[..cursor])
+        for &t in &self.prompt[self.cursor..self.cursor + n] {
+            self.prefix_hash = crate::coordinator::state_cache::fnv1a_extend(self.prefix_hash, t);
+        }
         self.cursor += n;
         self.pos += n;
         if self.cursor == self.prompt.len() {
@@ -255,6 +270,35 @@ mod tests {
         assert!(chunked.prompt_done());
         chunked.generated.push(9);
         assert_eq!(chunked.next_token(), 9, "post-prefill tick feeds the sampled token");
+    }
+
+    #[test]
+    fn running_prefix_hash_matches_full_rehash_at_every_boundary() {
+        // the incremental fold must agree with hashing prompt[..cursor]
+        // from scratch, for any chunking — the state-cache deposit path
+        // relies on this equivalence to skip the O(cursor) rehash
+        let prompt: Vec<u32> = (0..13).map(|i| (i * 7 + 3) as u32).collect();
+        let mut chunked = SlotInfo::new(1, Instant::now(), prompt.clone(), 4, 0.0, 0);
+        chunked.start_prefill();
+        assert_eq!(
+            chunked.prefix_hash,
+            crate::coordinator::state_cache::hash_tokens(&[]),
+            "a fresh slot hashes the empty prefix"
+        );
+        for take in [1usize, 4, 2, 6] {
+            chunked.advance_prefill(take);
+            assert_eq!(
+                chunked.prefix_hash,
+                crate::coordinator::state_cache::hash_tokens(&prompt[..chunked.cursor]),
+                "running hash diverged at cursor {}",
+                chunked.cursor
+            );
+        }
+        // one-shot ingestion lands on the identical hash
+        let mut one_shot = SlotInfo::new(2, Instant::now(), prompt.clone(), 4, 0.0, 0);
+        one_shot.start_prefill();
+        one_shot.advance_prefill(prompt.len());
+        assert_eq!(one_shot.prefix_hash, chunked.prefix_hash);
     }
 
     #[test]

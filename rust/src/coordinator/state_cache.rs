@@ -18,10 +18,20 @@
 //!   native engine): the engine deposits snapshots exactly when a
 //!   prefilling lane's cursor crosses a chunk boundary, so lookups only
 //!   ever need to probe `prompt_len / chunk` candidate lengths.
+//! * **Second-chance deposit admission.** A snapshot is deposited only
+//!   for a prefix whose chunk-aligned hash has been *sighted before*
+//!   ([`StateCache::note_and_should_deposit`]): the first request
+//!   carrying a prefix just registers it, the second deposits. One-off
+//!   prompts — the common case under diverse traffic — therefore never
+//!   pay the snapshot copy, and can never evict genuinely shared
+//!   prefixes out of the LRU budget.
 //! * **Hash-keyed, collision-safe.** The primary key is an FNV-1a hash
 //!   of the token prefix; each hash bucket stores the full token slice
 //!   and verifies it on lookup, so a hash collision degrades to a probe,
-//!   never to restoring the wrong state.
+//!   never to restoring the wrong state. The engine supplies the hash
+//!   from the slot's *running* prefix fold (extended chunk by chunk as
+//!   prefill advances), so deposits cost O(chunk) hashing, not
+//!   O(cursor).
 //! * **LRU under a byte budget.** `insert` evicts least-recently-used
 //!   entries until the new snapshot fits; an entry larger than the whole
 //!   budget is refused outright.
@@ -60,12 +70,17 @@ use std::sync::Arc;
 
 use crate::nn::LaneSnapshot;
 
-/// FNV-1a offset basis / prime (64-bit).
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a offset basis / prime (64-bit). The offset is pub(crate) so
+/// [`crate::coordinator::sessions::SlotInfo`] can seed its running
+/// prefix hash with the same scheme.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
+/// Fold one token into a running FNV-1a hash (the slot table maintains
+/// an incremental `prompt[..cursor]` hash with this exact fold, so
+/// engine-side keys never need a from-scratch rehash).
 #[inline]
-fn fnv1a_extend(mut h: u64, token: u32) -> u64 {
+pub(crate) fn fnv1a_extend(mut h: u64, token: u32) -> u64 {
     for b in token.to_le_bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(FNV_PRIME);
@@ -76,7 +91,7 @@ fn fnv1a_extend(mut h: u64, token: u32) -> u64 {
 /// Hash of a whole token prefix. `lookup` keeps its own incremental
 /// per-boundary fold of [`fnv1a_extend`]; every other key computation
 /// must go through this so the schemes can never desynchronize.
-fn hash_tokens(tokens: &[u32]) -> u64 {
+pub(crate) fn hash_tokens(tokens: &[u32]) -> u64 {
     tokens.iter().fold(FNV_OFFSET, |h, &t| fnv1a_extend(h, t))
 }
 
@@ -97,6 +112,13 @@ impl Entry {
     }
 }
 
+/// First-sighting set bound: when the admission set reaches this many
+/// hashes it is cleared wholesale. Forgetting a first sighting only
+/// delays that prefix's deposit by one more encounter — a latency cost,
+/// never a correctness one — and the bound keeps the set's memory (8
+/// bytes/hash + table overhead) negligible next to the snapshot budget.
+const SEEN_CAP: usize = 1 << 16;
+
 /// Chunk-aligned prefix → lane-snapshot map with LRU byte-budget
 /// eviction. See the module docs for the contract.
 pub struct StateCache {
@@ -106,6 +128,12 @@ pub struct StateCache {
     bytes: usize,
     entries: usize,
     clock: u64,
+    /// Deposit admission (second-chance): hashes of chunk-aligned
+    /// prefixes sighted at least once. A snapshot is only deposited for
+    /// a prefix whose hash is already here — i.e. on its second
+    /// sighting — so one-off prompts never pay the snapshot copy or
+    /// evict genuinely shared prefixes.
+    seen: std::collections::HashSet<u64>,
 }
 
 impl StateCache {
@@ -120,7 +148,25 @@ impl StateCache {
             bytes: 0,
             entries: 0,
             clock: 0,
+            seen: std::collections::HashSet::new(),
         }
+    }
+
+    /// Record a sighting of a chunk-aligned prefix (by its
+    /// [`hash_tokens`]-scheme hash) and report whether a snapshot for it
+    /// should be deposited now: `false` on the first sighting (the hash
+    /// is merely remembered), `true` from the second sighting on. The
+    /// caller still guards with [`Self::contains`] — this method decides
+    /// *admission*, not dedup.
+    pub fn note_and_should_deposit(&mut self, hash: u64) -> bool {
+        if self.seen.contains(&hash) {
+            return true;
+        }
+        if self.seen.len() >= SEEN_CAP {
+            self.seen.clear();
+        }
+        self.seen.insert(hash);
+        false
     }
 
     /// Live entries.
@@ -178,8 +224,17 @@ impl StateCache {
 
     /// True if exactly this prefix is already cached (no recency bump).
     pub fn contains(&self, prefix: &[u32]) -> bool {
+        self.contains_hashed(hash_tokens(prefix), prefix)
+    }
+
+    /// [`Self::contains`] with the caller supplying the prefix's
+    /// [`hash_tokens`]-scheme hash — the engine passes the slot's running
+    /// prefix hash here, so the deposit path never rehashes from
+    /// position 0.
+    pub fn contains_hashed(&self, hash: u64, prefix: &[u32]) -> bool {
+        debug_assert_eq!(hash, hash_tokens(prefix), "caller-supplied hash desynchronized");
         self.buckets
-            .get(&hash_tokens(prefix))
+            .get(&hash)
             .is_some_and(|b| b.iter().any(|e| *e.tokens == *prefix))
     }
 
@@ -190,6 +245,13 @@ impl StateCache {
     /// refreshes recency; a snapshot larger than the whole budget is
     /// refused (nothing is evicted for it).
     pub fn insert(&mut self, prefix: &[u32], snap: LaneSnapshot) -> usize {
+        self.insert_hashed(hash_tokens(prefix), prefix, snap)
+    }
+
+    /// [`Self::insert`] with a caller-supplied [`hash_tokens`]-scheme
+    /// hash (see [`Self::contains_hashed`]).
+    pub fn insert_hashed(&mut self, h: u64, prefix: &[u32], snap: LaneSnapshot) -> usize {
+        debug_assert_eq!(h, hash_tokens(prefix), "caller-supplied hash desynchronized");
         debug_assert!(
             !prefix.is_empty() && prefix.len() % self.chunk == 0,
             "cache keys must be non-empty chunk-aligned prefixes"
@@ -199,7 +261,6 @@ impl StateCache {
             prefix.len(),
             "snapshot position must match the prefix it claims to hold"
         );
-        let h = hash_tokens(prefix);
         self.clock += 1;
         if let Some(bucket) = self.buckets.get_mut(&h) {
             if let Some(e) = bucket.iter_mut().find(|e| *e.tokens == *prefix) {
@@ -384,6 +445,40 @@ mod tests {
         cache.insert(&a, snap_at(&model, &a)); // refresh again: b is now LRU
         cache.insert(&c, snap_at(&model, &c));
         assert!(cache.contains(&a) && !cache.contains(&b) && cache.contains(&c));
+    }
+
+    #[test]
+    fn no_deposit_on_first_sight() {
+        // second-chance admission: the first sighting of a prefix hash
+        // must answer "don't deposit" and only register it; the second
+        // (and every later) sighting admits
+        let mut cache = StateCache::new(1 << 20, 4);
+        let a = hash_tokens(&[1, 2, 3, 4]);
+        let b = hash_tokens(&[5, 6, 7, 8]);
+        assert!(!cache.note_and_should_deposit(a), "first sighting must not deposit");
+        assert!(cache.is_empty(), "a sighting alone must not create entries");
+        assert!(!cache.note_and_should_deposit(b), "sightings are tracked per hash");
+        assert!(cache.note_and_should_deposit(a), "second sighting admits");
+        assert!(cache.note_and_should_deposit(a), "and it keeps admitting");
+        assert!(cache.note_and_should_deposit(b));
+    }
+
+    #[test]
+    fn hashed_entry_points_match_their_rehashing_counterparts() {
+        // contains_hashed/insert_hashed with a correct caller-side hash
+        // must behave exactly like contains/insert
+        let model = TransformerLM::init(&tiny_cfg(), AttentionKind::Linear, 6);
+        let a = vec![1u32, 2, 3, 4];
+        let mut cache = StateCache::new(1 << 20, 4);
+        let h = hash_tokens(&a);
+        assert!(!cache.contains_hashed(h, &a));
+        assert_eq!(cache.insert_hashed(h, &a, snap_at(&model, &a)), 0);
+        assert!(cache.contains_hashed(h, &a));
+        assert!(cache.contains(&a));
+        let mut probe = a.clone();
+        probe.push(0);
+        let (n, _) = cache.lookup(&probe).expect("hashed insert must be visible to lookup");
+        assert_eq!(n, 4);
     }
 
     #[test]

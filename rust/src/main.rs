@@ -6,6 +6,7 @@
 //!   generate --task               autoregressive generation (native or pjrt)
 //!   serve    --task --bind        TCP serving engine
 //!   eval     --task --variant     teacher-forced eval loss via eval artifact
+//!   cast     --weights --out      re-encode an .ltw bundle at a lower weight precision
 //!
 //! Run `lintra <cmd> --help-flags` to see the flags each command reads.
 
@@ -27,7 +28,7 @@ const FLAGS: &[&str] = &[
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
     "num-threads", "prefill-chunks-per-tick", "prefill-chunk-budget", "state-cache-mb",
     "prompt-len", "max-new", "temperature", "count", "backend", "weights", "batches",
-    "help-flags",
+    "weight-dtype", "out", "dtype", "help-flags",
 ];
 
 fn main() {
@@ -49,9 +50,10 @@ fn run() -> anyhow::Result<()> {
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
+        Some("cast") => cmd_cast(&args),
         other => {
             bail!(
-                "unknown subcommand {other:?}; available: info, train, generate, serve, eval"
+                "unknown subcommand {other:?}; available: info, train, generate, serve, eval, cast"
             )
         }
     }
@@ -203,6 +205,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         // prefix-reuse state cache in MiB; 0 = off unless
         // LINTRA_STATE_CACHE_MB is set (config::resolve_state_cache_mb)
         state_cache_mb: args.usize_flag("state-cache-mb", 0)?,
+        // weight storage precision; unset = LINTRA_WEIGHT_DTYPE if set,
+        // else f32 (config::resolve_weight_dtype)
+        weight_dtype: parse_weight_dtype(args.flag("weight-dtype"))?,
     };
     let backend = args.flag_or("backend", "native");
     let handle = match backend.as_str() {
@@ -254,6 +259,55 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+}
+
+/// Parse an optional `--weight-dtype`/`--dtype` value, failing loudly on an
+/// unrecognized name (unlike the env var, which silently falls back to f32).
+fn parse_weight_dtype(
+    flag: Option<&str>,
+) -> anyhow::Result<Option<linear_transformer::tensor::WeightDtype>> {
+    match flag {
+        None => Ok(None),
+        Some(s) => match linear_transformer::tensor::WeightDtype::parse(s) {
+            Some(d) => Ok(Some(d)),
+            None => bail!("unknown weight dtype {s:?} (f32|f16|bf16|int8)"),
+        },
+    }
+}
+
+/// `lintra cast --weights in.ltw --out out.ltw --dtype f16`
+///
+/// Re-encode a weight bundle at a lower storage precision. Only the
+/// GEMV-shaped projection matrices ([`linear_transformer::nn::quantized_param`])
+/// are narrowed; embeddings, norms, and biases stay f32, mirroring what the
+/// runtime quantizes in memory — so serving the cast bundle produces the same
+/// outputs as serving the f32 bundle with `--weight-dtype` set.
+fn cmd_cast(args: &Args) -> anyhow::Result<()> {
+    let src = args
+        .flag("weights")
+        .context("cast requires --weights <in.ltw>")?;
+    let out = args.flag("out").context("cast requires --out <out.ltw>")?;
+    let dtype = parse_weight_dtype(args.flag("dtype"))?
+        .context("cast requires --dtype <f16|bf16|int8|f32>")?;
+    let bundle = linear_transformer::weights::WeightBundle::load(src)?;
+    bundle.save_as(out, |t| {
+        if linear_transformer::nn::quantized_param(&t.name) {
+            dtype
+        } else {
+            linear_transformer::tensor::WeightDtype::F32
+        }
+    })?;
+    let before: usize = std::fs::metadata(src).map(|m| m.len() as usize).unwrap_or(0);
+    let after: usize = std::fs::metadata(out).map(|m| m.len() as usize).unwrap_or(0);
+    println!(
+        "cast {} -> {} ({}): {} bytes -> {} bytes",
+        src,
+        out,
+        dtype.name(),
+        before,
+        after
+    );
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {

@@ -21,9 +21,111 @@ use crate::parallel::ThreadPool;
 use crate::rng::Rng;
 use crate::tensor::{
     add_bias_rows, gather_cols, gelu, layer_norm_into, layer_norm_rows_pooled,
-    matmul_into_pooled, scatter_cols, vecmat_into, Tensor,
+    matmul_into_pooled, matmul_into_w, matmul_into_w_pooled, scatter_cols, vecmat_into,
+    vecmat_into_cols_pooled, vecmat_into_w, vecmat_into_w_cols_pooled, Tensor, WeightDtype,
+    WeightMat,
 };
 use crate::weights::{NamedTensor, WeightBundle};
+
+/// Does the serving path store this parameter at the active
+/// [`WeightDtype`]? True exactly for the GEMV-shaped matrices the decode
+/// tick streams — the QKV/output projections, both FF matrices, and the
+/// lm-head. Embeddings (consumed by row gathers, not GEMVs), layer
+/// norms, and biases stay f32: they are a rounding error of the byte
+/// traffic and keep the normalization math full-precision.
+///
+/// `lintra cast` uses the same predicate when writing a low-precision
+/// bundle, so an offline cast quantizes exactly the tensors an in-memory
+/// cast would (see [`crate::weights::WeightBundle::save_as`]).
+pub fn quantized_param(name: &str) -> bool {
+    name == "head.w"
+        || [".attn.wq", ".attn.wk", ".attn.wv", ".attn.wo", ".ff.w1", ".ff.w2"]
+            .iter()
+            .any(|s| name.ends_with(s))
+}
+
+/// One block's packed low-precision weights (mirrors [`BlockWeights`]'
+/// GEMV-shaped matrices).
+#[derive(Clone, Debug)]
+struct QuantBlock {
+    wq: WeightMat,
+    wk: WeightMat,
+    wv: WeightMat,
+    wo: WeightMat,
+    ff_w1: WeightMat,
+    ff_w2: WeightMat,
+}
+
+/// Packed copies of every quantized parameter, built by
+/// [`TransformerLM::cast_weights`] when a non-f32 dtype is active. The
+/// f32 [`Tensor`]s stay resident as the cast source (re-casting is
+/// always exact) and as the reference for tooling; inference consumes
+/// the packed side whenever it is present.
+#[derive(Clone, Debug)]
+struct QuantWeights {
+    dtype: WeightDtype,
+    blocks: Vec<QuantBlock>,
+    head_w: WeightMat,
+}
+
+/// Route a `[m,k] x [k,n]` projection: packed widening kernel when a
+/// quantized copy exists, the legacy f32 kernel otherwise. Both sides
+/// share the pooled row/column partitioning rules.
+fn mm_w(
+    pool: Option<&ThreadPool>,
+    c: &mut [f32],
+    a: &[f32],
+    quant: Option<&WeightMat>,
+    f32w: &Tensor,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match quant {
+        Some(w) => matmul_into_w_pooled(pool, c, a, w, m, k, n),
+        None => matmul_into_pooled(pool, c, a, &f32w.data, m, k, n),
+    }
+}
+
+/// Route an allocating `[m,k] x [k,n]` projection (full-sequence forward
+/// path, where the caller wants a fresh [`Tensor`]).
+fn mm_alloc(a: &Tensor, quant: Option<&WeightMat>, f32w: &Tensor) -> Tensor {
+    match quant {
+        Some(w) => {
+            let (m, k) = a.dims2();
+            let n = f32w.dims2().1;
+            let mut out = Tensor::zeros(&[m, n]);
+            matmul_into_w(&mut out.data, &a.data, w, m, k, n);
+            out
+        }
+        None => crate::tensor::matmul(a, f32w),
+    }
+}
+
+/// Route a serial GEMV (single-row decode paths).
+fn vm_w(y: &mut [f32], x: &[f32], quant: Option<&WeightMat>, f32w: &Tensor, k: usize, n: usize) {
+    match quant {
+        Some(w) => vecmat_into_w(y, x, w, k, n),
+        None => vecmat_into(y, x, &f32w.data, k, n),
+    }
+}
+
+/// Route a pooled column-split GEMV (the lm-head at the end of a
+/// prefill, where `n = vocab` dwarfs every other shape).
+fn vm_w_pooled(
+    pool: Option<&ThreadPool>,
+    y: &mut [f32],
+    x: &[f32],
+    quant: Option<&WeightMat>,
+    f32w: &Tensor,
+    k: usize,
+    n: usize,
+) {
+    match quant {
+        Some(w) => vecmat_into_w_cols_pooled(pool, y, x, w, k, n),
+        None => vecmat_into_cols_pooled(pool, y, x, &f32w.data, k, n),
+    }
+}
 
 /// Weights of one transformer block.
 #[derive(Clone, Debug)]
@@ -57,6 +159,9 @@ pub struct TransformerLM {
     /// LSH rotation bank (derived, not learned), present for lsh models.
     lsh_rotations: Vec<Vec<f32>>,
     lsh_cfg: lsh::LshConfig,
+    /// Packed low-precision weights when a non-f32 [`WeightDtype`] is
+    /// active; `None` means every kernel reads the f32 tensors directly.
+    quant: Option<QuantWeights>,
 }
 
 impl TransformerLM {
@@ -101,7 +206,7 @@ impl TransformerLM {
             seed: 0,
         };
         let lsh_rotations = make_lsh_rotations(&lsh_cfg, cfg.d_head());
-        Ok(TransformerLM {
+        let mut model = TransformerLM {
             cfg: cfg.clone(),
             kind,
             tok_embed: t("embed.tok")?,
@@ -113,7 +218,89 @@ impl TransformerLM {
             head_b: t("head.b")?,
             lsh_rotations,
             lsh_cfg,
-        })
+            quant: None,
+        };
+        // Honour the ambient LINTRA_WEIGHT_DTYPE so every consumer of a
+        // freshly loaded model (tests, examples, benches) runs the same
+        // numeric path without separate plumbing. The engine re-casts with
+        // its explicit `ServeConfig::weight_dtype` on spawn.
+        model.cast_weights(crate::config::resolve_weight_dtype(None));
+        Ok(model)
+    }
+
+    /// (Re)build the packed weight sidecar at `dtype`. `F32` drops the
+    /// sidecar and restores the bitwise-reference kernels. The f32
+    /// tensors are retained untouched as the cast source, so casting is
+    /// idempotent and switching dtypes never compounds rounding error.
+    pub fn cast_weights(&mut self, dtype: WeightDtype) {
+        if dtype == WeightDtype::F32 {
+            self.quant = None;
+            return;
+        }
+        let q = |t: &Tensor| {
+            let (rows, cols) = t.dims2();
+            WeightMat::quantize(&t.data, rows, cols, dtype)
+        };
+        self.quant = Some(QuantWeights {
+            dtype,
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| QuantBlock {
+                    wq: q(&b.wq),
+                    wk: q(&b.wk),
+                    wv: q(&b.wv),
+                    wo: q(&b.wo),
+                    ff_w1: q(&b.ff_w1),
+                    ff_w2: q(&b.ff_w2),
+                })
+                .collect(),
+            head_w: q(&self.head_w),
+        });
+    }
+
+    /// The dtype the serving kernels currently read weights at.
+    pub fn weight_dtype(&self) -> WeightDtype {
+        self.quant.as_ref().map(|q| q.dtype).unwrap_or(WeightDtype::F32)
+    }
+
+    /// Bytes of projection/FF/lm-head weight traffic one decode tick
+    /// streams per lane — the quantity the weight-dtype work shrinks.
+    /// Counts only [`quantized_param`] tensors (embeddings are row
+    /// gathers, norms/biases are O(e)).
+    pub fn weight_bytes_per_token(&self) -> usize {
+        match &self.quant {
+            Some(qw) => {
+                qw.blocks
+                    .iter()
+                    .map(|b| {
+                        b.wq.weight_bytes()
+                            + b.wk.weight_bytes()
+                            + b.wv.weight_bytes()
+                            + b.wo.weight_bytes()
+                            + b.ff_w1.weight_bytes()
+                            + b.ff_w2.weight_bytes()
+                    })
+                    .sum::<usize>()
+                    + qw.head_w.weight_bytes()
+            }
+            None => {
+                let elems = self
+                    .blocks
+                    .iter()
+                    .map(|b| {
+                        b.wq.numel()
+                            + b.wk.numel()
+                            + b.wv.numel()
+                            + b.wo.numel()
+                            + b.ff_w1.numel()
+                            + b.ff_w2.numel()
+                    })
+                    .sum::<usize>()
+                    + self.head_w.numel();
+                elems * std::mem::size_of::<f32>()
+            }
+        }
     }
 
     /// Random init (same scales as python init_params) — for benches that
@@ -166,8 +353,8 @@ impl TransformerLM {
                 row[j] = te[j] + pe[j];
             }
         }
-        for blk in &self.blocks {
-            self.block_forward(blk, &mut x);
+        for (li, blk) in self.blocks.iter().enumerate() {
+            self.block_forward(blk, self.quant.as_ref().map(|q| &q.blocks[li]), &mut x);
         }
         // final ln + head
         let mut normed = Tensor::zeros(&[n, e]);
@@ -179,7 +366,7 @@ impl TransformerLM {
                 &self.final_ln_b.data,
             );
         }
-        let mut logits = crate::tensor::matmul(&normed, &self.head_w);
+        let mut logits = mm_alloc(&normed, self.quant.as_ref().map(|q| &q.head_w), &self.head_w);
         for i in 0..n {
             for (l, b) in logits.row_mut(i).iter_mut().zip(&self.head_b.data) {
                 *l += b;
@@ -194,7 +381,7 @@ impl TransformerLM {
         crate::metrics::mean_nll(&logits.data, self.cfg.vocab, targets)
     }
 
-    fn block_forward(&self, blk: &BlockWeights, x: &mut Tensor) {
+    fn block_forward(&self, blk: &BlockWeights, qb: Option<&QuantBlock>, x: &mut Tensor) {
         let (n, e) = x.dims2();
         let h = self.cfg.n_heads;
         let dh = self.cfg.d_head();
@@ -204,9 +391,9 @@ impl TransformerLM {
         for i in 0..n {
             layer_norm_into(normed.row_mut(i), x.row(i), &blk.ln1_g.data, &blk.ln1_b.data);
         }
-        let q = crate::tensor::matmul(&normed, &blk.wq);
-        let k = crate::tensor::matmul(&normed, &blk.wk);
-        let v = crate::tensor::matmul(&normed, &blk.wv);
+        let q = mm_alloc(&normed, qb.map(|q| &q.wq), &blk.wq);
+        let k = mm_alloc(&normed, qb.map(|q| &q.wk), &blk.wk);
+        let v = mm_alloc(&normed, qb.map(|q| &q.wv), &blk.wv);
 
         // per-head attention into `merged`
         let mut merged = Tensor::zeros(&[n, e]);
@@ -252,7 +439,7 @@ impl TransformerLM {
                 merged.row_mut(i)[col..col + dh].copy_from_slice(&oh[i * dh..(i + 1) * dh]);
             }
         }
-        let attn_out = crate::tensor::matmul(&merged, &blk.wo);
+        let attn_out = mm_alloc(&merged, qb.map(|q| &q.wo), &blk.wo);
         x.add_assign(&attn_out);
 
         // ff
@@ -261,12 +448,12 @@ impl TransformerLM {
             layer_norm_into(&mut normed_row, x.row(i), &blk.ln2_g.data, &blk.ln2_b.data);
             let ff = self.cfg.d_ff;
             let mut hrow = vec![0.0f32; ff];
-            vecmat_into(&mut hrow, &normed_row, &blk.ff_w1.data, e, ff);
+            vm_w(&mut hrow, &normed_row, qb.map(|q| &q.ff_w1), &blk.ff_w1, e, ff);
             for (hv, b) in hrow.iter_mut().zip(&blk.ff_b1.data) {
                 *hv = gelu(*hv + b);
             }
             let mut orow = vec![0.0f32; e];
-            vecmat_into(&mut orow, &hrow, &blk.ff_w2.data, ff, e);
+            vm_w(&mut orow, &hrow, qb.map(|q| &q.ff_w2), &blk.ff_w2, ff, e);
             let xrow = x.row_mut(i);
             for j in 0..e {
                 xrow[j] += orow[j] + blk.ff_b2.data[j];
@@ -609,11 +796,13 @@ impl<'m> BatchedDecodeSession<'m> {
         if b == 0 {
             return Vec::new();
         }
-        // A single output row is GEMV-shaped — the pool partitions output
-        // rows, so there is nothing to split at B = 1. Skip dispatch
-        // entirely instead of paying per-kernel threshold checks (see the
-        // single-row threshold notes in `crate::parallel`).
-        let pool = if b == 1 { None } else { self.pool.as_deref() };
+        // B = 1 ticks are GEMV-shaped; the pooled kernels split the
+        // *output columns* across workers for that shape (each worker owns
+        // a disjoint column range, so there is no reduction to merge and
+        // the result is bit-identical to serial — see
+        // `crate::tensor::vecmat_into_cols_pooled`). Shapes under the
+        // dispatch thresholds still run serially.
+        let pool = self.pool.as_deref();
         // x = tok_embed + pos_embed, gathered per lane
         for (r, &tok) in tokens.iter().enumerate() {
             assert!(
@@ -629,6 +818,7 @@ impl<'m> BatchedDecodeSession<'m> {
             }
         }
         for (li, blk) in model.blocks.iter().enumerate() {
+            let qb = model.quant.as_ref().map(|q| &q.blocks[li]);
             // ln1 -> one [B, e] x [e, e] GEMM per projection
             layer_norm_rows_pooled(
                 pool,
@@ -639,9 +829,9 @@ impl<'m> BatchedDecodeSession<'m> {
                 b,
             );
             let normed = &self.normed[..b * e];
-            matmul_into_pooled(pool, &mut self.q[..b * e], normed, &blk.wq.data, b, e, e);
-            matmul_into_pooled(pool, &mut self.k[..b * e], normed, &blk.wk.data, b, e, e);
-            matmul_into_pooled(pool, &mut self.v[..b * e], normed, &blk.wv.data, b, e, e);
+            mm_w(pool, &mut self.q[..b * e], normed, qb.map(|q| &q.wq), &blk.wq, b, e, e);
+            mm_w(pool, &mut self.k[..b * e], normed, qb.map(|q| &q.wk), &blk.wk, b, e, e);
+            mm_w(pool, &mut self.v[..b * e], normed, qb.map(|q| &q.wv), &blk.wv, b, e, e);
             // per head: gather columns, batched RNN update, scatter back
             for hd in 0..h {
                 let col = hd * dh;
@@ -657,11 +847,12 @@ impl<'m> BatchedDecodeSession<'m> {
                 );
                 scatter_cols(&mut self.merged[..b * e], &self.oh[..b * dh], b, e, col, dh);
             }
-            matmul_into_pooled(
+            mm_w(
                 pool,
                 &mut self.out2[..b * e],
                 &self.merged[..b * e],
-                &blk.wo.data,
+                qb.map(|q| &q.wo),
+                &blk.wo,
                 b,
                 e,
                 e,
@@ -679,11 +870,12 @@ impl<'m> BatchedDecodeSession<'m> {
                 b,
             );
             let dff = cfg.d_ff;
-            matmul_into_pooled(
+            mm_w(
                 pool,
                 &mut self.ff[..b * dff],
                 &self.normed[..b * e],
-                &blk.ff_w1.data,
+                qb.map(|q| &q.ff_w1),
+                &blk.ff_w1,
                 b,
                 e,
                 dff,
@@ -694,11 +886,12 @@ impl<'m> BatchedDecodeSession<'m> {
                     *hv = gelu(*hv + bv);
                 }
             }
-            matmul_into_pooled(
+            mm_w(
                 pool,
                 &mut self.out2[..b * e],
                 &self.ff[..b * dff],
-                &blk.ff_w2.data,
+                qb.map(|q| &q.ff_w2),
+                &blk.ff_w2,
                 b,
                 dff,
                 e,
@@ -720,7 +913,16 @@ impl<'m> BatchedDecodeSession<'m> {
         let vocab = cfg.vocab;
         let mut logits = vec![0.0f32; b * vocab];
         let normed = &self.normed[..b * e];
-        matmul_into_pooled(pool, &mut logits, normed, &model.head_w.data, b, e, vocab);
+        mm_w(
+            pool,
+            &mut logits,
+            normed,
+            model.quant.as_ref().map(|q| &q.head_w),
+            &model.head_w,
+            b,
+            e,
+            vocab,
+        );
         add_bias_rows(&mut logits, &model.head_b.data, b);
         for p in self.pos[..b].iter_mut() {
             *p += 1;
@@ -879,10 +1081,11 @@ impl<'m> BatchedDecodeSession<'m> {
                     &blk.ln1_b.data,
                     n,
                 );
+                let qb = model.quant.as_ref().map(|q| &q.blocks[li]);
                 let normed = &self.normed[..n * e];
-                matmul_into_pooled(pool, &mut self.q[..n * e], normed, &blk.wq.data, n, e, e);
-                matmul_into_pooled(pool, &mut self.k[..n * e], normed, &blk.wk.data, n, e, e);
-                matmul_into_pooled(pool, &mut self.v[..n * e], normed, &blk.wv.data, n, e, e);
+                mm_w(pool, &mut self.q[..n * e], normed, qb.map(|q| &q.wq), &blk.wq, n, e, e);
+                mm_w(pool, &mut self.k[..n * e], normed, qb.map(|q| &q.wk), &blk.wk, n, e, e);
+                mm_w(pool, &mut self.v[..n * e], normed, qb.map(|q| &q.wv), &blk.wv, n, e, e);
                 // per head: the chunk flows through the causal recurrence
                 // of this lane only; other lanes' states are untouched
                 for hd in 0..h {
@@ -901,7 +1104,7 @@ impl<'m> BatchedDecodeSession<'m> {
                     scatter_cols(&mut self.merged[..n * e], &self.oh[..n * dh], n, e, col, dh);
                 }
                 let merged = &self.merged[..n * e];
-                matmul_into_pooled(pool, &mut self.out2[..n * e], merged, &blk.wo.data, n, e, e);
+                mm_w(pool, &mut self.out2[..n * e], merged, qb.map(|q| &q.wo), &blk.wo, n, e, e);
                 for (xv, &ov) in self.x[..n * e].iter_mut().zip(&self.out2[..n * e]) {
                     *xv += ov;
                 }
@@ -914,11 +1117,12 @@ impl<'m> BatchedDecodeSession<'m> {
                     &blk.ln2_b.data,
                     n,
                 );
-                matmul_into_pooled(
+                mm_w(
                     pool,
                     &mut self.ff[..n * dff],
                     &self.normed[..n * e],
-                    &blk.ff_w1.data,
+                    qb.map(|q| &q.ff_w1),
+                    &blk.ff_w1,
                     n,
                     e,
                     dff,
@@ -929,11 +1133,12 @@ impl<'m> BatchedDecodeSession<'m> {
                         *hv = gelu(*hv + bv);
                     }
                 }
-                matmul_into_pooled(
+                mm_w(
                     pool,
                     &mut self.out2[..n * e],
                     &self.ff[..n * dff],
-                    &blk.ff_w2.data,
+                    qb.map(|q| &q.ff_w2),
+                    &blk.ff_w2,
                     n,
                     dff,
                     e,
@@ -956,7 +1161,15 @@ impl<'m> BatchedDecodeSession<'m> {
                     &model.final_ln_b.data,
                 );
                 let mut out = vec![0.0f32; cfg.vocab];
-                vecmat_into(&mut out, &self.normed[..e], &model.head_w.data, e, cfg.vocab);
+                vm_w_pooled(
+                    pool,
+                    &mut out,
+                    &self.normed[..e],
+                    model.quant.as_ref().map(|q| &q.head_w),
+                    &model.head_w,
+                    e,
+                    cfg.vocab,
+                );
                 for (l, bv) in out.iter_mut().zip(&model.head_b.data) {
                     *l += bv;
                 }
@@ -1076,10 +1289,11 @@ impl<'m> DecodeSession<'m> {
             self.xbuf[j] = te[j] + pe[j];
         }
         for (li, blk) in self.model.blocks.iter().enumerate() {
+            let qb = self.model.quant.as_ref().map(|q| &q.blocks[li]);
             layer_norm_into(&mut self.normed, &self.xbuf, &blk.ln1_g.data, &blk.ln1_b.data);
-            vecmat_into(&mut self.qrow, &self.normed, &blk.wq.data, e, e);
-            vecmat_into(&mut self.krow, &self.normed, &blk.wk.data, e, e);
-            vecmat_into(&mut self.vrow, &self.normed, &blk.wv.data, e, e);
+            vm_w(&mut self.qrow, &self.normed, qb.map(|q| &q.wq), &blk.wq, e, e);
+            vm_w(&mut self.krow, &self.normed, qb.map(|q| &q.wk), &blk.wk, e, e);
+            vm_w(&mut self.vrow, &self.normed, qb.map(|q| &q.wv), &blk.wv, e, e);
             for hd in 0..h {
                 let col = hd * dh;
                 let q = &self.qrow[col..col + dh];
@@ -1092,17 +1306,17 @@ impl<'m> DecodeSession<'m> {
                     Backend::Linear(_) | Backend::Recompute => unreachable!(),
                 }
             }
-            vecmat_into(&mut self.out2, &self.orow, &blk.wo.data, e, e);
+            vm_w(&mut self.out2, &self.orow, qb.map(|q| &q.wo), &blk.wo, e, e);
             for j in 0..e {
                 self.xbuf[j] += self.out2[j];
             }
             // ff
             layer_norm_into(&mut self.normed, &self.xbuf, &blk.ln2_g.data, &blk.ln2_b.data);
-            vecmat_into(&mut self.ffrow, &self.normed, &blk.ff_w1.data, e, cfg.d_ff);
+            vm_w(&mut self.ffrow, &self.normed, qb.map(|q| &q.ff_w1), &blk.ff_w1, e, cfg.d_ff);
             for (hv, b) in self.ffrow.iter_mut().zip(&blk.ff_b1.data) {
                 *hv = gelu(*hv + b);
             }
-            vecmat_into(&mut self.out2, &self.ffrow, &blk.ff_w2.data, cfg.d_ff, e);
+            vm_w(&mut self.out2, &self.ffrow, qb.map(|q| &q.ff_w2), &blk.ff_w2, cfg.d_ff, e);
             for j in 0..e {
                 self.xbuf[j] += self.out2[j] + blk.ff_b2.data[j];
             }
@@ -1115,7 +1329,14 @@ impl<'m> DecodeSession<'m> {
         );
         let vsize = cfg.vocab;
         let mut logits = vec![0.0f32; vsize];
-        vecmat_into(&mut logits, &self.normed, &self.model.head_w.data, e, vsize);
+        vm_w(
+            &mut logits,
+            &self.normed,
+            self.model.quant.as_ref().map(|q| &q.head_w),
+            &self.model.head_w,
+            e,
+            vsize,
+        );
         for (l, b) in logits.iter_mut().zip(&self.model.head_b.data) {
             *l += b;
         }
@@ -1641,5 +1862,77 @@ mod tests {
         let cfg = tiny_cfg();
         let bundle = WeightBundle::new(vec![]);
         assert!(TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle).is_err());
+    }
+
+    #[test]
+    fn quantized_param_selects_gemv_shaped_weights() {
+        for name in [
+            "layer0.attn.wq",
+            "layer7.attn.wk",
+            "layer0.attn.wv",
+            "layer12.attn.wo",
+            "layer3.ff.w1",
+            "layer3.ff.w2",
+            "head.w",
+        ] {
+            assert!(quantized_param(name), "{name} should quantize");
+        }
+        for name in [
+            "embed.tok",
+            "embed.pos",
+            "layer0.ln1.g",
+            "layer0.ln1.b",
+            "layer0.ln2.g",
+            "layer3.ff.b1",
+            "layer3.ff.b2",
+            "final_ln.g",
+            "final_ln.b",
+            "head.b",
+        ] {
+            assert!(!quantized_param(name), "{name} should stay f32");
+        }
+    }
+
+    #[test]
+    fn cast_weights_builds_and_clears_the_sidecar() {
+        let cfg = tiny_cfg();
+        let mut m = TransformerLM::init(&cfg, AttentionKind::Linear, 3);
+        // normalize away any ambient LINTRA_WEIGHT_DTYPE first
+        m.cast_weights(WeightDtype::F32);
+        assert_eq!(m.weight_dtype(), WeightDtype::F32);
+        let f32_bytes = m.weight_bytes_per_token();
+        m.cast_weights(WeightDtype::F16);
+        assert_eq!(m.weight_dtype(), WeightDtype::F16);
+        assert_eq!(m.weight_bytes_per_token() * 2, f32_bytes);
+        // re-casting from the retained f32 source is idempotent
+        let once = m.clone();
+        m.cast_weights(WeightDtype::F16);
+        let t = tokens(8, cfg.vocab, 1);
+        assert_eq!(m.forward(&t).data, once.forward(&t).data);
+        // back to f32 restores the bitwise-reference path
+        m.cast_weights(WeightDtype::F32);
+        assert_eq!(m.weight_dtype(), WeightDtype::F32);
+        assert_eq!(m.weight_bytes_per_token(), f32_bytes);
+    }
+
+    #[test]
+    fn f16_cast_keeps_forward_logits_within_contract() {
+        let cfg = tiny_cfg();
+        let mut m = TransformerLM::init(&cfg, AttentionKind::Linear, 5);
+        m.cast_weights(WeightDtype::F32);
+        let t = tokens(12, cfg.vocab, 2);
+        let reference = m.forward(&t);
+        m.cast_weights(WeightDtype::F16);
+        let quantized = m.forward(&t);
+        for (i, (g, w)) in quantized.data.iter().zip(&reference.data).enumerate() {
+            crate::propcheck::assert_close_ulp(
+                *g,
+                *w,
+                0,
+                5e-2,
+                5e-2,
+                &format!("f16 forward logit {i}"),
+            );
+        }
     }
 }

@@ -29,21 +29,23 @@
 //! # Dispatch thresholds — when work does *not* fan out
 //!
 //! Because the unit of partition is an output row, a job with a single
-//! output row is a GEMV in disguise and **cannot** be split — splitting
-//! its reduction would change float order and break rule 1. Three layers
-//! of defense keep such shapes off the pool:
+//! output row is a GEMV in disguise and cannot be split *by rows*. It
+//! **can** be split by output **columns** without touching any
+//! reduction: each worker owns a disjoint contiguous column range of
+//! the one output row and computes those dot products exactly as the
+//! serial kernel would, so rule 1 still holds bitwise at any thread
+//! count. [`crate::tensor::vecmat_into_cols_pooled`] (and its
+//! packed-weight siblings) implement exactly that — it is how B = 1
+//! decode ticks, the weight-bandwidth-bound serving shape, scale with
+//! cores. Two layers of defense keep *unprofitable* shapes off the
+//! pool:
 //!
-//! * **B = 1 decode ticks skip the pool entirely.** The batched decode
-//!   session passes `pool = None` for single-lane ticks (see
-//!   `BatchedDecodeSession::step_batch`), so a B=1 engine pays zero
-//!   dispatch overhead — not even the per-kernel threshold checks. (The
-//!   ROADMAP's speculative column-split `vecmat` with per-thread partial
-//!   outputs is the only way to ever parallelize that shape, and it
-//!   would violate bit-identity; it stays out.)
-//! * **Single-row kernels stay serial** (`rows >= 2` guards in every
-//!   `*_pooled` kernel in `crate::tensor`).
+//! * **Row-partitioned kernels require `rows >= 2`** (guards in every
+//!   row-blocked `*_pooled` kernel in `crate::tensor`); single-row
+//!   inputs route to the column-split GEMV path instead.
 //! * **Tiny kernels stay serial**: below `PAR_MIN_WORK` (~16k mul-adds
-//!   for GEMM shapes) or `PAR_MIN_ROW_ELEMS` (row-wise kernels), one
+//!   for GEMM shapes), `PAR_MIN_ROW_ELEMS` (row-wise kernels), or
+//!   `PAR_MIN_GEMV_COLS` output columns (the column-split GEMV), one
 //!   dispatch (microseconds) would rival the work itself.
 //!
 //! # Example

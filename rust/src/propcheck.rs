@@ -113,6 +113,58 @@ pub fn check_seeded(
     }
 }
 
+/// ULP distance between two f32s: how many representable floats sit
+/// between them (same-sign; opposite signs measure through zero).
+/// `f32::MAX` for NaN on either side, 0 for `+0.0` vs `-0.0`.
+pub fn ulp_distance(a: f32, b: f32) -> u32 {
+    if a.is_nan() || b.is_nan() {
+        return u32::MAX;
+    }
+    // map the bit pattern onto a monotone integer line: both zeros land
+    // on 0, negatives mirror below so ordering matches the real line
+    fn ordered(x: f32) -> i64 {
+        let bits = x.to_bits() as i32 as i64;
+        if bits < 0 {
+            (i32::MIN as i64) - bits
+        } else {
+            bits
+        }
+    }
+    (ordered(a) - ordered(b)).unsigned_abs().min(u32::MAX as u64) as u32
+}
+
+/// Assert two floats are close under the numeric contract used by the
+/// low-precision weight paths: within `max_ulps` representable values of
+/// each other, OR within `abs_tol` absolutely (covers results near zero,
+/// where ULP distance explodes), OR within `rel_tol` of the larger
+/// magnitude. Panics with all three measurements on failure.
+///
+/// The weight-storage contract (ARCHITECTURE.md §Weight storage &
+/// numeric contract) is phrased in these terms: f32 paths are compared
+/// bitwise (`max_ulps = 0`), quantized paths at a documented
+/// `(rel_tol, abs_tol)` per dtype.
+#[track_caller]
+pub fn assert_close_ulp(got: f32, want: f32, max_ulps: u32, rel_tol: f32, abs_tol: f32, what: &str) {
+    let ulps = ulp_distance(got, want);
+    if ulps <= max_ulps {
+        return;
+    }
+    let diff = (got - want).abs();
+    if diff <= abs_tol {
+        return;
+    }
+    let scale = got.abs().max(want.abs());
+    if diff <= rel_tol * scale {
+        return;
+    }
+    panic!(
+        "{what}: got {got}, want {want} \
+         (|diff| {diff:.3e} > abs_tol {abs_tol:.3e}, rel {:.3e} > rel_tol {rel_tol:.3e}, \
+         {ulps} ulps > {max_ulps})",
+        if scale > 0.0 { diff / scale } else { 0.0 },
+    );
+}
+
 /// Env-tunable case count: PROPCHECK_CASES overrides (for soak runs).
 pub fn default_cases() -> usize {
     std::env::var("PROPCHECK_CASES")
@@ -182,6 +234,33 @@ mod tests {
         };
         assert_eq!(collect("alpha"), collect("alpha"));
         assert_ne!(collect("alpha"), collect("beta"));
+    }
+
+    #[test]
+    fn ulp_distance_counts_representable_steps() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // crossing zero: smallest positive vs smallest negative subnormal
+        assert_eq!(ulp_distance(f32::from_bits(1), -f32::from_bits(1)), 2);
+        assert_eq!(ulp_distance(f32::NAN, 1.0), u32::MAX);
+        assert!(ulp_distance(1.0, 2.0) > 1_000_000);
+    }
+
+    #[test]
+    fn assert_close_ulp_accepts_each_gate() {
+        assert_close_ulp(1.0, 1.0, 0, 0.0, 0.0, "bitwise");
+        let next = f32::from_bits(1.0f32.to_bits() + 1);
+        assert_close_ulp(1.0, next, 1, 0.0, 0.0, "one ulp");
+        assert_close_ulp(1e-9, -1e-9, 0, 0.0, 1e-8, "abs tol near zero");
+        assert_close_ulp(100.0, 100.4, 0, 5e-3, 0.0, "rel tol");
+    }
+
+    #[test]
+    #[should_panic(expected = "tolerance-breach")]
+    fn assert_close_ulp_rejects_out_of_contract() {
+        assert_close_ulp(1.0, 1.1, 4, 1e-3, 1e-6, "tolerance-breach");
     }
 
     #[test]

@@ -195,6 +195,12 @@ pub fn matmul_into_pooled(
                 matmul_into(cblk, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
             });
         }
+        Some(p) if p.threads() > 1 && m == 1 && n >= PAR_MIN_GEMV_COLS && k * n >= PAR_MIN_WORK => {
+            // a single output row is a GEMV: split output *columns*
+            // instead (disjoint per-thread slices, each column's dot
+            // product still serial — see vecmat_into_cols_pooled)
+            vecmat_into_cols_pooled(Some(p), c, a, b, k, n)
+        }
         _ => matmul_into(c, a, b, m, k, n),
     }
 }
@@ -500,6 +506,463 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + ((0.797_884_56) * (x + 0.044_715 * x * x * x)).tanh())
 }
 
+// ---------------------------------------------------------------------------
+// low-precision weight storage (f16 / bf16 / int8-per-row-scale)
+// ---------------------------------------------------------------------------
+//
+// The decode hot path is weight-bandwidth bound (see `vecmat_into`), so
+// the projection matrices can be *stored* narrow and widened to f32 in
+// registers inside the kernel inner loop: compute stays f32, only the
+// bytes streamed from memory shrink. The numeric contract lives in the
+// accumulation order: every widening kernel computes each output element
+// with a single accumulator in pure k-ascending order, so a given
+// (weights, input) pair produces bit-identical results regardless of the
+// batch row count, prompt chunking, or how a pool partitions output
+// columns. The f32 `WeightMat` variant reproduces `vecmat_into` /
+// `matmul_into` per-element order exactly (including the zero-skip), so
+// routing f32 weights through these kernels stays bitwise with the
+// legacy path.
+
+/// Conversion: f32 -> IEEE 754 binary16 bits, round-to-nearest-even.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // inf stays inf; NaN keeps NaN-ness via the quiet bit
+        let mant = if abs > 0x7f80_0000 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | mant;
+    }
+    if abs >= 0x4780_0000 {
+        // >= 2^16: past the largest finite f16 even after rounding
+        return sign | 0x7c00;
+    }
+    if abs < 0x3880_0000 {
+        // below the smallest f16 normal (2^-14): subnormal or zero
+        if abs < 0x3300_0000 {
+            return sign; // < 2^-25 rounds to (signed) zero
+        }
+        let e = (abs >> 23) as i32; // 102..=112
+        let mant = (abs & 0x007f_ffff) | 0x0080_0000;
+        let shift = (126 - e) as u32; // 14..=24
+        let mut h = (mant >> shift) as u16;
+        let rem = mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h += 1; // a carry lands exactly on the smallest normal
+        }
+        return sign | h;
+    }
+    // normal range: rebias exponent, round 13 mantissa bits away
+    let e = ((abs >> 23) as u32) - 112; // 1..=30
+    let mant = abs & 0x007f_ffff;
+    let mut h = ((e << 10) | (mant >> 13)) as u16;
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        h += 1; // mantissa carry walks into the exponent; 65520..65536
+                // correctly lands on the inf encoding this way
+    }
+    sign | h
+}
+
+/// Conversion: IEEE 754 binary16 bits -> f32 (exact).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // inf / NaN
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: normalize into an f32 normal
+            let mut e = 113u32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Conversion: f32 -> bfloat16 bits, round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if bits & 0x7fff_ffff > 0x7f80_0000 {
+        // NaN: rounding could carry the payload up into inf; quiet it
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7fff + lsb) >> 16) as u16
+}
+
+/// Conversion: bfloat16 bits -> f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Quantize one weight row to int8 with a shared absmax scale; returns
+/// the scale (`value ~= q * scale`). An all-zero row gets scale 0.
+pub fn quantize_row_i8(row: &[f32], out: &mut [i8]) -> f32 {
+    assert_eq!(row.len(), out.len());
+    let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / max_abs;
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    max_abs / 127.0
+}
+
+/// Storage precision for model weights (activations stay f32 everywhere).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightDtype {
+    /// 4 bytes/elem — the bitwise reference path.
+    F32,
+    /// 2 bytes/elem, IEEE binary16 (10-bit mantissa).
+    F16,
+    /// 2 bytes/elem, bfloat16 (8-bit mantissa, f32 exponent range).
+    Bf16,
+    /// 1 byte/elem plus one f32 absmax scale per weight row.
+    Int8,
+}
+
+impl WeightDtype {
+    /// Parse a user-facing dtype name (trimmed, case-insensitive).
+    pub fn parse(s: &str) -> Option<WeightDtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(WeightDtype::F32),
+            "f16" | "fp16" | "float16" | "half" => Some(WeightDtype::F16),
+            "bf16" | "bfloat16" => Some(WeightDtype::Bf16),
+            "int8" | "i8" => Some(WeightDtype::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WeightDtype::F32 => "f32",
+            WeightDtype::F16 => "f16",
+            WeightDtype::Bf16 => "bf16",
+            WeightDtype::Int8 => "int8",
+        }
+    }
+
+    /// Bytes per element for the packed payload (int8 scales excluded).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            WeightDtype::F32 => 4,
+            WeightDtype::F16 | WeightDtype::Bf16 => 2,
+            WeightDtype::Int8 => 1,
+        }
+    }
+}
+
+/// A packed `[k, n]` weight matrix (row-major, like the `Tensor` it came
+/// from). Shape is carried by the call sites, exactly as the raw-slice
+/// kernels above do.
+#[derive(Clone, Debug)]
+pub enum WeightMat {
+    F32 { data: Vec<f32> },
+    F16 { bits: Vec<u16> },
+    Bf16 { bits: Vec<u16> },
+    Int8 { packed: Vec<i8>, scales: Vec<f32> },
+}
+
+impl WeightMat {
+    /// Pack a row-major `[rows, cols]` f32 matrix at the given precision.
+    ///
+    /// Quantization is idempotent: packing the widened (`dequantize`d)
+    /// matrix again yields the same bits for f16/bf16 (the widened values
+    /// are exactly representable), which is what makes an offline
+    /// `lintra cast` bundle reproduce the in-memory cast exactly.
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, dtype: WeightDtype) -> WeightMat {
+        assert_eq!(data.len(), rows * cols);
+        match dtype {
+            WeightDtype::F32 => WeightMat::F32 { data: data.to_vec() },
+            WeightDtype::F16 => WeightMat::F16 {
+                bits: data.iter().map(|&v| f32_to_f16_bits(v)).collect(),
+            },
+            WeightDtype::Bf16 => WeightMat::Bf16 {
+                bits: data.iter().map(|&v| f32_to_bf16_bits(v)).collect(),
+            },
+            WeightDtype::Int8 => {
+                let mut packed = vec![0i8; rows * cols];
+                let mut scales = vec![0.0f32; rows];
+                for r in 0..rows {
+                    scales[r] =
+                        quantize_row_i8(&data[r * cols..(r + 1) * cols], &mut packed[r * cols..(r + 1) * cols]);
+                }
+                WeightMat::Int8 { packed, scales }
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> WeightDtype {
+        match self {
+            WeightMat::F32 { .. } => WeightDtype::F32,
+            WeightMat::F16 { .. } => WeightDtype::F16,
+            WeightMat::Bf16 { .. } => WeightDtype::Bf16,
+            WeightMat::Int8 { .. } => WeightDtype::Int8,
+        }
+    }
+
+    /// Widen every element back to f32 (`cols` is the row length, needed
+    /// to apply the int8 per-row scales).
+    pub fn dequantize(&self, cols: usize) -> Vec<f32> {
+        match self {
+            WeightMat::F32 { data } => data.clone(),
+            WeightMat::F16 { bits } => bits.iter().map(|&b| f16_bits_to_f32(b)).collect(),
+            WeightMat::Bf16 { bits } => bits.iter().map(|&b| bf16_bits_to_f32(b)).collect(),
+            WeightMat::Int8 { packed, scales } => {
+                let mut out = Vec::with_capacity(packed.len());
+                for (r, row) in packed.chunks_exact(cols).enumerate() {
+                    let s = scales[r];
+                    out.extend(row.iter().map(|&q| q as f32 * s));
+                }
+                out
+            }
+        }
+    }
+
+    /// Bytes this matrix streams from memory per full GEMV pass.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            WeightMat::F32 { data } => data.len() * 4,
+            WeightMat::F16 { bits } | WeightMat::Bf16 { bits } => bits.len() * 2,
+            WeightMat::Int8 { packed, scales } => packed.len() + scales.len() * 4,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// widening GEMV/GEMM microkernels over packed weights
+// ---------------------------------------------------------------------------
+
+/// Column-tile width of the widening kernels: 8 independent accumulators
+/// keep the FMA pipeline busy while each individual accumulator still
+/// sums in strict k order.
+const NR: usize = 8;
+
+/// Output width below which a B=1 GEMV is not worth a pool dispatch:
+/// fewer columns than this can't amortize waking the workers.
+pub const PAR_MIN_GEMV_COLS: usize = 64;
+
+/// Core widening GEMV over a column range: writes
+/// `y[j] = sum_k coeff(k) * widen(w[k, col0 + j])` for `j in 0..y.len()`.
+///
+/// NR-wide column tiles with a 4-unrolled k loop; every output element
+/// uses ONE accumulator updated in k-ascending order (the unroll issues
+/// its four adds sequentially), so results are independent of the column
+/// partition, the tile width, and the unroll — the property the pooled
+/// column split and the batched/single-row call sites all rely on.
+/// Unlike the f32 path there is no `== 0.0` skip: the dense decode
+/// stream almost never carries exact zeros, and the branch would stall
+/// the unrolled loads.
+#[inline(always)]
+fn gemv_cols_widen<W: Copy>(
+    y: &mut [f32],
+    w: &[W],
+    k: usize,
+    n: usize,
+    col0: usize,
+    coeff: impl Fn(usize) -> f32,
+    widen: impl Fn(W) -> f32 + Copy,
+) {
+    let nc = y.len();
+    assert!(col0 + nc <= n);
+    assert!(w.len() >= k * n);
+    let mut j = 0;
+    while j + NR <= nc {
+        let base = col0 + j;
+        let mut acc = [0.0f32; NR];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let c0 = coeff(kk);
+            let c1 = coeff(kk + 1);
+            let c2 = coeff(kk + 2);
+            let c3 = coeff(kk + 3);
+            let r0 = &w[kk * n + base..kk * n + base + NR];
+            let r1 = &w[(kk + 1) * n + base..(kk + 1) * n + base + NR];
+            let r2 = &w[(kk + 2) * n + base..(kk + 2) * n + base + NR];
+            let r3 = &w[(kk + 3) * n + base..(kk + 3) * n + base + NR];
+            for t in 0..NR {
+                let mut a = acc[t];
+                a += c0 * widen(r0[t]);
+                a += c1 * widen(r1[t]);
+                a += c2 * widen(r2[t]);
+                a += c3 * widen(r3[t]);
+                acc[t] = a;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let c = coeff(kk);
+            let row = &w[kk * n + base..kk * n + base + NR];
+            for t in 0..NR {
+                acc[t] += c * widen(row[t]);
+            }
+            kk += 1;
+        }
+        y[j..j + NR].copy_from_slice(&acc);
+        j += NR;
+    }
+    while j < nc {
+        let col = col0 + j;
+        let mut acc = 0.0f32;
+        for kk in 0..k {
+            acc += coeff(kk) * widen(w[kk * n + col]);
+        }
+        y[j] = acc;
+        j += 1;
+    }
+}
+
+/// f32 GEMV over a column range, replicating [`vecmat_into`]'s
+/// per-element float-op order exactly (k-ascending with the zero-skip),
+/// so a column-partitioned run is bit-identical to the serial kernel.
+fn gemv_cols_f32(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, col0: usize) {
+    let nc = y.len();
+    assert_eq!(x.len(), k);
+    assert!(col0 + nc <= n);
+    assert!(b.len() >= k * n);
+    y.fill(0.0);
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let brow = &b[kk * n + col0..kk * n + col0 + nc];
+        for (yj, &bj) in y.iter_mut().zip(brow) {
+            *yj += xv * bj;
+        }
+    }
+}
+
+/// Dispatch one GEMV column range against a packed weight matrix.
+fn gemv_cols_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize, col0: usize) {
+    assert_eq!(x.len(), k);
+    match w {
+        WeightMat::F32 { data } => gemv_cols_f32(y, x, data, k, n, col0),
+        WeightMat::F16 { bits } => gemv_cols_widen(y, bits, k, n, col0, |kk| x[kk], f16_bits_to_f32),
+        WeightMat::Bf16 { bits } => gemv_cols_widen(y, bits, k, n, col0, |kk| x[kk], bf16_bits_to_f32),
+        WeightMat::Int8 { packed, scales } => {
+            assert!(scales.len() >= k);
+            // fold the per-row scale into the input coefficient once per
+            // row: one multiply per element in the inner loop, same as f16
+            gemv_cols_widen(y, packed, k, n, col0, |kk| x[kk] * scales[kk], |q: i8| q as f32)
+        }
+    }
+}
+
+/// y[n] = x[k] @ w[k,n] against a packed weight matrix ([`vecmat_into`]
+/// for [`WeightMat`]; bitwise-equal to it on the `F32` variant).
+pub fn vecmat_into_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize) {
+    assert_eq!(y.len(), n);
+    gemv_cols_w(y, x, w, k, n, 0);
+}
+
+/// c[m,n] = a[m,k] @ w[k,n] against a packed weight matrix. Each output
+/// row runs the exact single-row kernel, so results never depend on `m`
+/// (prefill chunking == decode ticks, like the f32 path).
+pub fn matmul_into_w(c: &mut [f32], a: &[f32], w: &WeightMat, m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        gemv_cols_w(&mut c[i * n..(i + 1) * n], &a[i * k..(i + 1) * k], w, k, n, 0);
+    }
+}
+
+/// Pooled column-split GEMV: partitions *output columns* across the pool
+/// (each worker owns a disjoint contiguous column range — no reduction
+/// is ever split), so a B=1 decode tick finally scales with cores. Each
+/// column's dot product runs in the serial kernel's exact float order,
+/// so the result is bit-identical to [`vecmat_into`] under any thread
+/// count — the partition only decides ownership.
+pub fn vecmat_into_cols_pooled(
+    pool: Option<&ThreadPool>,
+    y: &mut [f32],
+    x: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && n >= PAR_MIN_GEMV_COLS && k * n >= PAR_MIN_WORK => {
+            assert_eq!(x.len(), k);
+            assert_eq!(y.len(), n);
+            assert!(b.len() >= k * n);
+            // columns become the "rows" of a [n, 1] output block
+            p.for_row_blocks(n, 1, y, |col0, yblk| {
+                gemv_cols_f32(yblk, x, b, k, n, col0);
+            });
+        }
+        _ => vecmat_into(y, x, b, k, n),
+    }
+}
+
+/// [`vecmat_into_w`] with the same pooled column split as
+/// [`vecmat_into_cols_pooled`] (widening kernels are column-partition
+/// independent by construction, see [`gemv_cols_widen`]).
+pub fn vecmat_into_w_cols_pooled(
+    pool: Option<&ThreadPool>,
+    y: &mut [f32],
+    x: &[f32],
+    w: &WeightMat,
+    k: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && n >= PAR_MIN_GEMV_COLS && k * n >= PAR_MIN_WORK => {
+            assert_eq!(y.len(), n);
+            p.for_row_blocks(n, 1, y, |col0, yblk| {
+                gemv_cols_w(yblk, x, w, k, n, col0);
+            });
+        }
+        _ => vecmat_into_w(y, x, w, k, n),
+    }
+}
+
+/// [`matmul_into_w`] partitioned across the pool: row blocks for m >= 2
+/// (like [`matmul_into_pooled`]), the column split for the m == 1 GEMV
+/// shape that row partitioning cannot touch.
+pub fn matmul_into_w_pooled(
+    pool: Option<&ThreadPool>,
+    c: &mut [f32],
+    a: &[f32],
+    w: &WeightMat,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && m >= 2 && m * k * n >= PAR_MIN_WORK => {
+            assert_eq!(a.len(), m * k);
+            assert_eq!(c.len(), m * n);
+            p.for_row_blocks(m, n, c, |row0, cblk| {
+                let rows = cblk.len() / n;
+                matmul_into_w(cblk, &a[row0 * k..(row0 + rows) * k], w, rows, k, n);
+            });
+        }
+        Some(p) if p.threads() > 1 && m == 1 && n >= PAR_MIN_GEMV_COLS && k * n >= PAR_MIN_WORK => {
+            vecmat_into_w_cols_pooled(Some(p), c, a, w, k, n)
+        }
+        _ => matmul_into_w(c, a, w, m, k, n),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -791,5 +1254,265 @@ mod tests {
         axpy(&mut y, 2.0, &[3.0, 4.0]);
         assert_eq!(y, vec![7.0, 10.0]);
         assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    // -- low-precision storage ---------------------------------------------
+
+    #[test]
+    fn f16_conversion_exact_and_edge_cases() {
+        // exactly representable values survive the round trip bitwise
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, -2.5, 1024.0, 65504.0, 6.1035156e-5] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "f16 round trip broke {v}");
+        }
+        // subnormal: 2^-24 is the smallest positive f16
+        assert_eq!(f32_to_f16_bits(5.9604645e-8), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.9604645e-8);
+        // below half the smallest subnormal rounds to zero
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+        // overflow: 65520 and above round to inf
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(1e30), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e30), 0xfc00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // round-to-nearest-even: 1 + 2^-11 is halfway, rounds down to 1.0
+        assert_eq!(f32_to_f16_bits(1.0 + 4.8828125e-4), 0x3c00);
+        // ... but 1 + 3*2^-11 rounds up to 1 + 2^-9 (even mantissa 2)
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 4.8828125e-4), 0x3c02);
+    }
+
+    #[test]
+    fn bf16_conversion_exact_and_edge_cases() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 256.0, 1.1754944e-38] {
+            let back = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "bf16 round trip broke {v}");
+        }
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        // max finite f32 rounds up to bf16 inf
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7f80);
+        // RNE: 1 + 2^-8 is halfway between 1.0 and 1 + 2^-7, rounds to
+        // the even mantissa (down)
+        assert_eq!(f32_to_bf16_bits(1.0 + 3.90625e-3), 0x3f80);
+    }
+
+    #[test]
+    fn conversions_are_idempotent_on_quantized_values() {
+        let mut rng = Rng::new(50);
+        for v in rng.normal_vec(512, 3.0) {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "f16 requantize moved {v}");
+            let b = f32_to_bf16_bits(v);
+            assert_eq!(f32_to_bf16_bits(bf16_bits_to_f32(b)), b, "bf16 requantize moved {v}");
+        }
+    }
+
+    #[test]
+    fn int8_row_quantization_properties() {
+        let mut rng = Rng::new(51);
+        let row = rng.normal_vec(64, 1.0);
+        let mut q = vec![0i8; 64];
+        let s = quantize_row_i8(&row, &mut q);
+        assert!(s > 0.0);
+        // the absmax element pins the extreme code, nothing exceeds it
+        assert_eq!(q.iter().map(|&v| v.abs()).max().unwrap(), 127);
+        for (&qi, &v) in q.iter().zip(&row) {
+            assert!((qi as f32 * s - v).abs() <= s * 0.5 + 1e-6, "q error above half a step");
+        }
+        // requantizing the dequantized row reproduces the codes
+        let deq: Vec<f32> = q.iter().map(|&qi| qi as f32 * s).collect();
+        let mut q2 = vec![0i8; 64];
+        let s2 = quantize_row_i8(&deq, &mut q2);
+        assert_eq!(q2, q, "int8 requantize must be stable");
+        assert!((s2 - s).abs() <= s * 1e-6);
+        // zero row: scale 0, all-zero codes
+        let mut qz = vec![1i8; 4];
+        assert_eq!(quantize_row_i8(&[0.0; 4], &mut qz), 0.0);
+        assert_eq!(qz, vec![0i8; 4]);
+    }
+
+    /// Reference GEMV replicating the widening kernels' per-element float
+    /// formula (single accumulator, k-ascending) with none of the tiling.
+    fn naive_w_gemv(x: &[f32], w: &WeightMat, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; n];
+        for (j, yj) in y.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += match w {
+                    WeightMat::F32 { data } => x[kk] * data[kk * n + j],
+                    WeightMat::F16 { bits } => x[kk] * f16_bits_to_f32(bits[kk * n + j]),
+                    WeightMat::Bf16 { bits } => x[kk] * bf16_bits_to_f32(bits[kk * n + j]),
+                    WeightMat::Int8 { packed, scales } => {
+                        (x[kk] * scales[kk]) * packed[kk * n + j] as f32
+                    }
+                };
+            }
+            *yj = acc;
+        }
+        y
+    }
+
+    #[test]
+    fn widening_gemv_matches_untiled_reference_bitwise() {
+        // tiling/unrolling must not change any per-element float order:
+        // shapes cover NR and 4-unroll remainders
+        let mut rng = Rng::new(52);
+        for &(k, n) in &[(4usize, 8usize), (7, 13), (32, 40), (33, 65), (128, 96)] {
+            let data = rng.normal_vec(k * n, 1.0);
+            let x = rng.normal_vec(k, 1.0);
+            for dtype in [WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8] {
+                let w = WeightMat::quantize(&data, k, n, dtype);
+                let mut y = vec![0.0f32; n];
+                vecmat_into_w(&mut y, &x, &w, k, n);
+                let want = naive_w_gemv(&x, &w, k, n);
+                assert_eq!(y, want, "{}: tiled kernel diverged at {k}x{n}", dtype.name());
+            }
+        }
+    }
+
+    #[test]
+    fn f32_weightmat_path_is_bitwise_vecmat() {
+        let mut rng = Rng::new(53);
+        let (k, n) = (33, 65);
+        let data = rng.normal_vec(k * n, 1.0);
+        let mut x = rng.normal_vec(k, 1.0);
+        x[5] = 0.0; // exercise the zero-skip branch
+        x[17] = 0.0;
+        let w = WeightMat::quantize(&data, k, n, WeightDtype::F32);
+        let mut y = vec![0.0f32; n];
+        vecmat_into_w(&mut y, &x, &w, k, n);
+        let mut want = vec![0.0f32; n];
+        vecmat_into(&mut want, &x, &data, k, n);
+        assert_eq!(y, want);
+        // and through the multi-row form, every row matches the GEMV
+        let m = 3;
+        let a = rng.normal_vec(m * k, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        matmul_into_w(&mut c, &a, &w, m, k, n);
+        let mut cref = vec![0.0f32; m * n];
+        matmul_into(&mut cref, &a, &data, m, k, n);
+        assert_eq!(c, cref);
+    }
+
+    #[test]
+    fn widening_matmul_rows_independent_of_batch_shape() {
+        let mut rng = Rng::new(54);
+        let (m, k, n) = (5, 32, 40);
+        let data = rng.normal_vec(k * n, 1.0);
+        let a = rng.normal_vec(m * k, 1.0);
+        for dtype in [WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8] {
+            let w = WeightMat::quantize(&data, k, n, dtype);
+            let mut c = vec![0.0f32; m * n];
+            matmul_into_w(&mut c, &a, &w, m, k, n);
+            for i in 0..m {
+                let mut row = vec![0.0f32; n];
+                vecmat_into_w(&mut row, &a[i * k..(i + 1) * k], &w, k, n);
+                assert_eq!(&c[i * n..(i + 1) * n], &row[..], "{}: row {i} depends on m", dtype.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_error_within_dtype_bounds() {
+        let mut rng = Rng::new(55);
+        let (rows, cols) = (16, 48);
+        let data = rng.normal_vec(rows * cols, 0.3);
+        for (dtype, rel) in [(WeightDtype::F16, 1.0 / 1024.0), (WeightDtype::Bf16, 1.0 / 128.0)] {
+            let w = WeightMat::quantize(&data, rows, cols, dtype);
+            let back = w.dequantize(cols);
+            for (&b, &v) in back.iter().zip(&data) {
+                assert!((b - v).abs() <= v.abs() * rel + 1e-7, "{}: {v} -> {b}", dtype.name());
+            }
+        }
+        let w = WeightMat::quantize(&data, rows, cols, WeightDtype::Int8);
+        let back = w.dequantize(cols);
+        if let WeightMat::Int8 { ref scales, .. } = w {
+            for r in 0..rows {
+                for c in 0..cols {
+                    let (v, b) = (data[r * cols + c], back[r * cols + c]);
+                    assert!((b - v).abs() <= scales[r] * 0.5 + 1e-6, "int8: {v} -> {b}");
+                }
+            }
+        }
+        // byte accounting: the whole point of the exercise
+        assert_eq!(
+            WeightMat::quantize(&data, rows, cols, WeightDtype::F32).weight_bytes(),
+            rows * cols * 4
+        );
+        assert_eq!(
+            WeightMat::quantize(&data, rows, cols, WeightDtype::F16).weight_bytes(),
+            rows * cols * 2
+        );
+        assert_eq!(w.weight_bytes(), rows * cols + rows * 4);
+    }
+
+    #[test]
+    fn pooled_column_split_gemv_is_bitwise_serial() {
+        let mut rng = Rng::new(56);
+        let (k, n) = (128, 256); // over both engagement thresholds
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut x = rng.normal_vec(k, 1.0);
+        x[3] = 0.0; // zero-skip must survive the split
+        let mut serial = vec![0.0f32; n];
+        vecmat_into(&mut serial, &x, &b, k, n);
+        for threads in [2usize, 3, 4] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            let mut pooled = vec![0.0f32; n];
+            vecmat_into_cols_pooled(Some(&pool), &mut pooled, &x, &b, k, n);
+            assert_eq!(pooled, serial, "column split diverged at {threads} threads");
+            // the m == 1 route through the generic pooled GEMM entry point
+            let mut via_matmul = vec![0.0f32; n];
+            matmul_into_pooled(Some(&pool), &mut via_matmul, &x, &b, 1, k, n);
+            assert_eq!(via_matmul, serial, "m=1 matmul route diverged at {threads} threads");
+        }
+        // under-threshold shapes fall back to the serial kernel
+        let pool = crate::parallel::ThreadPool::new(4);
+        let bs = rng.normal_vec(8 * 8, 1.0);
+        let xs = rng.normal_vec(8, 1.0);
+        let mut tiny = vec![0.0f32; 8];
+        vecmat_into_cols_pooled(Some(&pool), &mut tiny, &xs, &bs, 8, 8);
+        let mut tiny_ref = vec![0.0f32; 8];
+        vecmat_into(&mut tiny_ref, &xs, &bs, 8, 8);
+        assert_eq!(tiny, tiny_ref);
+    }
+
+    #[test]
+    fn pooled_widening_kernels_are_bitwise_serial() {
+        let mut rng = Rng::new(57);
+        let pool = crate::parallel::ThreadPool::new(4);
+        let (k, n) = (128, 192);
+        let data = rng.normal_vec(k * n, 1.0);
+        let x = rng.normal_vec(k, 1.0);
+        let a = rng.normal_vec(6 * k, 1.0);
+        for dtype in [WeightDtype::F32, WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8] {
+            let w = WeightMat::quantize(&data, k, n, dtype);
+            let mut serial = vec![0.0f32; n];
+            vecmat_into_w(&mut serial, &x, &w, k, n);
+            let mut pooled = vec![0.0f32; n];
+            vecmat_into_w_cols_pooled(Some(&pool), &mut pooled, &x, &w, k, n);
+            assert_eq!(pooled, serial, "{}: pooled GEMV diverged", dtype.name());
+            let mut via_mm = vec![0.0f32; n];
+            matmul_into_w_pooled(Some(&pool), &mut via_mm, &x, &w, 1, k, n);
+            assert_eq!(via_mm, serial, "{}: m=1 pooled GEMM route diverged", dtype.name());
+
+            let mut mm_serial = vec![0.0f32; 6 * n];
+            matmul_into_w(&mut mm_serial, &a, &w, 6, k, n);
+            let mut mm_pooled = vec![0.0f32; 6 * n];
+            matmul_into_w_pooled(Some(&pool), &mut mm_pooled, &a, &w, 6, k, n);
+            assert_eq!(mm_pooled, mm_serial, "{}: row-split GEMM diverged", dtype.name());
+        }
+    }
+
+    #[test]
+    fn weight_dtype_parses_user_names() {
+        assert_eq!(WeightDtype::parse(" F16 "), Some(WeightDtype::F16));
+        assert_eq!(WeightDtype::parse("bfloat16"), Some(WeightDtype::Bf16));
+        assert_eq!(WeightDtype::parse("int8"), Some(WeightDtype::Int8));
+        assert_eq!(WeightDtype::parse("f32"), Some(WeightDtype::F32));
+        assert_eq!(WeightDtype::parse("q4"), None);
+        assert_eq!(WeightDtype::F16.name(), "f16");
+        assert_eq!(WeightDtype::Int8.bytes_per_elem(), 1);
     }
 }

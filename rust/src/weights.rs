@@ -6,12 +6,21 @@
 //! u32  n_tensors
 //! per tensor:
 //!   u32 name_len, name (utf-8)
-//!   u8  dtype (0 = f32, 1 = i32)
+//!   u8  dtype (0 = f32, 1 = i32, 2 = f16, 3 = bf16, 4 = int8+scales)
 //!   u32 ndim, u32 dims[ndim]
 //!   raw data
 //! ```
+//! Payload sizes per dtype: f32/i32 are 4 bytes per element, f16/bf16
+//! are 2, int8 is `dims[0]` f32 row scales followed by 1 byte per
+//! element (absmax-per-row quantization, `value ~= q * scale[row]`, see
+//! [`crate::tensor::quantize_row_i8`]). Every dtype widens to f32 on
+//! read — this loader only ever hands out f32 tensors; the serving path
+//! re-packs them via [`crate::tensor::WeightMat`] (idempotent, so an
+//! offline-cast bundle reproduces the in-memory cast bit-for-bit).
+//!
 //! Used for initial parameters from `make artifacts`, trainer checkpoints,
-//! and moving weights into the native [`crate::nn`] models.
+//! `lintra cast` output, and moving weights into the native [`crate::nn`]
+//! models.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -19,7 +28,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context};
 
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, WeightDtype};
 
 const MAGIC: &[u8; 4] = b"LTW1";
 
@@ -106,17 +115,54 @@ impl WeightBundle {
                 dims.push(read_u32(&mut b)? as usize);
             }
             let count: usize = dims.iter().product::<usize>().max(1);
-            let mut raw = vec![0u8; count * 4];
-            b.read_exact(&mut raw)?;
             let data: Vec<f32> = match dt[0] {
-                0 => raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect(),
-                1 => raw
-                    .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
-                    .collect(),
+                0 => {
+                    let mut raw = vec![0u8; count * 4];
+                    b.read_exact(&mut raw)?;
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect()
+                }
+                1 => {
+                    let mut raw = vec![0u8; count * 4];
+                    b.read_exact(&mut raw)?;
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                        .collect()
+                }
+                2 => {
+                    let mut raw = vec![0u8; count * 2];
+                    b.read_exact(&mut raw)?;
+                    raw.chunks_exact(2)
+                        .map(|c| crate::tensor::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                        .collect()
+                }
+                3 => {
+                    let mut raw = vec![0u8; count * 2];
+                    b.read_exact(&mut raw)?;
+                    raw.chunks_exact(2)
+                        .map(|c| crate::tensor::bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                        .collect()
+                }
+                4 => {
+                    let rows = dims.first().copied().unwrap_or(1).max(1);
+                    if count % rows != 0 {
+                        bail!("{name}: int8 rows {rows} do not divide {count} elements");
+                    }
+                    let cols = count / rows;
+                    let mut sraw = vec![0u8; rows * 4];
+                    b.read_exact(&mut sraw)?;
+                    let scales: Vec<f32> = sraw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    let mut raw = vec![0u8; count];
+                    b.read_exact(&mut raw)?;
+                    raw.iter()
+                        .enumerate()
+                        .map(|(i, &q)| (q as i8) as f32 * scales[i / cols])
+                        .collect()
+                }
                 d => bail!("{name}: unsupported dtype id {d}"),
             };
             let shape = if dims.is_empty() { vec![1] } else { dims };
@@ -129,19 +175,70 @@ impl WeightBundle {
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        self.save_as(path, |_| WeightDtype::F32)
+    }
+
+    /// Write the bundle, choosing a storage precision per tensor. Every
+    /// non-f32 tensor is quantized on the way out (`lintra cast` uses
+    /// this with [`crate::nn::quantized_param`] so exactly the tensors
+    /// the serving path would pack go narrow, and everything else —
+    /// embeddings, norms, biases — stays f32).
+    pub fn save_as(
+        &self,
+        path: impl AsRef<Path>,
+        choose: impl Fn(&NamedTensor) -> WeightDtype,
+    ) -> anyhow::Result<()> {
         let mut out: Vec<u8> = Vec::new();
         out.write_all(MAGIC)?;
         out.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
         for t in &self.tensors {
             out.write_all(&(t.name.len() as u32).to_le_bytes())?;
             out.write_all(t.name.as_bytes())?;
-            out.write_all(&[0u8])?; // f32
+            let dtype = choose(t);
+            let id: u8 = match dtype {
+                WeightDtype::F32 => 0,
+                WeightDtype::F16 => 2,
+                WeightDtype::Bf16 => 3,
+                WeightDtype::Int8 => 4,
+            };
+            out.write_all(&[id])?;
             out.write_all(&(t.tensor.shape.len() as u32).to_le_bytes())?;
             for &d in &t.tensor.shape {
                 out.write_all(&(d as u32).to_le_bytes())?;
             }
-            for &v in &t.tensor.data {
-                out.write_all(&v.to_le_bytes())?;
+            match dtype {
+                WeightDtype::F32 => {
+                    for &v in &t.tensor.data {
+                        out.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                WeightDtype::F16 => {
+                    for &v in &t.tensor.data {
+                        out.write_all(&crate::tensor::f32_to_f16_bits(v).to_le_bytes())?;
+                    }
+                }
+                WeightDtype::Bf16 => {
+                    for &v in &t.tensor.data {
+                        out.write_all(&crate::tensor::f32_to_bf16_bits(v).to_le_bytes())?;
+                    }
+                }
+                WeightDtype::Int8 => {
+                    let rows = t.tensor.shape.first().copied().unwrap_or(1).max(1);
+                    let cols = t.tensor.numel() / rows;
+                    let packed = crate::tensor::WeightMat::quantize(
+                        &t.tensor.data,
+                        rows,
+                        cols,
+                        WeightDtype::Int8,
+                    );
+                    if let crate::tensor::WeightMat::Int8 { packed, scales } = packed {
+                        for &s in &scales {
+                            out.write_all(&s.to_le_bytes())?;
+                        }
+                        let bytes: Vec<u8> = packed.iter().map(|&q| q as u8).collect();
+                        out.write_all(&bytes)?;
+                    }
+                }
             }
         }
         std::fs::write(path.as_ref(), out)
@@ -212,6 +309,73 @@ mod tests {
         assert_eq!(names, vec!["a.w", "b.bias"]);
         assert!(b.get("missing").is_none());
         assert_eq!(b.total_params(), 12 + 7);
+    }
+
+    #[test]
+    fn low_precision_roundtrip_widens_to_quantized_values() {
+        use crate::tensor::{
+            bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, WeightMat,
+        };
+        let dir = std::env::temp_dir().join(format!("ltw_lp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bundle = sample_bundle();
+
+        for (dtype, tag) in [(WeightDtype::F16, "f16"), (WeightDtype::Bf16, "bf16")] {
+            let path = dir.join(format!("t_{tag}.ltw"));
+            bundle.save_as(&path, |_| dtype).unwrap();
+            let back = WeightBundle::load(&path).unwrap();
+            for (orig, got) in bundle.tensors.iter().zip(&back.tensors) {
+                assert_eq!(orig.tensor.shape, got.tensor.shape);
+                for (&v, &w) in orig.tensor.data.iter().zip(&got.tensor.data) {
+                    let want = match dtype {
+                        WeightDtype::F16 => f16_bits_to_f32(f32_to_f16_bits(v)),
+                        _ => bf16_bits_to_f32(f32_to_bf16_bits(v)),
+                    };
+                    assert_eq!(w.to_bits(), want.to_bits(), "{tag}: {v} widened wrong");
+                }
+            }
+        }
+
+        // int8: loaded values must equal dequantize(quantize(original))
+        let path = dir.join("t_int8.ltw");
+        bundle.save_as(&path, |_| WeightDtype::Int8).unwrap();
+        let back = WeightBundle::load(&path).unwrap();
+        for (orig, got) in bundle.tensors.iter().zip(&back.tensors) {
+            let rows = orig.tensor.shape.first().copied().unwrap_or(1).max(1);
+            let cols = orig.tensor.numel() / rows;
+            let q = WeightMat::quantize(&orig.tensor.data, rows, cols, WeightDtype::Int8);
+            let want = q.dequantize(cols);
+            assert_eq!(got.tensor.data, want, "int8 widening mismatch for {}", orig.name);
+        }
+
+        // a mixed chooser keeps f32 tensors bit-exact alongside cast ones
+        let path = dir.join("t_mixed.ltw");
+        bundle
+            .save_as(&path, |t| if t.name == "a.w" { WeightDtype::F16 } else { WeightDtype::F32 })
+            .unwrap();
+        let back = WeightBundle::load(&path).unwrap();
+        assert_eq!(back.req("b.bias"), &bundle.tensors[1].tensor);
+        assert_ne!(back.req("a.w"), &bundle.tensors[0].tensor);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f16_cast_is_idempotent_across_save_load_cycles() {
+        // cast -> load -> cast again must not move any value: the serving
+        // path depends on this to make offline casts match in-memory ones
+        let dir = std::env::temp_dir().join(format!("ltw_idem_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("c1.ltw");
+        let p2 = dir.join("c2.ltw");
+        let bundle = sample_bundle();
+        bundle.save_as(&p1, |_| WeightDtype::F16).unwrap();
+        let once = WeightBundle::load(&p1).unwrap();
+        once.save_as(&p2, |_| WeightDtype::F16).unwrap();
+        let twice = WeightBundle::load(&p2).unwrap();
+        for (a, b) in once.tensors.iter().zip(&twice.tensors) {
+            assert_eq!(a.tensor, b.tensor, "second f16 cast moved {}", a.name);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

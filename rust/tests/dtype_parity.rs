@@ -1,0 +1,312 @@
+//! Low-precision weight-storage parity (the weight-dtype contract).
+//!
+//! The contract, in order of strictness (ARCHITECTURE.md, "Weight
+//! storage & numeric contract"):
+//!
+//! * f32 is the bitwise reference: the pooled column-split B=1 GEMV must
+//!   reproduce the serial kernel bit-for-bit at any thread count, and the
+//!   packed (f16/bf16/int8) kernels must be bitwise self-consistent
+//!   across batch size, prompt chunking, and pooling — every output
+//!   element is one accumulator walking k in ascending order.
+//! * f16/bf16/int8 decode logits track the f32 reference within a
+//!   documented per-dtype `(rel_tol, abs_tol)` through multi-step decode.
+//! * Greedy streams match f32 wherever the f32 argmax margin exceeds the
+//!   documented logit tolerance (a margin inside the tolerance band is
+//!   legitimately undecidable at low precision).
+//! * An offline `lintra cast` bundle is *exactly* the in-memory cast:
+//!   quantize(dequantize(x)) == quantize(x), so serving a cast bundle
+//!   reproduces serving the f32 bundle with `--weight-dtype` set.
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::config::{ModelConfig, ServeConfig};
+use linear_transformer::coordinator::engine::NativeEngine;
+use linear_transformer::coordinator::request::GenerateRequest;
+use linear_transformer::nn::{quantized_param, random_param_tensors, TransformerLM};
+use linear_transformer::propcheck::assert_close_ulp;
+use linear_transformer::rng::Rng;
+use linear_transformer::tensor::WeightDtype;
+use linear_transformer::weights::WeightBundle;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 17,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        max_len: 96,
+        d_ff: 64,
+        chunk: 16,
+        causal: true,
+        lsh_rounds: 1,
+        lsh_buckets: 8,
+        lsh_chunk: 8,
+    }
+}
+
+/// Wide enough that the pooled kernels' fan-out gates actually engage:
+/// a B=1 [128]x[128,128] GEMV is 16384 mul-adds with 128 output columns,
+/// exactly at PAR_MIN_WORK and past PAR_MIN_GEMV_COLS.
+fn wide_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 32,
+        d_model: 128,
+        n_heads: 4,
+        n_layers: 2,
+        max_len: 192,
+        d_ff: 256,
+        chunk: 16,
+        causal: true,
+        lsh_rounds: 1,
+        lsh_buckets: 8,
+        lsh_chunk: 8,
+    }
+}
+
+fn stream(len: usize, vocab: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as u64) as u32).collect()
+}
+
+/// Deterministic model for a seed with an *explicit* storage dtype, so
+/// the tests mean the same thing whether or not the ambient
+/// LINTRA_WEIGHT_DTYPE (the CI f16 leg) is set.
+fn model_at(cfg: &ModelConfig, seed: u64, dtype: WeightDtype) -> TransformerLM {
+    let mut m = TransformerLM::init(cfg, AttentionKind::Linear, seed);
+    m.cast_weights(dtype);
+    m
+}
+
+/// The documented per-dtype decode-logit tolerances vs the f32 reference
+/// (rel_tol, abs_tol). These are the numbers ARCHITECTURE.md states.
+fn tolerance(dtype: WeightDtype) -> (f32, f32) {
+    match dtype {
+        WeightDtype::F32 => (0.0, 0.0),
+        WeightDtype::F16 => (5e-2, 5e-2),
+        WeightDtype::Bf16 => (1e-1, 1e-1),
+        WeightDtype::Int8 => (2e-1, 2e-1),
+    }
+}
+
+#[test]
+fn pooled_column_split_b1_gemv_is_bitwise_serial() {
+    // B=1 decode ticks on a 4-thread pool vs no pool: the column-split
+    // GEMV partitions output columns (never a reduction), so the bits
+    // must match at any thread count — for the f32 kernel and for every
+    // packed dtype's widening kernel alike
+    let cfg = wide_cfg();
+    let prompt = stream(100, cfg.vocab, 6100); // crosses a PREFILL_CHUNK
+    for dtype in [
+        WeightDtype::F32,
+        WeightDtype::F16,
+        WeightDtype::Bf16,
+        WeightDtype::Int8,
+    ] {
+        let model = model_at(&cfg, 7, dtype);
+        let pool = std::sync::Arc::new(linear_transformer::parallel::ThreadPool::new(4));
+        let mut serial = model.batched_session_with_pool(1, None);
+        let mut pooled = model.batched_session_with_pool(1, Some(pool));
+        serial.alloc_row().unwrap();
+        pooled.alloc_row().unwrap();
+        let a = serial.prefill_row(0, &prompt);
+        let b = pooled.prefill_row(0, &prompt);
+        assert_eq!(a, b, "{}: pooled prefill logits differ", dtype.name());
+        for t in 0..12 {
+            let tok = ((t * 5) % cfg.vocab) as u32;
+            let la = serial.step_batch(&[tok]);
+            let lb = pooled.step_batch(&[tok]);
+            assert_eq!(
+                la,
+                lb,
+                "{}: pooled B=1 decode tick {t} not bitwise serial",
+                dtype.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn low_precision_decode_logits_stay_within_contract() {
+    // a 30-token prompt walk plus decode ticks through the RNN state:
+    // quantization error accumulates through (S, Z) and must still land
+    // inside the documented per-dtype band at every step
+    let cfg = tiny_cfg();
+    let reference = model_at(&cfg, 42, WeightDtype::F32);
+    let tokens = stream(30, cfg.vocab, 8800);
+    for dtype in [WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8] {
+        let (rel, abs) = tolerance(dtype);
+        let quant = model_at(&cfg, 42, dtype);
+        let mut ref_sess = reference.session();
+        let mut q_sess = quant.session();
+        for (step, &t) in tokens.iter().enumerate() {
+            let want = ref_sess.step(t);
+            let got = q_sess.step(t);
+            for (v, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_close_ulp(
+                    *g,
+                    *w,
+                    16,
+                    rel,
+                    abs,
+                    &format!("{} step {step} logit {v}", dtype.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_stream_under_f16_tracks_f32_wherever_the_margin_is_decisive() {
+    // both sessions are fed the f32 greedy stream; at every step where
+    // the f32 top-2 margin clears twice the documented f16 logit
+    // tolerance, the f16 argmax must agree — and enough steps must be
+    // decisive for the test to mean anything
+    let cfg = tiny_cfg();
+    let f32_model = model_at(&cfg, 42, WeightDtype::F32);
+    let f16_model = model_at(&cfg, 42, WeightDtype::F16);
+    let (_, abs) = tolerance(WeightDtype::F16);
+    let margin_floor = 2.0 * abs;
+    let prompt = stream(8, cfg.vocab, 4242);
+    let mut fs = f32_model.session();
+    let mut qs = f16_model.session();
+    let mut logits_f32 = Vec::new();
+    let mut logits_f16 = Vec::new();
+    for &t in &prompt {
+        logits_f32 = fs.step(t);
+        logits_f16 = qs.step(t);
+    }
+    let mut decisive = 0usize;
+    for _ in 0..24 {
+        let top = linear_transformer::sampling::argmax(&logits_f32);
+        let best = logits_f32[top as usize];
+        let runner_up = logits_f32
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != top as usize)
+            .map(|(_, &v)| v)
+            .fold(f32::NEG_INFINITY, f32::max);
+        if best - runner_up > margin_floor {
+            decisive += 1;
+            assert_eq!(
+                linear_transformer::sampling::argmax(&logits_f16),
+                top,
+                "f16 greedy flipped on a decisive step (margin {})",
+                best - runner_up
+            );
+        }
+        logits_f32 = fs.step(top);
+        logits_f16 = qs.step(top);
+    }
+    assert!(
+        decisive >= 8,
+        "only {decisive}/24 steps were decisive — geometry too flat to test"
+    );
+}
+
+#[test]
+fn engine_under_weight_dtype_matches_direct_cast_generation() {
+    // serving with ServeConfig.weight_dtype = f16 (pooled, batched,
+    // chunked prefill) must reproduce direct generation on an explicitly
+    // cast model token-for-token: the packed kernels give every output
+    // element one accumulator in k order, so batching and chunking don't
+    // move the bits
+    let cfg = wide_cfg();
+    let direct_model = model_at(&cfg, 99, WeightDtype::F16);
+    let cases: Vec<(Vec<u32>, usize)> = vec![
+        (stream(100, cfg.vocab, 5100), 6), // crosses a PREFILL_CHUNK
+        (stream(2, cfg.vocab, 5101), 12),
+        (stream(70, cfg.vocab, 5102), 4),
+        (stream(33, cfg.vocab, 5103), 8),
+    ];
+    let direct: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| direct_model.generate(p, *n, 0.0, 0))
+        .collect();
+    // the engine casts for itself at spawn from the same seed weights
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 99);
+    let mut handle = NativeEngine::spawn(
+        model,
+        ServeConfig {
+            max_batch: 2,
+            max_wait_us: 500,
+            num_threads: 4,
+            weight_dtype: Some(WeightDtype::F16),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, n))| {
+            handle.submit(GenerateRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: *n,
+                temperature: 0.0,
+                top_k: 0,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(
+            resp.tokens, direct[resp.id as usize],
+            "request {}: f16 serving diverged from direct f16 generation",
+            resp.id
+        );
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn cast_bundle_roundtrip_is_exactly_the_in_memory_cast() {
+    // what `lintra cast` does: save_as with the quantized_param chooser,
+    // reload, serve. quantize(dequantize(x)) == quantize(x), so the
+    // round-tripped model must produce bitwise-identical logits and
+    // greedy streams to casting the original weights in memory
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(314);
+    let bundle = WeightBundle::new(random_param_tensors(&cfg, &mut rng));
+    let dir = std::env::temp_dir().join(format!("ltw_cast_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let f32_path = dir.join("model.ltw");
+    let f16_path = dir.join("model.f16.ltw");
+    bundle.save(&f32_path).unwrap();
+    bundle
+        .save_as(&f16_path, |t| {
+            if quantized_param(&t.name) {
+                WeightDtype::F16
+            } else {
+                WeightDtype::F32
+            }
+        })
+        .unwrap();
+    let f32_bytes = std::fs::metadata(&f32_path).unwrap().len();
+    let f16_bytes = std::fs::metadata(&f16_path).unwrap().len();
+    assert!(
+        f16_bytes < f32_bytes,
+        "cast bundle must shrink ({f16_bytes} vs {f32_bytes} bytes)"
+    );
+
+    let reloaded = WeightBundle::load(&f16_path).unwrap();
+    let mut from_cast = TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &reloaded).unwrap();
+    let mut in_memory = TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle).unwrap();
+    // normalize both to an explicit f16 cast (idempotent for the
+    // round-tripped weights) so the ambient LINTRA_WEIGHT_DTYPE of the
+    // CI f16 leg can't skew one side
+    from_cast.cast_weights(WeightDtype::F16);
+    in_memory.cast_weights(WeightDtype::F16);
+
+    let tokens = stream(12, cfg.vocab, 2718);
+    let a = from_cast.forward(&tokens);
+    let b = in_memory.forward(&tokens);
+    assert_eq!(a.data, b.data, "cast-bundle forward logits not bitwise");
+    let prompt = stream(6, cfg.vocab, 2719);
+    assert_eq!(
+        from_cast.generate(&prompt, 10, 0.0, 0),
+        in_memory.generate(&prompt, 10, 0.0, 0),
+        "cast-bundle greedy stream not identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
