@@ -1,0 +1,306 @@
+//! Line-oriented lexical pre-pass for the `lintra analyze` rule engine.
+//!
+//! The rules in [`super::rules`] are textual, but naive substring matching
+//! would fire on comments, doc examples, and string literals. This module
+//! splits a Rust source file into per-line *views*: the `code` view keeps
+//! only real code (string/char literal bodies blanked, comments removed),
+//! and the `comment` view keeps only comment text (where pragmas like
+//! `lintra: allow(...)` and `SAFETY:` annotations live).
+//!
+//! This is a deliberately small scanner, not a full lexer: it understands
+//! line comments, nested block comments, string escapes, raw strings
+//! (`r#".."#`, any hash count), byte strings, char literals, and the
+//! char-literal/lifetime ambiguity (`'a'` vs `&'a str`). That is enough
+//! for every rule to match on token text without being fooled by quoted
+//! or commented occurrences.
+
+/// One source line, split into its code and comment content.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code text with comments removed and literal bodies blanked. String
+    /// literals collapse to `""`, char literals to `' '`; their structure
+    /// survives so brace/bracket matching still works.
+    pub code: String,
+    /// Concatenated text of every comment on the line (without `//`,
+    /// `/*`, `*/` markers). Multi-line block comments contribute to each
+    /// line they span.
+    pub comment: String,
+}
+
+/// Scanner state carried across characters (and lines, for multi-line
+/// constructs).
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment; the value is the nesting depth.
+    BlockComment(u32),
+    /// Ordinary (escaped) string literal.
+    Str,
+    /// Raw string literal terminated by `"` followed by this many `#`s.
+    RawStr(u32),
+}
+
+/// Split `src` into per-line code/comment views. Always returns one
+/// [`Line`] per input line (empty lines included), so indices into the
+/// result are 0-based line numbers.
+pub fn split_source(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                match c {
+                    '/' if next == Some('/') => {
+                        state = State::LineComment;
+                        i += 2;
+                        continue;
+                    }
+                    '/' if next == Some('*') => {
+                        state = State::BlockComment(1);
+                        i += 2;
+                        continue;
+                    }
+                    '"' => {
+                        cur.code.push('"');
+                        state = State::Str;
+                    }
+                    'r' | 'b' if is_raw_string_start(&chars, i) => {
+                        // consume the prefix (`r`, `br`) and opening hashes
+                        let mut j = i;
+                        while chars.get(j) == Some(&'b') || chars.get(j) == Some(&'r') {
+                            j += 1;
+                        }
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        // chars[j] is the opening quote
+                        cur.code.push('"');
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                        continue;
+                    }
+                    '\'' => {
+                        if let Some(end) = char_literal_end(&chars, i) {
+                            cur.code.push_str("' '");
+                            // blank the body but keep line structure
+                            i = end + 1;
+                            continue;
+                        }
+                        // lifetime marker: keep the quote so `&'a` stays
+                        // distinguishable from `&a`
+                        cur.code.push('\'');
+                    }
+                    _ => cur.code.push(c),
+                }
+                i += 1;
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2; // skip the escaped character
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && raw_string_closes(&chars, i, hashes) {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Does `chars[i..]` start a raw (or raw byte) string literal? Accepts
+/// `r"`, `r#"`, `br"`, `br#"` (any hash count). Requires the previous
+/// character not to be part of an identifier, so `zr"..` inside an
+/// identifier-adjacent position cannot misfire.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return false;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Does the `"` at `chars[i]` close a raw string opened with `hashes`
+/// hashes (i.e. is it followed by that many `#`s)?
+fn raw_string_closes(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If the `'` at `chars[i]` opens a char literal, return the index of the
+/// closing `'`. Otherwise (a lifetime like `'a` or `'static`) return None.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1)? {
+        '\\' => {
+            // escaped literal: scan forward to the closing quote (handles
+            // \n, \', \u{..}; bounded so a stray quote cannot run away)
+            let mut j = i + 2;
+            let limit = (i + 12).min(chars.len());
+            while j < limit {
+                if chars[j] == '\'' {
+                    return Some(j);
+                }
+                j += 1;
+            }
+            None
+        }
+        _ => {
+            // one-character literal: 'x'  (but `'a` followed by anything
+            // other than a quote is a lifetime)
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(i + 2)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Identifier-ish character (used for word-boundary checks here and by
+/// the rules).
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Iterate identifiers in a code view, yielding `(start_byte, ident)`.
+/// Skips numeric literals (tokens starting with a digit).
+pub fn idents(code: &str) -> impl Iterator<Item = (usize, &str)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+            out.push((start, &code[start..i]));
+        } else if c.is_ascii_digit() {
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out.into_iter()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        split_source(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments() {
+        let lines = split_source("let x = 1; // unwrap() here is comment\n");
+        assert!(lines[0].code.contains("let x = 1;"));
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].comment.contains("unwrap() here is comment"));
+    }
+
+    #[test]
+    fn blanks_string_literals() {
+        let lines = code_of("let s = \"call .unwrap() now\";\n");
+        assert!(!lines[0].contains("unwrap"));
+        assert!(lines[0].contains("\"\""));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = code_of("a /* x /* y */ z */ b\n");
+        assert!(lines[0].contains('a'));
+        assert!(lines[0].contains('b'));
+        assert!(!lines[0].contains('z'));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let lines = code_of("let s = r#\"env::var(\"X\") \"#; tail()\n");
+        assert!(!lines[0].contains("env::var"));
+        assert!(lines[0].contains("tail()"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let lines = code_of("fn f<'a>(x: &'a str) { let c = '\"'; g(x) }\n");
+        // the quote char literal must not open a string state
+        assert!(lines[0].contains("g(x)"));
+        let lines = code_of("let c = 'x'; h()\n");
+        assert!(lines[0].contains("h()"));
+    }
+
+    #[test]
+    fn multiline_string_blanks_interior() {
+        let lines = code_of("let s = \"line one\nunwrap() inside\";\nafter()\n");
+        assert!(!lines[1].contains("unwrap"));
+        assert!(lines[2].contains("after()"));
+    }
+
+    #[test]
+    fn ident_iterator_skips_numbers() {
+        let toks: Vec<&str> = idents("foo(1.0f32, bar_2)").map(|(_, s)| s).collect();
+        assert_eq!(toks, vec!["foo", "bar_2"]);
+    }
+}

@@ -1,0 +1,246 @@
+//! `lintra analyze` — a repo-invariant static-analysis pass.
+//!
+//! Six PRs of engine growth rest on invariants that existed only as
+//! prose: the serving worker must never panic, pooled kernels must stay
+//! bitwise-identical to serial, every tunable resolves its env fallback
+//! in exactly one place, and `unsafe` is only as sound as its written
+//! justification. All of them are checkable by inspecting source text,
+//! so this module checks them — a lightweight lexer ([`lexer`]) feeding
+//! a line-oriented rule engine ([`rules`]), no external dependencies,
+//! run by CI as a hard gate (`lintra analyze --deny rust/src examples`).
+//!
+//! ## Rules
+//!
+//! | rule     | scope                          | forbids |
+//! |----------|--------------------------------|---------|
+//! | `panic`  | serving hot-path files         | `.unwrap()`, `.expect()`, panicking macros, range/computed slice indexing |
+//! | `bitwise`| fns tagged `bitwise-critical`  | `mul_add`, unordered containers, multiple scalar accumulators |
+//! | `env`    | everywhere but config/parallel | `std::env::var` reads |
+//! | `safety` | everywhere                     | `unsafe` without an immediately preceding `SAFETY:` comment |
+//! | `lock`   | everywhere but parallel        | `.lock().unwrap()` / `.lock().expect()` |
+//!
+//! The hot-path file set for `panic` is the serving worker's transitive
+//! tick loop: `coordinator/{engine,server,batcher,sessions,state_cache}.rs`
+//! and `parallel.rs` (the dispatch path pooled kernels run on).
+//!
+//! Suppression: an inline comment `lintra: allow(<rule>) -- <reason>`
+//! (reason mandatory — a bare allow is itself reported). `#[cfg(test)]`
+//! regions are skipped entirely: the invariants guard production code,
+//! and tests deliberately poison locks and index out of bounds.
+
+pub mod lexer;
+mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use rules::FileCtx;
+
+/// The rules `lintra analyze` enforces. `Pragma` is a meta-rule for
+/// malformed suppressions and cannot itself be suppressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Panicking constructs in serving hot-path files.
+    Panic,
+    /// Numeric-determinism hygiene in tagged kernels.
+    Bitwise,
+    /// `std::env::var` outside the config/parallel resolvers.
+    Env,
+    /// `unsafe` without a `SAFETY:` justification.
+    Safety,
+    /// `.lock().unwrap()` outside the approved wrapper.
+    Lock,
+    /// Malformed `lintra:` pragma.
+    Pragma,
+}
+
+impl Rule {
+    pub fn slug(self) -> &'static str {
+        match self {
+            Rule::Panic => "panic",
+            Rule::Bitwise => "bitwise",
+            Rule::Env => "env",
+            Rule::Safety => "safety",
+            Rule::Lock => "lock",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    pub fn from_slug(s: &str) -> Option<Rule> {
+        Some(match s {
+            "panic" => Rule::Panic,
+            "bitwise" => Rule::Bitwise,
+            "env" => Rule::Env,
+            "safety" => Rule::Safety,
+            "lock" => Rule::Lock,
+            _ => return None,
+        })
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path,
+            self.line,
+            self.rule.slug(),
+            self.message
+        )
+    }
+}
+
+/// Serving hot-path files: rule `panic` applies only to these. Matched
+/// by path suffix at a `/` boundary, so `tensor.rs` (which has sized
+/// asserts by design) is out while every file the engine tick loop can
+/// reach is in.
+const HOT_PATH_FILES: &[&str] = &[
+    "coordinator/engine.rs",
+    "coordinator/server.rs",
+    "coordinator/batcher.rs",
+    "coordinator/sessions.rs",
+    "coordinator/state_cache.rs",
+    "parallel.rs",
+];
+
+/// Files whose job is env resolution (rule `env` allowlist).
+const ENV_FILES: &[&str] = &["config.rs", "parallel.rs"];
+
+/// Home of the approved lock wrapper (rule `lock` allowlist).
+const LOCK_FILES: &[&str] = &["parallel.rs"];
+
+fn path_matches(path: &str, suffix: &str) -> bool {
+    let p = path.replace('\\', "/");
+    p == suffix || p.ends_with(&format!("/{suffix}"))
+}
+
+fn in_set(path: &str, set: &[&str]) -> bool {
+    set.iter().any(|s| path_matches(path, s))
+}
+
+/// Analyze one file's source text. `path` determines which file-scoped
+/// rules apply (hot-path, env allowlist, lock allowlist); findings carry
+/// it verbatim.
+pub fn analyze_source(path: &str, src: &str) -> Vec<Finding> {
+    let ctx = FileCtx::build(src);
+    let mut out = Vec::new();
+    if in_set(path, HOT_PATH_FILES) {
+        rules::check_panic(&ctx, path, &mut out);
+    }
+    rules::check_bitwise(&ctx, path, &mut out);
+    if !in_set(path, ENV_FILES) {
+        rules::check_env(&ctx, path, &mut out);
+    }
+    rules::check_safety(&ctx, path, &mut out);
+    if !in_set(path, LOCK_FILES) {
+        rules::check_lock(&ctx, path, &mut out);
+    }
+    rules::check_pragmas(&ctx, path, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Analyze every `.rs` file under the given paths (files or directories,
+/// walked recursively in sorted order). Returns all findings sorted by
+/// path and line.
+pub fn analyze_paths<P: AsRef<Path>>(paths: &[P]) -> crate::Result<Vec<Finding>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        collect_rs_files(p.as_ref(), &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut out = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        let name = f.to_string_lossy().replace('\\', "/");
+        out.extend(analyze_source(&name, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(p: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let meta = std::fs::metadata(p).with_context(|| format!("stat {}", p.display()))?;
+    if meta.is_file() {
+        if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(p)
+        .with_context(|| format!("reading dir {}", p.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for e in entries {
+        let name = e.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name == "target" || name.starts_with('.') {
+            continue;
+        }
+        if e.is_dir() {
+            collect_rs_files(&e, out)?;
+        } else if e.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+/// Render findings for the CLI: one line per finding plus a summary.
+pub fn report(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&f.to_string());
+        s.push('\n');
+    }
+    let files: std::collections::BTreeSet<&str> =
+        findings.iter().map(|f| f.path.as_str()).collect();
+    s.push_str(&format!(
+        "analyze: {} finding(s) in {} file(s)\n",
+        findings.len(),
+        files.len()
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_path_suffix_matching() {
+        assert!(in_set("rust/src/coordinator/engine.rs", HOT_PATH_FILES));
+        assert!(in_set("rust/src/parallel.rs", HOT_PATH_FILES));
+        // suffix must sit at a path-component boundary
+        assert!(!in_set("rust/src/data_parallel.rs", HOT_PATH_FILES));
+        assert!(!in_set("rust/src/tensor.rs", HOT_PATH_FILES));
+    }
+
+    #[test]
+    fn rule_slug_roundtrip() {
+        for r in [Rule::Panic, Rule::Bitwise, Rule::Env, Rule::Safety, Rule::Lock] {
+            assert_eq!(Rule::from_slug(r.slug()), Some(r));
+        }
+        assert_eq!(Rule::from_slug("pragma"), None, "meta-rule is not suppressible");
+    }
+
+    #[test]
+    fn clean_file_has_no_findings() {
+        let src = "fn main() {\n    let x = 1 + 2;\n    println!(\"{x}\");\n}\n";
+        assert!(analyze_source("rust/src/coordinator/engine.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,474 @@
+//! The repo-invariant rules behind `lintra analyze`.
+//!
+//! Each rule inspects the per-line code/comment views produced by
+//! [`super::lexer`], plus two kinds of region context computed here:
+//! `#[cfg(test)]` modules (all rules skip them — the invariants guard
+//! production code, and tests deliberately poison locks and index
+//! wildly), and functions tagged bitwise-critical (rule `bitwise` only
+//! fires inside them).
+//!
+//! Suppression grammar (see [`super`] for the rule list): a comment of
+//! the form `lintra: allow(<rule>) -- <reason>` suppresses `<rule>` on
+//! its own line, or on the next code-bearing line when the pragma has a
+//! line to itself; a comment of the form `lintra: bitwise-critical` tags
+//! the next `fn` for the `bitwise` rule.
+//!
+//! A pragma without a reason after `--` is itself a finding: the point of
+//! the pass is that every surviving hot-path hazard carries a written
+//! justification, so a bare suppression defeats it. A comment is only
+//! treated as a pragma when it *starts* with `lintra:` (after doc-comment
+//! markers), so prose that merely mentions the grammar does not misfire.
+
+use super::lexer::{idents, is_ident_char, split_source, Line};
+use super::{Finding, Rule};
+
+/// Per-file context: line views plus region and suppression maps.
+pub(crate) struct FileCtx {
+    pub lines: Vec<Line>,
+    /// Line is inside a `#[cfg(test)]` region.
+    pub in_test: Vec<bool>,
+    /// Line is inside a `// lintra: bitwise-critical` tagged function.
+    pub tagged: Vec<bool>,
+    /// Tagged function regions as inclusive (start, end) line ranges.
+    pub tagged_regions: Vec<(usize, usize)>,
+    /// Rules suppressed per line by a reasoned allow pragma.
+    pub allows: Vec<Vec<Rule>>,
+    /// Malformed pragmas (missing reason / unknown rule), as findings.
+    pub bad_pragmas: Vec<(usize, String)>,
+}
+
+impl FileCtx {
+    pub fn build(src: &str) -> FileCtx {
+        let lines = split_source(src);
+        let n = lines.len();
+        let mut ctx = FileCtx {
+            in_test: vec![false; n],
+            tagged: vec![false; n],
+            tagged_regions: Vec::new(),
+            allows: vec![Vec::new(); n],
+            bad_pragmas: Vec::new(),
+            lines,
+        };
+        ctx.scan_regions();
+        ctx.scan_pragmas();
+        ctx
+    }
+
+    /// One pass of brace tracking to mark `#[cfg(test)]` modules and
+    /// bitwise-critical function bodies. The `cfg(test)` attribute (or a
+    /// tag comment) arms a pending marker that attaches to the next `{`;
+    /// the region closes when brace depth returns to its opening level.
+    fn scan_regions(&mut self) {
+        let mut depth: i32 = 0;
+        let mut test_stack: Vec<i32> = Vec::new();
+        let mut pending_test = false;
+        let mut pending_tag = false;
+        let mut tag_open: Option<i32> = None;
+        let mut tag_start = 0usize;
+        for i in 0..self.lines.len() {
+            if pragma_body(&self.lines[i].comment)
+                .map(|p| p.trim_start().starts_with("bitwise-critical"))
+                .unwrap_or(false)
+            {
+                pending_tag = true;
+                tag_start = i;
+            }
+            if self.lines[i].code.contains("cfg(test)") {
+                pending_test = true;
+            }
+            self.in_test[i] = !test_stack.is_empty();
+            self.tagged[i] = tag_open.is_some() || pending_tag;
+            for c in self.lines[i].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        if pending_test {
+                            test_stack.push(depth);
+                            pending_test = false;
+                            self.in_test[i] = true;
+                        }
+                        if pending_tag && tag_open.is_none() {
+                            tag_open = Some(depth);
+                            pending_tag = false;
+                        }
+                    }
+                    '}' => {
+                        if test_stack.last() == Some(&depth) {
+                            test_stack.pop();
+                        }
+                        if tag_open == Some(depth) {
+                            tag_open = None;
+                            self.tagged_regions.push((tag_start, i));
+                        }
+                        depth -= 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    /// Collect `lintra: allow(...)` pragmas. An inline pragma suppresses
+    /// on its own line; a pragma on a comment-only line suppresses on the
+    /// next line that has code.
+    fn scan_pragmas(&mut self) {
+        for i in 0..self.lines.len() {
+            let Some(body) = pragma_body(&self.lines[i].comment) else {
+                continue;
+            };
+            let body = body.trim();
+            if body.starts_with("bitwise-critical") {
+                continue; // handled by scan_regions
+            }
+            let Some(rest) = body.strip_prefix("allow(") else {
+                self.bad_pragmas
+                    .push((i, format!("unknown lintra pragma {body:?}")));
+                continue;
+            };
+            let Some((slug, after)) = rest.split_once(')') else {
+                self.bad_pragmas
+                    .push((i, "malformed allow pragma: missing `)`".into()));
+                continue;
+            };
+            let Some(rule) = Rule::from_slug(slug.trim()) else {
+                self.bad_pragmas
+                    .push((i, format!("allow pragma names unknown rule {:?}", slug.trim())));
+                continue;
+            };
+            let reason_ok = after
+                .trim_start()
+                .strip_prefix("--")
+                .map(|r| !r.trim().is_empty())
+                .unwrap_or(false);
+            if !reason_ok {
+                self.bad_pragmas.push((
+                    i,
+                    format!(
+                        "allow({}) pragma requires a reason: `-- <why this is safe>`",
+                        rule.slug()
+                    ),
+                ));
+                continue;
+            }
+            let target = if self.lines[i].code.trim().is_empty() {
+                // own-line pragma: applies to the next code-bearing line
+                (i + 1..self.lines.len()).find(|&j| !self.lines[j].code.trim().is_empty())
+            } else {
+                Some(i)
+            };
+            if let Some(t) = target {
+                self.allows[t].push(rule);
+            }
+        }
+    }
+
+    fn allowed(&self, line: usize, rule: Rule) -> bool {
+        self.allows[line].contains(&rule)
+    }
+}
+
+/// Extract a pragma body from a comment view: doc markers (`/`, `!`) and
+/// whitespace are trimmed, then the comment must *begin* with `lintra:`.
+fn pragma_body(comment: &str) -> Option<&str> {
+    let t = comment.trim_start_matches(['/', '!', ' ', '\t']);
+    t.strip_prefix("lintra:")
+}
+
+/// Whitespace-stripped copy of a code view, for multi-token patterns like
+/// `.lock().unwrap()` that may be spaced freely.
+fn despace(code: &str) -> String {
+    code.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Does `hay` contain `needle` at a non-identifier boundary (the char
+/// before the match is not part of an identifier)?
+fn contains_bounded(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let at = from + pos;
+        let pre_ok = at == 0
+            || !is_ident_char(hay[..at].chars().next_back().unwrap_or(' '));
+        if pre_ok {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// Rule `panic`: panicking constructs in serving hot-path files.
+/// Flags `.unwrap()` / `.expect(..)` method calls, the panicking macros
+/// (`panic!`, `todo!`, `unimplemented!`, `unreachable!`), and *fallible*
+/// slice indexing — ranges (`x[a..b]`) and arithmetic indices
+/// (`x[i + 1]`). Plain variable indexing (`x[i]`) is accepted: flagging
+/// every subscript would bury the signal in pragmas, and the arithmetic
+/// forms are where the off-by-one / stale-length bugs live.
+pub(crate) fn check_panic(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
+    const MACROS: [&str; 4] = ["panic", "todo", "unimplemented", "unreachable"];
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if ctx.in_test[i] || ctx.allowed(i, Rule::Panic) {
+            continue;
+        }
+        let code = &line.code;
+        for (start, id) in idents(code) {
+            let before = code[..start].trim_end().chars().next_back();
+            let after = code[start + id.len()..].trim_start().chars().next();
+            if (id == "unwrap" || id == "expect") && before == Some('.') && after == Some('(') {
+                push(out, path, i, Rule::Panic, format!(".{id}() in serving hot path"));
+            }
+            if MACROS.contains(&id) && after == Some('!') {
+                push(out, path, i, Rule::Panic, format!("{id}! in serving hot path"));
+            }
+        }
+        for msg in fallible_indexing(code) {
+            push(out, path, i, Rule::Panic, msg);
+        }
+    }
+}
+
+/// Scan a code view for index expressions whose contents can go out of
+/// bounds non-obviously: any range (`..`) or arithmetic on the index.
+fn fallible_indexing(code: &str) -> Vec<String> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] != b'[' {
+            i += 1;
+            continue;
+        }
+        // an *index* bracket follows a value: identifier, `)`, or `]` —
+        // but not a keyword (`let [a, ..] = x` is a slice pattern, and
+        // `&mut [f32]` / `in [..]` are type/expr positions)
+        let before = code[..i].trim_end();
+        let prev = before.chars().next_back();
+        let prev_word: String = before
+            .chars()
+            .rev()
+            .take_while(|&c| is_ident_char(c))
+            .collect::<String>()
+            .chars()
+            .rev()
+            .collect();
+        const KEYWORDS: [&str; 8] =
+            ["let", "mut", "ref", "in", "return", "break", "else", "match"];
+        let is_index = matches!(prev, Some(c) if is_ident_char(c) || c == ')' || c == ']')
+            && !KEYWORDS.contains(&prev_word.as_str());
+        // find the matching close bracket
+        let mut depth = 1i32;
+        let mut j = i + 1;
+        while j < bytes.len() && depth > 0 {
+            match bytes[j] {
+                b'[' => depth += 1,
+                b']' => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        if depth != 0 {
+            break; // unbalanced on this line (multi-line index): skip
+        }
+        let inner = &code[i + 1..j - 1];
+        if is_index && !inner.trim().is_empty() {
+            if inner.contains("..") && inner.trim() != ".." {
+                out.push(format!("range slice indexing `[{}]` can panic", inner.trim()));
+            } else if inner.chars().any(|c| matches!(c, '+' | '-' | '*' | '/' | '%')) {
+                out.push(format!("computed index `[{}]` can panic", inner.trim()));
+            }
+        }
+        i += 1; // step inside: nested brackets get their own scan
+    }
+    out
+}
+
+/// Rule `bitwise`: numeric hygiene inside tagged kernels. `mul_add`
+/// contracts rounding differently than mul-then-add and is not used by
+/// the serial reference kernels; HashMap/HashSet iteration order is
+/// unspecified, so reducing over it breaks run-to-run determinism; and
+/// more than one scalar accumulator feeding the same output element
+/// implies a reduction-order split that will not match the serial kernel
+/// bit-for-bit.
+pub(crate) fn check_bitwise(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if !ctx.tagged[i] || ctx.in_test[i] || ctx.allowed(i, Rule::Bitwise) {
+            continue;
+        }
+        for (_, id) in idents(&line.code) {
+            match id {
+                "mul_add" => push(
+                    out,
+                    path,
+                    i,
+                    Rule::Bitwise,
+                    "mul_add in bitwise-critical kernel (fused rounding differs from mul-then-add)"
+                        .into(),
+                ),
+                "HashMap" | "HashSet" => push(
+                    out,
+                    path,
+                    i,
+                    Rule::Bitwise,
+                    format!("{id} in bitwise-critical kernel (unordered iteration)"),
+                ),
+                _ => {}
+            }
+        }
+    }
+    for &(start, end) in &ctx.tagged_regions {
+        let mut names: Vec<(usize, String)> = Vec::new();
+        for i in start..=end {
+            if ctx.in_test[i] {
+                continue;
+            }
+            for name in zero_init_accumulators(&ctx.lines[i].code) {
+                if !names.iter().any(|(_, n)| *n == name) {
+                    names.push((i, name));
+                }
+            }
+        }
+        if names.len() >= 2 {
+            let (line, _) = names[1];
+            if !ctx.allowed(line, Rule::Bitwise) {
+                let list: Vec<&str> = names.iter().map(|(_, n)| n.as_str()).collect();
+                push(
+                    out,
+                    path,
+                    line,
+                    Rule::Bitwise,
+                    format!(
+                        "multiple scalar accumulators in one bitwise-critical fn ({}): \
+                         reductions must keep one accumulator per output element",
+                        list.join(", ")
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Find `let mut <acc-ish> = 0.0...;` scalar float zero-inits. Array
+/// accumulators (`[0.0; NR]` — one slot per output column) are fine and
+/// skipped.
+fn zero_init_accumulators(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("let mut ") {
+        let rest = &code[from + pos + "let mut ".len()..];
+        from += pos + "let mut ".len();
+        let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+        let acc_ish = ["acc", "sum", "partial", "total"]
+            .iter()
+            .any(|p| name.starts_with(p));
+        if !acc_ish {
+            continue;
+        }
+        let after = rest[name.len()..].trim_start();
+        let Some(init) = after.strip_prefix('=') else { continue };
+        let init = init.trim_start();
+        let lit: String = init
+            .chars()
+            .take_while(|&c| is_ident_char(c) || c == '.')
+            .collect();
+        let float_zero = lit.starts_with('0')
+            && (lit.contains('.') || lit.contains("f32") || lit.contains("f64"));
+        if float_zero {
+            out.push(name);
+        }
+    }
+    out
+}
+
+/// Rule `env`: `std::env::var` reads outside the config/parallel
+/// resolvers. Scattered env reads make serving behaviour depend on where
+/// a code path happens to run; the crate's contract is that every knob
+/// resolves in exactly one place (`config.rs`, `parallel.rs`).
+pub(crate) fn check_env(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if ctx.in_test[i] || ctx.allowed(i, Rule::Env) {
+            continue;
+        }
+        let flat = despace(&line.code);
+        if contains_bounded(&flat, "env::var(") || contains_bounded(&flat, "env::var_os(") {
+            push(
+                out,
+                path,
+                i,
+                Rule::Env,
+                "env read outside config.rs/parallel.rs resolvers".into(),
+            );
+        }
+    }
+}
+
+/// Rule `safety`: every `unsafe` must be immediately preceded by a
+/// `// SAFETY:` comment (same line, or the contiguous comment block
+/// directly above) stating the invariant that makes it sound.
+pub(crate) fn check_safety(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if ctx.in_test[i] || ctx.allowed(i, Rule::Safety) {
+            continue;
+        }
+        if !idents(&line.code).any(|(_, id)| id == "unsafe") {
+            continue;
+        }
+        let mut justified = line.comment.contains("SAFETY:");
+        let mut j = i;
+        while !justified && j > 0 {
+            j -= 1;
+            let above = &ctx.lines[j];
+            if !above.code.trim().is_empty() || above.comment.is_empty() {
+                break; // contiguity ends at code or a blank line
+            }
+            justified = above.comment.contains("SAFETY:");
+        }
+        if !justified {
+            push(
+                out,
+                path,
+                i,
+                Rule::Safety,
+                "unsafe without an immediately preceding // SAFETY: comment".into(),
+            );
+        }
+    }
+}
+
+/// Rule `lock`: `.lock().unwrap()` / `.lock().expect(..)` propagate a
+/// peer thread's panic into this one (mutex poisoning), so one dead
+/// connection thread could cascade into the engine. All lock
+/// acquisitions go through `parallel::lock_unpoisoned`, which takes the
+/// data even when poisoned.
+pub(crate) fn check_lock(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if ctx.in_test[i] || ctx.allowed(i, Rule::Lock) {
+            continue;
+        }
+        let flat = despace(&line.code);
+        if flat.contains(".lock().unwrap()") || flat.contains(".lock().expect(") {
+            push(
+                out,
+                path,
+                i,
+                Rule::Lock,
+                "use parallel::lock_unpoisoned instead of .lock().unwrap()".into(),
+            );
+        }
+    }
+}
+
+fn push(out: &mut Vec<Finding>, path: &str, line0: usize, rule: Rule, message: String) {
+    out.push(Finding {
+        path: path.to_string(),
+        line: line0 + 1,
+        rule,
+        message,
+    });
+}
+
+/// Emit malformed-pragma findings (never suppressible: a pragma that
+/// cannot be parsed cannot earn its own suppression).
+pub(crate) fn check_pragmas(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
+    for (line0, msg) in &ctx.bad_pragmas {
+        push(out, path, *line0, Rule::Pragma, msg.clone());
+    }
+}

@@ -45,6 +45,7 @@ use crate::tensor::{
 pub const EPS: f32 = 1e-6;
 
 /// Causal linear attention forward. q,k: [n,d], v: [n,m] -> out [n,m].
+// lintra: bitwise-critical
 pub fn forward_causal(
     q: &[f32],
     k: &[f32],
@@ -309,6 +310,7 @@ impl LinearAttnState {
     /// Equivalent to `n` calls of [`Self::step`] — bit-for-bit, because it
     /// replays the same per-token update order — but callable once per
     /// prompt chunk so the layers above can batch their projections.
+    // lintra: bitwise-critical
     pub fn prefill(&mut self, q: &[f32], k: &[f32], v: &[f32], n: usize, out: &mut [f32]) {
         let (d, m) = (self.d, self.m);
         assert_eq!(q.len(), n * d);
@@ -326,6 +328,7 @@ impl LinearAttnState {
     }
 
     /// One decode step with raw (un-mapped) q, k, v; writes `out` [m].
+    // lintra: bitwise-critical
     pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
         debug_assert_eq!(q.len(), self.d);
         debug_assert_eq!(k.len(), self.d);
@@ -508,6 +511,7 @@ impl BatchedLinearAttnState {
     /// same sequence. The per-token update replays exactly the float-op
     /// order of `step_batch`'s per-lane slice, so prefilling a prompt is
     /// bit-identical to feeding it one tick at a time.
+    // lintra: bitwise-critical
     pub fn prefill_row(
         &mut self,
         r: usize,
@@ -560,6 +564,7 @@ impl BatchedLinearAttnState {
     /// (un-mapped) inputs. `q, k: [b, d]`, `v, out: [b, m]` for any
     /// `b <= rows`; lanes `b..rows` are left untouched (the serving
     /// engine keeps lanes that are still mid-prefill in that suffix).
+    // lintra: bitwise-critical
     pub fn step_batch(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
         self.step_batch_pooled(None, q, k, v, out)
     }
@@ -569,6 +574,7 @@ impl BatchedLinearAttnState {
     /// `pool`. Lanes are independent and each lane's float-op order never
     /// depends on `b` or the thread count, so stepping a prefix on a pool
     /// is bit-identical to stepping the same lanes serially, full-width.
+    // lintra: bitwise-critical
     pub fn step_batch_pooled(
         &mut self,
         pool: Option<&ThreadPool>,

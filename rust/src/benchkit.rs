@@ -201,9 +201,11 @@ pub fn fmt_bytes(b: usize) -> String {
     format!("{v:.1} {}", UNITS[u])
 }
 
-/// Read `BENCH_QUICK=1` to shrink iteration counts in CI-ish runs.
+/// `BENCH_QUICK=1` shrinks iteration counts in CI-ish runs; the env read
+/// itself lives in [`crate::config::resolve_bench_quick`] (single-file
+/// env resolution, enforced by `lintra analyze` rule `env`).
 pub fn opts_from_env() -> BenchOpts {
-    if std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+    if crate::config::resolve_bench_quick() {
         BenchOpts::quick()
     } else {
         BenchOpts::default()

@@ -24,8 +24,24 @@ impl Args {
         raw: I,
         known_flags: &[&str],
     ) -> anyhow::Result<Args> {
+        Self::parse_with_switches(raw, known_flags, &[])
+    }
+
+    /// Like [`Args::parse`], but flags named in `known_switches` are
+    /// boolean: they never consume the following token, so
+    /// `analyze --deny rust/src` keeps `rust/src` positional instead of
+    /// swallowing it as the value of `--deny`.
+    pub fn parse_with_switches<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_flags: &[&str],
+        known_switches: &[&str],
+    ) -> anyhow::Result<Args> {
         let mut args = Args {
-            known: known_flags.iter().map(|s| s.to_string()).collect(),
+            known: known_flags
+                .iter()
+                .chain(known_switches.iter())
+                .map(|s| s.to_string())
+                .collect(),
             ..Default::default()
         };
         let mut it = raw.into_iter().peekable();
@@ -38,10 +54,18 @@ impl Args {
                 if !args.known.iter().any(|k| k == &key) {
                     bail!("unknown flag --{key} (known: {})", args.known.join(", "));
                 }
+                let is_switch = known_switches.iter().any(|s| s == &key);
                 if let Some(v) = inline_val {
                     args.flags.insert(key, v);
+                } else if is_switch {
+                    args.switches.push(key);
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    args.flags.insert(key, it.next().unwrap());
+                    match it.next() {
+                        Some(v) => {
+                            args.flags.insert(key, v);
+                        }
+                        None => args.switches.push(key),
+                    }
                 } else {
                     args.switches.push(key);
                 }
@@ -57,6 +81,14 @@ impl Args {
     /// From the process environment.
     pub fn from_env(known_flags: &[&str]) -> anyhow::Result<Args> {
         Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    /// From the process environment, with declared boolean switches.
+    pub fn from_env_with_switches(
+        known_flags: &[&str],
+        known_switches: &[&str],
+    ) -> anyhow::Result<Args> {
+        Self::parse_with_switches(std::env::args().skip(1), known_flags, known_switches)
     }
 
     pub fn flag(&self, key: &str) -> Option<&str> {
@@ -149,5 +181,29 @@ mod tests {
         let a = parse(&["bench", "--quick"], &["quick"]).unwrap();
         assert!(a.switch("quick"));
         assert_eq!(a.flag("quick"), None);
+    }
+
+    #[test]
+    fn declared_switch_keeps_following_positional() {
+        let a = Args::parse_with_switches(
+            ["analyze", "--deny", "rust/src", "examples"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+            &["deny"],
+        )
+        .unwrap();
+        assert!(a.switch("deny"));
+        assert_eq!(a.positional, vec!["rust/src", "examples"]);
+    }
+
+    #[test]
+    fn declared_switch_rejects_unknown() {
+        assert!(Args::parse_with_switches(
+            ["x", "--bogus"].iter().map(|s| s.to_string()),
+            &["real"],
+            &["deny"],
+        )
+        .is_err());
     }
 }

@@ -315,6 +315,28 @@ pub fn resolve_weight_dtype(
     crate::tensor::WeightDtype::F32
 }
 
+/// Resolve the propcheck case count: `PROPCHECK_CASES` overrides (soak
+/// runs crank it up), else `default`. An unparseable value falls back to
+/// the default — case count is a thoroughness knob, never a correctness
+/// switch. Lives here (not in `propcheck.rs`) so every environment knob
+/// resolves in one file, the invariant `lintra analyze` (rule `env`)
+/// enforces.
+pub fn resolve_propcheck_cases(default: usize) -> usize {
+    std::env::var("PROPCHECK_CASES")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+/// Resolve the benchmark quick mode: `BENCH_QUICK=1` shrinks benchkit
+/// workloads to smoke-test size (how CI keeps the bench binaries honest
+/// without paying full measurement runs). Any other value — or unset —
+/// is the full run. Same single-file env-resolution contract as the
+/// resolvers above.
+pub fn resolve_bench_quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| v.trim() == "1")
+}
+
 impl ServeConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.max_batch == 0 {

@@ -102,6 +102,8 @@ use crate::coordinator::sessions::{SlotInfo, SlotPhase, SlotTable};
 use crate::coordinator::state_cache::StateCache;
 use crate::metrics::{LatencyRecorder, StateCacheCounters, TickLatencySplit};
 use crate::nn::{BatchedDecodeSession, LaneSnapshot, TransformerLM};
+use crate::parallel::lock_unpoisoned;
+use crate::propcheck::engine_invariants;
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
 use crate::sampling::sample_logits_topk;
@@ -184,7 +186,9 @@ impl EngineHandle {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.lock().unwrap().clone()
+        // unpoisoned: stats are plain counters, and a panicked reader
+        // elsewhere must not wedge every future stats() call
+        lock_unpoisoned(&self.stats).clone()
     }
 
     /// Stop the worker and wait for it to drain. Idempotent; the handle
@@ -306,6 +310,7 @@ pub trait DecodeBackend {
     /// [`Self::supports_prefill`] reports true.
     fn swap_lanes(&mut self, a: usize, b: usize) {
         let _ = (a, b);
+        // lintra: allow(panic) -- contract default: never reached when supports_prefill is false
         unreachable!("swap_lanes is only invoked on prefill-capable backends")
     }
 
@@ -513,7 +518,7 @@ fn run_engine<B: DecodeBackend>(
             match msg {
                 Some(Msg::Request(req, resp_tx)) => {
                     responders.insert(req.id, resp_tx);
-                    stats.lock().unwrap().requests += 1;
+                    lock_unpoisoned(&stats).requests += 1;
                     batcher.push(req, Instant::now());
                     continue; // drain any further queued messages
                 }
@@ -569,7 +574,7 @@ fn run_engine<B: DecodeBackend>(
             if req.max_new == 0 {
                 // zero tokens requested: complete immediately, without
                 // burning a lane or sampling a token the client refused
-                stats.lock().unwrap().completed += 1;
+                lock_unpoisoned(&stats).completed += 1;
                 if let Some(tx) = responders.remove(&req.id) {
                     let _ = tx.send(GenerateResponse {
                         id: req.id,
@@ -582,25 +587,30 @@ fn run_engine<B: DecodeBackend>(
                 continue;
             }
             let req_id = req.id;
-            let idx = slots
-                .alloc(SlotInfo::new(
-                    req_id,
-                    now,
-                    req.prompt,
-                    req.max_new,
-                    req.temperature,
-                    req.top_k,
-                ))
-                .expect("capacity checked");
+            let Some(idx) = slots.alloc(SlotInfo::new(
+                req_id,
+                now,
+                req.prompt,
+                req.max_new,
+                req.temperature,
+                req.top_k,
+            )) else {
+                // capacity was checked above, so this branch means the
+                // slot table and the batcher disagree; fail the request
+                // rather than the whole worker
+                let msg = "admission failed: no free slot".to_string();
+                send_failure(&mut responders, req_id, Vec::new(), msg);
+                continue;
+            };
             let lane = match backend.alloc_lane() {
                 Ok(lane) => lane,
                 Err(e) => {
                     // lane allocation failed: fail this request, keep serving
-                    let info = slots.release(idx).expect("just allocated");
+                    let generated = slots.release(idx).map(|i| i.generated).unwrap_or_default();
                     send_failure(
                         &mut responders,
-                        info.request_id,
-                        info.generated,
+                        req_id,
+                        generated,
                         format!("admission failed: {e}"),
                     );
                     continue;
@@ -610,7 +620,14 @@ fn run_engine<B: DecodeBackend>(
             if backend.supports_prefill() {
                 // resumable prefill: the slot joins the prefill suffix
                 // and its first chunks flow in this very tick (step 3)
-                let info = slots.get_mut(idx).expect("just allocated");
+                let Some(info) = slots.get_mut(idx) else {
+                    // unreachable in practice (idx was allocated just
+                    // above); degrade to a failed request, not a panic
+                    backend.free_lane(lane);
+                    let msg = "admission failed: slot table lost the new slot".to_string();
+                    send_failure(&mut responders, req_id, Vec::new(), msg);
+                    continue;
+                };
                 info.start_prefill();
                 // prefix reuse: restore the longest cached prefix of
                 // this prompt into the fresh lane and advance the slot's
@@ -680,10 +697,19 @@ fn run_engine<B: DecodeBackend>(
                 if chunk_budget == 0 {
                     break; // global budget exhausted: resume next tick
                 }
-                let info = slots.get_mut(slot).expect("suffix lane maps to live slot");
+                let Some(info) = slots.get_mut(slot) else {
+                    // lane/slot maps diverged (bookkeeping corruption):
+                    // compact the orphaned lane out and keep serving. The
+                    // moved-in lane is re-examined at this same index.
+                    debug_assert!(false, "suffix lane {lane} maps to a dead slot {slot}");
+                    backend.free_lane(lane);
+                    lane_slots.swap_remove(lane);
+                    continue 'suffix;
+                };
                 debug_assert_eq!(info.phase, SlotPhase::Prefilling);
                 let take = info.prefill_remaining().min(prefill_chunk);
                 let finish = take == info.prefill_remaining();
+                // lintra: allow(panic) -- take <= prefill_remaining, so cursor + take <= len
                 let chunk = &info.prompt[info.cursor..info.cursor + take];
                 match backend.prefill_partial(lane, chunk, finish) {
                     Ok(opt) => {
@@ -703,6 +729,7 @@ fn run_engine<B: DecodeBackend>(
                         if let Some(cache) = state_cache.as_mut() {
                             if info.cursor % prefill_chunk == 0 {
                                 let h = info.prefix_hash;
+                                // lintra: allow(panic) -- cursor <= prompt.len() by contract
                                 let prefix = &info.prompt[..info.cursor];
                                 if cache.note_and_should_deposit(h)
                                     && !cache.contains_hashed(h, prefix)
@@ -715,7 +742,24 @@ fn run_engine<B: DecodeBackend>(
                             }
                         }
                         if finish {
-                            last_logits = Some(opt.expect("finishing chunk returns logits"));
+                            let Some(l) = opt else {
+                                // backend contract breach (a finishing
+                                // chunk must return logits): treat it
+                                // like a prefill failure, not a panic
+                                backend.free_lane(lane);
+                                lane_slots.swap_remove(lane);
+                                if let Some(info) = slots.release(slot) {
+                                    send_failure(
+                                        &mut responders,
+                                        info.request_id,
+                                        info.generated,
+                                        "prefill failed: finishing chunk returned no logits"
+                                            .to_string(),
+                                    );
+                                }
+                                continue 'suffix;
+                            };
+                            last_logits = Some(l);
                             break;
                         }
                     }
@@ -725,13 +769,14 @@ fn run_engine<B: DecodeBackend>(
                         // suffix lane) is re-examined at this same index.
                         backend.free_lane(lane);
                         lane_slots.swap_remove(lane);
-                        let info = slots.release(slot).expect("live slot");
-                        send_failure(
-                            &mut responders,
-                            info.request_id,
-                            info.generated,
-                            format!("prefill failed: {e}"),
-                        );
+                        if let Some(info) = slots.release(slot) {
+                            send_failure(
+                                &mut responders,
+                                info.request_id,
+                                info.generated,
+                                format!("prefill failed: {e}"),
+                            );
+                        }
                         continue 'suffix;
                     }
                 }
@@ -742,7 +787,12 @@ fn run_engine<B: DecodeBackend>(
                 continue;
             };
             // final prompt position landed: sample the first token
-            let info = slots.get_mut(slot).expect("live slot");
+            let Some(info) = slots.get_mut(slot) else {
+                debug_assert!(false, "finishing lane {lane} maps to a dead slot {slot}");
+                backend.free_lane(lane);
+                lane_slots.swap_remove(lane);
+                continue 'suffix;
+            };
             let next = sample_logits_topk(&logits, info.temperature, info.top_k, &mut rng);
             info.generated.push(next);
             tick_tokens += 1;
@@ -753,9 +803,10 @@ fn run_engine<B: DecodeBackend>(
                 // re-examined at this index
                 backend.free_lane(lane);
                 lane_slots.swap_remove(lane);
-                let info = slots.release(slot).expect("live slot");
-                let latency = info.started.elapsed();
-                retired.push((info, latency));
+                if let Some(info) = slots.release(slot) {
+                    let latency = info.started.elapsed();
+                    retired.push((info, latency));
+                }
                 continue;
             }
             // transition Prefilling -> Decoding: swap into the decode
@@ -768,12 +819,24 @@ fn run_engine<B: DecodeBackend>(
             lane += 1;
         }
 
+        // the tick's scheduling invariants (lane/slot agreement, the
+        // decode-prefix/prefill-suffix phase discipline, state-cache
+        // byte accounting) — debug builds only, compiled out in release
+        engine_invariants::check_tick(&engine_invariants::TickView {
+            backend_lanes: backend.lanes(),
+            n_dec,
+            lane_slots: &lane_slots,
+            slots: &slots,
+            cache: state_cache.as_ref(),
+        });
+
         // 4. one decode tick over the prefix: every decoding lane
         // advances by one token, together; suffix lanes are untouched
         let mut decode_logits: Option<Vec<f32>> = None;
         if n_dec > 0 {
             tokens.clear();
-            for &slot in &lane_slots[..n_dec] {
+            for &slot in lane_slots.iter().take(n_dec) {
+                // lintra: allow(panic) -- the lane map mirrors the slot table by construction
                 tokens.push(slots.get(slot).expect("lane maps to live slot").next_token());
             }
             match backend.step_batch(&tokens) {
@@ -805,14 +868,18 @@ fn run_engine<B: DecodeBackend>(
             // Stats accumulate tick-locally — the lock is taken once per
             // tick (step 7), not once per generated token.
             let mut finished_lanes: Vec<usize> = Vec::new();
-            for (lane, &slot) in lane_slots[..n_dec].iter().enumerate() {
-                let info = slots.get_mut(slot).unwrap();
+            debug_assert_eq!(logits.len(), n_dec * vocab, "one logits row per decoding lane");
+            let rows = logits.chunks_exact(vocab);
+            for (lane, (&slot, row)) in lane_slots.iter().take(n_dec).zip(rows).enumerate() {
+                let Some(info) = slots.get_mut(slot) else {
+                    debug_assert!(false, "decode lane {lane} maps to a dead slot {slot}");
+                    continue;
+                };
                 if !info.prompt_done() {
                     info.cursor += 1;
                 }
                 info.pos += 1;
                 if info.prompt_done() {
-                    let row = &logits[lane * vocab..(lane + 1) * vocab];
                     let next = sample_logits_topk(row, info.temperature, info.top_k, &mut rng);
                     info.generated.push(next);
                     tick_tokens += 1;
@@ -846,9 +913,10 @@ fn run_engine<B: DecodeBackend>(
                     lane_slots.swap_remove(last_dec);
                 }
                 n_dec -= 1;
-                let info = slots.release(slot).unwrap();
-                let latency = info.started.elapsed();
-                retired.push((info, latency));
+                if let Some(info) = slots.release(slot) {
+                    let latency = info.started.elapsed();
+                    retired.push((info, latency));
+                }
             }
         }
 
@@ -857,7 +925,7 @@ fn run_engine<B: DecodeBackend>(
         // already see its completion reflected in the stats
         let tick_dur = tick_started.elapsed();
         {
-            let mut st = stats.lock().unwrap();
+            let mut st = lock_unpoisoned(&stats);
             st.ticks += 1;
             st.batch_occupancy_sum += occupancy;
             st.tokens_generated += tick_tokens;
@@ -1028,8 +1096,10 @@ impl PjrtBackend {
         for li in 0..l {
             for hi in 0..h {
                 let base = ((li * b + lane) * h + hi) * dh * dh;
+                // lintra: allow(panic) -- stripe arithmetic is bounded by the (l, b, h, dh)
                 self.s[base..base + dh * dh].fill(0.0);
                 let zbase = ((li * b + lane) * h + hi) * dh;
+                // lintra: allow(panic) -- geometry the buffers were sized with at construction
                 self.z[zbase..zbase + dh].fill(0.0);
             }
         }
@@ -1111,6 +1181,7 @@ impl DecodeBackend for PjrtBackend {
         for lane in 0..self.lanes {
             self.pos[lane] += 1;
         }
+        // lintra: allow(panic) -- the artifact's logits rows cover all b >= lanes lanes
         Ok(logits[..self.lanes * vocab].to_vec())
     }
 }
@@ -1450,6 +1521,47 @@ mod tests {
             resp.error
         );
         // shutdown is idempotent
+        handle.shutdown();
+    }
+
+    #[test]
+    fn poisoned_stats_lock_does_not_take_down_the_engine() {
+        // regression: stats were read with .lock().unwrap(), so one
+        // panicked thread holding the stats mutex poisoned it — and every
+        // later stats() call AND the worker's own per-tick stats flush
+        // panicked in turn, taking the whole engine down. All stats
+        // acquisitions now go through parallel::lock_unpoisoned.
+        let mut handle = NativeEngine::spawn(tiny_model(), ServeConfig::default()).unwrap();
+        let ok = handle.generate_blocking(GenerateRequest {
+            id: 1,
+            prompt: vec![1, 2],
+            max_new: 2,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        // poison the stats mutex: a thread panics while holding the lock
+        let stats = handle.stats.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = stats.lock().unwrap();
+            panic!("deliberate poison");
+        });
+        assert!(poisoner.join().is_err(), "the poisoner must have panicked");
+        assert!(handle.stats.is_poisoned(), "the mutex must actually be poisoned");
+        // the engine must keep serving (its tick flush locks stats too)...
+        let resp = handle.generate_blocking(GenerateRequest {
+            id: 2,
+            prompt: vec![3, 4],
+            max_new: 3,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 3);
+        // ...and stats() must keep answering with coherent counters
+        let st = handle.stats();
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.requests, 2);
         handle.shutdown();
     }
 

@@ -69,12 +69,20 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let engine = engine.clone();
-                            conns.push(
-                                std::thread::Builder::new()
-                                    .name("lintra-conn".into())
-                                    .spawn(move || handle_conn(stream, engine))
-                                    .expect("spawn conn thread"),
-                            );
+                            let spawned = std::thread::Builder::new()
+                                .name("lintra-conn".into())
+                                .spawn(move || handle_conn(stream, engine));
+                            match spawned {
+                                Ok(h) => conns.push(h),
+                                Err(e) => {
+                                    // OS thread exhaustion: shed this
+                                    // connection (the client sees a
+                                    // closed socket) instead of killing
+                                    // the accept loop — and the server —
+                                    // with a panic
+                                    eprintln!("[server] dropping connection: {e}");
+                                }
+                            }
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(10));

@@ -129,6 +129,7 @@ impl SlotInfo {
         // extend the running prefix hash over exactly the tokens entering
         // the lane (restored prefixes flow through here too, so the hash
         // always covers prompt[..cursor])
+        // lintra: allow(panic) -- cursor + n <= prompt.len(), asserted just above
         for &t in &self.prompt[self.cursor..self.cursor + n] {
             self.prefix_hash = crate::coordinator::state_cache::fnv1a_extend(self.prefix_hash, t);
         }
@@ -145,6 +146,7 @@ impl SlotInfo {
         if self.cursor < self.prompt.len() {
             self.prompt[self.cursor]
         } else {
+            // lintra: allow(panic) -- the engine samples a token before any post-prompt tick
             *self.generated.last().expect("past the prompt there is always a sampled token")
         }
     }

@@ -202,6 +202,7 @@ impl StateCache {
         let max_k = (prompt.len() - 1) / self.chunk; // k*chunk < prompt.len()
         let mut hashes = Vec::with_capacity(max_k);
         let mut h = FNV_OFFSET;
+        // lintra: allow(panic) -- max_k * chunk <= prompt.len() - 1 by construction
         for (i, &t) in prompt[..max_k * self.chunk].iter().enumerate() {
             h = fnv1a_extend(h, t);
             if (i + 1) % self.chunk == 0 {
@@ -210,9 +211,11 @@ impl StateCache {
         }
         for k in (1..=max_k).rev() {
             let n = k * self.chunk;
+            // lintra: allow(panic) -- hashes holds exactly max_k entries and k >= 1
             let Some(bucket) = self.buckets.get_mut(&hashes[k - 1]) else {
                 continue;
             };
+            // lintra: allow(panic) -- n = k * chunk <= max_k * chunk < prompt.len()
             if let Some(e) = bucket.iter_mut().find(|e| *e.tokens == prompt[..n]) {
                 self.clock += 1;
                 e.last_used = self.clock;
@@ -274,7 +277,13 @@ impl StateCache {
         }
         let mut evicted = 0;
         while self.bytes + cost > self.budget {
-            self.evict_lru();
+            if !self.evict_lru() {
+                // nothing left to evict yet still over budget: the
+                // accounting drifted (debug builds catch this in
+                // debug_check_accounting); refuse the insert rather
+                // than loop forever or panic
+                return evicted;
+            }
             evicted += 1;
         }
         self.bytes += cost;
@@ -288,11 +297,11 @@ impl StateCache {
         evicted
     }
 
-    /// Drop the least-recently-used entry. The snapshot itself survives
-    /// in any [`Arc`] a caller still holds — eviction only releases the
-    /// cache's reference, so it can never invalidate an in-flight
-    /// restore.
-    fn evict_lru(&mut self) {
+    /// Drop the least-recently-used entry; reports whether one existed.
+    /// The snapshot itself survives in any [`Arc`] a caller still holds —
+    /// eviction only releases the cache's reference, so it can never
+    /// invalidate an in-flight restore.
+    fn evict_lru(&mut self) -> bool {
         debug_assert!(self.entries > 0, "evict_lru on an empty cache");
         let mut victim: Option<(u64, usize, u64)> = None; // (hash, idx, last_used)
         for (&h, bucket) in &self.buckets {
@@ -302,14 +311,46 @@ impl StateCache {
                 }
             }
         }
-        let (h, i, _) = victim.expect("non-empty cache has a victim");
-        let bucket = self.buckets.get_mut(&h).expect("victim bucket exists");
+        let Some((h, i, _)) = victim else {
+            return false; // empty cache: nothing to evict
+        };
+        let Some(bucket) = self.buckets.get_mut(&h) else {
+            return false; // victim bucket vanished (unreachable)
+        };
         let e = bucket.swap_remove(i);
-        self.bytes -= e.bytes;
+        self.bytes = self.bytes.saturating_sub(e.bytes);
         self.entries -= 1;
         if bucket.is_empty() {
             self.buckets.remove(&h);
         }
+        true
+    }
+
+    /// Re-derive the byte/entry accounting from the buckets themselves
+    /// and assert it matches the running counters. Called once per engine
+    /// tick by `propcheck::engine_invariants::check_tick`; a no-op in
+    /// release builds (unless `-C debug-assertions` is on, as in the CI
+    /// release test leg).
+    pub fn debug_check_accounting(&self) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let mut bytes = 0usize;
+        let mut entries = 0usize;
+        for bucket in self.buckets.values() {
+            for e in bucket {
+                bytes += e.bytes;
+                entries += 1;
+            }
+        }
+        debug_assert_eq!(bytes, self.bytes, "state-cache byte accounting drifted");
+        debug_assert_eq!(entries, self.entries, "state-cache entry accounting drifted");
+        debug_assert!(
+            self.bytes <= self.budget,
+            "state-cache holds {} bytes over its {} byte budget",
+            self.bytes,
+            self.budget
+        );
     }
 }
 
@@ -397,6 +438,7 @@ mod tests {
         assert_eq!(cache.insert(&c, snap_at(&model, &c)), 1, "one eviction to fit");
         assert_eq!(cache.len(), 2);
         assert!(cache.bytes() <= cache.budget());
+        cache.debug_check_accounting();
         assert!(cache.contains(&a), "recently used entry must survive");
         assert!(!cache.contains(&b), "LRU entry must be the victim");
         assert!(cache.contains(&c));

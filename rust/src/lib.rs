@@ -28,6 +28,7 @@
 //! prefix-reuse state cache, the thread-pool bitwise-parity invariant);
 //! `README.md` has the serve-binary quickstart.
 
+pub mod analysis;
 pub mod attention;
 pub mod benchkit;
 pub mod benchkit_gen;

@@ -7,6 +7,7 @@
 //!   serve    --task --bind        TCP serving engine
 //!   eval     --task --variant     teacher-forced eval loss via eval artifact
 //!   cast     --weights --out      re-encode an .ltw bundle at a lower weight precision
+//!   analyze  [--deny] [paths…]    repo-invariant static analysis (see `analysis` module)
 //!
 //! Run `lintra <cmd> --help-flags` to see the flags each command reads.
 
@@ -28,8 +29,12 @@ const FLAGS: &[&str] = &[
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
     "num-threads", "prefill-chunks-per-tick", "prefill-chunk-budget", "state-cache-mb",
     "prompt-len", "max-new", "temperature", "count", "backend", "weights", "batches",
-    "weight-dtype", "out", "dtype", "help-flags",
+    "weight-dtype", "out", "dtype",
 ];
+
+/// Boolean flags: never consume the following token, so positional args
+/// (e.g. `analyze --deny rust/src`) parse as paths.
+const SWITCHES: &[&str] = &["deny", "help-flags"];
 
 fn main() {
     if let Err(e) = run() {
@@ -39,9 +44,10 @@ fn main() {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::from_env(FLAGS)?;
+    let args = Args::from_env_with_switches(FLAGS, SWITCHES)?;
     if args.switch("help-flags") {
         eprintln!("flags: {}", FLAGS.join(", "));
+        eprintln!("switches: {}", SWITCHES.join(", "));
         return Ok(());
     }
     match args.subcommand.as_deref() {
@@ -51,12 +57,35 @@ fn run() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
         Some("cast") => cmd_cast(&args),
+        Some("analyze") => cmd_analyze(&args),
         other => {
             bail!(
-                "unknown subcommand {other:?}; available: info, train, generate, serve, eval, cast"
+                "unknown subcommand {other:?}; available: info, train, generate, \
+                 serve, eval, cast, analyze"
             )
         }
     }
+}
+
+/// `lintra analyze [--deny] [paths…]`
+///
+/// Run the repo-invariant static-analysis pass
+/// ([`linear_transformer::analysis`]) over the given files/directories
+/// (default: `rust/src examples`, the self-hosting scope CI gates).
+/// Findings print one per line; `--deny` additionally exits non-zero when
+/// any finding survives, which is how CI turns the pass into a hard gate.
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let paths: Vec<String> = if args.positional.is_empty() {
+        vec!["rust/src".into(), "examples".into()]
+    } else {
+        args.positional.clone()
+    };
+    let findings = linear_transformer::analysis::analyze_paths(&paths)?;
+    print!("{}", linear_transformer::analysis::report(&findings));
+    if args.switch("deny") && !findings.is_empty() {
+        bail!("analyze --deny: {} finding(s)", findings.len());
+    }
+    Ok(())
 }
 
 fn artifacts_dir(args: &Args) -> String {

@@ -66,8 +66,20 @@
 //! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
+
+/// Acquire a mutex, taking the data even when a peer thread panicked
+/// while holding it (std's poisoning). Every serving-path lock goes
+/// through here — the rule-`lock` invariant (`lintra analyze`) — so one
+/// panicked connection thread can never cascade into the engine via a
+/// poisoned `.lock().unwrap()`. Sound for the crate's lock contents
+/// (plain counters and job slots): they are valid at every await-free
+/// point a panic can interrupt, so observing a "torn" update is not
+/// possible beyond what the panicking thread had already committed.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Spin iterations before a waiter parks on its condvar. At ~1 ns per
 /// iteration this bridges the gap between consecutive kernels of one
@@ -142,6 +154,9 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("lintra-pool-{i}"))
                     .spawn(move || worker_loop(sh, i))
+                    // lintra: allow(panic) -- pool construction happens once
+                    // before serving starts; if the OS cannot spawn threads
+                    // here, failing fast beats serving with a broken pool
                     .expect("spawn pool worker"),
             );
         }
@@ -171,7 +186,7 @@ impl ThreadPool {
             f(0);
             return;
         }
-        let _dispatch = self.dispatch.lock().unwrap_or_else(|p| p.into_inner());
+        let _dispatch = lock_unpoisoned(&self.dispatch);
         // SAFETY: the erased borrow is only reachable through `JobPtr`
         // while this function blocks (see `wait_done` below), so the
         // closure strictly outlives every worker's use of it.
@@ -179,7 +194,7 @@ impl ThreadPool {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
         {
-            let mut slot = self.shared.job.lock().unwrap_or_else(|p| p.into_inner());
+            let mut slot = lock_unpoisoned(&self.shared.job);
             slot.f = Some(JobPtr(erased as *const (dyn Fn(usize) + Sync)));
             self.shared.remaining.store(self.threads - 1, Ordering::Release);
             self.shared.epoch.fetch_add(1, Ordering::Release);
@@ -189,8 +204,11 @@ impl ThreadPool {
         // wait for the workers (they borrow f's captures) before unwinding
         let local = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
         self.wait_done();
-        self.shared.job.lock().unwrap_or_else(|p| p.into_inner()).f = None;
+        lock_unpoisoned(&self.shared.job).f = None;
         if self.shared.panicked.swap(false, Ordering::AcqRel) {
+            // lintra: allow(panic) -- deliberate re-raise: pooled kernels
+            // must keep serial panic semantics, so a worker's panic
+            // surfaces on the dispatching thread once all workers are done
             panic!("pool worker panicked during a broadcast job");
         }
         if let Err(p) = local {
@@ -230,7 +248,7 @@ impl ThreadPool {
         }
         self.broadcast(&|wi| {
             if let Some(cell) = cells.get(wi) {
-                let taken = cell.lock().unwrap_or_else(|p| p.into_inner()).take();
+                let taken = lock_unpoisoned(cell).take();
                 if let Some((row0, blk)) = taken {
                     f(row0, blk);
                 }
@@ -249,7 +267,7 @@ impl ThreadPool {
             if spins < SPIN_BEFORE_PARK {
                 std::hint::spin_loop();
             } else {
-                let guard = sh.done.lock().unwrap_or_else(|p| p.into_inner());
+                let guard = lock_unpoisoned(&sh.done);
                 if sh.remaining.load(Ordering::Acquire) == 0 {
                     break;
                 }
@@ -266,7 +284,7 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let _slot = self.shared.job.lock().unwrap_or_else(|p| p.into_inner());
+            let _slot = lock_unpoisoned(&self.shared.job);
             self.shared.shutdown.store(true, Ordering::Release);
             self.shared.start.notify_all();
         }
@@ -296,7 +314,7 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
             } else {
                 // recheck under the job lock: the dispatcher bumps the
                 // epoch while holding it, so no wakeup can be lost
-                let guard = shared.job.lock().unwrap_or_else(|p| p.into_inner());
+                let guard = lock_unpoisoned(&shared.job);
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
@@ -307,11 +325,11 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
             }
         }
         // 2. run the job for this worker's index
-        let job = shared.job.lock().unwrap_or_else(|p| p.into_inner()).f;
+        let job = lock_unpoisoned(&shared.job).f;
         if let Some(JobPtr(ptr)) = job {
-            // SAFETY: see JobPtr — the dispatcher blocks until
-            // `remaining` hits zero, keeping the closure alive.
             let call = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: see JobPtr — the dispatcher blocks until
+                // `remaining` hits zero, keeping the closure alive.
                 (unsafe { &*ptr })(index)
             }));
             if call.is_err() {
@@ -320,7 +338,7 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
         }
         // 3. report completion; the last finisher wakes the dispatcher
         if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let _g = shared.done.lock().unwrap_or_else(|p| p.into_inner());
+            let _g = lock_unpoisoned(&shared.done);
             shared.done_cv.notify_all();
         }
     }

@@ -165,12 +165,99 @@ pub fn assert_close_ulp(got: f32, want: f32, max_ulps: u32, rel_tol: f32, abs_to
     );
 }
 
-/// Env-tunable case count: PROPCHECK_CASES overrides (for soak runs).
+/// Env-tunable case count: `PROPCHECK_CASES` overrides (for soak runs).
+/// The env read itself lives in [`crate::config::resolve_propcheck_cases`]
+/// — every environment knob resolves in one place, an invariant
+/// `lintra analyze` (rule `env`) enforces.
 pub fn default_cases() -> usize {
-    std::env::var("PROPCHECK_CASES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(64)
+    crate::config::resolve_propcheck_cases(64)
+}
+
+/// Per-tick invariants of the serving engine's continuous-batching loop
+/// (`coordinator::engine::run_engine`), checked in debug builds only.
+///
+/// The tick loop maintains a dense lane array mirrored against the slot
+/// table, partitioned into a *decode prefix* (lanes `0..n_dec`, stepped
+/// together each tick) and a *prefill suffix* (lanes `n_dec..len`,
+/// absorbing prompt chunks). Everything the sampling and compaction code
+/// does assumes this discipline; a violation surfaces here — at the tick
+/// that broke it — instead of as a wrong token several ticks later. CI
+/// runs the release-mode test leg with `-C debug-assertions` so these
+/// checks also cover the optimized build.
+pub mod engine_invariants {
+    use crate::coordinator::sessions::{SlotPhase, SlotTable};
+    use crate::coordinator::state_cache::StateCache;
+
+    /// A borrow of the engine's per-tick scheduling state.
+    pub struct TickView<'a> {
+        /// `backend.lanes()` — the backend's live lane count.
+        pub backend_lanes: usize,
+        /// Decode-prefix width: lanes `0..n_dec` are decoding.
+        pub n_dec: usize,
+        /// Engine-side lane → slot map.
+        pub lane_slots: &'a [usize],
+        /// The slot table the lane map points into.
+        pub slots: &'a SlotTable,
+        /// The prefix-reuse cache, when enabled.
+        pub cache: Option<&'a StateCache>,
+    }
+
+    /// Validate one tick's scheduling state. A no-op (and essentially
+    /// free) unless debug assertions are enabled.
+    pub fn check_tick(v: &TickView<'_>) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        debug_assert_eq!(
+            v.backend_lanes,
+            v.lane_slots.len(),
+            "backend lanes and the engine lane map must agree"
+        );
+        debug_assert_eq!(
+            v.lane_slots.len(),
+            v.slots.active(),
+            "every lane maps to exactly one active slot"
+        );
+        debug_assert!(
+            v.n_dec <= v.lane_slots.len(),
+            "decode prefix {} wider than the lane array {}",
+            v.n_dec,
+            v.lane_slots.len()
+        );
+        let mut seen = v.lane_slots.to_vec();
+        seen.sort_unstable();
+        debug_assert!(
+            seen.windows(2).all(|w| w[0] != w[1]),
+            "a slot occupies two lanes"
+        );
+        for (lane, &slot) in v.lane_slots.iter().enumerate() {
+            let info = v.slots.get(slot);
+            debug_assert!(info.is_some(), "lane {lane} maps to dead slot {slot}");
+            let Some(info) = info else { continue };
+            debug_assert!(
+                info.cursor <= info.prompt.len(),
+                "slot {slot} cursor {} overran its prompt ({} tokens)",
+                info.cursor,
+                info.prompt.len()
+            );
+            if lane < v.n_dec {
+                debug_assert_eq!(
+                    info.phase,
+                    SlotPhase::Decoding,
+                    "decode-prefix lane {lane} holds a mid-prefill slot"
+                );
+            } else {
+                debug_assert_eq!(
+                    info.phase,
+                    SlotPhase::Prefilling,
+                    "prefill-suffix lane {lane} holds a decoding slot"
+                );
+            }
+        }
+        if let Some(cache) = v.cache {
+            cache.debug_check_accounting();
+        }
+    }
 }
 
 fn base_seed(name: &str) -> u64 {
@@ -261,6 +348,65 @@ mod tests {
     #[should_panic(expected = "tolerance-breach")]
     fn assert_close_ulp_rejects_out_of_contract() {
         assert_close_ulp(1.0, 1.1, 4, 1e-3, 1e-6, "tolerance-breach");
+    }
+
+    #[test]
+    fn engine_invariants_accept_a_coherent_tick() {
+        use crate::coordinator::sessions::{SlotInfo, SlotTable};
+        let mut slots = SlotTable::new(4);
+        let a = slots.alloc(SlotInfo::new(1, std::time::Instant::now(), vec![1, 2], 4, 0.0, 0));
+        let b = slots.alloc(SlotInfo::new(2, std::time::Instant::now(), vec![3, 4], 4, 0.0, 0));
+        let (a, b) = (a.unwrap(), b.unwrap());
+        slots.get_mut(b).unwrap().start_prefill();
+        // lane 0 decoding, lane 1 mid-prefill: exactly the discipline
+        engine_invariants::check_tick(&engine_invariants::TickView {
+            backend_lanes: 2,
+            n_dec: 1,
+            lane_slots: &[a, b],
+            slots: &slots,
+            cache: None,
+        });
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "decode-prefix lane")]
+    fn engine_invariants_reject_a_mid_prefill_slot_in_the_decode_prefix() {
+        use crate::coordinator::sessions::{SlotInfo, SlotTable};
+        let mut slots = SlotTable::new(4);
+        let a = slots.alloc(SlotInfo::new(1, std::time::Instant::now(), vec![1, 2], 4, 0.0, 0));
+        let b = slots.alloc(SlotInfo::new(2, std::time::Instant::now(), vec![3, 4], 4, 0.0, 0));
+        let (a, b) = (a.unwrap(), b.unwrap());
+        slots.get_mut(b).unwrap().start_prefill();
+        // n_dec = 2 claims lane 1 is decoding, but its slot is prefilling
+        engine_invariants::check_tick(&engine_invariants::TickView {
+            backend_lanes: 2,
+            n_dec: 2,
+            lane_slots: &[a, b],
+            slots: &slots,
+            cache: None,
+        });
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "a slot occupies two lanes")]
+    fn engine_invariants_reject_a_duplicated_slot_mapping() {
+        use crate::coordinator::sessions::{SlotInfo, SlotTable};
+        let mut slots = SlotTable::new(4);
+        let a = slots
+            .alloc(SlotInfo::new(1, std::time::Instant::now(), vec![1, 2], 4, 0.0, 0))
+            .unwrap();
+        let _b = slots
+            .alloc(SlotInfo::new(2, std::time::Instant::now(), vec![3, 4], 4, 0.0, 0))
+            .unwrap();
+        engine_invariants::check_tick(&engine_invariants::TickView {
+            backend_lanes: 2,
+            n_dec: 2,
+            lane_slots: &[a, a],
+            slots: &slots,
+            cache: None,
+        });
     }
 
     #[test]

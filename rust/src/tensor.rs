@@ -134,6 +134,7 @@ impl Tensor {
 // ---------------------------------------------------------------------------
 
 /// c[m,n] = a[m,k] @ b[k,n]  (i-k-j order: inner loop streams rows of b).
+// lintra: bitwise-critical
 pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -176,6 +177,7 @@ pub const PAR_MIN_WORK: usize = 16 * 1024;
 pub const PAR_MIN_ROW_ELEMS: usize = 2048;
 
 /// [`matmul_into`] partitioned over row blocks of `c` across the pool.
+// lintra: bitwise-critical
 pub fn matmul_into_pooled(
     pool: Option<&ThreadPool>,
     c: &mut [f32],
@@ -206,6 +208,7 @@ pub fn matmul_into_pooled(
 }
 
 /// [`batched_outer_acc`] partitioned over lanes of `s` across the pool.
+// lintra: bitwise-critical
 pub fn batched_outer_acc_pooled(
     pool: Option<&ThreadPool>,
     s: &mut [f32],
@@ -237,6 +240,7 @@ pub fn batched_outer_acc_pooled(
 }
 
 /// [`batched_contract`] partitioned over lanes of `out` across the pool.
+// lintra: bitwise-critical
 pub fn batched_contract_pooled(
     pool: Option<&ThreadPool>,
     out: &mut [f32],
@@ -268,6 +272,7 @@ pub fn batched_contract_pooled(
 }
 
 /// [`layer_norm_rows`] partitioned over rows of `out` across the pool.
+// lintra: bitwise-critical
 pub fn layer_norm_rows_pooled(
     pool: Option<&ThreadPool>,
     out: &mut [f32],
@@ -306,6 +311,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// weight-bandwidth bound (§Perf — ~18 GB/s effective on this core, at the
 /// practical roofline), and both a 2-row unroll and target-cpu=native
 /// measured within noise (<5%), so the clearest form wins.
+// lintra: bitwise-critical
 pub fn vecmat_into(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize) {
     assert_eq!(x.len(), k);
     assert_eq!(y.len(), n);
@@ -330,6 +336,7 @@ pub fn vecmat_into(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize) {
 ///
 /// `s: [b, d, m]`, `k: [b, d]`, `v: [b, m]` — eq. 18 of the paper applied
 /// to all B decode lanes in one sweep over contiguous memory.
+// lintra: bitwise-critical
 pub fn batched_outer_acc(s: &mut [f32], k: &[f32], v: &[f32], b: usize, d: usize, m: usize) {
     assert_eq!(s.len(), b * d * m);
     assert_eq!(k.len(), b * d);
@@ -350,6 +357,7 @@ pub fn batched_outer_acc(s: &mut [f32], k: &[f32], v: &[f32], b: usize, d: usize
 ///
 /// `out: [b, m]`, `q: [b, d]`, `s: [b, d, m]` — the numerator of eq. 20
 /// for all B decode lanes.
+// lintra: bitwise-critical
 pub fn batched_contract(out: &mut [f32], q: &[f32], s: &[f32], b: usize, d: usize, m: usize) {
     assert_eq!(out.len(), b * m);
     assert_eq!(q.len(), b * d);
@@ -376,6 +384,7 @@ pub fn elu_plus_one_map(dst: &mut [f32], src: &[f32]) {
 }
 
 /// Layer norm over the last axis of every row of a `[b, n]` block.
+// lintra: bitwise-critical
 pub fn layer_norm_rows(out: &mut [f32], x: &[f32], gamma: &[f32], beta: &[f32], b: usize) {
     let n = gamma.len();
     assert_eq!(out.len(), b * n);
@@ -439,6 +448,7 @@ pub fn scatter_cols(
 }
 
 /// dot product.
+// lintra: bitwise-critical
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -446,6 +456,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// y += alpha * x
+// lintra: bitwise-critical
 #[inline]
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
@@ -772,6 +783,7 @@ pub const PAR_MIN_GEMV_COLS: usize = 64;
 /// Unlike the f32 path there is no `== 0.0` skip: the dense decode
 /// stream almost never carries exact zeros, and the branch would stall
 /// the unrolled loads.
+// lintra: bitwise-critical
 #[inline(always)]
 fn gemv_cols_widen<W: Copy>(
     y: &mut [f32],
@@ -834,6 +846,7 @@ fn gemv_cols_widen<W: Copy>(
 /// f32 GEMV over a column range, replicating [`vecmat_into`]'s
 /// per-element float-op order exactly (k-ascending with the zero-skip),
 /// so a column-partitioned run is bit-identical to the serial kernel.
+// lintra: bitwise-critical
 fn gemv_cols_f32(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, col0: usize) {
     let nc = y.len();
     assert_eq!(x.len(), k);
@@ -852,6 +865,7 @@ fn gemv_cols_f32(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, col0: 
 }
 
 /// Dispatch one GEMV column range against a packed weight matrix.
+// lintra: bitwise-critical
 fn gemv_cols_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize, col0: usize) {
     assert_eq!(x.len(), k);
     match w {
@@ -869,6 +883,7 @@ fn gemv_cols_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize, col0
 
 /// y[n] = x[k] @ w[k,n] against a packed weight matrix ([`vecmat_into`]
 /// for [`WeightMat`]; bitwise-equal to it on the `F32` variant).
+// lintra: bitwise-critical
 pub fn vecmat_into_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize) {
     assert_eq!(y.len(), n);
     gemv_cols_w(y, x, w, k, n, 0);
@@ -877,6 +892,7 @@ pub fn vecmat_into_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize
 /// c[m,n] = a[m,k] @ w[k,n] against a packed weight matrix. Each output
 /// row runs the exact single-row kernel, so results never depend on `m`
 /// (prefill chunking == decode ticks, like the f32 path).
+// lintra: bitwise-critical
 pub fn matmul_into_w(c: &mut [f32], a: &[f32], w: &WeightMat, m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
@@ -891,6 +907,7 @@ pub fn matmul_into_w(c: &mut [f32], a: &[f32], w: &WeightMat, m: usize, k: usize
 /// column's dot product runs in the serial kernel's exact float order,
 /// so the result is bit-identical to [`vecmat_into`] under any thread
 /// count — the partition only decides ownership.
+// lintra: bitwise-critical
 pub fn vecmat_into_cols_pooled(
     pool: Option<&ThreadPool>,
     y: &mut [f32],
@@ -916,6 +933,7 @@ pub fn vecmat_into_cols_pooled(
 /// [`vecmat_into_w`] with the same pooled column split as
 /// [`vecmat_into_cols_pooled`] (widening kernels are column-partition
 /// independent by construction, see [`gemv_cols_widen`]).
+// lintra: bitwise-critical
 pub fn vecmat_into_w_cols_pooled(
     pool: Option<&ThreadPool>,
     y: &mut [f32],
@@ -938,6 +956,7 @@ pub fn vecmat_into_w_cols_pooled(
 /// [`matmul_into_w`] partitioned across the pool: row blocks for m >= 2
 /// (like [`matmul_into_pooled`]), the column split for the m == 1 GEMV
 /// shape that row partitioning cannot touch.
+// lintra: bitwise-critical
 pub fn matmul_into_w_pooled(
     pool: Option<&ThreadPool>,
     c: &mut [f32],

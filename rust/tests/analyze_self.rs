@@ -1,0 +1,295 @@
+//! Self-hosting tests for `lintra analyze`: per-rule positive and
+//! negative fixtures, the suppression-pragma grammar, bitwise-critical
+//! tag scoping — and the integration assertion the CI gate relies on:
+//! the repo's own tree (`rust/src` + `examples`) analyzes clean.
+//!
+//! Fixtures are source *text*, not compiled code, so they deliberately
+//! contain the constructs the rules forbid.
+
+use linear_transformer::analysis::{analyze_paths, analyze_source, report, Rule};
+
+/// A hot-path file name: rule `panic` applies.
+const HOT: &str = "rust/src/coordinator/engine.rs";
+/// A kernel file name: not hot-path, not an env/lock allowlist file.
+const KERNEL: &str = "rust/src/tensor.rs";
+
+fn rules_of(path: &str, src: &str) -> Vec<Rule> {
+    analyze_source(path, src).into_iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// rule `panic`
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_rule_flags_unwrap_expect_and_macros() {
+    let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = x.expect("b");
+    panic!("a: {a} b: {b}");
+}
+"#;
+    let findings = analyze_source(HOT, src);
+    assert_eq!(findings.len(), 3, "{}", report(&findings));
+    assert!(findings.iter().all(|f| f.rule == Rule::Panic));
+    assert_eq!(
+        findings.iter().map(|f| f.line).collect::<Vec<_>>(),
+        vec![3, 4, 5],
+        "findings carry 1-based line numbers"
+    );
+}
+
+#[test]
+fn panic_rule_flags_fallible_indexing_but_not_plain_subscripts() {
+    let src = r#"
+fn f(v: &[u32], i: usize) -> u32 {
+    let a = v[i];
+    let b = v[i + 1];
+    let c = &v[1..3];
+    a + b + c[0]
+}
+"#;
+    let findings = analyze_source(HOT, src);
+    assert_eq!(findings.len(), 2, "{}", report(&findings));
+    assert_eq!(findings[0].line, 4, "computed index `v[i + 1]`");
+    assert_eq!(findings[1].line, 5, "range slice `v[1..3]`");
+}
+
+#[test]
+fn panic_rule_applies_only_to_hot_path_files() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert_eq!(rules_of(HOT, src), vec![Rule::Panic]);
+    assert!(rules_of(KERNEL, src).is_empty(), "tensor.rs is not hot-path");
+}
+
+#[test]
+fn panic_rule_skips_unwrap_or_else_and_test_modules() {
+    let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap_or_else(|| 0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1).unwrap();
+        let v = vec![1, 2];
+        let _ = &v[0..2];
+    }
+}
+"#;
+    assert!(rules_of(HOT, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// suppression pragmas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inline_pragma_with_reason_suppresses() {
+    let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap() // lintra: allow(panic) -- checked non-empty by the caller
+}
+"#;
+    assert!(rules_of(HOT, src).is_empty());
+}
+
+#[test]
+fn own_line_pragma_covers_the_next_code_line() {
+    let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    // lintra: allow(panic) -- checked non-empty by the caller
+    x.unwrap()
+}
+"#;
+    assert!(rules_of(HOT, src).is_empty());
+}
+
+#[test]
+fn pragma_without_reason_is_reported_and_does_not_suppress() {
+    let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap() // lintra: allow(panic)
+}
+"#;
+    // both the original violation and the malformed pragma surface
+    assert_eq!(rules_of(HOT, src), vec![Rule::Panic, Rule::Pragma]);
+}
+
+#[test]
+fn pragma_naming_an_unknown_rule_is_reported() {
+    let src = "// lintra: allow(bogus) -- misspelled\nfn f() {}\n";
+    assert_eq!(rules_of(KERNEL, src), vec![Rule::Pragma]);
+    let src = "// lintra: frobnicate the lints\nfn f() {}\n";
+    assert_eq!(rules_of(KERNEL, src), vec![Rule::Pragma]);
+}
+
+#[test]
+fn prose_mentioning_the_grammar_is_not_a_pragma() {
+    let src = "// see the lintra: allow(panic) grammar in ARCHITECTURE.md\nfn f() {}\n";
+    assert!(rules_of(HOT, src).is_empty());
+}
+
+#[test]
+fn quoted_and_commented_violations_do_not_fire() {
+    let src = r#"
+fn f() -> &'static str {
+    // a comment may say .unwrap() or panic! freely
+    "so may a string: x.unwrap(); std::env::var(\"X\"); unsafe"
+}
+"#;
+    assert!(rules_of(HOT, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule `bitwise`
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bitwise_rule_fires_only_inside_tagged_fns() {
+    let src = r#"
+// lintra: bitwise-critical
+fn dotp(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.mul_add(*y, 0.0)).sum()
+}
+
+fn untagged(x: f32) -> f32 {
+    x.mul_add(2.0, 1.0)
+}
+"#;
+    let findings = analyze_source(KERNEL, src);
+    assert_eq!(findings.len(), 1, "{}", report(&findings));
+    assert_eq!((findings[0].rule, findings[0].line), (Rule::Bitwise, 4));
+}
+
+#[test]
+fn bitwise_rule_flags_multiple_scalar_accumulators() {
+    let src = r#"
+// lintra: bitwise-critical
+fn split_sum(a: &[f32]) -> f32 {
+    let mut acc_lo = 0.0f32;
+    let mut acc_hi = 0.0f32;
+    for (i, &x) in a.iter().enumerate() {
+        if i % 2 == 0 {
+            acc_lo += x;
+        } else {
+            acc_hi += x;
+        }
+    }
+    acc_lo + acc_hi
+}
+"#;
+    let findings = analyze_source(KERNEL, src);
+    assert_eq!(findings.len(), 1, "{}", report(&findings));
+    assert_eq!(findings[0].rule, Rule::Bitwise);
+    assert_eq!(findings[0].line, 5, "reported at the second accumulator");
+}
+
+#[test]
+fn bitwise_rule_accepts_one_scalar_and_array_accumulators() {
+    let src = r#"
+// lintra: bitwise-critical
+fn tiled(a: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut sum = 0.0f32;
+    for &x in a {
+        sum += x;
+    }
+    sum + acc[0]
+}
+"#;
+    assert!(rules_of(KERNEL, src).is_empty());
+}
+
+#[test]
+fn bitwise_rule_flags_unordered_containers() {
+    let src = r#"
+// lintra: bitwise-critical
+fn reduce(a: &[f32]) -> f32 {
+    let mut seen = std::collections::HashMap::new();
+    seen.insert(0u32, a.len());
+    a.iter().sum()
+}
+"#;
+    assert_eq!(rules_of(KERNEL, src), vec![Rule::Bitwise]);
+}
+
+#[test]
+fn bitwise_allow_pragma_suppresses_with_reason() {
+    let src = r#"
+// lintra: bitwise-critical
+fn dotp(a: &[f32]) -> f32 {
+    // lintra: allow(bitwise) -- the reference kernel uses the fused form too
+    a.iter().map(|x| x.mul_add(2.0, 0.0)).sum()
+}
+"#;
+    assert!(rules_of(KERNEL, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rules `env`, `safety`, `lock`
+// ---------------------------------------------------------------------------
+
+#[test]
+fn env_rule_is_scoped_to_the_resolver_files() {
+    let src = r#"
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+"#;
+    assert_eq!(rules_of("rust/src/benchkit.rs", src), vec![Rule::Env]);
+    assert!(rules_of("rust/src/config.rs", src).is_empty());
+    assert!(rules_of("rust/src/parallel.rs", src).is_empty());
+}
+
+#[test]
+fn safety_rule_requires_an_adjacent_justification() {
+    let bare = r#"
+fn f(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+"#;
+    assert_eq!(rules_of(KERNEL, bare), vec![Rule::Safety]);
+
+    let justified = r#"
+fn f(p: *const u32) -> u32 {
+    // SAFETY: the caller guarantees p points at a live u32
+    unsafe { *p }
+}
+"#;
+    assert!(rules_of(KERNEL, justified).is_empty());
+
+    // a blank line between the comment and the unsafe breaks contiguity
+    let detached = "// SAFETY: stale\n\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+    assert_eq!(rules_of(KERNEL, detached), vec![Rule::Safety]);
+}
+
+#[test]
+fn lock_rule_points_at_the_wrapper_and_survives_spacing() {
+    let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n";
+    assert_eq!(rules_of("rust/src/nn.rs", src), vec![Rule::Lock]);
+    let spaced = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock() . unwrap () }\n";
+    assert_eq!(rules_of("rust/src/nn.rs", spaced), vec![Rule::Lock]);
+    // parallel.rs hosts the approved wrapper, so `lock` does not apply —
+    // but it is a hot-path file, so the raw .unwrap() still trips `panic`
+    assert_eq!(rules_of("rust/src/parallel.rs", src), vec![Rule::Panic]);
+}
+
+// ---------------------------------------------------------------------------
+// the CI gate: the repo's own tree analyzes clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repo_tree_is_analyze_clean() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo = manifest.parent().expect("rust/ sits inside the repo root");
+    let findings = analyze_paths(&[manifest.join("src"), repo.join("examples")]).unwrap();
+    assert!(
+        findings.is_empty(),
+        "`lintra analyze --deny rust/src examples` must stay green:\n{}",
+        report(&findings)
+    );
+}
