@@ -1,0 +1,283 @@
+//! Baseline diff-gating for `lintra analyze`.
+//!
+//! The `alloc` rule (and the interprocedural `panic` extension) land on
+//! a codebase that already carries debt; failing CI on day one for all
+//! of it would force either a hundred pragmas or turning the gate off.
+//! Instead the known findings live in a committed `analysis_baseline.json`
+//! and the gate fails only on *fresh* findings — the ratchet can then be
+//! tightened entry by entry as debt is paid down.
+//!
+//! Entries are keyed by `(path, rule, message)` with a count — **no line
+//! numbers** — so unrelated edits to a file do not invalidate the
+//! baseline; messages carry the enclosing fn name, which keeps keys
+//! stable and specific. Paths match suffix-tolerantly at `/` boundaries
+//! (the committed file uses repo-relative paths; tests pass absolute
+//! ones).
+//!
+//! The serialized form is deliberately one entry object per line so
+//! ratchet commits show as clean per-entry diffs.
+
+use crate::json::{obj, Json};
+
+use super::{path_matches, Finding, Rule};
+
+/// One baseline entry: up to `count` findings with this key are debt.
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub path: String,
+    pub rule: Rule,
+    pub message: String,
+    pub count: usize,
+}
+
+/// A committed set of known findings.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// Result of diffing current findings against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct BaselineDiff {
+    /// Findings not covered by the baseline — these fail `--deny`.
+    pub fresh: Vec<Finding>,
+    /// How many findings the baseline absorbed.
+    pub suppressed: usize,
+    /// Baseline entries (rendered) whose findings no longer all exist:
+    /// debt was paid down; the entry should be ratcheted.
+    pub resolved: Vec<String>,
+}
+
+impl Baseline {
+    /// Build a baseline that covers exactly the given findings.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: std::collections::BTreeMap<(String, Rule, String), usize> =
+            Default::default();
+        for f in findings {
+            *counts
+                .entry((f.path.clone(), f.rule, f.message.clone()))
+                .or_insert(0) += 1;
+        }
+        Baseline {
+            entries: counts
+                .into_iter()
+                .map(|((path, rule, message), count)| BaselineEntry {
+                    path,
+                    rule,
+                    message,
+                    count,
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse the committed JSON form. Unknown rule slugs are an error —
+    /// a typo'd baseline entry would otherwise silently suppress
+    /// nothing forever.
+    pub fn parse(text: &str) -> anyhow::Result<Baseline> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("baseline: missing \"entries\" array"))?;
+        let mut out = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let field = |k: &str| -> anyhow::Result<&str> {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: missing \"{k}\""))
+            };
+            let slug = field("rule")?;
+            let rule = Rule::from_slug(slug)
+                .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: unknown rule {slug:?}"))?;
+            out.push(BaselineEntry {
+                path: field("path")?.to_string(),
+                message: field("message")?.to_string(),
+                rule,
+                count: e
+                    .get("count")
+                    .and_then(|c| c.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: missing \"count\""))?,
+            });
+        }
+        Ok(Baseline { entries: out })
+    }
+
+    /// Serialize: one entry object per line, entries sorted, so the
+    /// committed file diffs cleanly.
+    pub fn to_json(&self) -> String {
+        let mut entries = self.entries.clone();
+        entries.sort_by(|a, b| {
+            (a.path.as_str(), a.rule, a.message.as_str())
+                .cmp(&(b.path.as_str(), b.rule, b.message.as_str()))
+        });
+        let mut s = String::from("{\"version\": 1, \"entries\": [\n");
+        for (i, e) in entries.iter().enumerate() {
+            let line = obj(vec![
+                ("path", Json::from(e.path.as_str())),
+                ("rule", Json::from(e.rule.slug())),
+                ("message", Json::from(e.message.as_str())),
+                ("count", Json::from(e.count)),
+            ])
+            .to_string();
+            s.push_str(&line);
+            if i + 1 < entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("]}\n");
+        s
+    }
+
+    /// Diff findings against this baseline. Findings are grouped by
+    /// `(path, rule, message)`; each group draws down the matching
+    /// entry's count (paths matched suffix-tolerantly) and anything
+    /// beyond it is fresh. Groups are processed in finding order, so the
+    /// fresh list points at the *last* occurrences — the ones most
+    /// likely to be the newly added sites.
+    pub fn diff(&self, findings: &[Finding]) -> BaselineDiff {
+        let mut used: Vec<usize> = vec![0; self.entries.len()];
+        // group indices of findings by key, preserving order
+        let mut groups: std::collections::BTreeMap<(&str, Rule, &str), Vec<usize>> =
+            Default::default();
+        for (i, f) in findings.iter().enumerate() {
+            groups
+                .entry((f.path.as_str(), f.rule, f.message.as_str()))
+                .or_default()
+                .push(i);
+        }
+        let mut diff = BaselineDiff::default();
+        for ((path, rule, message), idxs) in groups {
+            let entry = self.entries.iter().position(|e| {
+                e.rule == rule
+                    && e.message == message
+                    && (path_matches(path, &e.path) || path_matches(&e.path, path))
+            });
+            let allowed = match entry {
+                Some(ei) => {
+                    let remaining = self.entries[ei].count.saturating_sub(used[ei]);
+                    let take = remaining.min(idxs.len());
+                    used[ei] += take;
+                    take
+                }
+                None => 0,
+            };
+            diff.suppressed += allowed;
+            for &i in &idxs[allowed..] {
+                diff.fresh.push(findings[i].clone());
+            }
+        }
+        for (ei, e) in self.entries.iter().enumerate() {
+            if used[ei] < e.count {
+                diff.resolved.push(format!(
+                    "{} [{}] {} ({} of {} remain)",
+                    e.path,
+                    e.rule.slug(),
+                    e.message,
+                    used[ei],
+                    e.count
+                ));
+            }
+        }
+        diff.fresh.sort_by(|a, b| {
+            (a.path.as_str(), a.line, a.rule, a.message.as_str())
+                .cmp(&(b.path.as_str(), b.line, b.rule, b.message.as_str()))
+        });
+        diff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(path: &str, line: usize, rule: Rule, message: &str) -> Finding {
+        Finding {
+            path: path.to_string(),
+            line,
+            rule,
+            message: message.to_string(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let fs = vec![
+            finding("rust/src/a.rs", 3, Rule::Alloc, "vec! allocates in tick-reachable fn `f`"),
+            finding("rust/src/a.rs", 9, Rule::Alloc, "vec! allocates in tick-reachable fn `f`"),
+            finding("rust/src/b.rs", 1, Rule::Panic, ".unwrap() in tick-reachable fn `g`"),
+        ];
+        let b = Baseline::from_findings(&fs);
+        let text = b.to_json();
+        let b2 = Baseline::parse(&text).unwrap();
+        assert_eq!(b2.entries.len(), 2);
+        let d = b2.diff(&fs);
+        assert!(d.fresh.is_empty());
+        assert_eq!(d.suppressed, 3);
+        assert!(d.resolved.is_empty());
+    }
+
+    #[test]
+    fn one_entry_per_line() {
+        let fs = vec![
+            finding("a.rs", 1, Rule::Alloc, "m1"),
+            finding("b.rs", 1, Rule::Alloc, "m2"),
+        ];
+        let text = Baseline::from_findings(&fs).to_json();
+        let entry_lines = text.lines().filter(|l| l.contains("\"path\"")).count();
+        assert_eq!(entry_lines, 2, "{text}");
+    }
+
+    #[test]
+    fn fresh_findings_exceed_the_count() {
+        let baseline = Baseline::from_findings(&[finding("a.rs", 1, Rule::Alloc, "m")]);
+        let now = vec![
+            finding("a.rs", 1, Rule::Alloc, "m"),
+            finding("a.rs", 7, Rule::Alloc, "m"),
+        ];
+        let d = baseline.diff(&now);
+        assert_eq!(d.suppressed, 1);
+        assert_eq!(d.fresh.len(), 1);
+        assert_eq!(d.fresh[0].line, 7, "the later occurrence is the fresh one");
+    }
+
+    #[test]
+    fn line_moves_do_not_invalidate() {
+        let baseline = Baseline::from_findings(&[finding("a.rs", 10, Rule::Alloc, "m")]);
+        let d = baseline.diff(&[finding("a.rs", 99, Rule::Alloc, "m")]);
+        assert!(d.fresh.is_empty());
+        assert_eq!(d.suppressed, 1);
+    }
+
+    #[test]
+    fn relative_baseline_matches_absolute_findings() {
+        let baseline =
+            Baseline::from_findings(&[finding("rust/src/nn/mod.rs", 1, Rule::Alloc, "m")]);
+        let d = baseline.diff(&[finding("/root/repo/rust/src/nn/mod.rs", 5, Rule::Alloc, "m")]);
+        assert!(d.fresh.is_empty(), "{:?}", d.fresh);
+        // and a different mod.rs must NOT match
+        let d2 = baseline.diff(&[finding("/root/repo/rust/src/analysis/mod.rs", 5, Rule::Alloc, "m")]);
+        assert_eq!(d2.fresh.len(), 1);
+    }
+
+    #[test]
+    fn resolved_entries_are_reported() {
+        let baseline = Baseline::from_findings(&[
+            finding("a.rs", 1, Rule::Alloc, "m"),
+            finding("a.rs", 2, Rule::Alloc, "m"),
+        ]);
+        let d = baseline.diff(&[finding("a.rs", 1, Rule::Alloc, "m")]);
+        assert!(d.fresh.is_empty());
+        assert_eq!(d.resolved.len(), 1);
+        assert!(d.resolved[0].contains("1 of 2"), "{:?}", d.resolved);
+    }
+
+    #[test]
+    fn unknown_rule_slug_is_an_error() {
+        let text = r#"{"version": 1, "entries": [
+{"path":"a.rs","rule":"nope","message":"m","count":1}
+]}"#;
+        assert!(Baseline::parse(text).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! Call graph + reachability over the items parsed by [`super::items`].
+//!
+//! The resolver is *conservative for reachability*: whenever the text
+//! does not pin down a callee, every plausible in-crate target gets an
+//! edge, so the computed hot/tick closures over-approximate — a
+//! panicking or allocating helper can hide from a too-small set, never
+//! from a too-big one. Concretely:
+//!
+//! * `Owner::name(..)` — fns whose impl owner is `Owner` (with `Self`
+//!   rewritten to the caller's owner); failing that, fns whose module
+//!   path ends in `Owner` (`engine_invariants::check_tick`); failing
+//!   that the call is *unresolved-external* (`Vec::with_capacity`,
+//!   `Instant::now`) and gets no edges but is tallied;
+//! * `.name(..)` — every in-crate fn named `name` that takes a `self`
+//!   receiver (the receiver's type is unknown to a line-level parser);
+//! * `name(..)` — every in-crate fn named `name` without a receiver.
+//!
+//! `#[cfg(test)]` fns are excluded as both callers and callees: tests
+//! deliberately panic and allocate, and nothing in serving reaches them.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::items::FnItem;
+
+pub(crate) struct CallGraph {
+    pub fns: Vec<FnItem>,
+    /// Adjacency: caller index -> sorted, deduped callee indices.
+    pub edges: Vec<Vec<usize>>,
+    /// Call sites with no in-crate target (std/external or dynamic).
+    pub unresolved_calls: usize,
+}
+
+impl CallGraph {
+    pub fn build(fns: Vec<FnItem>) -> CallGraph {
+        let mut by_name: HashMap<&str, Vec<usize>> = HashMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            if !f.in_test {
+                by_name.entry(f.name.as_str()).or_default().push(i);
+            }
+        }
+        let mut edges: Vec<Vec<usize>> = vec![Vec::new(); fns.len()];
+        let mut unresolved = 0usize;
+        for (i, f) in fns.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            let mut out: BTreeSet<usize> = BTreeSet::new();
+            for call in &f.calls {
+                let cands: &[usize] = by_name
+                    .get(call.name.as_str())
+                    .map(|v| v.as_slice())
+                    .unwrap_or(&[]);
+                let mut hit = false;
+                if let Some(q) = call.qualifier.as_deref() {
+                    // `Self::helper(..)` means the enclosing impl's type
+                    let q = if q == "Self" {
+                        f.owner.as_deref().unwrap_or(q)
+                    } else {
+                        q
+                    };
+                    for &c in cands {
+                        if fns[c].owner.as_deref() == Some(q) {
+                            out.insert(c);
+                            hit = true;
+                        }
+                    }
+                    if !hit {
+                        for &c in cands {
+                            if module_ends_with(&fns[c].module, q) {
+                                out.insert(c);
+                                hit = true;
+                            }
+                        }
+                    }
+                } else if call.method {
+                    for &c in cands {
+                        if fns[c].takes_self {
+                            out.insert(c);
+                            hit = true;
+                        }
+                    }
+                } else {
+                    for &c in cands {
+                        if !fns[c].takes_self {
+                            out.insert(c);
+                            hit = true;
+                        }
+                    }
+                }
+                if !hit {
+                    unresolved += 1;
+                }
+            }
+            out.remove(&i); // self-recursion adds nothing to reachability
+            edges[i] = out.into_iter().collect();
+        }
+        CallGraph {
+            fns,
+            edges,
+            unresolved_calls: unresolved,
+        }
+    }
+
+    /// Indices of non-test fns defined in files matching `files`
+    /// (suffix-tolerant, see [`super::path_matches`]).
+    pub fn roots_in_files(&self, files: &[&str]) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.in_test && super::in_set(&f.file, files))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of non-test fns with the given name.
+    pub fn roots_named(&self, name: &str) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.in_test && f.name == name)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Transitive closure (roots included), as sorted fn indices.
+    pub fn reachable(&self, roots: &[usize]) -> Vec<usize> {
+        let mut seen: BTreeSet<usize> = roots.iter().copied().collect();
+        let mut work: Vec<usize> = roots.to_vec();
+        while let Some(i) = work.pop() {
+            for &j in &self.edges[i] {
+                if seen.insert(j) {
+                    work.push(j);
+                }
+            }
+        }
+        seen.into_iter().collect()
+    }
+}
+
+/// Does `module` end with path segment `seg` (`propcheck::engine_invariants`
+/// ends with `engine_invariants`)?
+fn module_ends_with(module: &str, seg: &str) -> bool {
+    module == seg
+        || module
+            .rsplit("::")
+            .next()
+            .is_some_and(|last| last == seg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::items::parse_items;
+    use super::super::rules::FileCtx;
+    use super::*;
+
+    fn graph(files: &[(&str, &str)]) -> CallGraph {
+        let mut fns = Vec::new();
+        for (path, src) in files {
+            let ctx = FileCtx::build(src);
+            fns.extend(parse_items(path, &ctx));
+        }
+        CallGraph::build(fns)
+    }
+
+    fn names_of(g: &CallGraph, idxs: &[usize]) -> Vec<String> {
+        idxs.iter().map(|&i| g.fns[i].name.clone()).collect()
+    }
+
+    #[test]
+    fn cross_module_qualified_calls_resolve() {
+        let g = graph(&[
+            (
+                "rust/src/a.rs",
+                "pub fn caller() {\n    helpers::assist();\n}\n",
+            ),
+            ("rust/src/helpers.rs", "pub fn assist() {}\n"),
+        ]);
+        let roots = g.roots_named("caller");
+        let reach = g.reachable(&roots);
+        assert!(names_of(&g, &reach).contains(&"assist".to_string()));
+    }
+
+    #[test]
+    fn impl_method_ownership_disambiguates_qualified_calls() {
+        let g = graph(&[(
+            "rust/src/m.rs",
+            "\
+struct A;
+struct B;
+impl A {
+    fn go(x: u32) { a_only(); }
+}
+impl B {
+    fn go(x: u32) { b_only(); }
+}
+fn a_only() {}
+fn b_only() {}
+fn caller() { A::go(1); }
+",
+        )]);
+        let reach = g.reachable(&g.roots_named("caller"));
+        let names = names_of(&g, &reach);
+        assert!(names.contains(&"a_only".to_string()));
+        assert!(
+            !names.contains(&"b_only".to_string()),
+            "A::go must not resolve to B::go: {names:?}"
+        );
+    }
+
+    #[test]
+    fn shadowed_names_make_method_calls_conservative() {
+        // two self-taking fns share a name; a method call reaches both
+        let g = graph(&[(
+            "rust/src/m.rs",
+            "\
+struct A;
+struct B;
+impl A {
+    fn step(&mut self) { from_a(); }
+}
+impl B {
+    fn step(&mut self) { from_b(); }
+}
+fn from_a() {}
+fn from_b() {}
+fn caller(x: &mut A) { x.step(); }
+",
+        )]);
+        let reach = g.reachable(&g.roots_named("caller"));
+        let names = names_of(&g, &reach);
+        assert!(names.contains(&"from_a".to_string()));
+        assert!(names.contains(&"from_b".to_string()));
+    }
+
+    #[test]
+    fn method_calls_do_not_reach_receiverless_fns() {
+        let g = graph(&[(
+            "rust/src/m.rs",
+            "\
+fn push(out: &mut Vec<u32>, v: u32) { deep(); }
+fn deep() {}
+fn caller(v: &mut Vec<u32>) { v.push(1); }
+",
+        )]);
+        let reach = g.reachable(&g.roots_named("caller"));
+        assert!(
+            !names_of(&g, &reach).contains(&"deep".to_string()),
+            "Vec::push method call must not edge into the free fn `push`"
+        );
+    }
+
+    #[test]
+    fn unresolved_external_calls_are_tallied_not_edged() {
+        let g = graph(&[(
+            "rust/src/m.rs",
+            "fn caller() {\n    let v: Vec<u32> = Vec::with_capacity(4);\n    std::mem::drop(v);\n}\n",
+        )]);
+        assert!(g.unresolved_calls >= 1, "Vec::with_capacity is external");
+        let reach = g.reachable(&g.roots_named("caller"));
+        assert_eq!(reach.len(), 1, "only the root itself: {:?}", names_of(&g, &reach));
+    }
+
+    #[test]
+    fn self_qualified_calls_use_the_enclosing_owner() {
+        let g = graph(&[(
+            "rust/src/m.rs",
+            "\
+struct S;
+impl S {
+    fn new() -> S { Self::seed(); S }
+    fn seed() {}
+}
+",
+        )]);
+        let reach = g.reachable(&g.roots_named("new"));
+        assert!(names_of(&g, &reach).contains(&"seed".to_string()));
+    }
+
+    #[test]
+    fn closure_bodies_keep_pool_dispatched_kernels_reachable() {
+        let g = graph(&[(
+            "rust/src/tensor.rs",
+            "\
+pub fn matmul(p: &Pool) {
+    p.for_row_blocks(4, |row0, rows| {
+        kernel_block(row0, rows);
+    });
+}
+fn kernel_block(a: usize, b: usize) {}
+",
+        )]);
+        let reach = g.reachable(&g.roots_named("matmul"));
+        assert!(names_of(&g, &reach).contains(&"kernel_block".to_string()));
+    }
+
+    #[test]
+    fn test_fns_are_neither_roots_nor_targets() {
+        let g = graph(&[(
+            "rust/src/m.rs",
+            "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    fn helper_with_unique_name() { prod(); }
+}
+",
+        )]);
+        assert!(g.roots_named("helper_with_unique_name").is_empty());
+        let reach = g.reachable(&g.roots_named("prod"));
+        assert_eq!(names_of(&g, &reach), vec!["prod".to_string()]);
+    }
+}

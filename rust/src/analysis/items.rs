@@ -1,0 +1,631 @@
+//! Item-level parse on top of [`super::lexer`]: function definitions
+//! (with body line spans and impl-block owners), inline `mod` blocks,
+//! and call sites. This is the front half of the interprocedural pass —
+//! [`super::callgraph`] turns every file's items into a symbol table and
+//! a call graph, from which the hot-path and tick-loop closures are
+//! computed.
+//!
+//! Like the lexer, this is deliberately a *lightweight* parser: it walks
+//! the per-line code views (literals blanked, comments gone) with brace
+//! tracking, so it cannot be fooled by strings or comments, but it does
+//! not attempt full Rust syntax. The simplifications all lean the
+//! conservative direction for reachability:
+//!
+//! * a call site is any identifier directly followed by `(` — plain
+//!   calls (`helper(x)`), method calls (`.helper(x)`, receiver type
+//!   unknown), and qualified calls (`Owner::helper(x)`) are kept apart
+//!   so the resolver can be precise where the text allows and
+//!   over-approximate where it does not (tuple-struct patterns like
+//!   `State::Str(d)` also parse as calls; they resolve to nothing and
+//!   only pad the unresolved tally);
+//! * closures have no item identity — calls inside a closure body are
+//!   attributed to the enclosing `fn`, which is exactly right for
+//!   reachability (the pool dispatch in `parallel.rs` runs closure
+//!   bodies on behalf of the calling kernel);
+//! * macro invocations are not calls (`vec![..]`, `format!(..)` are
+//!   handled textually by the rules that care about them).
+
+use super::lexer::is_ident_char;
+use super::rules::FileCtx;
+
+/// One call site inside a function body.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// 0-based line of the call.
+    pub line: usize,
+    /// Last path segment of the callee (`bar` for `Foo::bar(..)`).
+    pub name: String,
+    /// `Foo` for `Foo::bar(..)` / `a::Foo::bar(..)`; None for plain and
+    /// method calls.
+    pub qualifier: Option<String>,
+    /// True for `.bar(..)` method-call form (receiver type unknown).
+    pub method: bool,
+}
+
+/// One `fn` item: identity, body span, and every call site inside it.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Self type of the enclosing `impl` block, if any.
+    pub owner: Option<String>,
+    /// Module path: derived from the file path, extended by inline
+    /// `mod` blocks (e.g. `propcheck::engine_invariants`).
+    pub module: String,
+    /// The file the item was parsed from (as handed to the analyzer).
+    pub file: String,
+    /// Inclusive 0-based line span, signature line through closing brace.
+    pub span: (usize, usize),
+    /// Defined inside a `#[cfg(test)]` region.
+    pub in_test: bool,
+    /// The parameter list contains a `self` receiver. Used by the
+    /// resolver: `.name(..)` method calls can only dispatch to fns
+    /// *with* a receiver, plain `name(..)` calls only to fns *without*
+    /// one — without this split, every `.push(..)` on a Vec would edge
+    /// into any free fn that happens to be named `push`.
+    pub takes_self: bool,
+    pub calls: Vec<CallSite>,
+}
+
+/// Words that look like calls when followed by `(` but never are.
+const NON_CALL_WORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "fn", "impl", "struct", "enum", "trait",
+    "use", "pub", "let", "mut", "ref", "in", "move", "as", "where", "unsafe", "else", "dyn",
+    "Some", "None", "Ok", "Err",
+];
+
+/// Derive a module path from a file path: strip a leading `**/src/`,
+/// drop the `.rs` suffix, fold `mod.rs`/`lib.rs`/`main.rs` into their
+/// directory, join with `::`. Files outside a `src/` tree (tests,
+/// examples) use their stem.
+pub(crate) fn module_of(file: &str) -> String {
+    let norm = file.replace('\\', "/");
+    let rel = match norm.rfind("/src/") {
+        Some(pos) => &norm[pos + "/src/".len()..],
+        None => match norm.strip_prefix("src/") {
+            Some(r) => r,
+            None => norm.rsplit('/').next().unwrap_or(norm.as_str()),
+        },
+    };
+    let rel = rel.strip_suffix(".rs").unwrap_or(rel);
+    let mut parts: Vec<&str> = rel.split('/').filter(|p| !p.is_empty()).collect();
+    if matches!(parts.last().copied(), Some("mod") | Some("lib") | Some("main")) {
+        parts.pop();
+    }
+    parts.join("::")
+}
+
+/// A code-view token: an identifier (with its byte offset) or a single
+/// non-whitespace punctuation character. Digit-led tokens (numeric
+/// literals) are skipped, matching [`super::lexer::idents`].
+enum Tok<'a> {
+    Id { start: usize, text: &'a str },
+    Ch { pos: usize, c: char },
+}
+
+fn toks(code: &str) -> Vec<Tok<'_>> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+            out.push(Tok::Id { start, text: &code[start..i] });
+        } else if c.is_ascii_digit() {
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+        } else {
+            if !c.is_whitespace() {
+                out.push(Tok::Ch { pos: i, c });
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Which multi-line header construct the walk is inside, if any. The
+/// header's working data lives in [`Parser`] fields — keeping the enum
+/// data-free keeps every state transition a plain assignment.
+#[derive(PartialEq)]
+enum Mode {
+    Normal,
+    /// After `fn`, before its body `{` or a declaration-ending `;`.
+    FnHeader,
+    /// After `impl`, before the block `{`.
+    ImplHeader,
+    /// After `mod`, before `{` (inline) or `;` (out-of-line).
+    ModHeader,
+}
+
+struct Parser {
+    base_module: String,
+    file: String,
+    items: Vec<FnItem>,
+    depth: i32,
+    /// (depth the block body lives at, owner type) — innermost wins.
+    impl_stack: Vec<(i32, Option<String>)>,
+    /// (depth the block body lives at, mod name).
+    mod_stack: Vec<(i32, String)>,
+    /// (depth the body lives at, index into `items`).
+    fn_stack: Vec<(i32, usize)>,
+    mode: Mode,
+    // FnHeader working data
+    fn_name: Option<String>,
+    fn_sig_line: usize,
+    /// Paren/bracket depth inside the header, so `;` in `[u8; 4]` or a
+    /// nested fn-pointer parameter does not end it early.
+    fn_pb: i32,
+    fn_takes_self: bool,
+    // ImplHeader working data
+    impl_owner: Option<String>,
+    impl_angle: i32,
+    /// Set once `where` is seen: the self type is settled.
+    impl_done: bool,
+    // ModHeader working data
+    mod_name: Option<String>,
+}
+
+impl Parser {
+    fn module_here(&self) -> String {
+        let mut module = self.base_module.clone();
+        for (_, m) in &self.mod_stack {
+            if !module.is_empty() {
+                module.push_str("::");
+            }
+            module.push_str(m);
+        }
+        module
+    }
+
+    /// A `{` opened a fn body: record the item and push it on the stack.
+    fn open_fn(&mut self, lineno: usize, in_test: bool) {
+        self.depth += 1;
+        let name = self.fn_name.take().unwrap_or_else(|| "<fn>".to_string());
+        self.items.push(FnItem {
+            name,
+            owner: self.impl_stack.last().and_then(|(_, o)| o.clone()),
+            module: self.module_here(),
+            file: self.file.clone(),
+            span: (self.fn_sig_line, lineno),
+            in_test,
+            takes_self: self.fn_takes_self,
+            calls: Vec::new(),
+        });
+        self.fn_stack.push((self.depth, self.items.len() - 1));
+        self.mode = Mode::Normal;
+    }
+
+    /// A `}` in Normal mode: close whichever blocks live at this depth.
+    fn close_brace(&mut self, lineno: usize) {
+        if let Some(&(d, fn_idx)) = self.fn_stack.last() {
+            if d == self.depth {
+                self.items[fn_idx].span.1 = lineno;
+                self.fn_stack.pop();
+            }
+        }
+        if self.impl_stack.last().map(|&(d, _)| d) == Some(self.depth) {
+            self.impl_stack.pop();
+        }
+        if self.mod_stack.last().map(|&(d, _)| d) == Some(self.depth) {
+            self.mod_stack.pop();
+        }
+        self.depth -= 1;
+    }
+}
+
+/// Parse the `fn` items of one file. `ctx` supplies the code views and
+/// the `#[cfg(test)]` region map.
+pub(crate) fn parse_items(file: &str, ctx: &FileCtx) -> Vec<FnItem> {
+    let mut p = Parser {
+        base_module: module_of(file),
+        file: file.to_string(),
+        items: Vec::new(),
+        depth: 0,
+        impl_stack: Vec::new(),
+        mod_stack: Vec::new(),
+        fn_stack: Vec::new(),
+        mode: Mode::Normal,
+        fn_name: None,
+        fn_sig_line: 0,
+        fn_pb: 0,
+        fn_takes_self: false,
+        impl_owner: None,
+        impl_angle: 0,
+        impl_done: false,
+        mod_name: None,
+    };
+
+    for (lineno, line) in ctx.lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let bytes = code.as_bytes();
+        for tok in toks(code) {
+            match p.mode {
+                Mode::Normal => match tok {
+                    Tok::Id { start, text } => match text {
+                        "fn" => {
+                            p.mode = Mode::FnHeader;
+                            p.fn_name = None;
+                            p.fn_sig_line = lineno;
+                            p.fn_pb = 0;
+                            p.fn_takes_self = false;
+                        }
+                        "impl" => {
+                            p.mode = Mode::ImplHeader;
+                            p.impl_owner = None;
+                            p.impl_angle = 0;
+                            p.impl_done = false;
+                        }
+                        "mod" => {
+                            p.mode = Mode::ModHeader;
+                            p.mod_name = None;
+                        }
+                        _ => {
+                            if let Some(&(_, fn_idx)) = p.fn_stack.last() {
+                                if let Some(call) = call_at(code, start, text, lineno) {
+                                    p.items[fn_idx].calls.push(call);
+                                }
+                            }
+                        }
+                    },
+                    Tok::Ch { c: '{', .. } => p.depth += 1,
+                    Tok::Ch { c: '}', .. } => p.close_brace(lineno),
+                    Tok::Ch { .. } => {}
+                },
+                Mode::FnHeader => match tok {
+                    Tok::Id { text, .. } => {
+                        if p.fn_name.is_none() {
+                            p.fn_name = Some(text.to_string());
+                        } else if text == "self" && p.fn_pb >= 1 {
+                            p.fn_takes_self = true;
+                        }
+                    }
+                    Tok::Ch { c: '(', .. } | Tok::Ch { c: '[', .. } => p.fn_pb += 1,
+                    Tok::Ch { c: ')', .. } | Tok::Ch { c: ']', .. } => p.fn_pb -= 1,
+                    Tok::Ch { c: '{', .. } if p.fn_pb == 0 => {
+                        p.open_fn(lineno, ctx.in_test[p.fn_sig_line]);
+                    }
+                    Tok::Ch { c: ';', .. } if p.fn_pb == 0 => {
+                        // trait method declaration / extern fn: no body
+                        p.mode = Mode::Normal;
+                        p.fn_name = None;
+                    }
+                    Tok::Ch { c: '}', .. } if p.fn_pb == 0 => {
+                        // not a real fn header (e.g. an `fn(..)` pointer
+                        // type in a struct field): bail out and process
+                        // the brace normally so depth stays balanced
+                        p.mode = Mode::Normal;
+                        p.fn_name = None;
+                        p.close_brace(lineno);
+                    }
+                    Tok::Ch { .. } => {}
+                },
+                Mode::ImplHeader => match tok {
+                    Tok::Id { start, text } => {
+                        if text == "for" && p.impl_angle == 0 {
+                            // `impl Trait for Type`: the type wins
+                            p.impl_owner = None;
+                        } else if text == "where" {
+                            p.impl_done = true;
+                        } else if p.impl_angle == 0
+                            && !p.impl_done
+                            && p.impl_owner.is_none()
+                            && !(start > 0 && bytes[start - 1] == b'\'')
+                            && !matches!(text, "dyn" | "mut" | "const" | "unsafe" | "crate")
+                        {
+                            p.impl_owner = Some(text.to_string());
+                        }
+                    }
+                    Tok::Ch { c: '<', .. } => p.impl_angle += 1,
+                    Tok::Ch { c: '>', pos } => {
+                        // `->` only shows up in Fn-trait sugar; its `>` is
+                        // not an angle closer
+                        if !(pos > 0 && bytes[pos - 1] == b'-') {
+                            p.impl_angle -= 1;
+                        }
+                    }
+                    Tok::Ch { c: ':', .. } => {
+                        if p.impl_angle == 0 && !p.impl_done {
+                            // path-qualified self type (`impl a::b::Foo`):
+                            // clear so the final segment wins
+                            p.impl_owner = None;
+                        }
+                    }
+                    Tok::Ch { c: '{', .. } => {
+                        p.depth += 1;
+                        let owner = p.impl_owner.take();
+                        p.impl_stack.push((p.depth, owner));
+                        p.mode = Mode::Normal;
+                    }
+                    Tok::Ch { .. } => {}
+                },
+                Mode::ModHeader => match tok {
+                    Tok::Id { text, .. } => {
+                        if p.mod_name.is_none() {
+                            p.mod_name = Some(text.to_string());
+                        }
+                    }
+                    Tok::Ch { c: '{', .. } => {
+                        p.depth += 1;
+                        let name = p.mod_name.take().unwrap_or_default();
+                        p.mod_stack.push((p.depth, name));
+                        p.mode = Mode::Normal;
+                    }
+                    Tok::Ch { c: ';', .. } => {
+                        // out-of-line `mod x;` — that file carries it
+                        p.mode = Mode::Normal;
+                        p.mod_name = None;
+                    }
+                    Tok::Ch { .. } => {}
+                },
+            }
+        }
+    }
+    p.items
+}
+
+/// Classify the identifier at `start` as a call site, if it is one: the
+/// next non-space char must be `(` (or a `::<` turbofish leading to
+/// one), and the word must not be a keyword.
+fn call_at(code: &str, start: usize, word: &str, lineno: usize) -> Option<CallSite> {
+    if NON_CALL_WORDS.contains(&word) {
+        return None;
+    }
+    let after = code[start + word.len()..].trim_start();
+    if !(after.starts_with('(') || after.starts_with("::<")) {
+        return None;
+    }
+    let before = code[..start].trim_end();
+    if before.ends_with('.') {
+        return Some(CallSite {
+            line: lineno,
+            name: word.to_string(),
+            qualifier: None,
+            method: true,
+        });
+    }
+    if before.ends_with('\'') {
+        return None; // lifetime tick glued to the word: not a call
+    }
+    let qualifier = before.strip_suffix("::").and_then(|head| {
+        // the path segment before `::` — an owner type or module name.
+        // `<Foo as Trait>::bar(` leaves no ident here; the call then
+        // resolves by bare name, the conservative over-approximation.
+        let seg: String = head
+            .trim_end()
+            .chars()
+            .rev()
+            .take_while(|&c| is_ident_char(c))
+            .collect::<String>()
+            .chars()
+            .rev()
+            .collect();
+        if seg.is_empty() || seg.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            None
+        } else {
+            Some(seg)
+        }
+    });
+    Some(CallSite {
+        line: lineno,
+        name: word.to_string(),
+        qualifier,
+        method: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items_of(file: &str, src: &str) -> Vec<FnItem> {
+        let ctx = FileCtx::build(src);
+        parse_items(file, &ctx)
+    }
+
+    #[test]
+    fn module_paths_from_file_paths() {
+        assert_eq!(module_of("rust/src/coordinator/engine.rs"), "coordinator::engine");
+        assert_eq!(module_of("rust/src/nn/mod.rs"), "nn");
+        assert_eq!(module_of("rust/src/lib.rs"), "");
+        assert_eq!(module_of("examples/perf_decode.rs"), "perf_decode");
+        assert_eq!(module_of("src/tensor.rs"), "tensor");
+    }
+
+    #[test]
+    fn fn_spans_and_owners() {
+        let src = "\
+struct Foo;
+impl Foo {
+    fn a(&self) {
+        self.b();
+    }
+}
+fn free() {
+    Foo::a(&Foo);
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].name, "a");
+        assert_eq!(items[0].owner.as_deref(), Some("Foo"));
+        assert_eq!(items[0].span, (2, 4));
+        assert_eq!(items[1].name, "free");
+        assert_eq!(items[1].owner, None);
+        assert_eq!(items[1].span, (6, 8));
+        assert_eq!(items[1].calls.len(), 1);
+        assert_eq!(items[1].calls[0].qualifier.as_deref(), Some("Foo"));
+    }
+
+    #[test]
+    fn impl_trait_for_type_owner_is_the_type() {
+        let src = "\
+impl<'m> Backend for Session<'m> {
+    fn tick(&mut self) {}
+}
+impl<'m> Session<'m> {
+    fn own(&self) {}
+}
+impl fmt::Display for Rule {
+    fn fmt(&self) {}
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        assert_eq!(items[0].owner.as_deref(), Some("Session"));
+        assert_eq!(items[1].owner.as_deref(), Some("Session"));
+        assert_eq!(items[2].owner.as_deref(), Some("Rule"));
+    }
+
+    #[test]
+    fn generic_impl_owner_skips_type_params() {
+        let items = items_of(
+            "x/src/m.rs",
+            "impl<T: Clone> Wrapper<T> {\n    fn get(&self) {}\n}\n",
+        );
+        assert_eq!(items[0].owner.as_deref(), Some("Wrapper"));
+    }
+
+    #[test]
+    fn calls_inside_closures_attribute_to_the_enclosing_fn() {
+        let src = "\
+fn outer(p: &Pool) {
+    p.dispatch(|blk| {
+        inner(blk);
+    });
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        let names: Vec<&str> = items[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert!(names.contains(&"dispatch"));
+        assert!(names.contains(&"inner"));
+    }
+
+    #[test]
+    fn trait_declarations_without_bodies_are_not_items() {
+        let src = "\
+trait B {
+    fn vocab(&self) -> usize;
+    fn step(&mut self, buf: &mut [u8; 4]) -> Result<(), E>;
+    fn with_default(&self) -> usize {
+        self.vocab()
+    }
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].name, "with_default");
+        assert_eq!(items[0].span, (3, 5));
+    }
+
+    #[test]
+    fn inline_mod_blocks_extend_the_module_path() {
+        let src = "\
+pub mod inner {
+    pub fn check() {}
+}
+pub fn outer_level() {}
+";
+        let items = items_of("x/src/propcheck.rs", src);
+        assert_eq!(items[0].module, "propcheck::inner");
+        assert_eq!(items[1].module, "propcheck");
+    }
+
+    #[test]
+    fn macro_invocations_are_not_calls() {
+        let src = "fn f() {\n    vec![0.0; 4];\n    format!(\"x\");\n    real(1);\n}\n";
+        let items = items_of("x/src/m.rs", src);
+        let names: Vec<&str> = items[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["real"]);
+    }
+
+    #[test]
+    fn test_region_fns_are_marked() {
+        let src = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        prod();
+    }
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        assert!(!items[0].in_test);
+        assert!(items[1].in_test, "fn t is inside cfg(test)");
+    }
+
+    #[test]
+    fn method_and_qualified_calls_are_classified() {
+        let src = "fn f(s: &S) {\n    s.go(1);\n    util::help();\n    plain();\n}\n";
+        let items = items_of("x/src/m.rs", src);
+        let calls = &items[0].calls;
+        assert!(calls.iter().any(|c| c.name == "go" && c.method));
+        assert!(calls
+            .iter()
+            .any(|c| c.name == "help" && c.qualifier.as_deref() == Some("util")));
+        assert!(calls
+            .iter()
+            .any(|c| c.name == "plain" && !c.method && c.qualifier.is_none()));
+    }
+
+    #[test]
+    fn self_receivers_are_detected() {
+        let src = "\
+impl S {
+    fn method(&mut self, x: u32) {}
+    fn assoc(x: u32) {}
+}
+fn free(out: &mut Vec<u32>) {}
+";
+        let items = items_of("x/src/m.rs", src);
+        assert!(items[0].takes_self);
+        assert!(!items[1].takes_self);
+        assert!(!items[2].takes_self);
+    }
+
+    #[test]
+    fn nested_fns_attribute_calls_to_the_innermost() {
+        let src = "\
+fn outer() {
+    fn inner() {
+        deep();
+    }
+    shallow();
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        let outer = items.iter().find(|f| f.name == "outer").unwrap();
+        let inner = items.iter().find(|f| f.name == "inner").unwrap();
+        assert_eq!(outer.span, (0, 5));
+        assert_eq!(inner.span, (1, 3));
+        assert!(outer.calls.iter().any(|c| c.name == "shallow"));
+        assert!(outer.calls.iter().all(|c| c.name != "deep"));
+        assert!(inner.calls.iter().any(|c| c.name == "deep"));
+    }
+
+    #[test]
+    fn multiline_signatures_and_match_patterns() {
+        let src = "\
+fn f(
+    a: usize,
+    cb: impl Fn(usize) -> bool,
+) -> usize {
+    match probe(a) {
+        Some(x) => x,
+        None => 0,
+    }
+}
+";
+        let items = items_of("x/src/m.rs", src);
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].span, (0, 8));
+        // `Some(x)` / `None` patterns are not calls; `probe(a)` is
+        let names: Vec<&str> = items[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["probe"]);
+    }
+}

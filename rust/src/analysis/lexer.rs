@@ -132,7 +132,14 @@ pub fn split_source(src: &str) -> Vec<Line> {
             }
             State::Str => {
                 if c == '\\' {
-                    i += 2; // skip the escaped character
+                    // skip the escaped character — but a line-continuation
+                    // escape (`\` at end of line) must still emit the line
+                    // break, or every later line in the file would shift
+                    // by one and findings would point at the wrong code
+                    if chars.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
                 } else if c == '"' {
                     cur.code.push('"');
                     state = State::Code;
@@ -185,25 +192,43 @@ fn raw_string_closes(chars: &[char], i: usize, hashes: u32) -> bool {
 }
 
 /// If the `'` at `chars[i]` opens a char literal, return the index of the
-/// closing `'`. Otherwise (a lifetime like `'a` or `'static`) return None.
+/// closing `'`. Otherwise (a lifetime like `'a` or `<'static>`, a loop
+/// label like `'outer:`, or the anonymous `'_`) return None.
+///
+/// Rust's own disambiguation rule: `'X'` (any single char, closing quote
+/// right after) is a char literal; a tick followed by an identifier
+/// without that immediate closing quote is a lifetime/label. Earlier
+/// versions of this scanner got two edges wrong — `'\''` reported the
+/// *escaped* quote as the closing one (leaving a stray quote in the code
+/// view), and the escaped-literal lookahead ran across newlines, so a
+/// malformed tick could swallow a line boundary and shift every later
+/// finding's line number. Both are pinned by fixtures now.
 fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
     match chars.get(i + 1)? {
         '\\' => {
-            // escaped literal: scan forward to the closing quote (handles
-            // \n, \', \u{..}; bounded so a stray quote cannot run away)
-            let mut j = i + 2;
-            let limit = (i + 12).min(chars.len());
+            // escaped literal: the char after the backslash belongs to the
+            // escape (it may itself be a quote, as in '\''), then scan to
+            // the closing quote. Bounded — the longest escape is
+            // '\u{10FFFF}' — and never across a line break.
+            if chars.get(i + 2) == Some(&'\n') {
+                return None;
+            }
+            let mut j = i + 3;
+            let limit = (i + 13).min(chars.len());
             while j < limit {
-                if chars[j] == '\'' {
-                    return Some(j);
+                match chars[j] {
+                    '\'' => return Some(j),
+                    '\n' => return None,
+                    _ => j += 1,
                 }
-                j += 1;
             }
             None
         }
+        '\n' => None, // a tick at end of line is never a literal opener
         _ => {
-            // one-character literal: 'x'  (but `'a` followed by anything
-            // other than a quote is a lifetime)
+            // one-character literal: 'x'. A tick NOT closed two chars
+            // later is a lifetime or label (`'a`, `'static`, `'outer:`)
+            // and stays in the code view as-is.
             if chars.get(i + 2) == Some(&'\'') {
                 Some(i + 2)
             } else {
@@ -302,5 +327,81 @@ mod tests {
     fn ident_iterator_skips_numbers() {
         let toks: Vec<&str> = idents("foo(1.0f32, bar_2)").map(|(_, s)| s).collect();
         assert_eq!(toks, vec!["foo", "bar_2"]);
+    }
+
+    #[test]
+    fn lifetime_ticks_never_open_char_literals() {
+        // a battery of lifetime/label positions; in every case the code
+        // after the tick must survive into the code view (a misread tick
+        // would blank it as a literal body and hide findings)
+        for (src, keep) in [
+            ("fn f<'a>(x: &'a str) -> &'a str { x.trim() }\n", "trim()"),
+            ("struct S<'s> { field: &'s [f32] }\n", "[f32]"),
+            ("impl<'m> Iterator for It<'m> { fn next(&mut self) { self.go() } }\n", "go()"),
+            ("fn g<'static_like, T: 'static>(v: Vec<&'static_like T>) { v.len(); }\n", "len()"),
+            ("fn h(p: &'_ str) { p.len(); }\n", "len()"),
+            ("fn lanes<'a, 'b>(x: &'a u32, y: &'b u32) { use_them(x, y) }\n", "use_them"),
+            ("'outer: loop { break 'outer; }\n", "break"),
+            ("for<'de> fn deserialize(d: &'de str) { d.probe() }\n", "probe()"),
+        ] {
+            let lines = code_of(src);
+            let joined = lines.join("\n");
+            assert!(
+                joined.contains(keep),
+                "code view lost {keep:?} for {src:?}: {joined:?}"
+            );
+            // none of the inputs contain a char literal, so nothing may
+            // have been blanked to the literal placeholder
+            assert!(
+                !joined.contains("' '"),
+                "lifetime misread as char literal in {src:?}: {joined:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lifetime_heavy_line_keeps_trailing_violations_visible() {
+        // regression shape for the rule engine: a panicking call after a
+        // lifetime-rich signature must stay in the code view
+        let lines = code_of("fn f<'a>(x: &'a str) -> u32 { x.parse().unwrap() }\n");
+        assert!(lines[0].contains("unwrap"), "got {:?}", lines[0]);
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_ends_at_real_closing_quote() {
+        // `'\''` previously "closed" at the escaped quote, leaving the
+        // real closing quote behind as a stray in the code view
+        let lines = code_of("let q = '\\''; x.unwrap();\n");
+        assert!(lines[0].contains("unwrap"), "got {:?}", lines[0]);
+        assert!(
+            !lines[0].contains("''"),
+            "stray quote from mis-closed '\\'' literal: {:?}",
+            lines[0]
+        );
+        // and the other escapes still close where they should
+        for src in ["let c = '\\\\'; t()\n", "let c = '\\n'; t()\n", "let c = '\\u{10FFFF}'; t()\n"] {
+            let lines = code_of(src);
+            assert!(lines[0].contains("t()"), "{src:?} -> {:?}", lines[0]);
+        }
+    }
+
+    #[test]
+    fn char_escape_lookahead_never_crosses_a_line_break() {
+        // a malformed tick at end of line must not swallow the newline —
+        // that would shift every later line's number
+        let src = "let bad = '\\\nfn next_line() { x.unwrap() }\n";
+        let lines = split_source(src);
+        assert_eq!(lines.len(), 3, "line boundaries must be preserved");
+        assert!(lines[1].code.contains("unwrap"), "got {:?}", lines[1].code);
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_count() {
+        // `"...\` + newline is a string continuation; the escape skip must
+        // still emit the line break so later findings stay on their lines
+        let src = "let s = \"one \\\n two\";\nx.unwrap();\n";
+        let lines = split_source(src);
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].code.contains("unwrap"), "got {:?}", lines[2].code);
     }
 }

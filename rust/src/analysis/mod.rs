@@ -1,33 +1,68 @@
 //! `lintra analyze` — a repo-invariant static-analysis pass.
 //!
-//! Six PRs of engine growth rest on invariants that existed only as
-//! prose: the serving worker must never panic, pooled kernels must stay
-//! bitwise-identical to serial, every tunable resolves its env fallback
-//! in exactly one place, and `unsafe` is only as sound as its written
-//! justification. All of them are checkable by inspecting source text,
-//! so this module checks them — a lightweight lexer ([`lexer`]) feeding
-//! a line-oriented rule engine ([`rules`]), no external dependencies,
-//! run by CI as a hard gate (`lintra analyze --deny rust/src examples`).
+//! Seven PRs of engine growth rest on invariants that existed only as
+//! prose: the serving worker must never panic, the tick loop must do
+//! constant work per token (the paper's O(1) claim, operationalized),
+//! pooled kernels must stay bitwise-identical to serial, every tunable
+//! resolves its env fallback in exactly one place, and `unsafe` is only
+//! as sound as its written justification. All of them are checkable by
+//! inspecting source text, so this module checks them — a lightweight
+//! lexer ([`lexer`]) feeding an item parser ([`items`]) and a call
+//! graph ([`callgraph`]), driving a line-oriented rule engine
+//! ([`rules`]); no external dependencies, run by CI as a hard gate
+//! (`lintra analyze --deny --baseline analysis_baseline.json rust/src
+//! examples`).
 //!
 //! ## Rules
 //!
 //! | rule     | scope                          | forbids |
 //! |----------|--------------------------------|---------|
-//! | `panic`  | serving hot-path files         | `.unwrap()`, `.expect()`, panicking macros, range/computed slice indexing |
+//! | `panic`  | serving files (full rule) + tick-reachable fns everywhere (no indexing heuristic) | `.unwrap()`, `.expect()`, panicking macros; in serving files also range/computed slice indexing |
+//! | `alloc`  | tick-reachable fns             | `vec![..]`/`format!`, allocating constructors (`Vec::new`, `with_capacity`, …), `.collect()`/`.to_vec()`/…, growing `push` into unreserved locals |
 //! | `bitwise`| fns tagged `bitwise-critical`  | `mul_add`, unordered containers, multiple scalar accumulators |
 //! | `env`    | everywhere but config/parallel | `std::env::var` reads |
 //! | `safety` | everywhere                     | `unsafe` without an immediately preceding `SAFETY:` comment |
 //! | `lock`   | everywhere but parallel        | `.lock().unwrap()` / `.lock().expect()` |
 //!
-//! The hot-path file set for `panic` is the serving worker's transitive
-//! tick loop: `coordinator/{engine,server,batcher,sessions,state_cache}.rs`
-//! and `parallel.rs` (the dispatch path pooled kernels run on).
+//! ## Reachability
+//!
+//! Two closures are computed over the call graph, both conservative
+//! over-approximations (unresolvable calls fan out to every plausible
+//! in-crate target; see [`callgraph`]):
+//!
+//! * the **hot** closure — everything reachable from any function
+//!   defined in the serving file set ([`SERVING_FILES`]). By
+//!   construction it is a superset of what the hand-maintained file
+//!   list used to cover.
+//! * the **tick** closure — everything reachable from `run_engine`,
+//!   the engine worker's tick loop. A panic here kills the engine (the
+//!   connection threads are individually panic-proofed, the worker is
+//!   not), and an allocation here is per-token work; so the
+//!   interprocedural `panic` extension and the `alloc` rule scope to
+//!   this closure. This is how a panicking or allocating helper in
+//!   `tensor.rs` or `nn/mod.rs`, invisible to a file list, becomes a
+//!   finding.
+//!
+//! ## Baseline gating
+//!
+//! The `alloc` rule lands on a codebase with ~a hundred pre-existing
+//! allocation sites, so findings diff against a committed baseline
+//! ([`Baseline`], `analysis_baseline.json`): a finding matching a
+//! baseline entry (by path/rule/message — line numbers excluded, so
+//! unrelated edits don't invalidate it) is *suppressed debt*; anything
+//! beyond the baseline is *fresh* and fails `--deny`. Fixing debt shows
+//! up as *resolved* entries; regenerate with `--write-baseline` to
+//! ratchet the file down.
 //!
 //! Suppression: an inline comment `lintra: allow(<rule>) -- <reason>`
 //! (reason mandatory — a bare allow is itself reported). `#[cfg(test)]`
 //! regions are skipped entirely: the invariants guard production code,
-//! and tests deliberately poison locks and index out of bounds.
+//! and tests deliberately poison locks, allocate, and index out of
+//! bounds.
 
+mod baseline;
+mod callgraph;
+mod items;
 pub mod lexer;
 mod rules;
 
@@ -36,14 +71,17 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Context;
 
-use rules::FileCtx;
+pub use baseline::{Baseline, BaselineDiff};
+use rules::{FileCtx, FnScope};
 
 /// The rules `lintra analyze` enforces. `Pragma` is a meta-rule for
 /// malformed suppressions and cannot itself be suppressed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Rule {
-    /// Panicking constructs in serving hot-path files.
+    /// Panicking constructs in serving files / tick-reachable fns.
     Panic,
+    /// Heap allocation inside tick-reachable fns.
+    Alloc,
     /// Numeric-determinism hygiene in tagged kernels.
     Bitwise,
     /// `std::env::var` outside the config/parallel resolvers.
@@ -60,6 +98,7 @@ impl Rule {
     pub fn slug(self) -> &'static str {
         match self {
             Rule::Panic => "panic",
+            Rule::Alloc => "alloc",
             Rule::Bitwise => "bitwise",
             Rule::Env => "env",
             Rule::Safety => "safety",
@@ -71,6 +110,7 @@ impl Rule {
     pub fn from_slug(s: &str) -> Option<Rule> {
         Some(match s {
             "panic" => Rule::Panic,
+            "alloc" => Rule::Alloc,
             "bitwise" => Rule::Bitwise,
             "env" => Rule::Env,
             "safety" => Rule::Safety,
@@ -103,11 +143,10 @@ impl fmt::Display for Finding {
     }
 }
 
-/// Serving hot-path files: rule `panic` applies only to these. Matched
-/// by path suffix at a `/` boundary, so `tensor.rs` (which has sized
-/// asserts by design) is out while every file the engine tick loop can
-/// reach is in.
-const HOT_PATH_FILES: &[&str] = &[
+/// Serving files: the full `panic` rule (including the fallible-indexing
+/// heuristic) applies file-wide here, and every function defined here
+/// roots the hot closure. Matched by path suffix at a `/` boundary.
+pub const SERVING_FILES: &[&str] = &[
     "coordinator/engine.rs",
     "coordinator/server.rs",
     "coordinator/batcher.rs",
@@ -116,61 +155,163 @@ const HOT_PATH_FILES: &[&str] = &[
     "parallel.rs",
 ];
 
+/// The function whose body is the engine tick loop; the tick closure is
+/// everything reachable from fns with this name.
+const TICK_ROOT: &str = "run_engine";
+
 /// Files whose job is env resolution (rule `env` allowlist).
 const ENV_FILES: &[&str] = &["config.rs", "parallel.rs"];
 
 /// Home of the approved lock wrapper (rule `lock` allowlist).
 const LOCK_FILES: &[&str] = &["parallel.rs"];
 
-fn path_matches(path: &str, suffix: &str) -> bool {
+pub(crate) fn path_matches(path: &str, suffix: &str) -> bool {
     let p = path.replace('\\', "/");
     p == suffix || p.ends_with(&format!("/{suffix}"))
 }
 
-fn in_set(path: &str, set: &[&str]) -> bool {
+pub(crate) fn in_set(path: &str, set: &[&str]) -> bool {
     set.iter().any(|s| path_matches(path, s))
 }
 
-/// Analyze one file's source text. `path` determines which file-scoped
-/// rules apply (hot-path, env allowlist, lock allowlist); findings carry
-/// it verbatim.
+/// What the interprocedural pass computed: closure sizes and members,
+/// for reporting and for tests pinning coverage.
+#[derive(Debug, Clone)]
+pub struct ScopeSummary {
+    /// Total non-test `fn` items parsed.
+    pub fn_count: usize,
+    /// Hot closure (reachable from any serving-file fn): sorted
+    /// `(file, fn name)` pairs.
+    pub hot_fns: Vec<(String, String)>,
+    /// Tick closure (reachable from `run_engine`): sorted pairs.
+    pub tick_fns: Vec<(String, String)>,
+    /// Call sites with no in-crate target (external or dynamic) —
+    /// reported so a resolver regression is visible as a count swing.
+    pub unresolved_calls: usize,
+}
+
+impl ScopeSummary {
+    /// Is `(file, fn)` in the tick closure? Suffix-tolerant on the file.
+    pub fn tick_contains(&self, file: &str, name: &str) -> bool {
+        self.tick_fns
+            .iter()
+            .any(|(f, n)| n == name && (path_matches(f, file) || path_matches(file, f)))
+    }
+
+    /// Is `(file, fn)` in the hot closure? Suffix-tolerant on the file.
+    pub fn hot_contains(&self, file: &str, name: &str) -> bool {
+        self.hot_fns
+            .iter()
+            .any(|(f, n)| n == name && (path_matches(f, file) || path_matches(file, f)))
+    }
+}
+
+/// Result of an analysis run: findings plus the computed scope.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub scope: ScopeSummary,
+}
+
+/// Analyze a set of files given as `(path, source)` pairs. The call
+/// graph spans all of them, so cross-file reachability works exactly as
+/// it does for an on-disk tree; tests use this to build multi-file
+/// fixtures in memory.
+pub fn analyze_sources(files: &[(String, String)]) -> Analysis {
+    let mut ctxs: Vec<(&str, FileCtx)> = Vec::with_capacity(files.len());
+    let mut all_items = Vec::new();
+    for (path, src) in files {
+        let ctx = FileCtx::build(src);
+        all_items.extend(items::parse_items(path, &ctx));
+        ctxs.push((path.as_str(), ctx));
+    }
+    let graph = callgraph::CallGraph::build(all_items);
+    let hot = graph.reachable(&graph.roots_in_files(SERVING_FILES));
+    let tick = graph.reachable(&graph.roots_named(TICK_ROOT));
+
+    // tick-closure fn body ranges, grouped per file
+    let mut tick_scopes: std::collections::HashMap<&str, Vec<FnScope<'_>>> =
+        std::collections::HashMap::new();
+    for &i in &tick {
+        let f = &graph.fns[i];
+        tick_scopes.entry(f.file.as_str()).or_default().push(FnScope {
+            name: f.name.as_str(),
+            start: f.span.0,
+            end: f.span.1,
+        });
+    }
+
+    let mut findings = Vec::new();
+    for (path, ctx) in &ctxs {
+        if in_set(path, SERVING_FILES) {
+            rules::check_panic(ctx, path, &mut findings);
+        } else if let Some(scopes) = tick_scopes.get(path) {
+            rules::check_panic_reachable(ctx, path, scopes, &mut findings);
+        }
+        if let Some(scopes) = tick_scopes.get(path) {
+            rules::check_alloc(ctx, path, scopes, &mut findings);
+        }
+        rules::check_bitwise(ctx, path, &mut findings);
+        if !in_set(path, ENV_FILES) {
+            rules::check_env(ctx, path, &mut findings);
+        }
+        rules::check_safety(ctx, path, &mut findings);
+        if !in_set(path, LOCK_FILES) {
+            rules::check_lock(ctx, path, &mut findings);
+        }
+        rules::check_pragmas(ctx, path, &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule, a.message.as_str())
+            .cmp(&(b.path.as_str(), b.line, b.rule, b.message.as_str()))
+    });
+
+    let pair = |i: &usize| {
+        (
+            graph.fns[*i].file.clone(),
+            graph.fns[*i].name.clone(),
+        )
+    };
+    let mut hot_fns: Vec<(String, String)> = hot.iter().map(pair).collect();
+    let mut tick_fns: Vec<(String, String)> = tick.iter().map(pair).collect();
+    hot_fns.sort();
+    tick_fns.sort();
+    Analysis {
+        findings,
+        scope: ScopeSummary {
+            fn_count: graph.fns.iter().filter(|f| !f.in_test).count(),
+            hot_fns,
+            tick_fns,
+            unresolved_calls: graph.unresolved_calls,
+        },
+    }
+}
+
+/// Analyze one file's source text (single-file view: reachability roots
+/// only exist if this file itself defines them). Findings carry `path`
+/// verbatim.
 pub fn analyze_source(path: &str, src: &str) -> Vec<Finding> {
-    let ctx = FileCtx::build(src);
-    let mut out = Vec::new();
-    if in_set(path, HOT_PATH_FILES) {
-        rules::check_panic(&ctx, path, &mut out);
-    }
-    rules::check_bitwise(&ctx, path, &mut out);
-    if !in_set(path, ENV_FILES) {
-        rules::check_env(&ctx, path, &mut out);
-    }
-    rules::check_safety(&ctx, path, &mut out);
-    if !in_set(path, LOCK_FILES) {
-        rules::check_lock(&ctx, path, &mut out);
-    }
-    rules::check_pragmas(&ctx, path, &mut out);
-    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    out
+    analyze_sources(&[(path.to_string(), src.to_string())]).findings
 }
 
 /// Analyze every `.rs` file under the given paths (files or directories,
-/// walked recursively in sorted order). Returns all findings sorted by
-/// path and line.
-pub fn analyze_paths<P: AsRef<Path>>(paths: &[P]) -> crate::Result<Vec<Finding>> {
+/// walked recursively in sorted order). The call graph spans the whole
+/// set.
+pub fn analyze_paths<P: AsRef<Path>>(paths: &[P]) -> crate::Result<Analysis> {
     let mut files: Vec<PathBuf> = Vec::new();
     for p in paths {
         collect_rs_files(p.as_ref(), &mut files)?;
     }
     files.sort();
     files.dedup();
-    let mut out = Vec::new();
+    let mut sources: Vec<(String, String)> = Vec::with_capacity(files.len());
     for f in &files {
         let src = std::fs::read_to_string(f)
             .with_context(|| format!("reading {}", f.display()))?;
         let name = f.to_string_lossy().replace('\\', "/");
-        out.extend(analyze_source(&name, &src));
+        sources.push((name, src));
     }
-    Ok(out)
+    Ok(analyze_sources(&sources))
 }
 
 fn collect_rs_files(p: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
@@ -200,20 +341,101 @@ fn collect_rs_files(p: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
     Ok(())
 }
 
-/// Render findings for the CLI: one line per finding plus a summary.
-pub fn report(findings: &[Finding]) -> String {
+/// Render an analysis for the CLI: one line per finding plus summary
+/// lines (and the baseline verdict, when one was applied).
+pub fn report(a: &Analysis, diff: Option<&BaselineDiff>) -> String {
     let mut s = String::new();
-    for f in findings {
+    let shown: Vec<&Finding> = match diff {
+        Some(d) => d.fresh.iter().collect(),
+        None => a.findings.iter().collect(),
+    };
+    for f in &shown {
         s.push_str(&f.to_string());
         s.push('\n');
     }
     let files: std::collections::BTreeSet<&str> =
-        findings.iter().map(|f| f.path.as_str()).collect();
+        shown.iter().map(|f| f.path.as_str()).collect();
     s.push_str(&format!(
         "analyze: {} finding(s) in {} file(s)\n",
-        findings.len(),
+        shown.len(),
         files.len()
     ));
+    s.push_str(&format!(
+        "scope: {} fns; hot closure {} fns; tick closure {} fns; {} unresolved call sites\n",
+        a.scope.fn_count,
+        a.scope.hot_fns.len(),
+        a.scope.tick_fns.len(),
+        a.scope.unresolved_calls
+    ));
+    if let Some(d) = diff {
+        s.push_str(&format!(
+            "baseline: {} suppressed, {} fresh, {} resolved\n",
+            d.suppressed,
+            d.fresh.len(),
+            d.resolved.len()
+        ));
+        for r in &d.resolved {
+            s.push_str(&format!("baseline entry resolved (ratchet it down): {r}\n"));
+        }
+    }
+    s
+}
+
+/// Render an analysis (plus optional baseline verdict) as JSON for
+/// `--format json` / the CI artifact. Deterministic: object keys are
+/// sorted (BTreeMap) and findings are pre-sorted.
+pub fn to_json(a: &Analysis, diff: Option<&BaselineDiff>) -> String {
+    use crate::json::{obj, Json};
+    let findings: Vec<Json> = a
+        .findings
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("path", Json::from(f.path.as_str())),
+                ("line", Json::from(f.line)),
+                ("rule", Json::from(f.rule.slug())),
+                ("message", Json::from(f.message.as_str())),
+            ])
+        })
+        .collect();
+    let mut by_rule: std::collections::BTreeMap<String, Json> = Default::default();
+    for f in &a.findings {
+        let e = by_rule.entry(f.rule.slug().to_string()).or_insert(Json::Num(0.0));
+        if let Json::Num(n) = e {
+            *n += 1.0;
+        }
+    }
+    let mut root = vec![
+        ("findings", Json::Arr(findings)),
+        (
+            "summary",
+            obj(vec![
+                ("total", Json::from(a.findings.len())),
+                ("by_rule", Json::Obj(by_rule)),
+            ]),
+        ),
+        (
+            "scope",
+            obj(vec![
+                ("fns", Json::from(a.scope.fn_count)),
+                ("hot_fns", Json::from(a.scope.hot_fns.len())),
+                ("tick_fns", Json::from(a.scope.tick_fns.len())),
+                ("unresolved_calls", Json::from(a.scope.unresolved_calls)),
+            ]),
+        ),
+    ];
+    if let Some(d) = diff {
+        root.push((
+            "baseline",
+            obj(vec![
+                ("suppressed", Json::from(d.suppressed)),
+                ("fresh", Json::from(d.fresh.len())),
+                ("resolved", Json::from(d.resolved.len())),
+            ]),
+        ));
+    }
+    let mut s = obj(root).to_string();
+    s.push('\n');
     s
 }
 
@@ -222,17 +444,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn hot_path_suffix_matching() {
-        assert!(in_set("rust/src/coordinator/engine.rs", HOT_PATH_FILES));
-        assert!(in_set("rust/src/parallel.rs", HOT_PATH_FILES));
+    fn serving_suffix_matching() {
+        assert!(in_set("rust/src/coordinator/engine.rs", SERVING_FILES));
+        assert!(in_set("rust/src/parallel.rs", SERVING_FILES));
         // suffix must sit at a path-component boundary
-        assert!(!in_set("rust/src/data_parallel.rs", HOT_PATH_FILES));
-        assert!(!in_set("rust/src/tensor.rs", HOT_PATH_FILES));
+        assert!(!in_set("rust/src/data_parallel.rs", SERVING_FILES));
+        assert!(!in_set("rust/src/tensor.rs", SERVING_FILES));
     }
 
     #[test]
     fn rule_slug_roundtrip() {
-        for r in [Rule::Panic, Rule::Bitwise, Rule::Env, Rule::Safety, Rule::Lock] {
+        for r in [
+            Rule::Panic,
+            Rule::Alloc,
+            Rule::Bitwise,
+            Rule::Env,
+            Rule::Safety,
+            Rule::Lock,
+        ] {
             assert_eq!(Rule::from_slug(r.slug()), Some(r));
         }
         assert_eq!(Rule::from_slug("pragma"), None, "meta-rule is not suppressible");
@@ -242,5 +471,104 @@ mod tests {
     fn clean_file_has_no_findings() {
         let src = "fn main() {\n    let x = 1 + 2;\n    println!(\"{x}\");\n}\n";
         assert!(analyze_source("rust/src/coordinator/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tick_reachable_helper_outside_serving_files_is_found() {
+        // the PR 7 blind spot: a panicking, allocating helper in a
+        // kernel file, called (transitively) from the tick loop
+        let files = vec![
+            (
+                "rust/src/coordinator/engine.rs".to_string(),
+                "pub fn run_engine() {\n    crate::tensor::helper(1);\n}\n".to_string(),
+            ),
+            (
+                "rust/src/tensor.rs".to_string(),
+                "pub fn helper(x: u32) {\n    let v = vec![0.0; 4];\n    v.first().unwrap();\n}\n"
+                    .to_string(),
+            ),
+        ];
+        let a = analyze_sources(&files);
+        assert!(a.scope.tick_contains("tensor.rs", "helper"));
+        assert!(a
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::Panic && f.path.ends_with("tensor.rs")));
+        assert!(a
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::Alloc && f.path.ends_with("tensor.rs")));
+    }
+
+    #[test]
+    fn unreachable_helper_gets_no_interprocedural_findings() {
+        let files = vec![
+            (
+                "rust/src/coordinator/engine.rs".to_string(),
+                "pub fn run_engine() {\n    let t = 1 + 1;\n}\n".to_string(),
+            ),
+            (
+                "rust/src/tensor.rs".to_string(),
+                "pub fn cold(x: u32) {\n    let v = vec![0.0; 4];\n    v.first().unwrap();\n}\n"
+                    .to_string(),
+            ),
+        ];
+        let a = analyze_sources(&files);
+        assert!(!a.scope.tick_contains("tensor.rs", "cold"));
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn hot_closure_contains_every_serving_file_fn() {
+        let files = vec![
+            (
+                "rust/src/coordinator/server.rs".to_string(),
+                "pub fn handle_conn() {}\n".to_string(),
+            ),
+            (
+                "rust/src/coordinator/engine.rs".to_string(),
+                "pub fn run_engine() {}\n".to_string(),
+            ),
+        ];
+        let a = analyze_sources(&files);
+        assert!(a.scope.hot_contains("coordinator/server.rs", "handle_conn"));
+        assert!(a.scope.hot_contains("coordinator/engine.rs", "run_engine"));
+        // tick closure is the narrower set
+        assert!(!a.scope.tick_contains("coordinator/server.rs", "handle_conn"));
+    }
+
+    #[test]
+    fn allow_alloc_pragma_suppresses() {
+        let files = vec![(
+            "rust/src/coordinator/engine.rs".to_string(),
+            "pub fn run_engine() {\n    // lintra: allow(alloc) -- one-time setup\n    let v: Vec<u32> = Vec::new();\n}\n"
+                .to_string(),
+        )];
+        let a = analyze_sources(&files);
+        assert!(
+            a.findings.iter().all(|f| f.rule != Rule::Alloc),
+            "{:?}",
+            a.findings
+        );
+    }
+
+    #[test]
+    fn json_rendering_is_parseable_and_counts_match() {
+        let files = vec![(
+            "rust/src/coordinator/engine.rs".to_string(),
+            "pub fn run_engine() {\n    let v: Vec<u32> = Vec::new();\n}\n".to_string(),
+        )];
+        let a = analyze_sources(&files);
+        assert_eq!(a.findings.len(), 1);
+        let js = to_json(&a, None);
+        let v = crate::json::Json::parse(&js).expect("analysis json must parse");
+        assert_eq!(
+            v.get("summary").unwrap().get("total").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            v.get("findings").unwrap().as_arr().unwrap().len(),
+            1
+        );
     }
 }

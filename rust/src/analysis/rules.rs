@@ -456,6 +456,177 @@ pub(crate) fn check_lock(ctx: &FileCtx, path: &str, out: &mut Vec<Finding>) {
     }
 }
 
+/// A tick-reachable function's body range inside one file, as computed
+/// by [`super::callgraph`]: the scope the interprocedural rules
+/// ([`check_panic_reachable`], [`check_alloc`]) apply to.
+pub(crate) struct FnScope<'a> {
+    pub name: &'a str,
+    /// Inclusive 0-based line range (signature through closing brace).
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Interprocedural extension of rule `panic`: panicking constructs
+/// (`.unwrap()` / `.expect(..)` / panicking macros — not the indexing
+/// heuristic, which stays file-scoped) inside functions the engine tick
+/// loop reaches *outside* the serving file set. A panic here unwinds the
+/// engine worker exactly like one in `engine.rs` would; the call graph
+/// is what makes a helper in `tensor.rs` or `nn/mod.rs` visible.
+pub(crate) fn check_panic_reachable(
+    ctx: &FileCtx,
+    path: &str,
+    fns: &[FnScope],
+    out: &mut Vec<Finding>,
+) {
+    const MACROS: [&str; 4] = ["panic", "todo", "unimplemented", "unreachable"];
+    let mut seen = vec![false; ctx.lines.len()];
+    for scope in fns {
+        for i in scope.start..=scope.end.min(ctx.lines.len().saturating_sub(1)) {
+            if seen[i] || ctx.in_test[i] || ctx.allowed(i, Rule::Panic) {
+                continue;
+            }
+            seen[i] = true;
+            let code = &ctx.lines[i].code;
+            for (start, id) in idents(code) {
+                let before = code[..start].trim_end().chars().next_back();
+                let after = code[start + id.len()..].trim_start().chars().next();
+                if (id == "unwrap" || id == "expect") && before == Some('.') && after == Some('(')
+                {
+                    push(
+                        out,
+                        path,
+                        i,
+                        Rule::Panic,
+                        format!(".{id}() in tick-reachable fn `{}`", scope.name),
+                    );
+                }
+                if MACROS.contains(&id) && after == Some('!') {
+                    push(
+                        out,
+                        path,
+                        i,
+                        Rule::Panic,
+                        format!("{id}! in tick-reachable fn `{}`", scope.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Heap-allocating types whose constructors the `alloc` rule flags.
+const ALLOC_TYPES: [&str; 8] = [
+    "Vec", "VecDeque", "String", "Box", "HashMap", "HashSet", "BTreeMap", "BTreeSet",
+];
+
+/// Allocating constructors flagged on qualified form (`Vec::new(..)`).
+const ALLOC_CTORS: [&str; 3] = ["new", "with_capacity", "from"];
+
+/// Allocating method calls (`.collect()`, `.to_vec()`, ...).
+const ALLOC_METHODS: [&str; 4] = ["to_vec", "to_owned", "to_string", "collect"];
+
+/// Rule `alloc`: allocation constructs inside tick-reachable functions.
+/// The paper's constant-per-token claim only survives serving if the
+/// tick loop does constant work per token; a `Vec::new` or `format!` on
+/// the tick path is a per-token heap round-trip the type system will
+/// never surface. Flags: `vec![..]` / `format!(..)`, allocating
+/// constructors on the container types, allocating method calls, and
+/// growing `push`/`push_str` into locals declared with an empty
+/// constructor in the same fn. Buffer *reuse* (`clear` + `resize`,
+/// `extend_from_slice` into a caller-owned buffer) is deliberately not
+/// flagged — that is the sanctioned fix.
+pub(crate) fn check_alloc(ctx: &FileCtx, path: &str, fns: &[FnScope], out: &mut Vec<Finding>) {
+    let mut seen = vec![false; ctx.lines.len()];
+    for scope in fns {
+        let hi = scope.end.min(ctx.lines.len().saturating_sub(1));
+        // locals declared with an empty growable constructor in this fn
+        let mut grow_locals: Vec<String> = Vec::new();
+        for i in scope.start..=hi {
+            let flat = despace(&ctx.lines[i].code);
+            if let Some(pos) = flat.find("letmut") {
+                let name: String = flat[pos + "letmut".len()..]
+                    .chars()
+                    .take_while(|&c| is_ident_char(c))
+                    .collect();
+                let rest = &flat[pos + "letmut".len() + name.len()..];
+                let empty_ctor = rest.starts_with("=Vec::new()")
+                    || rest.starts_with("=String::new()")
+                    || rest.starts_with(":Vec<") && rest.contains("=Vec::new()")
+                    || rest.starts_with(":String=String::new()");
+                if !name.is_empty() && empty_ctor && !grow_locals.contains(&name) {
+                    grow_locals.push(name);
+                }
+            }
+        }
+        for i in scope.start..=hi {
+            if seen[i] || ctx.in_test[i] || ctx.allowed(i, Rule::Alloc) {
+                continue;
+            }
+            seen[i] = true;
+            let code = &ctx.lines[i].code;
+            let flat = despace(code);
+            for (start, id) in idents(code) {
+                let before = code[..start].trim_end().chars().next_back();
+                let after = code[start + id.len()..].trim_start().chars().next();
+                if (id == "vec" || id == "format") && after == Some('!') && before != Some('.') {
+                    push(
+                        out,
+                        path,
+                        i,
+                        Rule::Alloc,
+                        format!("{id}! allocates in tick-reachable fn `{}`", scope.name),
+                    );
+                }
+                // `(` directly, or a `::<..>(` turbofish as in
+                // `.collect::<Vec<_>>()`
+                if ALLOC_METHODS.contains(&id)
+                    && before == Some('.')
+                    && (after == Some('(') || after == Some(':'))
+                {
+                    push(
+                        out,
+                        path,
+                        i,
+                        Rule::Alloc,
+                        format!(".{id}() allocates in tick-reachable fn `{}`", scope.name),
+                    );
+                }
+            }
+            for ty in ALLOC_TYPES {
+                for ctor in ALLOC_CTORS {
+                    if contains_bounded(&flat, &format!("{ty}::{ctor}(")) {
+                        push(
+                            out,
+                            path,
+                            i,
+                            Rule::Alloc,
+                            format!(
+                                "{ty}::{ctor} allocates in tick-reachable fn `{}`",
+                                scope.name
+                            ),
+                        );
+                    }
+                }
+            }
+            for name in &grow_locals {
+                if flat.contains(&format!("{name}.push(")) || flat.contains(&format!("{name}.push_str("))
+                {
+                    push(
+                        out,
+                        path,
+                        i,
+                        Rule::Alloc,
+                        format!(
+                            "growing push into unreserved local `{name}` in tick-reachable fn `{}`",
+                            scope.name
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
 fn push(out: &mut Vec<Finding>, path: &str, line0: usize, rule: Rule, message: String) {
     out.push(Finding {
         path: path.to_string(),

@@ -260,11 +260,13 @@ pub trait DecodeBackend {
 
     /// Advance the first `tokens.len()` lanes by one token (`tokens[r]`
     /// feeds lane r), leaving lanes `tokens.len()..lanes()` untouched —
-    /// the engine parks mid-prefill lanes there. Returns logits
-    /// `[tokens.len() * vocab]` row-major. Backends reporting
+    /// the engine parks mid-prefill lanes there. Fills `logits` with
+    /// `[tokens.len() * vocab]` row-major values, replacing its previous
+    /// contents — the engine keeps one buffer alive across ticks so the
+    /// steady-state decode loop allocates nothing. Backends reporting
     /// [`Self::supports_prefill`] `== false` never see a partial width
     /// and may require `tokens.len() == lanes()`.
-    fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>>;
+    fn step_batch(&mut self, tokens: &[u32], logits: &mut Vec<f32>) -> anyhow::Result<()>;
 
     /// True if [`Self::prefill_partial`] ingests prompts chunk by chunk.
     fn supports_prefill(&self) -> bool {
@@ -284,21 +286,25 @@ pub trait DecodeBackend {
     /// Resumable prefill hook: absorb `chunk` — the next slice of a
     /// prompt — into lane `lane`'s state, continuing from the lane's
     /// current position. `finish` marks the slice carrying the final
-    /// prompt token; only that call returns logits (`Some([vocab])`, what
-    /// the first generated token is sampled from) — interior slices skip
-    /// the vocab-sized lm-head entirely and return `None`. Slicing must
-    /// not change results: any chunking of a prompt, including one-shot,
-    /// must produce bit-identical state and logits. Only invoked when
-    /// [`Self::supports_prefill`] reports true; the default is a hard
-    /// error so backends without the path fall back to per-tick prompt
-    /// feeding in the engine.
+    /// prompt token; only that call produces logits — it fills `logits`
+    /// with `[vocab]` values (previous contents replaced; what the first
+    /// generated token is sampled from) and returns `Ok(true)`. Interior
+    /// slices skip the vocab-sized lm-head entirely, leave `logits`
+    /// cleared, and return `Ok(false)`. The engine keeps one `logits`
+    /// buffer alive across chunks, so steady-state prefill allocates
+    /// nothing. Slicing must not change results: any chunking of a
+    /// prompt, including one-shot, must produce bit-identical state and
+    /// logits. Only invoked when [`Self::supports_prefill`] reports
+    /// true; the default is a hard error so backends without the path
+    /// fall back to per-tick prompt feeding in the engine.
     fn prefill_partial(
         &mut self,
         lane: usize,
         chunk: &[u32],
         finish: bool,
-    ) -> anyhow::Result<Option<Vec<f32>>> {
-        let _ = (lane, chunk, finish);
+        logits: &mut Vec<f32>,
+    ) -> anyhow::Result<bool> {
+        let _ = (lane, chunk, finish, logits);
         anyhow::bail!("this backend has no prefill path")
     }
 
@@ -365,8 +371,9 @@ impl DecodeBackend for BatchedDecodeSession<'_> {
         self.free_row(lane)
     }
 
-    fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
-        Ok(BatchedDecodeSession::step_batch(self, tokens))
+    fn step_batch(&mut self, tokens: &[u32], logits: &mut Vec<f32>) -> anyhow::Result<()> {
+        BatchedDecodeSession::step_batch_into(self, tokens, logits);
+        Ok(())
     }
 
     fn supports_prefill(&self) -> bool {
@@ -382,8 +389,9 @@ impl DecodeBackend for BatchedDecodeSession<'_> {
         lane: usize,
         chunk: &[u32],
         finish: bool,
-    ) -> anyhow::Result<Option<Vec<f32>>> {
-        Ok(self.prefill_row_partial(lane, chunk, finish))
+        logits: &mut Vec<f32>,
+    ) -> anyhow::Result<bool> {
+        Ok(self.prefill_row_partial_into(lane, chunk, finish, logits))
     }
 
     fn swap_lanes(&mut self, a: usize, b: usize) {
@@ -446,13 +454,22 @@ fn run_engine<B: DecodeBackend>(
     // n_dec..len are mid-prefill (advanced chunkwise, excluded from the
     // decode step and from sampling). On backends without a prefill path
     // the suffix is always empty (n_dec == lane_slots.len()).
-    let mut lane_slots: Vec<usize> = Vec::with_capacity(max_batch);
+    let mut lane_slots: Vec<usize> = Vec::with_capacity(max_batch); // lintra: allow(alloc) -- one-time setup before the tick loop
     let mut n_dec: usize = 0;
     let mut responders: std::collections::HashMap<u64, Sender<GenerateResponse>> =
-        std::collections::HashMap::new();
+        std::collections::HashMap::new(); // lintra: allow(alloc) -- one-time setup before the tick loop
     let mut rng = Rng::new(cfg.seed);
     let mut shutdown = false;
-    let mut tokens: Vec<u32> = Vec::with_capacity(max_batch);
+    let mut tokens: Vec<u32> = Vec::with_capacity(max_batch); // lintra: allow(alloc) -- one-time setup before the tick loop
+    // Per-tick scratch, hoisted out of the loop: the steady-state tick
+    // reuses these buffers instead of reallocating them every iteration
+    // (the `alloc` analysis rule gates regressions here). Logits buffers
+    // are filled by clear-then-resize, so reuse is bit-identical to a
+    // fresh allocation.
+    let mut retired: Vec<(SlotInfo, Duration)> = Vec::new(); // lintra: allow(alloc) -- hoisted scratch, allocated once
+    let mut finished_lanes: Vec<usize> = Vec::new(); // lintra: allow(alloc) -- hoisted scratch, allocated once
+    let mut decode_logits: Vec<f32> = Vec::new(); // lintra: allow(alloc) -- hoisted scratch, allocated once
+    let mut prefill_logits: Vec<f32> = Vec::new(); // lintra: allow(alloc) -- hoisted scratch, allocated once
     let vocab = backend.vocab();
     let max_len = backend.max_len();
     let prefill_chunk = backend.prefill_chunk().max(1);
@@ -670,7 +687,7 @@ fn run_engine<B: DecodeBackend>(
         let mut tick_tokens = 0u64;
         let mut tick_chunks = 0u64;
         let mut tick_prompt_tokens = 0u64;
-        let mut retired: Vec<(SlotInfo, Duration)> = Vec::new();
+        debug_assert!(retired.is_empty(), "retired slots are drained every tick");
 
         // 3. prefill phase: every mid-prefill lane ingests at most
         // `prefill_chunks_per_tick` chunks, and the tick as a whole at
@@ -692,7 +709,7 @@ fn run_engine<B: DecodeBackend>(
         let mut lane = n_dec;
         'suffix: while lane < lane_slots.len() {
             let slot = lane_slots[lane];
-            let mut last_logits: Option<Vec<f32>> = None;
+            let mut have_logits = false;
             for _ in 0..cfg.prefill_chunks_per_tick {
                 if chunk_budget == 0 {
                     break; // global budget exhausted: resume next tick
@@ -711,8 +728,8 @@ fn run_engine<B: DecodeBackend>(
                 let finish = take == info.prefill_remaining();
                 // lintra: allow(panic) -- take <= prefill_remaining, so cursor + take <= len
                 let chunk = &info.prompt[info.cursor..info.cursor + take];
-                match backend.prefill_partial(lane, chunk, finish) {
-                    Ok(opt) => {
+                match backend.prefill_partial(lane, chunk, finish, &mut prefill_logits) {
+                    Ok(got) => {
                         info.advance_prefill(take);
                         chunk_budget -= 1;
                         tick_chunks += 1;
@@ -742,7 +759,7 @@ fn run_engine<B: DecodeBackend>(
                             }
                         }
                         if finish {
-                            let Some(l) = opt else {
+                            if !got {
                                 // backend contract breach (a finishing
                                 // chunk must return logits): treat it
                                 // like a prefill failure, not a panic
@@ -758,8 +775,8 @@ fn run_engine<B: DecodeBackend>(
                                     );
                                 }
                                 continue 'suffix;
-                            };
-                            last_logits = Some(l);
+                            }
+                            have_logits = true;
                             break;
                         }
                     }
@@ -781,11 +798,11 @@ fn run_engine<B: DecodeBackend>(
                     }
                 }
             }
-            let Some(logits) = last_logits else {
+            if !have_logits {
                 // chunk budget exhausted mid-prompt: resume next tick
                 lane += 1;
                 continue;
-            };
+            }
             // final prompt position landed: sample the first token
             let Some(info) = slots.get_mut(slot) else {
                 debug_assert!(false, "finishing lane {lane} maps to a dead slot {slot}");
@@ -793,7 +810,7 @@ fn run_engine<B: DecodeBackend>(
                 lane_slots.swap_remove(lane);
                 continue 'suffix;
             };
-            let next = sample_logits_topk(&logits, info.temperature, info.top_k, &mut rng);
+            let next = sample_logits_topk(&prefill_logits, info.temperature, info.top_k, &mut rng);
             info.generated.push(next);
             tick_tokens += 1;
             if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
@@ -805,7 +822,7 @@ fn run_engine<B: DecodeBackend>(
                 lane_slots.swap_remove(lane);
                 if let Some(info) = slots.release(slot) {
                     let latency = info.started.elapsed();
-                    retired.push((info, latency));
+                    retired.push((info, latency)); // lintra: allow(alloc) -- reuses hoisted capacity, drained every tick
                 }
                 continue;
             }
@@ -832,15 +849,15 @@ fn run_engine<B: DecodeBackend>(
 
         // 4. one decode tick over the prefix: every decoding lane
         // advances by one token, together; suffix lanes are untouched
-        let mut decode_logits: Option<Vec<f32>> = None;
+        let mut did_decode = false;
         if n_dec > 0 {
             tokens.clear();
             for &slot in lane_slots.iter().take(n_dec) {
                 // lintra: allow(panic) -- the lane map mirrors the slot table by construction
                 tokens.push(slots.get(slot).expect("lane maps to live slot").next_token());
             }
-            match backend.step_batch(&tokens) {
-                Ok(l) => decode_logits = Some(l),
+            match backend.step_batch(&tokens, &mut decode_logits) {
+                Ok(()) => did_decode = true,
                 Err(e) => {
                     // fail all active requests (mid-prefill ones too),
                     // clear every lane
@@ -863,13 +880,17 @@ fn run_engine<B: DecodeBackend>(
             }
         }
 
-        if let Some(logits) = decode_logits {
+        if did_decode {
             // 5. consume logits: advance cursors, sample past the prompt.
             // Stats accumulate tick-locally — the lock is taken once per
             // tick (step 7), not once per generated token.
-            let mut finished_lanes: Vec<usize> = Vec::new();
-            debug_assert_eq!(logits.len(), n_dec * vocab, "one logits row per decoding lane");
-            let rows = logits.chunks_exact(vocab);
+            finished_lanes.clear();
+            debug_assert_eq!(
+                decode_logits.len(),
+                n_dec * vocab,
+                "one logits row per decoding lane"
+            );
+            let rows = decode_logits.chunks_exact(vocab);
             for (lane, (&slot, row)) in lane_slots.iter().take(n_dec).zip(rows).enumerate() {
                 let Some(info) = slots.get_mut(slot) else {
                     debug_assert!(false, "decode lane {lane} maps to a dead slot {slot}");
@@ -884,7 +905,7 @@ fn run_engine<B: DecodeBackend>(
                     info.generated.push(next);
                     tick_tokens += 1;
                     if info.generated.len() >= info.max_new || info.pos + 1 >= max_len {
-                        finished_lanes.push(lane);
+                        finished_lanes.push(lane); // lintra: allow(alloc) -- reuses hoisted capacity, drained every tick
                     }
                 }
             }
@@ -898,7 +919,7 @@ fn run_engine<B: DecodeBackend>(
             // moves the overall-last lane — a mid-prefill one) lands the
             // moved lane exactly on the new prefix/suffix boundary.
             finished_lanes.sort_unstable_by_key(|&lane| std::cmp::Reverse(lane));
-            for lane in finished_lanes {
+            for lane in finished_lanes.drain(..) {
                 let slot = lane_slots[lane];
                 if n_dec == lane_slots.len() {
                     backend.free_lane(lane);
@@ -915,7 +936,7 @@ fn run_engine<B: DecodeBackend>(
                 n_dec -= 1;
                 if let Some(info) = slots.release(slot) {
                     let latency = info.started.elapsed();
-                    retired.push((info, latency));
+                    retired.push((info, latency)); // lintra: allow(alloc) -- reuses hoisted capacity, drained every tick
                 }
             }
         }
@@ -945,7 +966,7 @@ fn run_engine<B: DecodeBackend>(
                 st.latency.record(*d);
             }
         }
-        for (info, latency) in retired {
+        for (info, latency) in retired.drain(..) {
             let truncated = info.generated.len() < info.max_new;
             if let Some(tx) = responders.remove(&info.request_id) {
                 let _ = tx.send(GenerateResponse {
@@ -1159,7 +1180,7 @@ impl DecodeBackend for PjrtBackend {
         Some(last)
     }
 
-    fn step_batch(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
+    fn step_batch(&mut self, tokens: &[u32], logits_out: &mut Vec<f32>) -> anyhow::Result<()> {
         assert_eq!(tokens.len(), self.lanes, "one token per live lane");
         for lane in 0..self.b {
             self.token_buf[lane] = if lane < self.lanes {
@@ -1181,8 +1202,10 @@ impl DecodeBackend for PjrtBackend {
         for lane in 0..self.lanes {
             self.pos[lane] += 1;
         }
+        logits_out.clear();
         // lintra: allow(panic) -- the artifact's logits rows cover all b >= lanes lanes
-        Ok(logits[..self.lanes * vocab].to_vec())
+        logits_out.extend_from_slice(&logits[..self.lanes * vocab]);
+        Ok(())
     }
 }
 

@@ -7,7 +7,8 @@
 //!   serve    --task --bind        TCP serving engine
 //!   eval     --task --variant     teacher-forced eval loss via eval artifact
 //!   cast     --weights --out      re-encode an .ltw bundle at a lower weight precision
-//!   analyze  [--deny] [paths…]    repo-invariant static analysis (see `analysis` module)
+//!   analyze  [--deny] [--format json] [--baseline f] [paths…]
+//!                                 interprocedural static analysis (see `analysis` module)
 //!
 //! Run `lintra <cmd> --help-flags` to see the flags each command reads.
 
@@ -29,12 +30,12 @@ const FLAGS: &[&str] = &[
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
     "num-threads", "prefill-chunks-per-tick", "prefill-chunk-budget", "state-cache-mb",
     "prompt-len", "max-new", "temperature", "count", "backend", "weights", "batches",
-    "weight-dtype", "out", "dtype",
+    "weight-dtype", "out", "dtype", "format", "baseline",
 ];
 
 /// Boolean flags: never consume the following token, so positional args
 /// (e.g. `analyze --deny rust/src`) parse as paths.
-const SWITCHES: &[&str] = &["deny", "help-flags"];
+const SWITCHES: &[&str] = &["deny", "help-flags", "write-baseline"];
 
 fn main() {
     if let Err(e) = run() {
@@ -67,23 +68,67 @@ fn run() -> anyhow::Result<()> {
     }
 }
 
-/// `lintra analyze [--deny] [paths…]`
+/// `lintra analyze [--deny] [--format text|json] [--baseline file.json]
+/// [--write-baseline] [paths…]`
 ///
 /// Run the repo-invariant static-analysis pass
 /// ([`linear_transformer::analysis`]) over the given files/directories
 /// (default: `rust/src examples`, the self-hosting scope CI gates).
-/// Findings print one per line; `--deny` additionally exits non-zero when
-/// any finding survives, which is how CI turns the pass into a hard gate.
+///
+/// * `--format json` emits the findings + scope summary as one JSON
+///   document (the CI artifact) instead of text.
+/// * `--baseline <file>` diffs findings against a committed baseline:
+///   matching findings are suppressed debt, anything beyond it is fresh.
+/// * `--write-baseline` (requires `--baseline`) regenerates the baseline
+///   file to cover exactly the current findings — the ratchet commit.
+/// * `--deny` exits non-zero when any (fresh, if a baseline is given)
+///   finding survives, which is how CI turns the pass into a hard gate.
 fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     let paths: Vec<String> = if args.positional.is_empty() {
         vec!["rust/src".into(), "examples".into()]
     } else {
         args.positional.clone()
     };
-    let findings = linear_transformer::analysis::analyze_paths(&paths)?;
-    print!("{}", linear_transformer::analysis::report(&findings));
-    if args.switch("deny") && !findings.is_empty() {
-        bail!("analyze --deny: {} finding(s)", findings.len());
+    let analysis = linear_transformer::analysis::analyze_paths(&paths)?;
+    if args.switch("write-baseline") {
+        let path = args
+            .flag("baseline")
+            .context("--write-baseline requires --baseline <file>")?;
+        let b = linear_transformer::analysis::Baseline::from_findings(&analysis.findings);
+        std::fs::write(path, b.to_json()).with_context(|| format!("writing {path}"))?;
+        eprintln!(
+            "analyze: wrote {} baseline entr(ies) covering {} finding(s) to {path}",
+            b.entries.len(),
+            analysis.findings.len()
+        );
+        return Ok(());
+    }
+    let diff = match args.flag("baseline") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading baseline {path}"))?;
+            let b = linear_transformer::analysis::Baseline::parse(&text)?;
+            Some(b.diff(&analysis.findings))
+        }
+        None => None,
+    };
+    match args.flag_or("format", "text").as_str() {
+        "json" => print!(
+            "{}",
+            linear_transformer::analysis::to_json(&analysis, diff.as_ref())
+        ),
+        "text" => print!(
+            "{}",
+            linear_transformer::analysis::report(&analysis, diff.as_ref())
+        ),
+        other => bail!("unknown --format {other:?} (text|json)"),
+    }
+    let gating = match &diff {
+        Some(d) => d.fresh.len(),
+        None => analysis.findings.len(),
+    };
+    if args.switch("deny") && gating > 0 {
+        bail!("analyze --deny: {gating} finding(s)");
     }
     Ok(())
 }

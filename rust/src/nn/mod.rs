@@ -750,6 +750,7 @@ impl<'m> BatchedDecodeSession<'m> {
             return None;
         }
         for st in &mut self.states {
+            // lintra: allow(panic) -- guarded by the rows == cap check above
             st.push_row().expect("states and session agree on capacity");
         }
         self.pos.push(0);
@@ -779,13 +780,28 @@ impl<'m> BatchedDecodeSession<'m> {
     /// `tokens[r]` feeds lane r. Returns logits `[tokens.len() * vocab]`
     /// row-major.
     ///
+    /// Allocating convenience form of [`Self::step_batch_into`]; the
+    /// serving tick loop passes a reused buffer instead.
+    pub fn step_batch(&mut self, tokens: &[u32]) -> Vec<f32> {
+        // lintra: allow(alloc) -- compat wrapper; the tick loop uses step_batch_into
+        let mut logits = Vec::new();
+        self.step_batch_into(tokens, &mut logits);
+        logits
+    }
+
+    /// Advance the first `tokens.len()` live lanes by one token;
+    /// `tokens[r]` feeds lane r. Fills `logits` with `[tokens.len() *
+    /// vocab]` row-major values, replacing its previous contents — the
+    /// caller keeps one buffer alive across ticks and no per-tick
+    /// allocation happens once its capacity has grown to fit.
+    ///
     /// Callers may step a *prefix* of the live lanes (`tokens.len() <
     /// rows`): the suffix lanes are left completely untouched. The
     /// serving engine relies on this to keep lanes that are still
     /// mid-prefill out of the decode tick. Each lane's float-op order is
     /// independent of how many lanes step together, so a prefix step is
     /// bit-identical to the same lanes stepping in a narrower session.
-    pub fn step_batch(&mut self, tokens: &[u32]) -> Vec<f32> {
+    pub fn step_batch_into(&mut self, tokens: &[u32], logits: &mut Vec<f32>) {
         let b = tokens.len();
         assert!(b <= self.rows, "stepping {b} lanes of {} live", self.rows);
         let model = self.model;
@@ -793,8 +809,9 @@ impl<'m> BatchedDecodeSession<'m> {
         let e = cfg.d_model;
         let h = cfg.n_heads;
         let dh = cfg.d_head();
+        logits.clear();
         if b == 0 {
-            return Vec::new();
+            return;
         }
         // B = 1 ticks are GEMV-shaped; the pooled kernels split the
         // *output columns* across workers for that shape (each worker owns
@@ -911,11 +928,14 @@ impl<'m> BatchedDecodeSession<'m> {
             b,
         );
         let vocab = cfg.vocab;
-        let mut logits = vec![0.0f32; b * vocab];
+        // cleared above, so resize zero-fills every element — exactly a
+        // fresh `vec![0.0; b * vocab]`, and a reused buffer is
+        // bit-identical to an allocating call
+        logits.resize(b * vocab, 0.0);
         let normed = &self.normed[..b * e];
         mm_w(
             pool,
-            &mut logits,
+            &mut logits[..],
             normed,
             model.quant.as_ref().map(|q| &q.head_w),
             &model.head_w,
@@ -923,11 +943,10 @@ impl<'m> BatchedDecodeSession<'m> {
             e,
             vocab,
         );
-        add_bias_rows(&mut logits, &model.head_b.data, b);
+        add_bias_rows(&mut logits[..], &model.head_b.data, b);
         for p in self.pos[..b].iter_mut() {
             *p += 1;
         }
-        logits
     }
 
     /// Swap lanes `a` and `b` (every layer×head state pair plus the
@@ -1017,6 +1036,7 @@ impl<'m> BatchedDecodeSession<'m> {
     /// lane per engine tick.
     pub fn prefill_row(&mut self, row: usize, prompt: &[u32]) -> Vec<f32> {
         self.prefill_row_partial(row, prompt, true)
+            // lintra: allow(panic) -- contract: finish = true always yields logits
             .expect("finish = true always returns logits")
     }
 
@@ -1034,12 +1054,38 @@ impl<'m> BatchedDecodeSession<'m> {
     /// order never depends on how the prompt was sliced. The serving
     /// engine leans on this to interleave bounded prompt chunks with
     /// decode ticks without changing a single logit.
+    ///
+    /// Allocating convenience form of [`Self::prefill_row_partial_into`];
+    /// the serving tick loop passes a reused buffer instead.
     pub fn prefill_row_partial(
         &mut self,
         row: usize,
         tokens: &[u32],
         finish: bool,
     ) -> Option<Vec<f32>> {
+        // lintra: allow(alloc) -- compat wrapper; the tick loop uses prefill_row_partial_into
+        let mut out = Vec::new();
+        if self.prefill_row_partial_into(row, tokens, finish, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Buffer-reusing form of [`Self::prefill_row_partial`]: on a
+    /// finishing slice, fills `out` with the final position's logits
+    /// (`[vocab]`, previous contents replaced) and returns `true`;
+    /// interior slices leave `out` cleared and return `false`. Keeping
+    /// one `out` buffer alive across chunks makes steady-state prefill
+    /// allocation-free; the values written are bit-identical to the
+    /// allocating form.
+    pub fn prefill_row_partial_into(
+        &mut self,
+        row: usize,
+        tokens: &[u32],
+        finish: bool,
+        out: &mut Vec<f32>,
+    ) -> bool {
         assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
         assert!(!tokens.is_empty(), "prefill needs at least one prompt token");
         let model = self.model;
@@ -1056,7 +1102,8 @@ impl<'m> BatchedDecodeSession<'m> {
             cfg.max_len
         );
         let pool = self.pool.as_deref();
-        let mut logits = None;
+        out.clear();
+        let mut wrote = false;
         let mut off = 0;
         while off < tokens.len() {
             let n = (tokens.len() - off).min(PREFILL_CHUNK);
@@ -1160,10 +1207,12 @@ impl<'m> BatchedDecodeSession<'m> {
                     &model.final_ln_g.data,
                     &model.final_ln_b.data,
                 );
-                let mut out = vec![0.0f32; cfg.vocab];
+                // cleared on entry, so resize zero-fills — exactly a
+                // fresh `vec![0.0; vocab]` for the reused buffer too
+                out.resize(cfg.vocab, 0.0);
                 vm_w_pooled(
                     pool,
-                    &mut out,
+                    &mut out[..],
                     &self.normed[..e],
                     model.quant.as_ref().map(|q| &q.head_w),
                     &model.head_w,
@@ -1173,10 +1222,10 @@ impl<'m> BatchedDecodeSession<'m> {
                 for (l, bv) in out.iter_mut().zip(&model.head_b.data) {
                     *l += bv;
                 }
-                logits = Some(out);
+                wrote = true;
             }
         }
-        logits
+        wrote
     }
 }
 

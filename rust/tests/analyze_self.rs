@@ -1,12 +1,17 @@
 //! Self-hosting tests for `lintra analyze`: per-rule positive and
 //! negative fixtures, the suppression-pragma grammar, bitwise-critical
-//! tag scoping — and the integration assertion the CI gate relies on:
-//! the repo's own tree (`rust/src` + `examples`) analyzes clean.
+//! tag scoping, the interprocedural reachability model (call graph +
+//! tick closure + `alloc` rule), lexer lifetime-tick regressions — and
+//! the integration assertion the CI gate relies on: the repo's own tree
+//! (`rust/src` + `examples`) analyzes clean modulo the committed
+//! baseline.
 //!
 //! Fixtures are source *text*, not compiled code, so they deliberately
 //! contain the constructs the rules forbid.
 
-use linear_transformer::analysis::{analyze_paths, analyze_source, report, Rule};
+use linear_transformer::analysis::{
+    analyze_paths, analyze_source, analyze_sources, Baseline, Finding, Rule,
+};
 
 /// A hot-path file name: rule `panic` applies.
 const HOT: &str = "rust/src/coordinator/engine.rs";
@@ -15,6 +20,13 @@ const KERNEL: &str = "rust/src/tensor.rs";
 
 fn rules_of(path: &str, src: &str) -> Vec<Rule> {
     analyze_source(path, src).into_iter().map(|f| f.rule).collect()
+}
+
+fn show(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule.slug(), f.message))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -31,7 +43,7 @@ fn f(x: Option<u32>) -> u32 {
 }
 "#;
     let findings = analyze_source(HOT, src);
-    assert_eq!(findings.len(), 3, "{}", report(&findings));
+    assert_eq!(findings.len(), 3, "{}", show(&findings));
     assert!(findings.iter().all(|f| f.rule == Rule::Panic));
     assert_eq!(
         findings.iter().map(|f| f.line).collect::<Vec<_>>(),
@@ -51,7 +63,7 @@ fn f(v: &[u32], i: usize) -> u32 {
 }
 "#;
     let findings = analyze_source(HOT, src);
-    assert_eq!(findings.len(), 2, "{}", report(&findings));
+    assert_eq!(findings.len(), 2, "{}", show(&findings));
     assert_eq!(findings[0].line, 4, "computed index `v[i + 1]`");
     assert_eq!(findings[1].line, 5, "range slice `v[1..3]`");
 }
@@ -161,7 +173,7 @@ fn untagged(x: f32) -> f32 {
 }
 "#;
     let findings = analyze_source(KERNEL, src);
-    assert_eq!(findings.len(), 1, "{}", report(&findings));
+    assert_eq!(findings.len(), 1, "{}", show(&findings));
     assert_eq!((findings[0].rule, findings[0].line), (Rule::Bitwise, 4));
 }
 
@@ -183,7 +195,7 @@ fn split_sum(a: &[f32]) -> f32 {
 }
 "#;
     let findings = analyze_source(KERNEL, src);
-    assert_eq!(findings.len(), 1, "{}", report(&findings));
+    assert_eq!(findings.len(), 1, "{}", show(&findings));
     assert_eq!(findings[0].rule, Rule::Bitwise);
     assert_eq!(findings[0].line, 5, "reported at the second accumulator");
 }
@@ -279,17 +291,207 @@ fn lock_rule_points_at_the_wrapper_and_survives_spacing() {
 }
 
 // ---------------------------------------------------------------------------
-// the CI gate: the repo's own tree analyzes clean
+// lexer: lifetime ticks vs char literals (regression)
 // ---------------------------------------------------------------------------
 
 #[test]
-fn repo_tree_is_analyze_clean() {
+fn lifetime_ticks_do_not_swallow_violations_end_to_end() {
+    // before the lexer fix, `'a` opened a bogus char literal and the
+    // rest of the line — including the violation — was blanked out
+    let src = "\
+fn f<'a>(x: &'a Option<u32>) -> u32 { x.unwrap() }
+fn g(s: &'static str, x: Option<u32>) -> u32 { let _ = s; x.unwrap() }
+";
+    let findings = analyze_source(HOT, src);
+    assert_eq!(findings.len(), 2, "{}", show(&findings));
+    assert!(findings.iter().all(|f| f.rule == Rule::Panic));
+}
+
+#[test]
+fn real_char_literals_still_blank_their_contents() {
+    // a char literal containing `!` must not trip macro detection, and
+    // an escaped quote must not leak the literal into the code view
+    let src = "\
+fn f() -> char { '!' }
+fn g() -> char { '\\'' }
+fn h(x: Option<u32>) -> u32 { let c = 'q'; let _ = c; x.unwrap() }
+";
+    let findings = analyze_source(HOT, src);
+    assert_eq!(findings.len(), 1, "{}", show(&findings));
+    assert_eq!(findings[0].line, 3, "only the real .unwrap() fires");
+}
+
+// ---------------------------------------------------------------------------
+// interprocedural: tick closure, alloc rule, hot-closure superset
+// ---------------------------------------------------------------------------
+
+fn files(v: &[(&str, &str)]) -> Vec<(String, String)> {
+    v.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect()
+}
+
+#[test]
+fn tick_closure_carries_panic_and_alloc_into_other_files() {
+    // run_engine (tick root, serving file) calls into a kernel file;
+    // the helper's unwrap and allocation are findings even though
+    // tensor.rs is outside the serving file list
+    let a = analyze_sources(&files(&[
+        (
+            HOT,
+            "pub fn run_engine() {\n    crate::tensor::tick_helper();\n}\n",
+        ),
+        (
+            KERNEL,
+            "\
+pub fn tick_helper() {
+    let v: Vec<u32> = Vec::new();
+    let _ = v.first().copied().unwrap();
+}
+pub fn cold_helper() {
+    let v = vec![0u32; 4];
+    let _ = v[0];
+}
+",
+        ),
+    ]));
+    assert!(
+        a.scope.tick_contains(KERNEL, "tick_helper"),
+        "tick closure: {:?}",
+        a.scope.tick_fns
+    );
+    assert!(
+        !a.scope.tick_contains(KERNEL, "cold_helper"),
+        "cold_helper is unreachable from run_engine"
+    );
+    let in_kernel: Vec<&Finding> =
+        a.findings.iter().filter(|f| f.path == KERNEL).collect();
+    assert!(
+        in_kernel.iter().any(|f| f.rule == Rule::Panic),
+        "tick-reachable unwrap must surface: {}",
+        show(&a.findings)
+    );
+    assert!(
+        in_kernel.iter().any(|f| f.rule == Rule::Alloc),
+        "tick-reachable allocation must surface: {}",
+        show(&a.findings)
+    );
+    assert!(
+        !in_kernel.iter().any(|f| f.message.contains("cold_helper")),
+        "nothing fires in the unreachable helper: {}",
+        show(&a.findings)
+    );
+}
+
+#[test]
+fn method_calls_resolve_across_modules_via_receivers() {
+    // run_engine ticks a backend method; the impl lives in another file
+    // and its body allocates — the finding lands there
+    let a = analyze_sources(&files(&[
+        (
+            HOT,
+            "\
+pub fn run_engine(b: &mut crate::nn::Sess) {
+    b.step_once();
+}
+",
+        ),
+        (
+            "rust/src/nn/mod.rs",
+            "\
+pub struct Sess;
+impl Sess {
+    pub fn step_once(&mut self) {
+        let _ = vec![0.0f32; 8];
+    }
+}
+",
+        ),
+    ]));
+    assert!(
+        a.scope.tick_contains("rust/src/nn/mod.rs", "step_once"),
+        "tick closure: {:?}",
+        a.scope.tick_fns
+    );
+    assert!(
+        a.findings
+            .iter()
+            .any(|f| f.path == "rust/src/nn/mod.rs" && f.rule == Rule::Alloc),
+        "{}",
+        show(&a.findings)
+    );
+}
+
+#[test]
+fn unresolved_calls_are_reported_conservatively() {
+    let a = analyze_sources(&files(&[(
+        HOT,
+        "pub fn run_engine() {\n    std::mem::forget(Vec::<u32>::with_capacity(4));\n}\n",
+    )]));
+    assert!(
+        a.scope.unresolved_calls >= 1,
+        "external calls must be tallied, got {}",
+        a.scope.unresolved_calls
+    );
+}
+
+/// The superset criterion: the computed hot closure covers every fn the
+/// PR 7 hand-maintained six-file list covered (by construction — all
+/// non-test fns in those files are roots) *plus* what they reach.
+#[test]
+fn computed_hot_closure_covers_the_old_hand_listed_files() {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let repo = manifest.parent().expect("rust/ sits inside the repo root");
-    let findings = analyze_paths(&[manifest.join("src"), repo.join("examples")]).unwrap();
+    let a = analyze_paths(&[manifest.join("src"), repo.join("examples")]).unwrap();
+    for file in linear_transformer::analysis::SERVING_FILES {
+        assert!(
+            a.scope.hot_fns.iter().any(|(f, _)| {
+                f.ends_with(file) || file.ends_with(f.as_str())
+            }),
+            "hot closure must cover {file}: every fn there is a root"
+        );
+    }
+    // and it reaches beyond the old list: tick-called fns in kernel files
+    for (file, name) in [
+        ("rust/src/coordinator/engine.rs", "run_engine"),
+        ("rust/src/nn/mod.rs", "step_batch_into"),
+        ("rust/src/nn/mod.rs", "prefill_row_partial_into"),
+        ("rust/src/attention/linear.rs", "step_batch_pooled"),
+        ("rust/src/tensor.rs", "matmul_into_pooled"),
+        ("rust/src/tensor.rs", "matmul_into_w_pooled"),
+        ("rust/src/sampling.rs", "sample_logits_topk"),
+    ] {
+        assert!(
+            a.scope.tick_contains(file, name),
+            "{file}::{name} must be tick-reachable; tick closure has {} fns",
+            a.scope.tick_fns.len()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the CI gate: the repo's own tree analyzes clean modulo the baseline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repo_tree_is_analyze_clean_modulo_baseline() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo = manifest.parent().expect("rust/ sits inside the repo root");
+    let a = analyze_paths(&[manifest.join("src"), repo.join("examples")]).unwrap();
+    let text = std::fs::read_to_string(repo.join("analysis_baseline.json"))
+        .expect("analysis_baseline.json is committed at the repo root");
+    let baseline = Baseline::parse(&text).expect("committed baseline parses");
+    let diff = baseline.diff(&a.findings);
     assert!(
-        findings.is_empty(),
-        "`lintra analyze --deny rust/src examples` must stay green:\n{}",
-        report(&findings)
+        diff.fresh.is_empty(),
+        "`lintra analyze --deny --baseline analysis_baseline.json rust/src examples` \
+         must stay green; fresh findings:\n{}",
+        show(&diff.fresh)
+    );
+    // the ratchet works both ways: entries whose findings vanished
+    // should be removed from the baseline (regenerate with
+    // `lintra analyze --baseline analysis_baseline.json --write-baseline`)
+    assert!(
+        diff.resolved.is_empty(),
+        "baseline entries are stale — ratchet them out:\n{}",
+        diff.resolved.join("\n")
     );
 }

@@ -1,0 +1,180 @@
+//! Scratch-buffer reuse must be invisible in the bits.
+//!
+//! PR motivation: the `alloc` analysis rule pushed the per-tick logits
+//! allocations out of the serving hot path — `step_batch` /
+//! `prefill_row_partial` gained `_into` forms that fill a caller-owned
+//! buffer the engine keeps alive across ticks. The contract is that a
+//! *reused, dirty* buffer (stale values, NaN poison, wrong length) hits
+//! exactly the same bits as the allocating forms, for every chunking of
+//! a prompt and across batch-width changes — otherwise buffer reuse
+//! would be an observable behaviour change, not an optimisation.
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::config::ModelConfig;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::rng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 17,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        max_len: 64,
+        d_ff: 64,
+        chunk: 16,
+        causal: true,
+        lsh_rounds: 1,
+        lsh_buckets: 8,
+        lsh_chunk: 8,
+    }
+}
+
+fn stream(len: usize, vocab: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as u64) as u32).collect()
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: logit {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Fill with NaN poison so stale contents would be detected the moment
+/// an `_into` path failed to overwrite every element.
+fn poison(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, f32::NAN);
+}
+
+#[test]
+fn step_batch_into_reused_dirty_buffer_is_bitwise_identical() {
+    let cfg = tiny_cfg();
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 7);
+    let vocab = cfg.vocab;
+
+    let mut fresh = model.batched_session(3);
+    let mut reused = model.batched_session(3);
+    for _ in 0..3 {
+        fresh.alloc_row().expect("capacity 3");
+        reused.alloc_row().expect("capacity 3");
+    }
+
+    let streams: Vec<Vec<u32>> = (0..3).map(|i| stream(20, vocab, 50 + i)).collect();
+    // one buffer for the whole run, never cleared between ticks, and
+    // poisoned oversized before the first — reuse must overwrite it all
+    let mut buf: Vec<f32> = Vec::new();
+    poison(&mut buf, 5 * vocab);
+    for t in 0..20 {
+        let tokens: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+        let expect = fresh.step_batch(&tokens);
+        reused.step_batch_into(&tokens, &mut buf);
+        assert_bitwise(&buf, &expect, "decode tick");
+    }
+}
+
+#[test]
+fn step_batch_into_survives_batch_width_changes() {
+    let cfg = tiny_cfg();
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 9);
+    let vocab = cfg.vocab;
+
+    let mut fresh = model.batched_session(3);
+    let mut reused = model.batched_session(3);
+    for _ in 0..3 {
+        fresh.alloc_row().expect("capacity 3");
+        reused.alloc_row().expect("capacity 3");
+    }
+    let s = stream(40, vocab, 77);
+    let mut buf: Vec<f32> = Vec::new();
+
+    // wide tick (3 lanes), then shrink to 1 lane: the reused buffer must
+    // shrink to exactly [1 * vocab] — stale rows must not survive
+    let expect = fresh.step_batch(&[s[0], s[1], s[2]]);
+    reused.step_batch_into(&[s[0], s[1], s[2]], &mut buf);
+    assert_bitwise(&buf, &expect, "wide tick");
+
+    fresh.free_row(1);
+    reused.free_row(1);
+    fresh.free_row(1);
+    reused.free_row(1);
+    let expect = fresh.step_batch(&[s[3]]);
+    reused.step_batch_into(&[s[3]], &mut buf);
+    assert_eq!(buf.len(), vocab, "buffer must shrink with the batch");
+    assert_bitwise(&buf, &expect, "narrow tick");
+
+    // and back up to 2 lanes: the buffer regrows
+    fresh.alloc_row().expect("freed above");
+    reused.alloc_row().expect("freed above");
+    let expect = fresh.step_batch(&[s[4], s[5]]);
+    reused.step_batch_into(&[s[4], s[5]], &mut buf);
+    assert_bitwise(&buf, &expect, "regrown tick");
+}
+
+#[test]
+fn prefill_into_matches_allocating_for_every_chunking() {
+    let cfg = tiny_cfg();
+    let model = TransformerLM::init(&cfg, AttentionKind::Linear, 11);
+    let vocab = cfg.vocab;
+    let prompt = stream(23, vocab, 123);
+
+    let mut one_shot = model.batched_session(1);
+    one_shot.alloc_row().expect("capacity 1");
+    let expect = one_shot.prefill_row(0, &prompt);
+
+    for pattern in [vec![23], vec![1, 22], vec![7, 7, 9], vec![16, 6, 1]] {
+        assert_eq!(pattern.iter().sum::<usize>(), prompt.len());
+        let mut sess = model.batched_session(1);
+        sess.alloc_row().expect("capacity 1");
+        let mut out: Vec<f32> = Vec::new();
+        poison(&mut out, 3 * vocab);
+        let mut off = 0;
+        for (i, &n) in pattern.iter().enumerate() {
+            let finish = i + 1 == pattern.len();
+            let got = sess.prefill_row_partial_into(0, &prompt[off..off + n], finish, &mut out);
+            assert_eq!(got, finish, "only the finishing slice yields logits");
+            if !finish {
+                assert!(out.is_empty(), "interior slices leave the buffer cleared");
+                // re-poison so the finishing slice faces a dirty buffer
+                poison(&mut out, 2 * vocab + 3);
+            }
+            off += n;
+        }
+        assert_bitwise(&out, &expect, "finishing prefill logits");
+
+        // the lane state must also be identical: greedy continuations
+        // from both sessions stay bitwise-locked for a few ticks
+        let mut a = expect.clone();
+        let mut buf: Vec<f32> = Vec::new();
+        for _ in 0..5 {
+            let ta = argmax(&a);
+            let tb = argmax(&out);
+            assert_eq!(ta, tb, "greedy continuation diverged");
+            a = one_shot.step_batch(&[ta]);
+            sess.step_batch_into(&[tb], &mut buf);
+            assert_bitwise(&buf, &a, "greedy continuation tick");
+            std::mem::swap(&mut out, &mut buf);
+        }
+        // rewind the shared reference session for the next pattern
+        one_shot.free_row(0);
+        one_shot.alloc_row().expect("capacity 1");
+        let again = one_shot.prefill_row(0, &prompt);
+        assert_bitwise(&again, &expect, "reference session rewind");
+    }
+}
+
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
