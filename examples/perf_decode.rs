@@ -26,6 +26,10 @@
 //! `weight_bytes_per_token` IS the bytes moved per tick, and halving it
 //! (f16) is the point on a weight-bandwidth-bound decode. Activations
 //! stay f32 throughout; tok/s plus the bytes ratio vs f32 are reported.
+//! The linear-vs-softmax section contrasts the two serving backends —
+//! the paper's O(1)-vs-O(t) per-token claim as a measurement: B=1
+//! per-tick latency near generated length N and lane-snapshot bytes at
+//! N for both backends, N ∈ {64, 128, 256, 512}.
 //! Emits machine-readable `BENCH_decode.json`.
 //!
 //! Run: cargo run --release --example perf_decode -- [steps]
@@ -402,6 +406,89 @@ fn main() {
          ({f32_bytes} vs {f16_bytes})"
     );
 
+    // --- linear vs softmax serving backends: per-tick latency and
+    // snapshot bytes vs generated length N ---
+    //
+    // The paper's Tables 4/5 story as a serving measurement: both
+    // backends run the exact same projection/FF/lm-head GEMMs behind the
+    // same `DecodeBackend` trait; the divergence is pure attention-core
+    // cost (O(1) state update vs attending over N cached rows) and lane
+    // state size (constant (S, Z) vs N K/V rows). Per-tick latency is
+    // the mean over the trailing ticks approaching each N — the
+    // steady-state cost at that depth; snapshot bytes are
+    // `LaneSnapshot::bytes()` at N, i.e. what the prefix-reuse state
+    // cache pays per deposited entry on each backend.
+    let softmax_model = TransformerLM::init(&cfg, AttentionKind::Softmax, 1);
+    println!("\nlinear vs softmax backend: B=1 per-tick ms and snapshot bytes vs N");
+    println!(
+        "{:>6} {:>15} {:>16} {:>14} {:>15}",
+        "N", "linear ms/tick", "softmax ms/tick", "linear snap B", "softmax snap B"
+    );
+    let mut lvs_rows = Vec::new();
+    let mut prev_softmax_snap = 0usize;
+    for &n_raw in &[64usize, 128, 256, 512] {
+        let n = n_raw.min(cfg.max_len - 1);
+        let tail = 16usize.min(n / 2);
+
+        let (lin_ms, lin_snap) = {
+            let mut sess = model.batched_session_with_pool(1, None);
+            sess.alloc_row().expect("capacity");
+            let mut tok = 0u32;
+            for _ in 0..n - tail {
+                let logits = sess.step_batch(&[tok]);
+                tok = linear_transformer::sampling::argmax(&logits);
+            }
+            let t0 = std::time::Instant::now();
+            for _ in 0..tail {
+                let logits = sess.step_batch(&[tok]);
+                tok = linear_transformer::sampling::argmax(&logits);
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / tail as f64;
+            (ms, sess.export_lane(0).bytes())
+        };
+
+        let (soft_ms, soft_snap) = {
+            let mut sess = softmax_model.batched_softmax_session_with_pool(1, None);
+            sess.alloc_row().expect("capacity");
+            let mut tok = 0u32;
+            for _ in 0..n - tail {
+                let logits = sess.step_batch(&[tok]);
+                tok = linear_transformer::sampling::argmax(&logits);
+            }
+            let t0 = std::time::Instant::now();
+            for _ in 0..tail {
+                let logits = sess.step_batch(&[tok]);
+                tok = linear_transformer::sampling::argmax(&logits);
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / tail as f64;
+            (ms, sess.export_lane(0).bytes())
+        };
+
+        // the asymptotics the section exists to show: linear's snapshot
+        // is depth-independent, softmax's grows linearly with N
+        assert!(
+            soft_snap > prev_softmax_snap,
+            "softmax snapshot must grow with N ({prev_softmax_snap} -> {soft_snap})"
+        );
+        prev_softmax_snap = soft_snap;
+
+        println!(
+            "{n:>6} {lin_ms:>15.3} {soft_ms:>16.3} {lin_snap:>14} {soft_snap:>15}"
+        );
+        lvs_rows.push(Json::Obj(
+            [
+                ("n".to_string(), Json::Num(n as f64)),
+                ("linear_ms_per_tick".to_string(), Json::Num(lin_ms)),
+                ("softmax_ms_per_tick".to_string(), Json::Num(soft_ms)),
+                ("linear_snapshot_bytes".to_string(), Json::Num(lin_snap as f64)),
+                ("softmax_snapshot_bytes".to_string(), Json::Num(soft_snap as f64)),
+                ("softmax_over_linear_ms".to_string(), Json::Num(soft_ms / lin_ms)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
         ("steps_per_lane", Json::Num(steps as f64)),
@@ -417,6 +504,7 @@ fn main() {
         ),
         ("thread_sweep", Json::Arr(sweep_rows)),
         ("dtype_sweep", Json::Arr(dtype_rows)),
+        ("linear_vs_softmax", Json::Arr(lvs_rows)),
         (
             "mixed_traffic",
             obj(vec![

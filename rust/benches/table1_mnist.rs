@@ -39,7 +39,7 @@ fn main() {
     // softmax: full recompute per pixel
     {
         let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 1);
-        let mut sess = model.session();
+        let mut sess = model.session_recompute();
         let mut rng = Rng::new(0);
         let mut logits = sess.step(0);
         let m = measure_steps(n - 1, budget, |_t| {

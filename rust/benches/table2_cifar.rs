@@ -37,7 +37,15 @@ fn main() {
     ];
     for (name, kind, kv) in variants {
         let model = TransformerLM::init(&cfg, kind, 1);
-        let mut sess = if kv { model.session_kv() } else { model.session() };
+        // the "softmax" row is the naive full-recompute baseline; plain
+        // session() would now route softmax models through the KV cache
+        let mut sess = if kv {
+            model.session_kv()
+        } else if kind == AttentionKind::Softmax {
+            model.session_recompute()
+        } else {
+            model.session()
+        };
         let mut rng = Rng::new(0);
         let mut logits = sess.step(0);
         let is_linear = kind == AttentionKind::Linear;

@@ -4,7 +4,7 @@
 //! memory, which is exactly the wall Figure 1 measures. The backward pass
 //! implements the standard softmax-attention vjp, recomputing W.
 
-use crate::tensor::{matmul_into, softmax_inplace};
+use crate::tensor::{axpy, dot, matmul_into, softmax_inplace};
 
 /// out[n,m] = softmax(q k^T / sqrt(d)) v, optionally causal.
 pub fn forward(
@@ -99,6 +99,275 @@ pub fn forward_backward(
         }
     }
     (out, dq, dk, dv)
+}
+
+/// The KV-cache view over B decode lanes, structure-of-arrays.
+///
+/// The softmax counterpart of
+/// [`super::linear::BatchedLinearAttnState`]: lane r's state is its
+/// appended K/V rows (`[len_r, d]` / `[len_r, m]` inside a stripe
+/// reserved at `max_tokens` rows) plus the cursor `len_r`. Rows
+/// `0..rows` are live and contiguous; the serving engine maps decode
+/// slots onto lanes and keeps them dense with [`Self::push_row`] /
+/// [`Self::swap_remove_row`], exactly as it does for the linear state.
+///
+/// The contrast the paper's Tables 4/5 measure lives here: where the
+/// linear lane is a fixed `[d, m] + [d]` block updated in O(d·m) per
+/// token, a softmax lane grows by one `(k, v)` row per token and each
+/// step attends over the whole cache — O(t·d) at position t, O(N) bytes
+/// after N tokens. All per-lane capacity is reserved at construction
+/// (`cap · max_tokens` rows), so appending during a serving tick never
+/// allocates.
+#[derive(Clone, Debug)]
+pub struct BatchedKvCache {
+    pub d: usize,
+    pub m: usize,
+    cap: usize,
+    max_tokens: usize,
+    rows: usize,
+    /// `[cap]` — tokens cached per lane
+    len: Vec<usize>,
+    /// `[cap, max_tokens, d]` — appended key rows
+    k: Vec<f32>,
+    /// `[cap, max_tokens, m]` — appended value rows
+    v: Vec<f32>,
+    // preallocated attention-weight scratch, [max_tokens]
+    logits: Vec<f32>,
+}
+
+impl BatchedKvCache {
+    pub fn new(cap: usize, d: usize, m: usize, max_tokens: usize) -> Self {
+        assert!(cap >= 1);
+        assert!(max_tokens >= 1);
+        BatchedKvCache {
+            d,
+            m,
+            cap,
+            max_tokens,
+            rows: 0,
+            len: vec![0; cap],
+            k: vec![0.0; cap * max_tokens * d],
+            v: vec![0.0; cap * max_tokens * m],
+            logits: vec![0.0; max_tokens],
+        }
+    }
+
+    /// Live lanes.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Token capacity of each lane (reserved up front).
+    pub fn max_tokens(&self) -> usize {
+        self.max_tokens
+    }
+
+    /// Tokens currently cached in lane `r`.
+    pub fn lane_len(&self, r: usize) -> usize {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        self.len[r]
+    }
+
+    /// Append an empty lane; returns its row index, or `None` at capacity.
+    pub fn push_row(&mut self) -> Option<usize> {
+        if self.rows == self.cap {
+            return None;
+        }
+        let r = self.rows;
+        self.len[r] = 0;
+        self.rows += 1;
+        Some(r)
+    }
+
+    /// Swap lanes `a` and `b` (cached rows and cursors). Costs
+    /// O(max(len_a, len_b)·(d+m)) — only the live prefixes move; rows
+    /// past a lane's cursor are never read. The serving engine uses this
+    /// to keep decoding lanes as a contiguous prefix while later lanes
+    /// are still mid-prefill.
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        assert!(a < self.rows && b < self.rows, "swap_rows out of {} live lanes", self.rows);
+        if a == b {
+            return;
+        }
+        let (d, m) = (self.d, self.m);
+        let stride_k = self.max_tokens * d;
+        let stride_v = self.max_tokens * m;
+        let live = self.len[a].max(self.len[b]);
+        for t in 0..live * d {
+            self.k.swap(a * stride_k + t, b * stride_k + t);
+        }
+        for t in 0..live * m {
+            self.v.swap(a * stride_v + t, b * stride_v + t);
+        }
+        self.len.swap(a, b);
+    }
+
+    /// Free lane `r`, compacting by moving the last lane into its place.
+    /// Returns the index the moved lane previously had (`None` if `r` was
+    /// already last) so callers can fix their lane maps.
+    pub fn swap_remove_row(&mut self, r: usize) -> Option<usize> {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let last = self.rows - 1;
+        self.rows = last;
+        if r == last {
+            return None;
+        }
+        let (d, m) = (self.d, self.m);
+        let stride_k = self.max_tokens * d;
+        let stride_v = self.max_tokens * m;
+        let live = self.len[last];
+        self.k
+            .copy_within(last * stride_k..last * stride_k + live * d, r * stride_k);
+        self.v
+            .copy_within(last * stride_v..last * stride_v + live * m, r * stride_v);
+        self.len[r] = live;
+        Some(last)
+    }
+
+    /// Bytes held by the live lanes *at their current lengths* — grows
+    /// with every cached token, unlike the constant-size linear state
+    /// (this is what Table 4 contrasts).
+    pub fn state_bytes(&self) -> usize {
+        (0..self.rows)
+            .map(|r| self.len[r] * (self.d + self.m) * 4)
+            .sum()
+    }
+
+    /// Floats in lane `r`'s snapshot: its `[len_r, d]` key rows followed
+    /// by its `[len_r, m]` value rows (the layout [`Self::export_row`]
+    /// writes and [`Self::import_row`] expects). Unlike the linear
+    /// state's fixed-size snapshot, this grows with the lane's cursor.
+    pub fn snapshot_len(&self, r: usize) -> usize {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        self.len[r] * (self.d + self.m)
+    }
+
+    /// Copy lane `r`'s cached rows into `out` (`[snapshot_len(r)]`: k
+    /// rows row-major, then v rows). The lane itself is untouched; the
+    /// copy is the exact f32 bits of the cache, so importing it later
+    /// resumes decoding bit-identically.
+    pub fn export_row(&self, r: usize, out: &mut [f32]) {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let (d, m) = (self.d, self.m);
+        let t = self.len[r];
+        assert_eq!(out.len(), t * (d + m), "snapshot buffer has the wrong length");
+        let kbase = r * self.max_tokens * d;
+        let vbase = r * self.max_tokens * m;
+        out[..t * d].copy_from_slice(&self.k[kbase..kbase + t * d]);
+        out[t * d..].copy_from_slice(&self.v[vbase..vbase + t * m]);
+    }
+
+    /// Overwrite lane `r`'s cache from a buffer written by
+    /// [`Self::export_row`] holding `tokens` cached positions. Bitwise:
+    /// after the import the lane is indistinguishable from the lane the
+    /// snapshot was taken from.
+    pub fn import_row(&mut self, r: usize, tokens: usize, snap: &[f32]) {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        assert!(
+            tokens <= self.max_tokens,
+            "snapshot of {tokens} tokens exceeds lane capacity {}",
+            self.max_tokens
+        );
+        let (d, m) = (self.d, self.m);
+        assert_eq!(snap.len(), tokens * (d + m), "snapshot buffer has the wrong length");
+        let kbase = r * self.max_tokens * d;
+        let vbase = r * self.max_tokens * m;
+        self.k[kbase..kbase + tokens * d].copy_from_slice(&snap[..tokens * d]);
+        self.v[vbase..vbase + tokens * m].copy_from_slice(&snap[tokens * d..]);
+        self.len[r] = tokens;
+    }
+
+    /// Append `(k, v)` to lane `r` and attend `q` over the whole cache.
+    /// Replays exactly the float-op order of the quadratic
+    /// [`forward`] recompute's last row: logits in append order, one
+    /// stable softmax, value accumulation in append order skipping exact
+    /// zeros (matching `matmul_into`'s zero-coefficient skip), so the
+    /// incremental path is bit-identical to recomputing the prefix.
+    // lintra: bitwise-critical
+    fn step_lane(&mut self, r: usize, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        let (d, m) = (self.d, self.m);
+        debug_assert_eq!(q.len(), d);
+        debug_assert!(self.len[r] < self.max_tokens, "KV cache capacity exceeded");
+        let kbase = r * self.max_tokens * d;
+        let vbase = r * self.max_tokens * m;
+        let cur = self.len[r];
+        self.k[kbase + cur * d..kbase + (cur + 1) * d].copy_from_slice(k);
+        self.v[vbase + cur * m..vbase + (cur + 1) * m].copy_from_slice(v);
+        self.len[r] = cur + 1;
+
+        let scale = 1.0 / (d as f32).sqrt();
+        let t = cur + 1;
+        for j in 0..t {
+            self.logits[j] = dot(q, &self.k[kbase + j * d..kbase + (j + 1) * d]) * scale;
+        }
+        softmax_inplace(&mut self.logits[..t]);
+        out.fill(0.0);
+        for j in 0..t {
+            let w = self.logits[j];
+            if w != 0.0 {
+                axpy(out, w, &self.v[vbase + j * m..vbase + (j + 1) * m]);
+            }
+        }
+    }
+
+    /// Absorb a chunk of `n` tokens into lane `r`'s cache — the prefill
+    /// path. `q, k: [n, d]`, `v, out: [n, m]`; `out` receives the chunk's
+    /// attention outputs. One call ingests one chunk; the carried rows
+    /// and cursor make successive calls (and a following
+    /// [`Self::step_batch`] decode) continue the same sequence. The
+    /// per-token update IS the step path, so prefilling a prompt is
+    /// bit-identical to feeding it one tick at a time.
+    // lintra: bitwise-critical
+    pub fn prefill_row(
+        &mut self,
+        r: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert!(r < self.rows, "lane {r} out of {} live lanes", self.rows);
+        let (d, m) = (self.d, self.m);
+        assert_eq!(q.len(), n * d);
+        assert_eq!(k.len(), n * d);
+        assert_eq!(v.len(), n * m);
+        assert_eq!(out.len(), n * m);
+        for i in 0..n {
+            let (qi, ki) = (&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d]);
+            let vi = &v[i * m..(i + 1) * m];
+            self.step_lane(r, qi, ki, vi, &mut out[i * m..(i + 1) * m]);
+        }
+    }
+
+    /// One decode step for the first `q.len() / d` live lanes. `q, k:
+    /// [b, d]`, `v, out: [b, m]` for any `b <= rows`; lanes `b..rows`
+    /// are left untouched (the serving engine keeps lanes that are still
+    /// mid-prefill in that suffix). Lanes are independent and each
+    /// lane's float-op order never depends on `b`, so stepping a prefix
+    /// is bit-identical to stepping the same lanes full-width. The
+    /// attention core stays serial over lanes: per-lane work is
+    /// O(t·(d+m)) next to the session's pooled `[b, ·]` GEMMs, and a
+    /// serial core is trivially thread-count-invariant.
+    // lintra: bitwise-critical
+    pub fn step_batch(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        let (d, m) = (self.d, self.m);
+        assert_eq!(q.len() % d, 0, "q is not [b, d]");
+        let b = q.len() / d;
+        assert!(b <= self.rows, "stepping {b} lanes of {} live", self.rows);
+        assert_eq!(k.len(), b * d);
+        assert_eq!(v.len(), b * m);
+        assert_eq!(out.len(), b * m);
+        for r in 0..b {
+            let (qi, ki) = (&q[r * d..(r + 1) * d], &k[r * d..(r + 1) * d]);
+            let vi = &v[r * m..(r + 1) * m];
+            self.step_lane(r, qi, ki, vi, &mut out[r * m..(r + 1) * m]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -201,5 +470,277 @@ mod tests {
         check(&dq, 0);
         check(&dk, 1);
         check(&dv, 2);
+    }
+
+    // --- BatchedKvCache: the serving-engine lane discipline ---
+
+    /// Step one lane of a batched cache alongside the quadratic oracle.
+    fn oracle_rows(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+        let mut full = vec![0.0; n * m];
+        forward(q, k, v, n, d, m, true, &mut full);
+        full
+    }
+
+    #[test]
+    fn batched_step_is_bitwise_quadratic_recompute() {
+        // the differential contract: the incremental KV step must
+        // reproduce the exact bits of recomputing the whole prefix
+        let (n, d, m) = (24, 8, 8);
+        let mut rng = Rng::new(10);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let full = oracle_rows(&q, &k, &v, n, d, m);
+
+        let mut cache = BatchedKvCache::new(1, d, m, n);
+        cache.push_row().unwrap();
+        let mut out = vec![0.0; m];
+        for i in 0..n {
+            cache.step_batch(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * m..(i + 1) * m],
+                &mut out,
+            );
+            for e in 0..m {
+                assert_eq!(
+                    full[i * m + e].to_bits(),
+                    out[e].to_bits(),
+                    "bitwise divergence at position {i}, dim {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_lanes_match_independent_scalar_caches() {
+        let (b, steps, d, m) = (5, 12, 8, 8);
+        let mut rng = Rng::new(11);
+        let mut batched = BatchedKvCache::new(b, d, m, steps);
+        let mut scalars: Vec<_> = (0..b)
+            .map(|_| super::super::stateful_softmax::KvCache::new(d, m, steps))
+            .collect();
+        for _ in 0..b {
+            batched.push_row().unwrap();
+        }
+        let mut out = vec![0.0; b * m];
+        let mut sout = vec![0.0; m];
+        for _ in 0..steps {
+            let q = rand(b * d, &mut rng);
+            let k = rand(b * d, &mut rng);
+            let v = rand(b * m, &mut rng);
+            batched.step_batch(&q, &k, &v, &mut out);
+            for (r, scalar) in scalars.iter_mut().enumerate() {
+                scalar.step(
+                    &q[r * d..(r + 1) * d],
+                    &k[r * d..(r + 1) * d],
+                    &v[r * m..(r + 1) * m],
+                    &mut sout,
+                );
+                assert_eq!(
+                    out[r * m..(r + 1) * m]
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<_>>(),
+                    sout.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "lane {r} diverged from its scalar cache"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_row_is_bitwise_stepwise() {
+        let (n, d, m) = (20, 8, 8);
+        let mut rng = Rng::new(12);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+
+        let mut stepped = BatchedKvCache::new(1, d, m, n);
+        stepped.push_row().unwrap();
+        let mut step_out = vec![0.0; n * m];
+        for i in 0..n {
+            let (s, e) = (i * m, (i + 1) * m);
+            let mut row = vec![0.0; m];
+            stepped.step_batch(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[s..e],
+                &mut row,
+            );
+            step_out[s..e].copy_from_slice(&row);
+        }
+
+        let mut prefilled = BatchedKvCache::new(1, d, m, n);
+        prefilled.push_row().unwrap();
+        let mut pre_out = vec![0.0; n * m];
+        prefilled.prefill_row(0, &q, &k, &v, n, &mut pre_out);
+
+        assert_eq!(
+            step_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            pre_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+        assert_eq!(stepped.lane_len(0), prefilled.lane_len(0));
+    }
+
+    #[test]
+    fn swap_remove_compaction_preserves_survivors() {
+        let (b, d, m, steps) = (4, 4, 4, 6);
+        let mut rng = Rng::new(13);
+        let mut cache = BatchedKvCache::new(b, d, m, steps + 4);
+        for _ in 0..b {
+            cache.push_row().unwrap();
+        }
+        // give each lane a distinct trajectory
+        let q = rand(b * d, &mut rng);
+        let k = rand(b * d, &mut rng);
+        let v = rand(b * m, &mut rng);
+        let mut out = vec![0.0; b * m];
+        for _ in 0..steps {
+            cache.step_batch(&q, &k, &v, &mut out);
+        }
+        // snapshot survivors, remove lane 1 (lane 3 moves into its slot)
+        let mut want2 = vec![0.0; cache.snapshot_len(2)];
+        cache.export_row(2, &mut want2);
+        let mut want3 = vec![0.0; cache.snapshot_len(3)];
+        cache.export_row(3, &mut want3);
+        assert_eq!(cache.swap_remove_row(1), Some(3));
+        assert_eq!(cache.rows(), 3);
+        let mut got1 = vec![0.0; cache.snapshot_len(1)];
+        cache.export_row(1, &mut got1);
+        let mut got2 = vec![0.0; cache.snapshot_len(2)];
+        cache.export_row(2, &mut got2);
+        assert_eq!(got1, want3, "moved lane must carry its rows exactly");
+        assert_eq!(got2, want2, "untouched lane must not move");
+    }
+
+    #[test]
+    fn swap_rows_exchanges_lane_trajectories_exactly() {
+        let (d, m, n) = (4, 4, 8);
+        let mut rng = Rng::new(14);
+        let mut cache = BatchedKvCache::new(2, d, m, n + 2);
+        cache.push_row().unwrap();
+        cache.push_row().unwrap();
+        let q = rand(2 * d, &mut rng);
+        let k = rand(2 * d, &mut rng);
+        let v = rand(2 * m, &mut rng);
+        let mut out = vec![0.0; 2 * m];
+        // ragged lengths: lane 0 sees n tokens, lane 1 only n/2
+        for i in 0..n {
+            if i < n / 2 {
+                cache.step_batch(&q, &k, &v, &mut out);
+            } else {
+                cache.step_batch(&q[..d], &k[..d], &v[..m], &mut out[..m]);
+            }
+        }
+        let mut snap0 = vec![0.0; cache.snapshot_len(0)];
+        cache.export_row(0, &mut snap0);
+        let mut snap1 = vec![0.0; cache.snapshot_len(1)];
+        cache.export_row(1, &mut snap1);
+        cache.swap_rows(0, 1);
+        assert_eq!(cache.lane_len(0), n / 2);
+        assert_eq!(cache.lane_len(1), n);
+        let mut got0 = vec![0.0; cache.snapshot_len(0)];
+        cache.export_row(0, &mut got0);
+        let mut got1 = vec![0.0; cache.snapshot_len(1)];
+        cache.export_row(1, &mut got1);
+        assert_eq!(got0, snap1);
+        assert_eq!(got1, snap0);
+    }
+
+    #[test]
+    fn prefix_step_leaves_suffix_lanes_untouched() {
+        let (b, d, m) = (3, 4, 4);
+        let mut rng = Rng::new(15);
+        let mut cache = BatchedKvCache::new(b, d, m, 8);
+        for _ in 0..b {
+            cache.push_row().unwrap();
+        }
+        let q = rand(b * d, &mut rng);
+        let k = rand(b * d, &mut rng);
+        let v = rand(b * m, &mut rng);
+        let mut out = vec![0.0; b * m];
+        cache.step_batch(&q, &k, &v, &mut out);
+        let mut before = vec![0.0; cache.snapshot_len(2)];
+        cache.export_row(2, &mut before);
+        // step only the first two lanes
+        cache.step_batch(&q[..2 * d], &k[..2 * d], &v[..2 * m], &mut out[..2 * m]);
+        assert_eq!(cache.lane_len(2), 1, "suffix lane must not advance");
+        let mut after = vec![0.0; cache.snapshot_len(2)];
+        cache.export_row(2, &mut after);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn export_import_row_resumes_bitwise() {
+        let (d, m, n) = (8, 8, 16);
+        let mut rng = Rng::new(16);
+        let (q, k, v) = (rand(n * d, &mut rng), rand(n * d, &mut rng), rand(n * m, &mut rng));
+        let cut = n / 2;
+
+        // uninterrupted reference
+        let mut full = BatchedKvCache::new(1, d, m, n);
+        full.push_row().unwrap();
+        let mut want = vec![0.0; n * m];
+        full.prefill_row(0, &q, &k, &v, n, &mut want);
+
+        // run to the cut, snapshot, restore into a fresh cache, continue
+        let mut donor = BatchedKvCache::new(1, d, m, n);
+        donor.push_row().unwrap();
+        let mut tmp = vec![0.0; cut * m];
+        donor.prefill_row(0, &q[..cut * d], &k[..cut * d], &v[..cut * m], cut, &mut tmp);
+        let mut snap = vec![0.0; donor.snapshot_len(0)];
+        donor.export_row(0, &mut snap);
+
+        let mut resumed = BatchedKvCache::new(1, d, m, n);
+        resumed.push_row().unwrap();
+        resumed.import_row(0, cut, &snap);
+        let rest = n - cut;
+        let mut got = vec![0.0; rest * m];
+        resumed.prefill_row(
+            0,
+            &q[cut * d..],
+            &k[cut * d..],
+            &v[cut * m..],
+            rest,
+            &mut got,
+        );
+        assert_eq!(
+            want[cut * m..].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong length")]
+    fn import_row_rejects_mismatched_snapshot() {
+        let mut cache = BatchedKvCache::new(1, 4, 4, 8);
+        cache.push_row().unwrap();
+        let snap = vec![0.0; 3];
+        cache.import_row(0, 2, &snap);
+    }
+
+    #[test]
+    fn state_bytes_track_cached_tokens() {
+        let (d, m) = (4, 4);
+        let mut cache = BatchedKvCache::new(2, d, m, 8);
+        cache.push_row().unwrap();
+        cache.push_row().unwrap();
+        assert_eq!(cache.state_bytes(), 0);
+        let q = vec![0.1; d];
+        let mut out = vec![0.0; m];
+        cache.step_batch(&q, &q, &q, &mut out);
+        assert_eq!(cache.state_bytes(), (d + m) * 4, "one token in one lane");
+        let q2 = vec![0.1; 2 * d];
+        let mut out2 = vec![0.0; 2 * m];
+        cache.step_batch(&q2, &q2, &q2, &mut out2);
+        assert_eq!(cache.state_bytes(), 3 * (d + m) * 4);
+        cache.swap_remove_row(0);
+        assert_eq!(cache.state_bytes(), (d + m) * 4, "survivor has one token");
+    }
+
+    #[test]
+    fn push_row_at_capacity_returns_none() {
+        let mut cache = BatchedKvCache::new(2, 4, 4, 4);
+        assert_eq!(cache.push_row(), Some(0));
+        assert_eq!(cache.push_row(), Some(1));
+        assert_eq!(cache.push_row(), None);
     }
 }

@@ -315,6 +315,74 @@ pub fn resolve_weight_dtype(
     crate::tensor::WeightDtype::F32
 }
 
+/// Which attention formulation the serving engine decodes with — the
+/// `--attention-backend` / `LINTRA_ATTENTION_BACKEND` knob. Resolution
+/// happens at model construction (the backend IS the model's attention
+/// kind; weights are shared, the decode recurrence differs), so
+/// [`ServeConfig`] carries no field for it: by the time
+/// `NativeEngine::spawn` runs, the choice is baked into
+/// `TransformerLM::kind`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionBackend {
+    /// Batched linear-RNN decode (the paper's contribution): fixed-size
+    /// per-lane (S, Z) state, O(1) work and bytes per token.
+    Linear,
+    /// Batched softmax KV-cache decode: exact causal softmax attention
+    /// over appended K/V rows, O(t) work per token at position t and
+    /// O(N) state — the Tables 4/5 serving baseline.
+    Softmax,
+}
+
+impl AttentionBackend {
+    /// Parse a `--attention-backend` / `LINTRA_ATTENTION_BACKEND` value
+    /// (case-insensitive). `None` for anything but `linear`/`softmax`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "linear" => Some(AttentionBackend::Linear),
+            "softmax" => Some(AttentionBackend::Softmax),
+            _ => None,
+        }
+    }
+
+    /// The flag-facing name (`linear` / `softmax`).
+    pub fn label(self) -> &'static str {
+        match self {
+            AttentionBackend::Linear => "linear",
+            AttentionBackend::Softmax => "softmax",
+        }
+    }
+
+    /// The [`crate::attention::AttentionKind`] to construct models with.
+    pub fn kind(self) -> crate::attention::AttentionKind {
+        match self {
+            AttentionBackend::Linear => crate::attention::AttentionKind::Linear,
+            AttentionBackend::Softmax => crate::attention::AttentionKind::Softmax,
+        }
+    }
+}
+
+/// Resolve the serving attention backend: an explicit choice (the
+/// `--attention-backend` flag) wins; `None` consults
+/// `LINTRA_ATTENTION_BACKEND` (`linear`/`softmax`, case-insensitive —
+/// how CI replays the whole engine suite on the KV-cache path without
+/// touching every test literal), else linear. An unparseable
+/// environment value falls back to linear, mirroring
+/// [`resolve_weight_dtype`]: both backends are exact implementations of
+/// their formulation, and the tests that compare them pin their kinds
+/// explicitly. Same single-file env-resolution contract as the
+/// resolvers above (`lintra analyze` rule `env`).
+pub fn resolve_attention_backend(requested: Option<AttentionBackend>) -> AttentionBackend {
+    if let Some(b) = requested {
+        return b;
+    }
+    if let Ok(v) = std::env::var("LINTRA_ATTENTION_BACKEND") {
+        if let Some(b) = AttentionBackend::parse(&v) {
+            return b;
+        }
+    }
+    AttentionBackend::Linear
+}
+
 /// Resolve the propcheck case count: `PROPCHECK_CASES` overrides (soak
 /// runs crank it up), else `default`. An unparseable value falls back to
 /// the default — case count is a thoroughness knob, never a correctness
@@ -529,6 +597,34 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn attention_backend_resolves_explicit_then_env_then_linear() {
+        // explicit choices always win
+        for b in [AttentionBackend::Linear, AttentionBackend::Softmax] {
+            assert_eq!(resolve_attention_backend(Some(b)), b);
+            assert_eq!(AttentionBackend::parse(b.label()), Some(b));
+        }
+        assert_eq!(AttentionBackend::parse("SoftMax"), Some(AttentionBackend::Softmax));
+        assert_eq!(AttentionBackend::parse("reformer"), None);
+        assert_eq!(
+            AttentionBackend::Linear.kind(),
+            crate::attention::AttentionKind::Linear
+        );
+        assert_eq!(
+            AttentionBackend::Softmax.kind(),
+            crate::attention::AttentionKind::Softmax
+        );
+        // None falls back to the environment (mirroring the dtype knob);
+        // read the ambient value rather than mutating process env from a
+        // parallel test — CI exports LINTRA_ATTENTION_BACKEND=softmax in
+        // one run to replay the whole suite on the KV-cache path
+        let ambient = std::env::var("LINTRA_ATTENTION_BACKEND")
+            .ok()
+            .and_then(|v| AttentionBackend::parse(&v))
+            .unwrap_or(AttentionBackend::Linear);
+        assert_eq!(resolve_attention_backend(None), ambient);
     }
 
     #[test]

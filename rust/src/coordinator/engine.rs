@@ -101,7 +101,7 @@ use crate::coordinator::request::{GenerateRequest, GenerateResponse};
 use crate::coordinator::sessions::{SlotInfo, SlotPhase, SlotTable};
 use crate::coordinator::state_cache::StateCache;
 use crate::metrics::{LatencyRecorder, StateCacheCounters, TickLatencySplit};
-use crate::nn::{BatchedDecodeSession, LaneSnapshot, TransformerLM};
+use crate::nn::{BatchedDecodeSession, BatchedSoftmaxSession, LaneSnapshot, TransformerLM};
 use crate::parallel::lock_unpoisoned;
 use crate::propcheck::engine_invariants;
 use crate::rng::Rng;
@@ -403,6 +403,74 @@ impl DecodeBackend for BatchedDecodeSession<'_> {
     }
 
     fn snapshot_lane(&self, lane: usize) -> Option<LaneSnapshot> {
+        Some(self.export_lane(lane))
+    }
+
+    fn restore_lane(&mut self, lane: usize, snap: &LaneSnapshot) -> anyhow::Result<()> {
+        // import_lane asserts geometry; the engine only restores
+        // snapshots this very session exported, so the contract holds
+        self.import_lane(lane, snap);
+        Ok(())
+    }
+}
+
+impl DecodeBackend for BatchedSoftmaxSession<'_> {
+    fn vocab(&self) -> usize {
+        BatchedSoftmaxSession::vocab(self)
+    }
+
+    fn max_len(&self) -> usize {
+        BatchedSoftmaxSession::max_len(self)
+    }
+
+    fn lanes(&self) -> usize {
+        self.rows()
+    }
+
+    fn alloc_lane(&mut self) -> anyhow::Result<usize> {
+        self.alloc_row()
+            .ok_or_else(|| anyhow::anyhow!("native decode capacity exhausted"))
+    }
+
+    fn free_lane(&mut self, lane: usize) -> Option<usize> {
+        self.free_row(lane)
+    }
+
+    fn step_batch(&mut self, tokens: &[u32], logits: &mut Vec<f32>) -> anyhow::Result<()> {
+        BatchedSoftmaxSession::step_batch_into(self, tokens, logits);
+        Ok(())
+    }
+
+    fn supports_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        crate::nn::PREFILL_CHUNK
+    }
+
+    fn prefill_partial(
+        &mut self,
+        lane: usize,
+        chunk: &[u32],
+        finish: bool,
+        logits: &mut Vec<f32>,
+    ) -> anyhow::Result<bool> {
+        Ok(self.prefill_row_partial_into(lane, chunk, finish, logits))
+    }
+
+    fn swap_lanes(&mut self, a: usize, b: usize) {
+        self.swap_rows(a, b)
+    }
+
+    fn supports_snapshot(&self) -> bool {
+        true
+    }
+
+    fn snapshot_lane(&self, lane: usize) -> Option<LaneSnapshot> {
+        // O(cached tokens) payload, unlike the linear backend's O(1):
+        // LaneSnapshot::bytes reports the true size, so the state
+        // cache's LRU budget evicts honestly under the bigger entries
         Some(self.export_lane(lane))
     }
 
@@ -992,17 +1060,17 @@ impl NativeEngine {
     /// Spawn the worker; the model moves into the thread.
     pub fn spawn(model: TransformerLM, cfg: ServeConfig) -> anyhow::Result<EngineHandle> {
         cfg.validate()?;
+        if matches!(model.kind, AttentionKind::Lsh { .. }) {
+            // Reformer has no stateful decode (hashing needs the whole
+            // prefix — paper §C.1): there is nothing to run a tick loop on
+            anyhow::bail!("the native engine serves linear or softmax models, not LSH");
+        }
         let (tx, rx) = channel::<Msg>();
         let stats = Arc::new(Mutex::new(EngineStats::default()));
         let stats_w = stats.clone();
         let worker = std::thread::Builder::new()
             .name("lintra-native-engine".into())
             .spawn(move || {
-                assert_eq!(
-                    model.kind,
-                    AttentionKind::Linear,
-                    "the native engine decodes with the batched linear-RNN backend"
-                );
                 // Weight storage dtype: explicit ServeConfig wins, else
                 // LINTRA_WEIGHT_DTYPE, else f32. Casting is idempotent
                 // (always from the retained f32 tensors), so re-casting a
@@ -1013,8 +1081,27 @@ impl NativeEngine {
                 // kernels are bit-identical to serial, so thread count
                 // never changes what a request gets back.
                 let pool = crate::parallel::pool_for(cfg.num_threads);
-                let mut backend = model.batched_session_with_pool(cfg.max_batch, pool);
-                run_engine(&mut backend, &cfg, rx, stats_w);
+                // The serving backend follows the model's attention kind
+                // (the --attention-backend flag / LINTRA_ATTENTION_BACKEND
+                // resolve at model construction, not here): linear decodes
+                // through the batched RNN state, softmax through the
+                // batched KV cache — one tick loop either way, which is
+                // what makes Tables 4/5 a like-for-like serving contrast.
+                match model.kind {
+                    AttentionKind::Linear => {
+                        let mut backend = model.batched_session_with_pool(cfg.max_batch, pool);
+                        run_engine(&mut backend, &cfg, rx, stats_w);
+                    }
+                    AttentionKind::Softmax => {
+                        let mut backend =
+                            model.batched_softmax_session_with_pool(cfg.max_batch, pool);
+                        run_engine(&mut backend, &cfg, rx, stats_w);
+                    }
+                    AttentionKind::Lsh { .. } => {
+                        // lintra: allow(panic) -- rejected at spawn entry before the worker starts
+                        unreachable!("LSH models are rejected before the worker spawns")
+                    }
+                }
             })?;
         Ok(EngineHandle {
             tx,
@@ -1255,6 +1342,16 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
 
+    /// The attention kind the engine tests build models with: linear by
+    /// default, softmax when `LINTRA_ATTENTION_BACKEND=softmax` (the
+    /// fifth CI test leg) — every engine test then drives the KV-cache
+    /// backend through the same tick loop. Valid because `generate` (the
+    /// tests' oracle) routes through the same batched session machinery
+    /// the engine serves with for both kinds, bitwise.
+    fn test_kind() -> AttentionKind {
+        crate::config::resolve_attention_backend(None).kind()
+    }
+
     fn tiny_model() -> TransformerLM {
         let cfg = ModelConfig {
             vocab: 11,
@@ -1269,7 +1366,7 @@ mod tests {
             lsh_buckets: 8,
             lsh_chunk: 8,
         };
-        TransformerLM::init(&cfg, AttentionKind::Linear, 0)
+        TransformerLM::init(&cfg, test_kind(), 0)
     }
 
     #[test]
@@ -1329,6 +1426,51 @@ mod tests {
             "occupancy {}",
             st.mean_batch_occupancy()
         );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn softmax_backend_serves_end_to_end_matching_direct_generation() {
+        // the KV-cache backend through the whole serving path — chunked
+        // prefill (150 tokens = 3 chunks), continuous batching, retire —
+        // regardless of what LINTRA_ATTENTION_BACKEND says; greedy
+        // outputs must equal direct generation exactly, because
+        // session()/generate route through the same batched KV machinery
+        let model = long_model_of(AttentionKind::Softmax);
+        let vocab = model.cfg.vocab;
+        let short_prompt = vec![1, 2, 3];
+        let long_prompt = prompt_of(150, vocab, 41);
+        let direct_short = model.generate(&short_prompt, 8, 0.0, 0);
+        let direct_long = model.generate(&long_prompt, 5, 0.0, 0);
+        let mut handle = NativeEngine::spawn(
+            long_model_of(AttentionKind::Softmax),
+            ServeConfig {
+                max_batch: 2,
+                max_wait_us: 50_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx_short = handle.submit(GenerateRequest {
+            id: 1,
+            prompt: short_prompt,
+            max_new: 8,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        let rx_long = handle.submit(GenerateRequest {
+            id: 2,
+            prompt: long_prompt,
+            max_new: 5,
+            temperature: 0.0,
+            top_k: 0,
+        });
+        let resp_short = rx_short.recv().unwrap();
+        let resp_long = rx_long.recv().unwrap();
+        assert!(resp_short.error.is_none(), "{:?}", resp_short.error);
+        assert!(resp_long.error.is_none(), "{:?}", resp_long.error);
+        assert_eq!(resp_short.tokens, direct_short);
+        assert_eq!(resp_long.tokens, direct_long);
         handle.shutdown();
     }
 
@@ -1654,7 +1796,7 @@ mod tests {
 
     /// tiny geometry with room for multi-chunk prompts (max_len 192 spans
     /// three PREFILL_CHUNK-sized chunks)
-    fn long_model() -> TransformerLM {
+    fn long_model_of(kind: AttentionKind) -> TransformerLM {
         let cfg = ModelConfig {
             vocab: 11,
             d_model: 32,
@@ -1668,7 +1810,11 @@ mod tests {
             lsh_buckets: 8,
             lsh_chunk: 8,
         };
-        TransformerLM::init(&cfg, AttentionKind::Linear, 17)
+        TransformerLM::init(&cfg, kind, 17)
+    }
+
+    fn long_model() -> TransformerLM {
+        long_model_of(test_kind())
     }
 
     fn prompt_of(len: usize, vocab: usize, seed: u64) -> Vec<u32> {
@@ -1885,16 +2031,18 @@ mod tests {
         assert_eq!(outs_per_budget[0], outs_per_budget[2]);
     }
 
-    #[test]
-    fn shared_prefix_restore_skips_prefill_and_matches_cold_run() {
-        // the acceptance bar for the prefix-reuse state cache, including
-        // second-chance deposit admission: the FIRST request carrying a
-        // prefix only registers it (no snapshot is deposited, so a
-        // repeat of the same prompt still misses), the SECOND deposits,
-        // and the THIRD — sharing the chunk-aligned prefix — restores
-        // it, producing BIT-IDENTICAL greedy output to a cold run while
-        // ingesting only the non-shared suffix tokens
-        let model = long_model();
+    // the acceptance bar for the prefix-reuse state cache, including
+    // second-chance deposit admission: the FIRST request carrying a
+    // prefix only registers it (no snapshot is deposited, so a
+    // repeat of the same prompt still misses), the SECOND deposits,
+    // and the THIRD — sharing the chunk-aligned prefix — restores
+    // it, producing BIT-IDENTICAL greedy output to a cold run while
+    // ingesting only the non-shared suffix tokens. Parameterized over
+    // both serving backends: the cache machinery is backend-agnostic,
+    // only the snapshot payload differs (O(1) linear state vs O(N)
+    // KV rows — both honestly sized, both well under the budget here)
+    fn shared_prefix_restore_case(kind: AttentionKind) {
+        let model = long_model_of(kind);
         let vocab = model.cfg.vocab;
         let shared = prompt_of(2 * crate::nn::PREFILL_CHUNK, vocab, 90); // 128: 2 chunks
         let mut p1 = shared.clone();
@@ -1905,7 +2053,7 @@ mod tests {
         let direct2 = model.generate(&p2, 6, 0.0, 0);
 
         let mut handle = NativeEngine::spawn(
-            long_model(),
+            long_model_of(kind),
             ServeConfig {
                 state_cache_mb: 16,
                 ..Default::default()
@@ -1980,6 +2128,16 @@ mod tests {
         );
         assert_eq!(st2.state_cache.evictions, 0, "a 16 MiB budget fits two tiny entries");
         handle.shutdown();
+    }
+
+    #[test]
+    fn shared_prefix_restore_skips_prefill_and_matches_cold_run() {
+        shared_prefix_restore_case(AttentionKind::Linear);
+    }
+
+    #[test]
+    fn shared_prefix_restore_skips_prefill_and_matches_cold_run_softmax() {
+        shared_prefix_restore_case(AttentionKind::Softmax);
     }
 
     #[test]

@@ -15,7 +15,6 @@
 use std::sync::Arc;
 
 use anyhow::{bail, Context};
-use linear_transformer::attention::AttentionKind;
 use linear_transformer::cli::Args;
 use linear_transformer::config::{ServeConfig, TrainConfig};
 use linear_transformer::coordinator::engine::{NativeEngine, PjrtEngine, PjrtEngineSpec};
@@ -30,7 +29,7 @@ const FLAGS: &[&str] = &[
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
     "num-threads", "prefill-chunks-per-tick", "prefill-chunk-budget", "state-cache-mb",
     "prompt-len", "max-new", "temperature", "count", "backend", "weights", "batches",
-    "weight-dtype", "out", "dtype", "format", "baseline",
+    "weight-dtype", "out", "dtype", "format", "baseline", "attention-backend",
 ];
 
 /// Boolean flags: never consume the following token, so positional args
@@ -213,18 +212,42 @@ fn model_config_for(task: &str) -> anyhow::Result<linear_transformer::config::Mo
 
 fn load_native_model(args: &Args, task: &str) -> anyhow::Result<TransformerLM> {
     let cfg = model_config_for(task)?;
+    // --attention-backend {linear,softmax} wins, else
+    // LINTRA_ATTENTION_BACKEND, else linear — resolved here at model
+    // construction: the serving backend IS the model's attention kind
+    // (weights are shared between the formulations; only the decode
+    // recurrence differs), so downstream code just follows model.kind
+    let kind = linear_transformer::config::resolve_attention_backend(parse_attention_backend(
+        args.flag("attention-backend"),
+    )?)
+    .kind();
     match args.flag("weights") {
         Some(path) => {
             let bundle = linear_transformer::weights::WeightBundle::load(path)?;
-            TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle)
+            TransformerLM::from_bundle(&cfg, kind, &bundle)
         }
         None => {
             // default to the AOT initial weights so native == pjrt numerics
             let dir = artifacts_dir(args);
             let rt = Runtime::open(&dir)?;
             let bundle = rt.load_weights(&format!("{task}_linear"))?;
-            TransformerLM::from_bundle(&cfg, AttentionKind::Linear, &bundle)
+            TransformerLM::from_bundle(&cfg, kind, &bundle)
         }
+    }
+}
+
+/// Parse an optional `--attention-backend` value, failing loudly on an
+/// unrecognized name (unlike the env var, which silently falls back to
+/// linear — see [`linear_transformer::config::resolve_attention_backend`]).
+fn parse_attention_backend(
+    flag: Option<&str>,
+) -> anyhow::Result<Option<linear_transformer::config::AttentionBackend>> {
+    match flag {
+        None => Ok(None),
+        Some(s) => match linear_transformer::config::AttentionBackend::parse(s) {
+            Some(b) => Ok(Some(b)),
+            None => bail!("unknown attention backend {s:?} (linear|softmax)"),
+        },
     }
 }
 

@@ -12,6 +12,9 @@
 //! Reformer cannot decode statefully; see §C.1 of the paper).
 
 pub mod lstm;
+pub mod softmax_session;
+
+pub use softmax_session::BatchedSoftmaxSession;
 
 use std::sync::Arc;
 
@@ -466,8 +469,11 @@ impl TransformerLM {
     // -----------------------------------------------------------------------
 
     /// Create a decode session for this model's natural backend
-    /// (linear -> batched RNN at B=1; softmax -> naive recompute;
-    /// lsh -> recompute).
+    /// (linear -> batched RNN at B=1; softmax -> batched KV cache at
+    /// B=1; lsh -> recompute, Reformer has no stateful decode). The
+    /// stateful kinds route through the same batched sessions the
+    /// serving engine uses, so `generate` is bit-identical to serving —
+    /// which is what lets the engine tests use it as an oracle.
     pub fn session(&self) -> DecodeSession<'_> {
         let backend = match self.kind {
             AttentionKind::Linear => {
@@ -475,10 +481,23 @@ impl TransformerLM {
                 batched.alloc_row().expect("capacity 1");
                 Backend::Linear(batched)
             }
-            AttentionKind::Softmax => Backend::Recompute,
+            AttentionKind::Softmax => {
+                let mut batched = self.batched_softmax_session(1);
+                batched.alloc_row().expect("capacity 1");
+                Backend::SoftmaxKv(batched)
+            }
             AttentionKind::Lsh { .. } => Backend::Recompute,
         };
         DecodeSession::new(self, backend)
+    }
+
+    /// Decode session that reruns the full parallel [`Self::forward`]
+    /// every step — O(t²)/token for softmax. This is the naive-softmax
+    /// baseline of Tables 4/5 (the benches' "softmax" rows), kept
+    /// distinct from the KV-cache backend [`Self::session`] now routes
+    /// softmax models through.
+    pub fn session_recompute(&self) -> DecodeSession<'_> {
+        DecodeSession::new(self, Backend::Recompute)
     }
 
     /// Create a batched RNN decode session with capacity for `cap` lanes
@@ -505,6 +524,28 @@ impl TransformerLM {
     pub fn session_kv(&self) -> DecodeSession<'_> {
         assert_eq!(self.kind, AttentionKind::Softmax);
         DecodeSession::new(self, Backend::KvCache(KvState::new(&self.cfg)))
+    }
+
+    /// Create a batched KV-cache decode session with capacity for `cap`
+    /// lanes (softmax models only) — the serving engine's softmax
+    /// backend, mirroring [`Self::batched_session`] lane-for-lane: one
+    /// `step_batch` advances every lane by one token through single
+    /// `[B, ·]` GEMMs on the process-wide worker pool; only the
+    /// attention core differs (append-and-attend over a growing cache
+    /// instead of the O(1) linear state update).
+    pub fn batched_softmax_session(&self, cap: usize) -> BatchedSoftmaxSession<'_> {
+        BatchedSoftmaxSession::new(self, cap, crate::parallel::default_pool())
+    }
+
+    /// [`Self::batched_softmax_session`] with an explicit worker pool
+    /// (`None` runs the plain single-threaded kernels with zero
+    /// dispatch cost).
+    pub fn batched_softmax_session_with_pool(
+        &self,
+        cap: usize,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> BatchedSoftmaxSession<'_> {
+        BatchedSoftmaxSession::new(self, cap, pool)
     }
 
     /// Convenience: feed `prompt`, then sample `n_new` tokens.
@@ -1254,7 +1295,12 @@ enum Backend<'m> {
     /// O(1)/token — the paper's contribution, as the B=1 case of the
     /// batched RNN decode path (one code path for serving and sessions).
     Linear(BatchedDecodeSession<'m>),
-    /// O(t)/token — stateful softmax (supplementary C.1).
+    /// O(t)/token — stateful softmax as the B=1 case of the batched
+    /// KV-cache serving path (same machinery the engine decodes with).
+    SoftmaxKv(BatchedSoftmaxSession<'m>),
+    /// O(t)/token — stateful softmax (supplementary C.1), serial
+    /// per-row projections; the scalar reference the batched KV path is
+    /// tested against.
     KvCache(KvState),
     /// O(t²)/token — rerun the full forward each step (vanilla softmax /
     /// lsh decode; Reformer has no stateful decode).
@@ -1301,6 +1347,7 @@ impl<'m> DecodeSession<'m> {
     pub fn state_bytes(&self) -> usize {
         match &self.backend {
             Backend::Linear(s) => s.state_bytes(),
+            Backend::SoftmaxKv(s) => s.state_bytes(),
             Backend::KvCache(c) => c.state_bytes(),
             Backend::Recompute => self.history.len() * 4,
         }
@@ -1322,6 +1369,7 @@ impl<'m> DecodeSession<'m> {
                 logits.data[(n - 1) * v..].to_vec()
             }
             Backend::Linear(batched) => batched.step_batch(&[token]),
+            Backend::SoftmaxKv(batched) => batched.step_batch(&[token]),
             Backend::KvCache(_) => self.step_incremental(token, pos),
         }
     }
@@ -1351,8 +1399,11 @@ impl<'m> DecodeSession<'m> {
                 let o = &mut self.orow[col..col + dh];
                 match &mut self.backend {
                     Backend::KvCache(st) => st.caches[li * h + hd].step(q, k, v, o),
-                    // linear decode goes through BatchedDecodeSession::step_batch
-                    Backend::Linear(_) | Backend::Recompute => unreachable!(),
+                    // linear and batched-KV decode go through their
+                    // batched sessions' step_batch
+                    Backend::Linear(_) | Backend::SoftmaxKv(_) | Backend::Recompute => {
+                        unreachable!()
+                    }
                 }
             }
             vm_w(&mut self.out2, &self.orow, qb.map(|q| &q.wo), &blk.wo, e, e);
@@ -1837,12 +1888,31 @@ mod tests {
         let m = TransformerLM::init(&cfg, AttentionKind::Softmax, 6);
         let t = tokens(10, cfg.vocab, 7);
         let full = m.forward(&t);
-        let mut sess = m.session();
+        let mut sess = m.session_recompute();
         for (i, &tok) in t.iter().enumerate() {
             let logits = sess.step(tok);
             for (a, b) in logits.iter().zip(full.row(i)) {
                 assert!((a - b).abs() < 1e-4, "divergence at position {i}");
             }
+        }
+    }
+
+    #[test]
+    fn softmax_session_is_thin_wrapper_over_batched_kv() {
+        // DecodeSession (softmax) and a 1-lane batched KV session must
+        // agree bitwise — session()/generate() is the engine tests'
+        // oracle for the softmax backend, so it must route through the
+        // same batched machinery the engine serves with
+        let cfg = tiny_cfg();
+        let m = TransformerLM::init(&cfg, AttentionKind::Softmax, 23);
+        let t = tokens(10, cfg.vocab, 300);
+        let mut single = m.session();
+        let mut batched = m.batched_softmax_session(1);
+        batched.alloc_row().unwrap();
+        for &tok in &t {
+            let a = single.step(tok);
+            let b = batched.step_batch(&[tok]);
+            assert_eq!(a, b);
         }
     }
 

@@ -1,0 +1,829 @@
+//! Batched stateful-softmax decode: the KV-cache serving backend.
+//!
+//! [`BatchedSoftmaxSession`] is the softmax twin of
+//! [`super::BatchedDecodeSession`]: the same `[B, ·]` activation
+//! buffers, the same quant-aware pooled GEMMs for the QKV/output/FF
+//! projections and the lm-head, the same dense-lane churn discipline
+//! (alloc / swap-remove / prefix stepping / chunked resumable prefill /
+//! snapshot export-import). The *only* divergence is the attention
+//! core: where the linear session updates a fixed-size (S, Z) pair per
+//! layer×head (eqs 16-20), this session appends one (k, v) row per
+//! token to a [`softmax::BatchedKvCache`] and attends over the whole
+//! cache — O(t·d) per token at position t, with state that grows with
+//! the sequence.
+//!
+//! Serving both formulations behind the same
+//! [`crate::coordinator::engine::DecodeBackend`] trait is what makes
+//! the paper's Tables 4/5 contrast a measured serving scenario instead
+//! of a claim: one tick loop, one batcher, one admission path — the
+//! backends differ only in the per-token attention cost and in how
+//! their lane snapshots scale (O(1) bytes for linear, O(N) here).
+
+use std::sync::Arc;
+
+use crate::attention::{softmax, AttentionKind};
+use crate::parallel::ThreadPool;
+use crate::tensor::{
+    add_bias_rows, gather_cols, gelu, layer_norm_into, layer_norm_rows_pooled, scatter_cols,
+};
+
+use super::{mm_w, vm_w_pooled, LaneSnapshot, TransformerLM, PREFILL_CHUNK};
+
+/// Batched autoregressive decode over per-lane growing KV caches.
+///
+/// Holds every lane's cache in structure-of-arrays layout (one
+/// [`softmax::BatchedKvCache`] per layer×head, each lane's rows
+/// reserved at `max_len` tokens up front so serving-tick appends never
+/// allocate) plus `[B, ·]` activation buffers, so one
+/// [`Self::step_batch`] call advances all live lanes by one token
+/// through single `[B, ·]` GEMMs — identical projection machinery to
+/// the linear session; only the attention core differs.
+///
+/// Prompts enter through [`Self::prefill_row`] (one-shot) or
+/// [`Self::prefill_row_partial`] (resumable), consumed in
+/// [`PREFILL_CHUNK`]-sized chunks with the vocab-sized lm-head run only
+/// for the final prompt position. The per-token float-op order of the
+/// KV attention core IS the step path, so prefilled state and logits
+/// are bit-identical to per-tick feeding regardless of chunking.
+///
+/// A lane's snapshot ([`Self::export_lane`] / [`Self::import_lane`]) is
+/// its appended K/V rows plus the position cursor — unlike the linear
+/// backend's constant-size snapshot it grows with the prefix length,
+/// and [`LaneSnapshot::bytes`] reports that honestly so the state
+/// cache's LRU budget stays meaningful.
+pub struct BatchedSoftmaxSession<'m> {
+    model: &'m TransformerLM,
+    cap: usize,
+    rows: usize,
+    /// worker pool for the projection GEMMs (None = pure serial); the
+    /// attention core itself is serial per lane — O(t·d) next to the
+    /// `[B, ·]` GEMMs, and trivially thread-count-invariant
+    pool: Option<Arc<ThreadPool>>,
+    /// n_layers * n_heads batched caches, lane-for-lane in step
+    states: Vec<softmax::BatchedKvCache>,
+    /// absolute position of the next token, per lane
+    pos: Vec<usize>,
+    // preallocated [cap, ·] activation buffers
+    x: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    merged: Vec<f32>,
+    out2: Vec<f32>,
+    ff: Vec<f32>,
+    // per-head gather buffers, [cap, d_head]
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    oh: Vec<f32>,
+}
+
+impl<'m> BatchedSoftmaxSession<'m> {
+    pub(super) fn new(model: &'m TransformerLM, cap: usize, pool: Option<Arc<ThreadPool>>) -> Self {
+        assert_eq!(
+            model.kind,
+            AttentionKind::Softmax,
+            "batched KV-cache decode requires a softmax-attention model"
+        );
+        assert!(cap >= 1);
+        let cfg = &model.cfg;
+        let e = cfg.d_model;
+        let dh = cfg.d_head();
+        // activation buffers serve both the [B, ·] decode tick and the
+        // [PREFILL_CHUNK, ·] prefill pass (never concurrently), so size
+        // them for whichever is wider
+        let buf_rows = cap.max(PREFILL_CHUNK);
+        BatchedSoftmaxSession {
+            model,
+            cap,
+            rows: 0,
+            pool,
+            states: (0..cfg.n_layers * cfg.n_heads)
+                .map(|_| softmax::BatchedKvCache::new(cap, dh, dh, cfg.max_len))
+                .collect(),
+            pos: Vec::with_capacity(cap),
+            x: vec![0.0; buf_rows * e],
+            normed: vec![0.0; buf_rows * e],
+            q: vec![0.0; buf_rows * e],
+            k: vec![0.0; buf_rows * e],
+            v: vec![0.0; buf_rows * e],
+            merged: vec![0.0; buf_rows * e],
+            out2: vec![0.0; buf_rows * e],
+            ff: vec![0.0; buf_rows * cfg.d_ff],
+            qh: vec![0.0; buf_rows * dh],
+            kh: vec![0.0; buf_rows * dh],
+            vh: vec![0.0; buf_rows * dh],
+            oh: vec![0.0; buf_rows * dh],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Threads the session's GEMM kernels fan out over (1 = serial).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
+    }
+
+    /// Live lanes.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Absolute position of the next token lane `row` will consume.
+    pub fn pos(&self, row: usize) -> usize {
+        self.pos[row]
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.model.cfg.vocab
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.model.cfg.max_len
+    }
+
+    /// Append a fresh lane (empty cache, position 0); `None` at capacity.
+    pub fn alloc_row(&mut self) -> Option<usize> {
+        if self.rows == self.cap {
+            return None;
+        }
+        for st in &mut self.states {
+            // lintra: allow(panic) -- guarded by the rows == cap check above
+            st.push_row().expect("states and session agree on capacity");
+        }
+        self.pos.push(0);
+        self.rows += 1;
+        Some(self.rows - 1)
+    }
+
+    /// Free lane `row`, compacting by moving the last lane into its place.
+    /// Returns the moved lane's previous index (`None` if `row` was last).
+    pub fn free_row(&mut self, row: usize) -> Option<usize> {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        let mut moved = None;
+        for st in &mut self.states {
+            moved = st.swap_remove_row(row);
+        }
+        self.pos.swap_remove(row);
+        self.rows -= 1;
+        moved
+    }
+
+    /// Bytes of KV-cache state held for the live lanes *at their current
+    /// lengths* — grows with every decoded token (Table 4's contrast
+    /// with the constant linear state).
+    pub fn state_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.state_bytes()).sum()
+    }
+
+    /// Advance the first `tokens.len()` live lanes by one token;
+    /// `tokens[r]` feeds lane r. Returns logits `[tokens.len() * vocab]`
+    /// row-major.
+    ///
+    /// Allocating convenience form of [`Self::step_batch_into`]; the
+    /// serving tick loop passes a reused buffer instead.
+    pub fn step_batch(&mut self, tokens: &[u32]) -> Vec<f32> {
+        // lintra: allow(alloc) -- compat wrapper; the tick loop uses step_batch_into
+        let mut logits = Vec::new();
+        self.step_batch_into(tokens, &mut logits);
+        logits
+    }
+
+    /// Advance the first `tokens.len()` live lanes by one token;
+    /// `tokens[r]` feeds lane r. Fills `logits` with `[tokens.len() *
+    /// vocab]` row-major values, replacing its previous contents.
+    ///
+    /// Callers may step a *prefix* of the live lanes (`tokens.len() <
+    /// rows`): the suffix lanes are left completely untouched, and each
+    /// lane's float-op order is independent of how many lanes step
+    /// together — the same prefix-step contract the linear session
+    /// keeps, which the serving engine relies on for mid-prefill lanes.
+    pub fn step_batch_into(&mut self, tokens: &[u32], logits: &mut Vec<f32>) {
+        let b = tokens.len();
+        assert!(b <= self.rows, "stepping {b} lanes of {} live", self.rows);
+        let model = self.model;
+        let cfg = &model.cfg;
+        let e = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.d_head();
+        logits.clear();
+        if b == 0 {
+            return;
+        }
+        let pool = self.pool.as_deref();
+        // x = tok_embed + pos_embed, gathered per lane
+        for (r, &tok) in tokens.iter().enumerate() {
+            assert!(
+                self.pos[r] < cfg.max_len,
+                "lane {r} exceeds max_len {}",
+                cfg.max_len
+            );
+            let te = model.tok_embed.row(tok as usize);
+            let pe = model.pos_embed.row(self.pos[r]);
+            let xr = &mut self.x[r * e..(r + 1) * e];
+            for j in 0..e {
+                xr[j] = te[j] + pe[j];
+            }
+        }
+        for (li, blk) in model.blocks.iter().enumerate() {
+            let qb = model.quant.as_ref().map(|q| &q.blocks[li]);
+            // ln1 -> one [B, e] x [e, e] GEMM per projection
+            layer_norm_rows_pooled(
+                pool,
+                &mut self.normed[..b * e],
+                &self.x[..b * e],
+                &blk.ln1_g.data,
+                &blk.ln1_b.data,
+                b,
+            );
+            let normed = &self.normed[..b * e];
+            mm_w(pool, &mut self.q[..b * e], normed, qb.map(|q| &q.wq), &blk.wq, b, e, e);
+            mm_w(pool, &mut self.k[..b * e], normed, qb.map(|q| &q.wk), &blk.wk, b, e, e);
+            mm_w(pool, &mut self.v[..b * e], normed, qb.map(|q| &q.wv), &blk.wv, b, e, e);
+            // per head: gather columns, append-and-attend, scatter back
+            for hd in 0..h {
+                let col = hd * dh;
+                gather_cols(&mut self.qh[..b * dh], &self.q[..b * e], b, e, col, dh);
+                gather_cols(&mut self.kh[..b * dh], &self.k[..b * e], b, e, col, dh);
+                gather_cols(&mut self.vh[..b * dh], &self.v[..b * e], b, e, col, dh);
+                self.states[li * h + hd].step_batch(
+                    &self.qh[..b * dh],
+                    &self.kh[..b * dh],
+                    &self.vh[..b * dh],
+                    &mut self.oh[..b * dh],
+                );
+                scatter_cols(&mut self.merged[..b * e], &self.oh[..b * dh], b, e, col, dh);
+            }
+            mm_w(
+                pool,
+                &mut self.out2[..b * e],
+                &self.merged[..b * e],
+                qb.map(|q| &q.wo),
+                &blk.wo,
+                b,
+                e,
+                e,
+            );
+            for (xv, &ov) in self.x[..b * e].iter_mut().zip(&self.out2[..b * e]) {
+                *xv += ov;
+            }
+            // ff: [B, e] x [e, d_ff] and [B, d_ff] x [d_ff, e] GEMMs
+            layer_norm_rows_pooled(
+                pool,
+                &mut self.normed[..b * e],
+                &self.x[..b * e],
+                &blk.ln2_g.data,
+                &blk.ln2_b.data,
+                b,
+            );
+            let dff = cfg.d_ff;
+            mm_w(
+                pool,
+                &mut self.ff[..b * dff],
+                &self.normed[..b * e],
+                qb.map(|q| &q.ff_w1),
+                &blk.ff_w1,
+                b,
+                e,
+                dff,
+            );
+            for r in 0..b {
+                for (hv, &bv) in self.ff[r * dff..(r + 1) * dff].iter_mut().zip(&blk.ff_b1.data)
+                {
+                    *hv = gelu(*hv + bv);
+                }
+            }
+            mm_w(
+                pool,
+                &mut self.out2[..b * e],
+                &self.ff[..b * dff],
+                qb.map(|q| &q.ff_w2),
+                &blk.ff_w2,
+                b,
+                dff,
+                e,
+            );
+            for (xv, &ov) in self.x[..b * e].iter_mut().zip(&self.out2[..b * e]) {
+                *xv += ov;
+            }
+            add_bias_rows(&mut self.x[..b * e], &blk.ff_b2.data, b);
+        }
+        // final ln + one [B, e] x [e, vocab] GEMM
+        layer_norm_rows_pooled(
+            pool,
+            &mut self.normed[..b * e],
+            &self.x[..b * e],
+            &model.final_ln_g.data,
+            &model.final_ln_b.data,
+            b,
+        );
+        let vocab = cfg.vocab;
+        // cleared above, so resize zero-fills every element — exactly a
+        // fresh `vec![0.0; b * vocab]`, and a reused buffer is
+        // bit-identical to an allocating call
+        logits.resize(b * vocab, 0.0);
+        let normed = &self.normed[..b * e];
+        mm_w(
+            pool,
+            &mut logits[..],
+            normed,
+            model.quant.as_ref().map(|q| &q.head_w),
+            &model.head_w,
+            b,
+            e,
+            vocab,
+        );
+        add_bias_rows(&mut logits[..], &model.head_b.data, b);
+        for p in self.pos[..b].iter_mut() {
+            *p += 1;
+        }
+    }
+
+    /// Swap lanes `a` and `b` (every layer×head cache plus the position
+    /// cursors). O(cached-tokens-per-lane), the same order as a
+    /// [`Self::free_row`] compaction move. The serving engine uses this
+    /// to move a lane whose prompt just finished prefilling into the
+    /// decoding prefix.
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        assert!(a < self.rows && b < self.rows, "swap_rows out of {} live lanes", self.rows);
+        if a == b {
+            return;
+        }
+        for st in &mut self.states {
+            st.swap_rows(a, b);
+        }
+        self.pos.swap(a, b);
+    }
+
+    /// Bytes of lane `row`'s [`LaneSnapshot`] payload — proportional to
+    /// the tokens the lane has consumed, unlike the linear backend's
+    /// constant-size snapshot.
+    pub fn lane_snapshot_bytes(&self, row: usize) -> usize {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        self.states.len() * self.states[0].snapshot_len(row) * std::mem::size_of::<f32>()
+    }
+
+    /// Export lane `row`'s complete decode state — every layer×head's
+    /// cached K/V rows plus the position cursor — as a [`LaneSnapshot`].
+    /// The lane itself is untouched. The payload is O(pos) per
+    /// layer×head; [`LaneSnapshot::bytes`] therefore reports the true
+    /// growing cost, which is what keeps the state cache's LRU budget
+    /// honest when this backend deposits into it.
+    pub fn export_lane(&self, row: usize) -> LaneSnapshot {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        let per = self.states[0].snapshot_len(row);
+        debug_assert_eq!(
+            per,
+            self.pos[row] * 2 * self.model.cfg.d_head(),
+            "cache length and position cursor must agree"
+        );
+        // lintra: allow(alloc) -- snapshots are admission/deposit-path, not
+        // per-tick, and each needs an owned buffer to hand to the cache
+        let mut data = vec![0.0f32; self.states.len() * per];
+        for (i, st) in self.states.iter().enumerate() {
+            st.export_row(row, &mut data[i * per..(i + 1) * per]);
+        }
+        LaneSnapshot {
+            pos: self.pos[row],
+            data,
+        }
+    }
+
+    /// Overwrite lane `row`'s caches and position from a snapshot taken
+    /// by [`Self::export_lane`] on a session of the same model geometry.
+    ///
+    /// After the import the lane is **bit-identical** to having
+    /// prefilled the snapshot's tokens in place: the cached K/V rows are
+    /// the exact f32 bits the prefill path appended, and every
+    /// continuation's float-op order depends only on the cached rows and
+    /// the inputs — never on how the rows got there.
+    pub fn import_lane(&mut self, row: usize, snap: &LaneSnapshot) {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        let dh = self.model.cfg.d_head();
+        let per = snap.pos * 2 * dh;
+        assert_eq!(
+            snap.data.len(),
+            self.states.len() * per,
+            "snapshot geometry does not match this model"
+        );
+        assert!(
+            snap.pos <= self.model.cfg.max_len,
+            "snapshot position {} exceeds max_len {}",
+            snap.pos,
+            self.model.cfg.max_len
+        );
+        for (i, st) in self.states.iter_mut().enumerate() {
+            st.import_row(row, snap.pos, &snap.data[i * per..(i + 1) * per]);
+        }
+        self.pos[row] = snap.pos;
+    }
+
+    /// Ingest a whole `prompt` into lane `row` in [`PREFILL_CHUNK`]-sized
+    /// chunks, returning the logits of the final prompt position
+    /// (`[vocab]`). The chunk projections run as `[chunk, ·]` GEMMs; the
+    /// attention appends the chunk's K/V rows and attends causally over
+    /// the growing cache; intermediate positions never touch the final
+    /// layer norm or the vocab-sized lm-head. Bit-identical to feeding
+    /// the prompt one tick at a time.
+    pub fn prefill_row(&mut self, row: usize, prompt: &[u32]) -> Vec<f32> {
+        self.prefill_row_partial(row, prompt, true)
+            // lintra: allow(panic) -- contract: finish = true always yields logits
+            .expect("finish = true always returns logits")
+    }
+
+    /// Resumable prefill: absorb `tokens` — any slice of a prompt — into
+    /// lane `row`'s caches, continuing from wherever the lane's position
+    /// cursor stands. Pass `finish = false` for interior slices (`None`
+    /// returned); pass `finish = true` with the last slice to get the
+    /// final position's logits (`Some([vocab])`). Slicing never changes
+    /// a logit, exactly as for the linear session.
+    ///
+    /// Allocating convenience form of [`Self::prefill_row_partial_into`];
+    /// the serving tick loop passes a reused buffer instead.
+    pub fn prefill_row_partial(
+        &mut self,
+        row: usize,
+        tokens: &[u32],
+        finish: bool,
+    ) -> Option<Vec<f32>> {
+        // lintra: allow(alloc) -- compat wrapper; the tick loop uses prefill_row_partial_into
+        let mut out = Vec::new();
+        if self.prefill_row_partial_into(row, tokens, finish, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Buffer-reusing form of [`Self::prefill_row_partial`]: on a
+    /// finishing slice, fills `out` with the final position's logits
+    /// (`[vocab]`, previous contents replaced) and returns `true`;
+    /// interior slices leave `out` cleared and return `false`.
+    pub fn prefill_row_partial_into(
+        &mut self,
+        row: usize,
+        tokens: &[u32],
+        finish: bool,
+        out: &mut Vec<f32>,
+    ) -> bool {
+        assert!(row < self.rows, "lane {row} out of {} live lanes", self.rows);
+        assert!(!tokens.is_empty(), "prefill needs at least one prompt token");
+        let model = self.model;
+        let cfg = &model.cfg;
+        let e = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.d_head();
+        let dff = cfg.d_ff;
+        assert!(
+            self.pos[row] + tokens.len() <= cfg.max_len,
+            "lane {row}: prompt of {} at position {} exceeds max_len {}",
+            tokens.len(),
+            self.pos[row],
+            cfg.max_len
+        );
+        let pool = self.pool.as_deref();
+        out.clear();
+        let mut wrote = false;
+        let mut off = 0;
+        while off < tokens.len() {
+            let n = (tokens.len() - off).min(PREFILL_CHUNK);
+            let chunk = &tokens[off..off + n];
+            let base = self.pos[row];
+            // x = tok_embed + pos_embed for every chunk position
+            for (i, &tok) in chunk.iter().enumerate() {
+                let te = model.tok_embed.row(tok as usize);
+                let pe = model.pos_embed.row(base + i);
+                let xr = &mut self.x[i * e..(i + 1) * e];
+                for j in 0..e {
+                    xr[j] = te[j] + pe[j];
+                }
+            }
+            for (li, blk) in model.blocks.iter().enumerate() {
+                // ln1 -> one [chunk, e] x [e, e] GEMM per projection
+                layer_norm_rows_pooled(
+                    pool,
+                    &mut self.normed[..n * e],
+                    &self.x[..n * e],
+                    &blk.ln1_g.data,
+                    &blk.ln1_b.data,
+                    n,
+                );
+                let qb = model.quant.as_ref().map(|q| &q.blocks[li]);
+                let normed = &self.normed[..n * e];
+                mm_w(pool, &mut self.q[..n * e], normed, qb.map(|q| &q.wq), &blk.wq, n, e, e);
+                mm_w(pool, &mut self.k[..n * e], normed, qb.map(|q| &q.wk), &blk.wk, n, e, e);
+                mm_w(pool, &mut self.v[..n * e], normed, qb.map(|q| &q.wv), &blk.wv, n, e, e);
+                // per head: the chunk's rows append to this lane's cache
+                // only; other lanes' caches are untouched
+                for hd in 0..h {
+                    let col = hd * dh;
+                    gather_cols(&mut self.qh[..n * dh], &self.q[..n * e], n, e, col, dh);
+                    gather_cols(&mut self.kh[..n * dh], &self.k[..n * e], n, e, col, dh);
+                    gather_cols(&mut self.vh[..n * dh], &self.v[..n * e], n, e, col, dh);
+                    self.states[li * h + hd].prefill_row(
+                        row,
+                        &self.qh[..n * dh],
+                        &self.kh[..n * dh],
+                        &self.vh[..n * dh],
+                        n,
+                        &mut self.oh[..n * dh],
+                    );
+                    scatter_cols(&mut self.merged[..n * e], &self.oh[..n * dh], n, e, col, dh);
+                }
+                let merged = &self.merged[..n * e];
+                mm_w(pool, &mut self.out2[..n * e], merged, qb.map(|q| &q.wo), &blk.wo, n, e, e);
+                for (xv, &ov) in self.x[..n * e].iter_mut().zip(&self.out2[..n * e]) {
+                    *xv += ov;
+                }
+                // ff: [chunk, e] x [e, d_ff] and [chunk, d_ff] x [d_ff, e]
+                layer_norm_rows_pooled(
+                    pool,
+                    &mut self.normed[..n * e],
+                    &self.x[..n * e],
+                    &blk.ln2_g.data,
+                    &blk.ln2_b.data,
+                    n,
+                );
+                mm_w(
+                    pool,
+                    &mut self.ff[..n * dff],
+                    &self.normed[..n * e],
+                    qb.map(|q| &q.ff_w1),
+                    &blk.ff_w1,
+                    n,
+                    e,
+                    dff,
+                );
+                for r in 0..n {
+                    let frow = &mut self.ff[r * dff..(r + 1) * dff];
+                    for (hv, &bv) in frow.iter_mut().zip(&blk.ff_b1.data) {
+                        *hv = gelu(*hv + bv);
+                    }
+                }
+                mm_w(
+                    pool,
+                    &mut self.out2[..n * e],
+                    &self.ff[..n * dff],
+                    qb.map(|q| &q.ff_w2),
+                    &blk.ff_w2,
+                    n,
+                    dff,
+                    e,
+                );
+                for (xv, &ov) in self.x[..n * e].iter_mut().zip(&self.out2[..n * e]) {
+                    *xv += ov;
+                }
+                add_bias_rows(&mut self.x[..n * e], &blk.ff_b2.data, n);
+            }
+            self.pos[row] += n;
+            off += n;
+            if finish && off == tokens.len() {
+                // only the last prompt position pays for the final layer
+                // norm and the [e, vocab] lm-head
+                let last = n - 1;
+                layer_norm_into(
+                    &mut self.normed[..e],
+                    &self.x[last * e..(last + 1) * e],
+                    &model.final_ln_g.data,
+                    &model.final_ln_b.data,
+                );
+                // cleared on entry, so resize zero-fills — exactly a
+                // fresh `vec![0.0; vocab]` for the reused buffer too
+                out.resize(cfg.vocab, 0.0);
+                vm_w_pooled(
+                    pool,
+                    &mut out[..],
+                    &self.normed[..e],
+                    model.quant.as_ref().map(|q| &q.head_w),
+                    &model.head_w,
+                    e,
+                    cfg.vocab,
+                );
+                for (l, bv) in out.iter_mut().zip(&model.head_b.data) {
+                    *l += bv;
+                }
+                wrote = true;
+            }
+        }
+        wrote
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::attention::AttentionKind;
+    use crate::config::ModelConfig;
+    use crate::nn::TransformerLM;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 11,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            max_len: 48,
+            ..ModelConfig::small_copy()
+        }
+    }
+
+    fn tokens(n: usize, vocab: usize, seed: u64) -> Vec<u32> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n).map(|_| (rng.next_u64() as usize % vocab) as u32).collect()
+    }
+
+    #[test]
+    fn batched_softmax_matches_forward_per_lane() {
+        // every lane's step-by-step logits vs the full parallel forward
+        // of that lane's sequence (tolerance: different projection
+        // paths — GEMM rows vs allocating matmuls — not bitwise)
+        let cfg = tiny_cfg();
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 3);
+        let streams: Vec<Vec<u32>> =
+            (0..3).map(|s| tokens(10, cfg.vocab, 100 + s)).collect();
+        let mut sess = model.batched_softmax_session_with_pool(streams.len(), None);
+        for _ in 0..streams.len() {
+            sess.alloc_row().expect("capacity");
+        }
+        let vocab = cfg.vocab;
+        for t in 0..10 {
+            let step_tokens: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+            let logits = sess.step_batch(&step_tokens);
+            for (r, stream) in streams.iter().enumerate() {
+                let full = model.forward(&stream[..t + 1]);
+                let (nrows, v) = full.dims2();
+                assert_eq!(v, vocab);
+                let want = &full.data[(nrows - 1) * v..];
+                let got = &logits[r * vocab..(r + 1) * vocab];
+                for (i, (w, g)) in want.iter().zip(got).enumerate() {
+                    assert!(
+                        (w - g).abs() < 2e-3,
+                        "lane {r} pos {t} logit {i}: forward {w} vs kv {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_prefill_is_bitwise_one_shot_regardless_of_slicing() {
+        let mut cfg = tiny_cfg();
+        cfg.max_len = 200;
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 5);
+        let prompt = tokens(130, cfg.vocab, 7);
+
+        let mut oneshot = model.batched_softmax_session_with_pool(1, None);
+        oneshot.alloc_row().expect("capacity");
+        let want = oneshot.prefill_row(0, &prompt);
+
+        for splits in [
+            vec![130usize],
+            vec![64, 66],
+            vec![1, 64, 65],
+            vec![13, 51, 29, 37],
+        ] {
+            let mut sess = model.batched_softmax_session_with_pool(1, None);
+            sess.alloc_row().expect("capacity");
+            let mut off = 0;
+            let mut got = None;
+            for (i, &len) in splits.iter().enumerate() {
+                let finish = i == splits.len() - 1;
+                let res = sess.prefill_row_partial(0, &prompt[off..off + len], finish);
+                off += len;
+                if finish {
+                    got = res;
+                }
+            }
+            assert_eq!(off, prompt.len());
+            let got = got.expect("finishing slice returns logits");
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "splits {splits:?} changed the finishing logits"
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_is_bitwise_step_by_step() {
+        let cfg = tiny_cfg();
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 9);
+        let prompt = tokens(20, cfg.vocab, 21);
+
+        let mut stepped = model.batched_softmax_session_with_pool(1, None);
+        stepped.alloc_row().expect("capacity");
+        let mut step_logits = Vec::new();
+        for &t in &prompt {
+            step_logits = stepped.step_batch(&[t]);
+        }
+
+        let mut prefilled = model.batched_softmax_session_with_pool(1, None);
+        prefilled.alloc_row().expect("capacity");
+        let pre_logits = prefilled.prefill_row(0, &prompt);
+
+        assert_eq!(
+            step_logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            pre_logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+        assert_eq!(stepped.pos(0), prefilled.pos(0));
+        assert_eq!(stepped.state_bytes(), prefilled.state_bytes());
+    }
+
+    #[test]
+    fn lane_churn_preserves_survivor_streams() {
+        // mirror of the linear session's slot-churn spec: free a lane
+        // mid-stream, let the survivor get compacted into its slot, and
+        // check its continuation is bitwise the uninterrupted run
+        let cfg = tiny_cfg();
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 11);
+        let a = tokens(16, cfg.vocab, 1);
+        let b = tokens(16, cfg.vocab, 2);
+
+        // uninterrupted reference for stream b
+        let mut solo = model.batched_softmax_session_with_pool(1, None);
+        solo.alloc_row().expect("capacity");
+        let mut want = Vec::new();
+        for &t in &b {
+            want = solo.step_batch(&[t]);
+        }
+
+        let mut sess = model.batched_softmax_session_with_pool(2, None);
+        sess.alloc_row().expect("capacity");
+        sess.alloc_row().expect("capacity");
+        // advance both lanes half-way
+        for i in 0..8 {
+            let _ = sess.step_batch(&[a[i], b[i]]);
+        }
+        // retire lane 0; lane 1 (stream b) compacts into slot 0
+        assert_eq!(sess.free_row(0), Some(1));
+        let mut got = Vec::new();
+        for i in 8..16 {
+            got = sess.step_batch(&[b[i]]);
+        }
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "compacted lane diverged from its uninterrupted run"
+        );
+    }
+
+    #[test]
+    fn export_import_lane_resumes_bitwise() {
+        let cfg = tiny_cfg();
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 13);
+        let prompt = tokens(24, cfg.vocab, 3);
+        let cut = 16;
+
+        let mut full = model.batched_softmax_session_with_pool(1, None);
+        full.alloc_row().expect("capacity");
+        let want = full.prefill_row(0, &prompt);
+
+        let mut donor = model.batched_softmax_session_with_pool(1, None);
+        donor.alloc_row().expect("capacity");
+        donor.prefill_row_partial(0, &prompt[..cut], false);
+        let snap = donor.export_lane(0);
+        assert_eq!(snap.pos, cut);
+        assert_eq!(
+            snap.bytes(),
+            donor.lane_snapshot_bytes(0),
+            "snapshot bytes must match the session's accounting"
+        );
+        // O(N) snapshot: bytes grow with the prefix, unlike linear
+        assert_eq!(
+            snap.bytes(),
+            cfg.n_layers * cfg.n_heads * cut * 2 * cfg.d_head() * 4
+        );
+
+        let mut resumed = model.batched_softmax_session_with_pool(1, None);
+        resumed.alloc_row().expect("capacity");
+        resumed.import_lane(0, &snap);
+        let got = resumed
+            .prefill_row_partial(0, &prompt[cut..], true)
+            .expect("finishing slice returns logits");
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshot geometry does not match this model")]
+    fn import_lane_rejects_mismatched_geometry() {
+        let cfg = tiny_cfg();
+        let model = TransformerLM::init(&cfg, AttentionKind::Softmax, 15);
+        let mut donor = model.batched_softmax_session_with_pool(1, None);
+        donor.alloc_row().expect("capacity");
+        donor.prefill_row_partial(0, &tokens(8, cfg.vocab, 4), false);
+        let snap = donor.export_lane(0);
+
+        let mut other_cfg = tiny_cfg();
+        other_cfg.n_layers = 1;
+        let other = TransformerLM::init(&other_cfg, AttentionKind::Softmax, 15);
+        let mut sess = other.batched_softmax_session_with_pool(1, None);
+        sess.alloc_row().expect("capacity");
+        sess.import_lane(0, &snap);
+    }
+}

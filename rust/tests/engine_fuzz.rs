@@ -1,0 +1,178 @@
+//! Seeded engine fuzzing: random serving scripts replayed against both
+//! decode backends under varying thread counts and scheduler knobs.
+//!
+//! A *script* is a batch of requests with randomized prompt lengths (1 to
+//! well past `PREFILL_CHUNK`, so admission spans multiple chunked-prefill
+//! ticks), randomized `max_new` (tiny values retire lanes early while
+//! longer prompts are still mid-prefill), and randomized greedy styles.
+//! Each script replays under every serving configuration in the sweep —
+//! GEMM-pool threads {1, 4}, per-slot/global prefill budgets, decode
+//! batch sizes — and every replay must reproduce `model.generate`'s
+//! output for every request exactly.
+//!
+//! Requests are restricted to *effectively greedy* sampling
+//! (`temperature == 0` or `top_k == 1`, both of which reduce to argmax
+//! in `sample_logits_topk`): the engine's documented contract is that
+//! logits are bit-identical under any thread count or scheduling knob,
+//! but with a temperature the worker's sampling RNG draws in schedule
+//! order, so sampled (non-greedy) streams legitimately differ with batch
+//! composition. Greedy streams are the schedule-invariant observable.
+//!
+//! `propcheck::engine_invariants::check_tick` runs inside the engine's
+//! tick loop whenever `debug_assertions` are on (the default test
+//! profile), so every replay here also sweeps the lane/slot/cache
+//! invariants; any trip aborts the test. Scripts come from
+//! `propcheck::check`, so failures print the seed for replay.
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::config::{ModelConfig, ServeConfig};
+use linear_transformer::coordinator::engine::NativeEngine;
+use linear_transformer::coordinator::request::GenerateRequest;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::propcheck;
+
+fn fuzz_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 11,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        // room for a 150-token prompt + decode without truncation, and
+        // prompts past PREFILL_CHUNK (64) so admission is multi-tick
+        max_len: 224,
+        ..ModelConfig::small_copy()
+    }
+}
+
+struct ScriptReq {
+    prompt: Vec<u32>,
+    max_new: usize,
+    temperature: f32,
+    top_k: usize,
+}
+
+/// Draw a random serving script from the generator.
+fn gen_script(g: &mut propcheck::Gen, vocab: usize) -> Vec<ScriptReq> {
+    let n_req = g.usize_in(3, 6);
+    (0..n_req)
+        .map(|_| {
+            let len = g.usize_in(1, 150);
+            let prompt = g.vec_usize(len, 0, vocab - 1).into_iter().map(|t| t as u32).collect();
+            // both styles are argmax; the second also exercises the
+            // top-k plumbing end to end
+            let (temperature, top_k) = if g.bool() { (0.0, 0) } else { (0.7, 1) };
+            ScriptReq {
+                prompt,
+                max_new: g.usize_in(1, 8),
+                temperature,
+                top_k,
+            }
+        })
+        .collect()
+}
+
+/// Replay `script` on a fresh engine with the given knobs; return each
+/// request's token stream, in script order.
+fn replay(
+    kind: AttentionKind,
+    script: &[ScriptReq],
+    threads: usize,
+    max_batch: usize,
+    chunks_per_tick: usize,
+    chunk_budget: usize,
+) -> Result<Vec<Vec<u32>>, String> {
+    let cfg = fuzz_cfg();
+    let mut handle = NativeEngine::spawn(
+        TransformerLM::init(&cfg, kind, 23),
+        ServeConfig {
+            max_batch,
+            max_wait_us: 100,
+            num_threads: threads,
+            prefill_chunks_per_tick: chunks_per_tick,
+            prefill_chunk_budget: chunk_budget,
+            ..Default::default()
+        },
+    )
+    .map_err(|e| format!("spawn failed: {e}"))?;
+    let rxs: Vec<_> = script
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            handle.submit(GenerateRequest {
+                id: i as u64,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                temperature: r.temperature,
+                top_k: r.top_k,
+            })
+        })
+        .collect();
+    let mut outs = Vec::with_capacity(script.len());
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().map_err(|e| format!("request {i}: recv failed: {e}"))?;
+        if let Some(err) = resp.error {
+            return Err(format!("request {i} errored: {err}"));
+        }
+        if resp.truncated {
+            return Err(format!("request {i} truncated (script should fit max_len)"));
+        }
+        outs.push(resp.tokens);
+    }
+    let completed = handle.stats().completed;
+    handle.shutdown();
+    if completed as usize != script.len() {
+        return Err(format!("completed {completed} of {} requests", script.len()));
+    }
+    Ok(outs)
+}
+
+/// The serving-knob sweep every script replays under: varies the pool
+/// thread count, the decode batch, and both prefill budgets (per-slot
+/// and global), covering each axis at least twice.
+const SWEEP: [(usize, usize, usize, usize); 4] = [
+    // (threads, max_batch, prefill_chunks_per_tick, prefill_chunk_budget)
+    (1, 2, 1, 0),
+    (4, 4, 1, 0),
+    (1, 4, 8, 1),
+    (4, 2, 1_000_000, 0),
+];
+
+fn fuzz_backend(kind: AttentionKind) {
+    let cfg = fuzz_cfg();
+    let oracle_model = TransformerLM::init(&cfg, kind, 23);
+    // few cases: each replays 4 engine configs; scripts stay small
+    propcheck::check(&format!("engine_fuzz_{}", kind.label()), 4, |g| {
+        let script = gen_script(g, cfg.vocab);
+        // the schedule-independent oracle: direct greedy generation
+        let oracle: Vec<Vec<u32>> = script
+            .iter()
+            .map(|r| oracle_model.generate(&r.prompt, r.max_new, 0.0, 0))
+            .collect();
+        for &(threads, max_batch, chunks, budget) in SWEEP.iter() {
+            let outs = replay(kind, &script, threads, max_batch, chunks, budget)?;
+            for (i, (got, want)) in outs.iter().zip(oracle.iter()).enumerate() {
+                if got != want {
+                    return Err(format!(
+                        "request {i} (prompt len {}, max_new {}): tokens diverged from \
+                         direct generation under threads={threads} max_batch={max_batch} \
+                         chunks_per_tick={chunks} chunk_budget={budget}: {got:?} vs {want:?}",
+                        script[i].prompt.len(),
+                        script[i].max_new,
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_scripts_are_schedule_invariant_on_the_linear_backend() {
+    fuzz_backend(AttentionKind::Linear);
+}
+
+#[test]
+fn fuzzed_scripts_are_schedule_invariant_on_the_softmax_backend() {
+    fuzz_backend(AttentionKind::Softmax);
+}
