@@ -1,0 +1,278 @@
+//! GEMM/GEMV microkernel throughput: scalar vs SIMD ISA tiers, per
+//! kernel × dtype × shape — the measurement behind the PR 10 microkernel
+//! layer (`rust/src/simd.rs`), so the speedup is a number, not a claim.
+//!
+//! Three kernel families are swept on serving-relevant shapes (mnist
+//! geometry: d_model 128, d_ff 512, vocab 256):
+//!
+//! * `vecmat_into_w` — the B=1 decode GEMV, once per weight dtype
+//!   (f32/f16/bf16/int8). The weight-bandwidth-bound serving shape.
+//! * `matmul_into_w` — the prefill/batched GEMM (cache-blocked packed
+//!   path at m >= GEMM_PACK_MIN_ROWS), once per dtype.
+//! * `batched_outer_acc` / `batched_contract` — the linear-attention
+//!   state update and read-out (f32; their inner loop is the dispatched
+//!   `axpy`).
+//!
+//! Every case runs on the scalar tier and, where the CPU supports it, on
+//! the AVX2 tier via `simd::force_tier` — safe to flip inside one
+//! process precisely because tiers are bitwise-identical, which this
+//! bench also *asserts* on every kernel output before timing. GFLOP/s
+//! counts one multiply + one add per element pair (2·m·k·n for GEMM).
+//!
+//! Emits machine-readable `BENCH_gemm.json`. `BENCH_QUICK=1` shrinks the
+//! iteration counts to smoke-test size (the CI leg).
+//!
+//! Run: cargo run --release --example bench_gemm
+
+use linear_transformer::benchkit::{bench, opts_from_env, BenchOpts};
+use linear_transformer::json::{obj, Json};
+use linear_transformer::rng::Rng;
+use linear_transformer::simd::{self, IsaTier};
+use linear_transformer::tensor::{
+    batched_contract, batched_outer_acc, matmul_into_w, vecmat_into_w, WeightDtype, WeightMat,
+};
+
+/// One measured case, flattened for the JSON report.
+struct Row {
+    kernel: &'static str,
+    dtype: &'static str,
+    tier: &'static str,
+    shape: String,
+    gflops: f64,
+    mean_us: f64,
+}
+
+fn tiers() -> Vec<IsaTier> {
+    let mut t = vec![IsaTier::Scalar];
+    if simd::avx2_supported() {
+        t.push(IsaTier::Avx2);
+    }
+    t
+}
+
+fn gflops(flops: f64, mean_secs: f64) -> f64 {
+    flops / mean_secs / 1e9
+}
+
+fn main() {
+    let opts = opts_from_env();
+    let configured = simd::configure(None);
+    println!(
+        "gemm/gemv microkernel bench: tiers {:?} (configured: {}, avx2 supported: {})",
+        tiers().iter().map(|t| t.label()).collect::<Vec<_>>(),
+        configured.label(),
+        simd::avx2_supported()
+    );
+    if !simd::avx2_supported() {
+        println!("(no AVX2 on this CPU: scalar tier only, cross-tier asserts skipped)");
+    }
+
+    let mut rng = Rng::new(1234);
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- B=1 decode GEMV: y[n] = x[k] @ w[k,n], per weight dtype ---
+    let dtypes = [WeightDtype::F32, WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8];
+    println!("\nvecmat_into_w (B=1 decode GEMV)");
+    println!("{:>10} {:>6} {:>8} {:>10} {:>10}", "shape", "dtype", "tier", "GFLOP/s", "µs");
+    for &(k, n) in &[(128usize, 512usize), (512, 128), (128, 256)] {
+        let data = rng.normal_vec(k * n, 1.0);
+        let x = rng.normal_vec(k, 1.0);
+        for dtype in dtypes {
+            let w = WeightMat::quantize(&data, k, n, dtype);
+            let mut reference: Option<Vec<f32>> = None;
+            for tier in tiers() {
+                assert_eq!(simd::force_tier(tier), tier);
+                let mut y = vec![0.0f32; n];
+                vecmat_into_w(&mut y, &x, &w, k, n);
+                match &reference {
+                    None => reference = Some(y.clone()),
+                    Some(want) => assert_eq!(&y, want, "tier changed a GEMV bit"),
+                }
+                let m = bench(
+                    &format!("gemv {k}x{n} {} {}", dtype.name(), tier.label()),
+                    opts,
+                    || vecmat_into_w(&mut y, &x, &w, k, n),
+                );
+                let gf = gflops(2.0 * k as f64 * n as f64, m.mean_secs());
+                println!(
+                    "{:>10} {:>6} {:>8} {:>10.2} {:>10.1}",
+                    format!("{k}x{n}"),
+                    dtype.name(),
+                    tier.label(),
+                    gf,
+                    m.mean_secs() * 1e6
+                );
+                rows.push(Row {
+                    kernel: "vecmat_into_w",
+                    dtype: dtype.name(),
+                    tier: tier.label(),
+                    shape: format!("1x{k}x{n}"),
+                    gflops: gf,
+                    mean_us: m.mean_secs() * 1e6,
+                });
+            }
+        }
+    }
+
+    // --- prefill GEMM: c[m,n] = a[m,k] @ w[k,n] (packed path) ---
+    println!("\nmatmul_into_w (prefill GEMM, cache-blocked packed path)");
+    println!("{:>12} {:>6} {:>8} {:>10} {:>10}", "shape", "dtype", "tier", "GFLOP/s", "µs");
+    for &(m, k, n) in &[(16usize, 128usize, 512usize), (64, 512, 128)] {
+        let data = rng.normal_vec(k * n, 1.0);
+        let a = rng.normal_vec(m * k, 1.0);
+        for dtype in dtypes {
+            let w = WeightMat::quantize(&data, k, n, dtype);
+            let mut reference: Option<Vec<f32>> = None;
+            for tier in tiers() {
+                assert_eq!(simd::force_tier(tier), tier);
+                let mut c = vec![0.0f32; m * n];
+                matmul_into_w(&mut c, &a, &w, m, k, n);
+                match &reference {
+                    None => reference = Some(c.clone()),
+                    Some(want) => assert_eq!(&c, want, "tier changed a GEMM bit"),
+                }
+                let meas = bench(
+                    &format!("gemm {m}x{k}x{n} {} {}", dtype.name(), tier.label()),
+                    opts,
+                    || matmul_into_w(&mut c, &a, &w, m, k, n),
+                );
+                let gf = gflops(2.0 * m as f64 * k as f64 * n as f64, meas.mean_secs());
+                println!(
+                    "{:>12} {:>6} {:>8} {:>10.2} {:>10.1}",
+                    format!("{m}x{k}x{n}"),
+                    dtype.name(),
+                    tier.label(),
+                    gf,
+                    meas.mean_secs() * 1e6
+                );
+                rows.push(Row {
+                    kernel: "matmul_into_w",
+                    dtype: dtype.name(),
+                    tier: tier.label(),
+                    shape: format!("{m}x{k}x{n}"),
+                    gflops: gf,
+                    mean_us: meas.mean_secs() * 1e6,
+                });
+            }
+        }
+    }
+
+    // --- batched linear-attention kernels (f32, axpy inner loop) ---
+    println!("\nbatched attention kernels (B lanes, d_head x d_head state)");
+    println!("{:>12} {:>18} {:>8} {:>10} {:>10}", "shape", "kernel", "tier", "GFLOP/s", "µs");
+    for &(b, d, m) in &[(16usize, 32usize, 32usize), (64, 32, 32)] {
+        let kvec = rng.normal_vec(b * d, 1.0);
+        let v = rng.normal_vec(b * m, 1.0);
+        let q = rng.normal_vec(b * d, 1.0);
+        let s0 = rng.normal_vec(b * d * m, 1.0);
+        bench_attention_pair(&mut rows, opts, b, d, m, &kvec, &v, &q, &s0);
+    }
+
+    // leave the process on the configured tier, not whatever the sweep
+    // ended on
+    simd::configure(None);
+
+    let report = obj(vec![
+        ("bench", Json::Str("gemm_microkernels".into())),
+        ("avx2_supported", Json::Bool(simd::avx2_supported())),
+        ("configured_tier", Json::Str(configured.label().into())),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("kernel", Json::Str(r.kernel.into())),
+                            ("dtype", Json::Str(r.dtype.into())),
+                            ("tier", Json::Str(r.tier.into())),
+                            ("shape", Json::Str(r.shape.clone())),
+                            ("gflops", Json::Num(r.gflops)),
+                            ("mean_us", Json::Num(r.mean_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_gemm.json", report.to_string()) {
+        Ok(()) => println!("\n[json] BENCH_gemm.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_gemm.json: {e}"),
+    }
+}
+
+/// Bench `batched_outer_acc` + `batched_contract` at one (b, d, m) shape
+/// across the available tiers, asserting cross-tier bit-identity.
+#[allow(clippy::too_many_arguments)]
+fn bench_attention_pair(
+    rows: &mut Vec<Row>,
+    opts: BenchOpts,
+    b: usize,
+    d: usize,
+    m: usize,
+    kvec: &[f32],
+    v: &[f32],
+    q: &[f32],
+    s0: &[f32],
+) {
+    let mut outer_ref: Option<Vec<f32>> = None;
+    let mut contract_ref: Option<Vec<f32>> = None;
+    for tier in tiers() {
+        assert_eq!(simd::force_tier(tier), tier);
+
+        let mut s = s0.to_vec();
+        batched_outer_acc(&mut s, kvec, v, b, d, m);
+        match &outer_ref {
+            None => outer_ref = Some(s.clone()),
+            Some(want) => assert_eq!(&s, want, "tier changed an outer_acc bit"),
+        }
+        let meas = bench(&format!("outer_acc {b}x{d}x{m} {}", tier.label()), opts, || {
+            let mut st = s0.to_vec();
+            batched_outer_acc(&mut st, kvec, v, b, d, m);
+            std::hint::black_box(&st);
+        });
+        let gf = gflops(2.0 * (b * d * m) as f64, meas.mean_secs());
+        println!(
+            "{:>12} {:>18} {:>8} {:>10.2} {:>10.1}",
+            format!("{b}x{d}x{m}"),
+            "batched_outer_acc",
+            tier.label(),
+            gf,
+            meas.mean_secs() * 1e6
+        );
+        rows.push(Row {
+            kernel: "batched_outer_acc",
+            dtype: "f32",
+            tier: tier.label(),
+            shape: format!("{b}x{d}x{m}"),
+            gflops: gf,
+            mean_us: meas.mean_secs() * 1e6,
+        });
+
+        let mut out = vec![0.0f32; b * m];
+        batched_contract(&mut out, q, &s, b, d, m);
+        match &contract_ref {
+            None => contract_ref = Some(out.clone()),
+            Some(want) => assert_eq!(&out, want, "tier changed a contract bit"),
+        }
+        let meas = bench(&format!("contract {b}x{d}x{m} {}", tier.label()), opts, || {
+            batched_contract(&mut out, q, &s, b, d, m);
+        });
+        let gf = gflops(2.0 * (b * d * m) as f64, meas.mean_secs());
+        println!(
+            "{:>12} {:>18} {:>8} {:>10.2} {:>10.1}",
+            format!("{b}x{d}x{m}"),
+            "batched_contract",
+            tier.label(),
+            gf,
+            meas.mean_secs() * 1e6
+        );
+        rows.push(Row {
+            kernel: "batched_contract",
+            dtype: "f32",
+            tier: tier.label(),
+            shape: format!("{b}x{d}x{m}"),
+            gflops: gf,
+            mean_us: meas.mean_secs() * 1e6,
+        });
+    }
+}

@@ -52,9 +52,16 @@ fn main() {
     let steps = steps.min(cfg.max_len - 1);
     let model = TransformerLM::init(&cfg, AttentionKind::Linear, 1);
 
+    // resolve + log the ISA tier up front: every number below depends on
+    // which microkernels ran (LINTRA_SIMD=0 forces the scalar tier;
+    // outputs are bit-identical either way)
+    let isa_tier = linear_transformer::simd::configure(None);
     println!(
-        "decode throughput, mnist geometry (d_model {}, {} layers), {} steps/lane",
-        cfg.d_model, cfg.n_layers, steps
+        "decode throughput, mnist geometry (d_model {}, {} layers), {} steps/lane, simd={}",
+        cfg.d_model,
+        cfg.n_layers,
+        steps,
+        isa_tier.label()
     );
     println!(
         "{:>5} {:>16} {:>16} {:>9}",
@@ -491,6 +498,7 @@ fn main() {
 
     let report = obj(vec![
         ("model", Json::Str("mnist".into())),
+        ("simd_tier", Json::Str(isa_tier.label().into())),
         ("steps_per_lane", Json::Num(steps as f64)),
         ("results", Json::Arr(rows)),
         (

@@ -361,6 +361,63 @@ impl AttentionBackend {
     }
 }
 
+/// Whether the kernel layer may use the SIMD microkernels selected by
+/// runtime ISA detection — the `--simd` / `LINTRA_SIMD` knob. This is a
+/// performance switch only: every SIMD kernel is bitwise-identical to
+/// its scalar form by construction (see `ARCHITECTURE.md` §Kernel
+/// dispatch & SIMD contract), so the setting can never change an output
+/// bit — `Off` exists for benchmarking the scalar tier and for
+/// debugging/CI coverage of the fallback path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Detect the ISA at startup and use the widest supported tier
+    /// (AVX2+FMA+F16C today, scalar everywhere else). The default.
+    Auto,
+    /// Force the portable scalar kernels even where SIMD is available.
+    Off,
+}
+
+impl SimdMode {
+    /// Parse a `--simd` / `LINTRA_SIMD` value (case-insensitive).
+    /// `auto`/`on`/`1` mean detect-and-use; `off`/`scalar`/`0` force the
+    /// scalar tier. `None` for anything else.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "on" | "1" => Some(SimdMode::Auto),
+            "off" | "scalar" | "0" => Some(SimdMode::Off),
+            _ => None,
+        }
+    }
+
+    /// The flag-facing name (`auto` / `off`).
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Off => "off",
+        }
+    }
+}
+
+/// Resolve the SIMD mode: an explicit choice (the `--simd` flag) wins;
+/// `None` consults `LINTRA_SIMD` (`auto`/`on`/`1` vs `off`/`scalar`/`0`,
+/// case-insensitive — how CI runs the whole suite on the scalar fallback
+/// without touching every test literal), else auto. An unparseable
+/// environment value falls back to auto, mirroring
+/// [`resolve_weight_dtype`]: both tiers are bitwise-identical, so the
+/// knob is never a correctness switch. Same single-file env-resolution
+/// contract as the resolvers above (`lintra analyze` rule `env`).
+pub fn resolve_simd(requested: Option<SimdMode>) -> SimdMode {
+    if let Some(m) = requested {
+        return m;
+    }
+    if let Ok(v) = std::env::var("LINTRA_SIMD") {
+        if let Some(m) = SimdMode::parse(&v) {
+            return m;
+        }
+    }
+    SimdMode::Auto
+}
+
 /// Resolve the serving attention backend: an explicit choice (the
 /// `--attention-backend` flag) wins; `None` consults
 /// `LINTRA_ATTENTION_BACKEND` (`linear`/`softmax`, case-insensitive —
@@ -625,6 +682,29 @@ mod tests {
             .and_then(|v| AttentionBackend::parse(&v))
             .unwrap_or(AttentionBackend::Linear);
         assert_eq!(resolve_attention_backend(None), ambient);
+    }
+
+    #[test]
+    fn simd_mode_resolves_explicit_then_env_then_auto() {
+        // explicit choices always win
+        for m in [SimdMode::Auto, SimdMode::Off] {
+            assert_eq!(resolve_simd(Some(m)), m);
+            assert_eq!(SimdMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(SimdMode::parse("ON"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("1"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse(" scalar "), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("0"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("avx512"), None);
+        // None falls back to the environment (mirroring the dtype knob);
+        // read the ambient value rather than mutating process env from a
+        // parallel test — CI exports LINTRA_SIMD=0 in one run to cover
+        // exactly this path (and the scalar fallback it forces)
+        let ambient = std::env::var("LINTRA_SIMD")
+            .ok()
+            .and_then(|v| SimdMode::parse(&v))
+            .unwrap_or(SimdMode::Auto);
+        assert_eq!(resolve_simd(None), ambient);
     }
 
     #[test]

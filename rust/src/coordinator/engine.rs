@@ -487,11 +487,15 @@ impl DecodeBackend for BatchedSoftmaxSession<'_> {
 // ---------------------------------------------------------------------------
 
 /// Reply to a request with a failure, if its responder is still waiting.
+/// Takes `impl Into<String>` so the static rejection messages on the
+/// tick path stay `&'static str` at the call sites — the conversion
+/// happens here, only when a responder is actually waiting (failure
+/// paths are cold; the hot tick never reaches this).
 fn send_failure(
     responders: &mut std::collections::HashMap<u64, Sender<GenerateResponse>>,
     id: u64,
     tokens: Vec<u32>,
-    msg: String,
+    msg: impl Into<String>,
 ) {
     if let Some(tx) = responders.remove(&id) {
         let _ = tx.send(GenerateResponse {
@@ -499,7 +503,7 @@ fn send_failure(
             tokens,
             latency_us: 0,
             truncated: false,
-            error: Some(msg),
+            error: Some(msg.into()),
         });
     }
 }
@@ -631,8 +635,7 @@ fn run_engine<B: DecodeBackend>(
             // token to feed on the first tick) or longer than the position
             // embedding — so one bad request cannot take down the worker
             if req.prompt.is_empty() {
-                let msg = "prompt must not be empty".to_string();
-                send_failure(&mut responders, req.id, Vec::new(), msg);
+                send_failure(&mut responders, req.id, Vec::new(), "prompt must not be empty");
                 continue;
             }
             if req.prompt.len() > max_len {
@@ -683,8 +686,7 @@ fn run_engine<B: DecodeBackend>(
                 // capacity was checked above, so this branch means the
                 // slot table and the batcher disagree; fail the request
                 // rather than the whole worker
-                let msg = "admission failed: no free slot".to_string();
-                send_failure(&mut responders, req_id, Vec::new(), msg);
+                send_failure(&mut responders, req_id, Vec::new(), "admission failed: no free slot");
                 continue;
             };
             let lane = match backend.alloc_lane() {
@@ -709,7 +711,7 @@ fn run_engine<B: DecodeBackend>(
                     // unreachable in practice (idx was allocated just
                     // above); degrade to a failed request, not a panic
                     backend.free_lane(lane);
-                    let msg = "admission failed: slot table lost the new slot".to_string();
+                    let msg = "admission failed: slot table lost the new slot";
                     send_failure(&mut responders, req_id, Vec::new(), msg);
                     continue;
                 };
@@ -838,8 +840,7 @@ fn run_engine<B: DecodeBackend>(
                                         &mut responders,
                                         info.request_id,
                                         info.generated,
-                                        "prefill failed: finishing chunk returned no logits"
-                                            .to_string(),
+                                        "prefill failed: finishing chunk returned no logits",
                                     );
                                 }
                                 continue 'suffix;

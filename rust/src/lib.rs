@@ -44,8 +44,10 @@ pub mod propcheck;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod simd;
 pub mod tensor;
 pub mod trainer;
+pub mod tunables;
 pub mod weights;
 
 /// Crate-wide result type (thin alias over `anyhow`).

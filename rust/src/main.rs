@@ -29,7 +29,7 @@ const FLAGS: &[&str] = &[
     "checkpoint", "seed", "artifacts", "bind", "max-batch", "max-wait-us",
     "num-threads", "prefill-chunks-per-tick", "prefill-chunk-budget", "state-cache-mb",
     "prompt-len", "max-new", "temperature", "count", "backend", "weights", "batches",
-    "weight-dtype", "out", "dtype", "format", "baseline", "attention-backend",
+    "weight-dtype", "out", "dtype", "format", "baseline", "attention-backend", "simd",
 ];
 
 /// Boolean flags: never consume the following token, so positional args
@@ -280,6 +280,12 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let task = args.flag_or("task", "copy");
+    // --simd {auto,off} wins, else LINTRA_SIMD, else auto-detect; the
+    // resolved ISA tier is process-wide and logged in the serving line
+    // below (it can never change outputs — see ARCHITECTURE.md §Kernel
+    // dispatch & SIMD contract — but it should be visible in every
+    // serving log a perf number gets read from)
+    let isa_tier = linear_transformer::simd::configure(parse_simd(args.flag("simd"))?);
     let serve_cfg = ServeConfig {
         max_batch: args.usize_flag("max-batch", 8)?,
         max_wait_us: args.u64_flag("max-wait-us", 500)?,
@@ -326,10 +332,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let server = Server::start(&serve_cfg.bind, engine.clone())
         .with_context(|| format!("binding {}", serve_cfg.bind))?;
     println!(
-        "serving task={task} backend={backend} on {} (max_batch={}, gemm_threads={})",
+        "serving task={task} backend={backend} on {} (max_batch={}, gemm_threads={}, simd={})",
         server.addr,
         serve_cfg.max_batch,
-        linear_transformer::parallel::resolve_threads(serve_cfg.num_threads)
+        linear_transformer::parallel::resolve_threads(serve_cfg.num_threads),
+        isa_tier.label()
     );
     println!("protocol: one json per line: {{\"id\":1,\"prompt\":[0],\"max_new\":16}}");
     // run until ctrl-c
@@ -355,6 +362,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 );
             }
         }
+    }
+}
+
+/// Parse an optional `--simd` value, failing loudly on an unrecognized
+/// name (unlike the env var, which silently falls back to auto — see
+/// [`linear_transformer::config::resolve_simd`]).
+fn parse_simd(
+    flag: Option<&str>,
+) -> anyhow::Result<Option<linear_transformer::config::SimdMode>> {
+    match flag {
+        None => Ok(None),
+        Some(s) => match linear_transformer::config::SimdMode::parse(s) {
+            Some(m) => Ok(Some(m)),
+            None => bail!("unknown simd mode {s:?} (auto|off)"),
+        },
     }
 }
 

@@ -43,10 +43,14 @@
 //! * **Row-partitioned kernels require `rows >= 2`** (guards in every
 //!   row-blocked `*_pooled` kernel in `crate::tensor`); single-row
 //!   inputs route to the column-split GEMV path instead.
-//! * **Tiny kernels stay serial**: below `PAR_MIN_WORK` (~16k mul-adds
-//!   for GEMM shapes), `PAR_MIN_ROW_ELEMS` (row-wise kernels), or
-//!   `PAR_MIN_GEMV_COLS` output columns (the column-split GEMV), one
-//!   dispatch (microseconds) would rival the work itself.
+//! * **Tiny kernels stay serial**: below
+//!   [`crate::tunables::PAR_MIN_WORK`] (~16k mul-adds for GEMM shapes),
+//!   [`crate::tunables::PAR_MIN_ROW_ELEMS`] (row-wise kernels), or
+//!   [`crate::tunables::PAR_MIN_GEMV_COLS`] output columns (the
+//!   column-split GEMV), one dispatch (microseconds) would rival the
+//!   work itself. Every such threshold lives in [`crate::tunables`],
+//!   next to the SIMD and GEMM-packing minimums of the other dispatch
+//!   axes.
 //!
 //! # Example
 //!

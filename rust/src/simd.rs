@@ -1,0 +1,722 @@
+//! Runtime-dispatched SIMD microkernels under [`crate::tensor`].
+//!
+//! The decode hot path spends essentially all of its time in a handful
+//! of GEMV/GEMM-shaped inner loops. This module gives each of them an
+//! AVX2 form selected by *runtime* ISA detection (one binary serves
+//! every x86-64, and every other architecture falls back to the portable
+//! scalar form at compile time), without giving up the repo's bitwise
+//! contract.
+//!
+//! ## The column-lane rule (why SIMD == scalar bitwise)
+//!
+//! Every vector kernel here assigns **one SIMD lane to one output
+//! element**: a `ymm` register holds 8 *independent* accumulators for 8
+//! adjacent output columns, `k` advances in ascending order, and each
+//! step is a separate multiply then add (`_mm256_mul_ps` +
+//! `_mm256_add_ps` — never FMA, which contracts the intermediate
+//! rounding). Per output element the float-op sequence is therefore
+//! *identical* to the serial scalar kernel — the same trick the pooled
+//! kernels use with threads (partition outputs, never split a
+//! reduction), applied to vector lanes. Consequently SIMD == scalar
+//! BITWISE for f32, at any thread count.
+//!
+//! The widening loads are exact conversions (every f16/bf16/int8 value
+//! is exactly representable in f32, and `_mm256_cvtph_ps` / the bf16
+//! shift / `_mm256_cvtepi32_ps` produce exactly those values), so the
+//! narrow-dtype kernels are *also* bitwise-identical to their scalar
+//! widening counterparts — the `dtype_parity` tolerance envelopes bound
+//! quantization error against f32 references, not tier-to-tier drift,
+//! which is zero.
+//!
+//! Horizontal reductions (`dot`, the layer-norm statistics) stay scalar
+//! on purpose: vectorizing a reduction would split its accumulator and
+//! change the rounding order.
+//!
+//! ## Tiers and resolution
+//!
+//! Two tiers exist: `Scalar` (portable, always available) and `Avx2`
+//! (requires AVX2 + FMA + F16C; FMA is *detected* as part of the tier so
+//! the tier names one fixed feature set, but it is deliberately never
+//! used in accumulation — see above). The active tier resolves once per
+//! process from [`crate::config::resolve_simd`] (`--simd` flag >
+//! `LINTRA_SIMD` env > auto-detect) on first kernel use, is cached in an
+//! atomic, and can be overridden at any time with [`force_tier`] (tests
+//! and `bench_gemm` use this to compare tiers inside one process — safe
+//! precisely because tiers never disagree on results).
+//!
+//! ## SAFETY policy
+//!
+//! `unsafe` appears in exactly two shapes here, each with a `// SAFETY:`
+//! justification (enforced repo-wide by `lintra analyze` rule `safety`):
+//! `#[target_feature]` kernel definitions, whose contract is "caller
+//! proved the features are available", and their single dispatch call
+//! sites, which only run after [`avx2_supported`] returned true (the
+//! `Avx2` tier cannot be stored otherwise — [`force_tier`] clamps).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::config::SimdMode;
+use crate::tunables::{NR, SIMD_MIN_LEN};
+
+/// An instruction-set tier the kernels can dispatch to. Tiers are
+/// performance levels, never behavior levels: every tier produces
+/// bit-identical output (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IsaTier {
+    /// Portable scalar loops — always available, the reference order.
+    Scalar,
+    /// AVX2 + FMA + F16C 8-wide kernels (x86-64 only, runtime-detected).
+    Avx2,
+}
+
+impl IsaTier {
+    /// Human-facing name, logged at serve startup and in bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            IsaTier::Scalar => "scalar",
+            IsaTier::Avx2 => "avx2",
+        }
+    }
+}
+
+const TIER_UNRESOLVED: u8 = 0;
+const TIER_SCALAR: u8 = 1;
+const TIER_AVX2: u8 = 2;
+
+/// The resolved tier, cached process-wide. `0` = not yet resolved;
+/// kernels resolve lazily on first use so library users (tests, the
+/// engine) get the env-configured tier without an init call. Relaxed
+/// ordering is sufficient: the value is a pure performance hint and
+/// every tier computes identical results, so readers racing a
+/// [`force_tier`] store merely pick one of two equivalent code paths.
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNRESOLVED);
+
+/// Does this CPU support the `Avx2` tier (AVX2 + FMA + F16C)?
+pub fn avx2_supported() -> bool {
+    avx2::detect()
+}
+
+/// Resolve and cache the active tier from an explicit mode (the `--simd`
+/// flag), falling back to `LINTRA_SIMD` then auto-detection — the
+/// explicit > env > default chain lives in
+/// [`crate::config::resolve_simd`]. Returns the tier actually selected.
+pub fn configure(requested: Option<SimdMode>) -> IsaTier {
+    let tier = match crate::config::resolve_simd(requested) {
+        SimdMode::Off => IsaTier::Scalar,
+        SimdMode::Auto => {
+            if avx2_supported() {
+                IsaTier::Avx2
+            } else {
+                IsaTier::Scalar
+            }
+        }
+    };
+    force_tier(tier)
+}
+
+/// Set the active tier directly, clamped to what the CPU supports
+/// (requesting `Avx2` without hardware support selects `Scalar` — this
+/// can never enable undetected instructions). Returns the tier actually
+/// stored. Safe to call at any time from any thread: tiers are
+/// bit-identical, so in-flight kernels finishing on the old tier are
+/// indistinguishable from ones that flipped earlier.
+pub fn force_tier(tier: IsaTier) -> IsaTier {
+    let actual = match tier {
+        IsaTier::Avx2 if avx2_supported() => IsaTier::Avx2,
+        _ => IsaTier::Scalar,
+    };
+    let code = match actual {
+        IsaTier::Scalar => TIER_SCALAR,
+        IsaTier::Avx2 => TIER_AVX2,
+    };
+    TIER.store(code, Ordering::Relaxed);
+    actual
+}
+
+/// The tier kernels dispatch on, resolving it on first use.
+#[inline]
+pub fn active_tier() -> IsaTier {
+    match TIER.load(Ordering::Relaxed) {
+        TIER_SCALAR => IsaTier::Scalar,
+        TIER_AVX2 => IsaTier::Avx2,
+        _ => configure(None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// axpy — the shared inner loop of every f32 kernel
+// ---------------------------------------------------------------------------
+
+/// `y += alpha * x`, dispatched to the active tier. This is the inner
+/// loop of `vecmat_into` / `matmul_into` / `gemv_cols_f32` and the
+/// batched attention kernels (`batched_outer_acc`, `batched_contract`),
+/// so one dispatch point vectorizes the whole f32 family. Each element
+/// is one accumulator updated with a separate mul-then-add in ascending
+/// index order on every tier.
+// lintra: bitwise-critical
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    if y.len() >= SIMD_MIN_LEN && avx2::try_axpy(y, alpha, x) {
+        return;
+    }
+    axpy_scalar(y, alpha, x);
+}
+
+/// The portable reference form of [`axpy`].
+// lintra: bitwise-critical
+#[inline]
+fn axpy_scalar(y: &mut [f32], alpha: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// widening GEMV column-range kernels (f16 / bf16 / int8 weights)
+// ---------------------------------------------------------------------------
+//
+// Each `try_gemv_cols_*` runs the AVX2 form when the active tier allows
+// it and returns `true`; a `false` return means "not taken" and the
+// caller (`tensor::gemv_cols_w`) falls back to the scalar widening
+// kernel. This keeps exactly one scalar source of truth
+// (`tensor::gemv_cols_widen`) and exactly one tier check per GEMV call.
+
+/// AVX2 widening GEMV over an f16 column range:
+/// `y[j] = sum_k x[k] * widen(bits[k, col0 + j])`. Returns `false` when
+/// the active tier is scalar (caller falls back).
+// lintra: bitwise-critical
+#[inline]
+pub fn try_gemv_cols_f16(
+    y: &mut [f32],
+    bits: &[u16],
+    x: &[f32],
+    k: usize,
+    n: usize,
+    col0: usize,
+) -> bool {
+    assert_eq!(x.len(), k);
+    assert!(col0 + y.len() <= n);
+    assert!(bits.len() >= k * n);
+    avx2::try_gemv_cols_f16(y, bits, x, k, n, col0)
+}
+
+/// AVX2 widening GEMV over a bf16 column range — see
+/// [`try_gemv_cols_f16`] for the contract.
+// lintra: bitwise-critical
+#[inline]
+pub fn try_gemv_cols_bf16(
+    y: &mut [f32],
+    bits: &[u16],
+    x: &[f32],
+    k: usize,
+    n: usize,
+    col0: usize,
+) -> bool {
+    assert_eq!(x.len(), k);
+    assert!(col0 + y.len() <= n);
+    assert!(bits.len() >= k * n);
+    avx2::try_gemv_cols_bf16(y, bits, x, k, n, col0)
+}
+
+/// AVX2 fused dequant-multiply GEMV over an int8 column range:
+/// `y[j] = sum_k (x[k] * scales[k]) * (packed[k, col0 + j] as f32)`.
+/// The per-row scale folds into the broadcast coefficient (one scalar
+/// multiply per k, the exact expression the scalar kernel uses) and the
+/// int8 payload widens in-register, so the dequantized matrix never
+/// materializes. See [`try_gemv_cols_f16`] for the dispatch contract.
+// lintra: bitwise-critical
+#[inline]
+pub fn try_gemv_cols_i8(
+    y: &mut [f32],
+    packed: &[i8],
+    scales: &[f32],
+    x: &[f32],
+    k: usize,
+    n: usize,
+    col0: usize,
+) -> bool {
+    assert_eq!(x.len(), k);
+    assert!(scales.len() >= k);
+    assert!(col0 + y.len() <= n);
+    assert!(packed.len() >= k * n);
+    avx2::try_gemv_cols_i8(y, packed, scales, x, k, n, col0)
+}
+
+// ---------------------------------------------------------------------------
+// packed-panel row kernels (cache-blocked GEMM, see tensor::matmul_into_w)
+// ---------------------------------------------------------------------------
+
+/// One output-row step of the packed GEMM: `out[0..NR] = sum_k
+/// coeffs[k] * panel[k * NR ..][0..NR]` with the f32 path's `== 0.0`
+/// coefficient skip. `panel` is a k×[`NR`] column panel already widened
+/// to f32 (pure data movement), so every tier sees identical operand
+/// values and accumulates them in identical (ascending-k, one
+/// accumulator per column) order.
+// lintra: bitwise-critical
+#[inline]
+pub fn panel_row_f32_skip(out: &mut [f32], coeffs: &[f32], panel: &[f32]) {
+    assert_eq!(out.len(), NR);
+    assert!(panel.len() >= coeffs.len() * NR);
+    if avx2::try_panel_row_f32_skip(out, coeffs, panel) {
+        return;
+    }
+    let mut acc = [0.0f32; NR];
+    for (kk, &c) in coeffs.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        let p = &panel[kk * NR..kk * NR + NR];
+        for t in 0..NR {
+            acc[t] += c * p[t];
+        }
+    }
+    out.copy_from_slice(&acc);
+}
+
+/// [`panel_row_f32_skip`] without the zero-skip — the widened-dtype form
+/// (the scalar widening kernels are dense on purpose: the decode stream
+/// almost never carries exact zeros, and a skip would cost a branch per
+/// coefficient).
+// lintra: bitwise-critical
+#[inline]
+pub fn panel_row_dense(out: &mut [f32], coeffs: &[f32], panel: &[f32]) {
+    assert_eq!(out.len(), NR);
+    assert!(panel.len() >= coeffs.len() * NR);
+    if avx2::try_panel_row_dense(out, coeffs, panel) {
+        return;
+    }
+    let mut acc = [0.0f32; NR];
+    for (kk, &c) in coeffs.iter().enumerate() {
+        let p = &panel[kk * NR..kk * NR + NR];
+        for t in 0..NR {
+            acc[t] += c * p[t];
+        }
+    }
+    out.copy_from_slice(&acc);
+}
+
+/// The AVX2 kernel bodies. Everything ISA-specific lives behind this
+/// item-level `cfg`, so non-x86-64 targets compile the stub twin below
+/// and the public dispatchers above never mention an intrinsic.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{active_tier, IsaTier};
+    use crate::tunables::NR;
+
+    /// Runtime feature probe for the `Avx2` tier.
+    pub(super) fn detect() -> bool {
+        is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+    }
+
+    /// Dispatch gate shared by every `try_*` below: true only when the
+    /// cached tier says the AVX2 kernels may run.
+    #[inline]
+    fn tier_is_avx2() -> bool {
+        active_tier() == IsaTier::Avx2
+    }
+
+    // lintra: bitwise-critical
+    #[inline]
+    pub(super) fn try_axpy(y: &mut [f32], alpha: f32, x: &[f32]) -> bool {
+        if !tier_is_avx2() {
+            return false;
+        }
+        // SAFETY: the Avx2 tier is only ever stored after `detect()`
+        // confirmed AVX2 on this CPU (`force_tier` clamps every path).
+        unsafe { axpy_avx2(y, alpha, x) };
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 is available; every raw
+    // load/store below is bounds-derived from the slice lengths.
+    // lintra: bitwise-critical
+    unsafe fn axpy_avx2(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let len = y.len().min(x.len());
+        let a = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + NR <= len {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            // separate mul then add — never _mm256_fmadd_ps (bitwise rule)
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(a, xv)));
+            i += NR;
+        }
+        while i < len {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    // lintra: bitwise-critical
+    #[inline]
+    pub(super) fn try_gemv_cols_f16(
+        y: &mut [f32],
+        bits: &[u16],
+        x: &[f32],
+        k: usize,
+        n: usize,
+        col0: usize,
+    ) -> bool {
+        if !tier_is_avx2() {
+            return false;
+        }
+        // SAFETY: Avx2 tier implies detected AVX2+F16C (`force_tier`
+        // clamps); the public wrapper asserted the slice bounds the raw
+        // loads rely on.
+        unsafe { gemv_cols_f16_avx2(y, bits, x, k, n, col0) };
+        true
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    // SAFETY: caller must guarantee AVX2+F16C are available and that
+    // `x.len() == k`, `col0 + y.len() <= n`, `bits.len() >= k * n` —
+    // every raw load below stays inside `bits` by that arithmetic.
+    // lintra: bitwise-critical
+    unsafe fn gemv_cols_f16_avx2(
+        y: &mut [f32],
+        bits: &[u16],
+        x: &[f32],
+        k: usize,
+        n: usize,
+        col0: usize,
+    ) {
+        debug_assert_eq!(x.len(), k);
+        let nc = y.len();
+        let mut j = 0;
+        while j + NR <= nc {
+            let base = col0 + j;
+            let mut acc = _mm256_setzero_ps();
+            for (kk, &xv) in x.iter().enumerate() {
+                let h = _mm_loadu_si128(bits.as_ptr().add(kk * n + base) as *const __m128i);
+                // exact f16 -> f32 widening; one lane per output column
+                let w = _mm256_cvtph_ps(h);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(xv), w));
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), acc);
+            j += NR;
+        }
+        while j < nc {
+            let col = col0 + j;
+            let mut acc = 0.0f32;
+            for (kk, &xv) in x.iter().enumerate() {
+                acc += xv * crate::tensor::f16_bits_to_f32(bits[kk * n + col]);
+            }
+            y[j] = acc;
+            j += 1;
+        }
+    }
+
+    // lintra: bitwise-critical
+    #[inline]
+    pub(super) fn try_gemv_cols_bf16(
+        y: &mut [f32],
+        bits: &[u16],
+        x: &[f32],
+        k: usize,
+        n: usize,
+        col0: usize,
+    ) -> bool {
+        if !tier_is_avx2() {
+            return false;
+        }
+        // SAFETY: Avx2 tier implies detected AVX2 (`force_tier` clamps);
+        // the public wrapper asserted the slice bounds the raw loads
+        // rely on.
+        unsafe { gemv_cols_bf16_avx2(y, bits, x, k, n, col0) };
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 is available and that
+    // `x.len() == k`, `col0 + y.len() <= n`, `bits.len() >= k * n` —
+    // every raw load below stays inside `bits` by that arithmetic.
+    // lintra: bitwise-critical
+    unsafe fn gemv_cols_bf16_avx2(
+        y: &mut [f32],
+        bits: &[u16],
+        x: &[f32],
+        k: usize,
+        n: usize,
+        col0: usize,
+    ) {
+        debug_assert_eq!(x.len(), k);
+        let nc = y.len();
+        let mut j = 0;
+        while j + NR <= nc {
+            let base = col0 + j;
+            let mut acc = _mm256_setzero_ps();
+            for (kk, &xv) in x.iter().enumerate() {
+                let h = _mm_loadu_si128(bits.as_ptr().add(kk * n + base) as *const __m128i);
+                // exact bf16 -> f32 widening: zero-extend each u16 to u32
+                // and shift into the high half (bf16 is the top 16 bits
+                // of an f32)
+                let w = _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(xv), w));
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), acc);
+            j += NR;
+        }
+        while j < nc {
+            let col = col0 + j;
+            let mut acc = 0.0f32;
+            for (kk, &xv) in x.iter().enumerate() {
+                acc += xv * crate::tensor::bf16_bits_to_f32(bits[kk * n + col]);
+            }
+            y[j] = acc;
+            j += 1;
+        }
+    }
+
+    // lintra: bitwise-critical
+    #[inline]
+    pub(super) fn try_gemv_cols_i8(
+        y: &mut [f32],
+        packed: &[i8],
+        scales: &[f32],
+        x: &[f32],
+        k: usize,
+        n: usize,
+        col0: usize,
+    ) -> bool {
+        if !tier_is_avx2() {
+            return false;
+        }
+        // SAFETY: Avx2 tier implies detected AVX2 (`force_tier` clamps);
+        // the public wrapper asserted the slice bounds the raw loads
+        // rely on.
+        unsafe { gemv_cols_i8_avx2(y, packed, scales, x, k, n, col0) };
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 is available and that
+    // `x.len() == k`, `scales.len() >= k`, `col0 + y.len() <= n`,
+    // `packed.len() >= k * n` — every raw load below stays inside
+    // `packed` by that arithmetic.
+    // lintra: bitwise-critical
+    unsafe fn gemv_cols_i8_avx2(
+        y: &mut [f32],
+        packed: &[i8],
+        scales: &[f32],
+        x: &[f32],
+        k: usize,
+        n: usize,
+        col0: usize,
+    ) {
+        debug_assert_eq!(x.len(), k);
+        let nc = y.len();
+        let mut j = 0;
+        while j + NR <= nc {
+            let base = col0 + j;
+            let mut acc = _mm256_setzero_ps();
+            for (kk, &xv) in x.iter().enumerate() {
+                // same coefficient expression as the scalar kernel, so
+                // the rounded f32 coefficient is identical
+                let c = xv * scales[kk];
+                let q = _mm_loadl_epi64(packed.as_ptr().add(kk * n + base) as *const __m128i);
+                // exact int8 -> f32 widening: sign-extend to i32, convert
+                let w = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(c), w));
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), acc);
+            j += NR;
+        }
+        while j < nc {
+            let col = col0 + j;
+            let mut acc = 0.0f32;
+            for (kk, &xv) in x.iter().enumerate() {
+                acc += (xv * scales[kk]) * (packed[kk * n + col] as f32);
+            }
+            y[j] = acc;
+            j += 1;
+        }
+    }
+
+    // lintra: bitwise-critical
+    #[inline]
+    pub(super) fn try_panel_row_f32_skip(out: &mut [f32], coeffs: &[f32], panel: &[f32]) -> bool {
+        if !tier_is_avx2() {
+            return false;
+        }
+        // SAFETY: Avx2 tier implies detected AVX2 (`force_tier` clamps);
+        // the public wrapper asserted `out.len() == NR` and
+        // `panel.len() >= coeffs.len() * NR`.
+        unsafe { panel_row_f32_skip_avx2(out, coeffs, panel) };
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 is available, `out.len() == NR`,
+    // and `panel.len() >= coeffs.len() * NR` — the raw loads below stay
+    // inside `panel` by that arithmetic.
+    // lintra: bitwise-critical
+    unsafe fn panel_row_f32_skip_avx2(out: &mut [f32], coeffs: &[f32], panel: &[f32]) {
+        let mut acc = _mm256_setzero_ps();
+        for (kk, &c) in coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let p = _mm256_loadu_ps(panel.as_ptr().add(kk * NR));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(c), p));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+
+    // lintra: bitwise-critical
+    #[inline]
+    pub(super) fn try_panel_row_dense(out: &mut [f32], coeffs: &[f32], panel: &[f32]) -> bool {
+        if !tier_is_avx2() {
+            return false;
+        }
+        // SAFETY: Avx2 tier implies detected AVX2 (`force_tier` clamps);
+        // the public wrapper asserted `out.len() == NR` and
+        // `panel.len() >= coeffs.len() * NR`.
+        unsafe { panel_row_dense_avx2(out, coeffs, panel) };
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 is available, `out.len() == NR`,
+    // and `panel.len() >= coeffs.len() * NR` — the raw loads below stay
+    // inside `panel` by that arithmetic.
+    // lintra: bitwise-critical
+    unsafe fn panel_row_dense_avx2(out: &mut [f32], coeffs: &[f32], panel: &[f32]) {
+        let mut acc = _mm256_setzero_ps();
+        for (kk, &c) in coeffs.iter().enumerate() {
+            let p = _mm256_loadu_ps(panel.as_ptr().add(kk * NR));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(c), p));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+}
+
+/// Stub twin of the AVX2 module for non-x86-64 targets: detection is
+/// `false`, every `try_*` declines, so the dispatchers above always take
+/// the portable scalar path and the crate builds with zero intrinsics.
+#[cfg(not(target_arch = "x86_64"))]
+mod avx2 {
+    pub(super) fn detect() -> bool {
+        false
+    }
+
+    pub(super) fn try_axpy(_y: &mut [f32], _alpha: f32, _x: &[f32]) -> bool {
+        false
+    }
+
+    pub(super) fn try_gemv_cols_f16(
+        _y: &mut [f32],
+        _bits: &[u16],
+        _x: &[f32],
+        _k: usize,
+        _n: usize,
+        _col0: usize,
+    ) -> bool {
+        false
+    }
+
+    pub(super) fn try_gemv_cols_bf16(
+        _y: &mut [f32],
+        _bits: &[u16],
+        _x: &[f32],
+        _k: usize,
+        _n: usize,
+        _col0: usize,
+    ) -> bool {
+        false
+    }
+
+    pub(super) fn try_gemv_cols_i8(
+        _y: &mut [f32],
+        _packed: &[i8],
+        _scales: &[f32],
+        _x: &[f32],
+        _k: usize,
+        _n: usize,
+        _col0: usize,
+    ) -> bool {
+        false
+    }
+
+    pub(super) fn try_panel_row_f32_skip(
+        _out: &mut [f32],
+        _coeffs: &[f32],
+        _panel: &[f32],
+    ) -> bool {
+        false
+    }
+
+    pub(super) fn try_panel_row_dense(_out: &mut [f32], _coeffs: &[f32], _panel: &[f32]) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tier-forcing parity sweeps live in rust/tests/simd_parity.rs (their
+    // own process, serialized by a local mutex); the unit tests here only
+    // assert properties that hold on whatever tier happens to be active.
+
+    #[test]
+    fn labels_and_detection_are_consistent() {
+        assert_eq!(IsaTier::Scalar.label(), "scalar");
+        assert_eq!(IsaTier::Avx2.label(), "avx2");
+        let t = active_tier();
+        if t == IsaTier::Avx2 {
+            assert!(avx2_supported(), "Avx2 tier must imply hardware support");
+        }
+        // forcing Avx2 clamps to hardware support and reports the truth
+        let forced = force_tier(IsaTier::Avx2);
+        assert_eq!(forced == IsaTier::Avx2, avx2_supported());
+        force_tier(t);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_on_active_tier() {
+        for len in [0usize, 1, 3, 7, 8, 9, 16, 31, 64, 100] {
+            let x: Vec<f32> = (0..len).map(|i| (i as f32) * 0.37 - 3.0).collect();
+            let mut y: Vec<f32> = (0..len).map(|i| (i as f32) * -0.11 + 1.0).collect();
+            let mut want = y.clone();
+            axpy_scalar(&mut want, 1.7, &x);
+            axpy(&mut y, 1.7, &x);
+            assert_eq!(y, want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn panel_kernels_match_reference_on_active_tier() {
+        for k in [0usize, 1, 3, 4, 17] {
+            let coeffs: Vec<f32> = (0..k)
+                .map(|i| if i % 3 == 0 { 0.0 } else { i as f32 * 0.5 - 1.0 })
+                .collect();
+            let panel: Vec<f32> = (0..k * NR).map(|i| (i as f32) * 0.01 - 0.5).collect();
+            let mut want_skip = [0.0f32; NR];
+            for (kk, &c) in coeffs.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                for t in 0..NR {
+                    want_skip[t] += c * panel[kk * NR + t];
+                }
+            }
+            let mut got = [0.0f32; NR];
+            panel_row_f32_skip(&mut got, &coeffs, &panel);
+            assert_eq!(got, want_skip, "skip k {k}");
+            let mut want_dense = [0.0f32; NR];
+            for (kk, &c) in coeffs.iter().enumerate() {
+                for t in 0..NR {
+                    want_dense[t] += c * panel[kk * NR + t];
+                }
+            }
+            panel_row_dense(&mut got, &coeffs, &panel);
+            assert_eq!(got, want_dense, "dense k {k}");
+        }
+    }
+}

@@ -134,6 +134,8 @@ impl Tensor {
 // ---------------------------------------------------------------------------
 
 /// c[m,n] = a[m,k] @ b[k,n]  (i-k-j order: inner loop streams rows of b).
+/// The inner loop is [`axpy`], so it runs on the active SIMD tier —
+/// per-element order is tier-independent (see [`crate::simd`]).
 // lintra: bitwise-critical
 pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
@@ -147,10 +149,7 @@ pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: u
             if aik == 0.0 {
                 continue;
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cj, &bj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bj;
-            }
+            axpy(crow, aik, &b[kk * n..(kk + 1) * n]);
         }
     }
 }
@@ -168,13 +167,12 @@ pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: u
 
 use crate::parallel::ThreadPool;
 
-/// Mul-add count below which a pooled GEMM-shaped kernel stays serial:
-/// one pool dispatch costs a few microseconds, so only real work fans out.
-pub const PAR_MIN_WORK: usize = 16 * 1024;
+// The dispatch thresholds migrated to the central tunables module
+// (PR 10); the re-export keeps the historical `tensor::PAR_*` paths
+// working for call sites and tests.
+pub use crate::tunables::{PAR_MIN_GEMV_COLS, PAR_MIN_ROW_ELEMS, PAR_MIN_WORK};
 
-/// Element count below which pooled row-wise kernels (layer norm) stay
-/// serial — cheaper per element than a GEMM row, so the bar is lower.
-pub const PAR_MIN_ROW_ELEMS: usize = 2048;
+use crate::tunables::{GEMM_PACK_MIN_ROWS, NR};
 
 /// [`matmul_into`] partitioned over row blocks of `c` across the pool.
 // lintra: bitwise-critical
@@ -321,10 +319,7 @@ pub fn vecmat_into(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize) {
         if xv == 0.0 {
             continue;
         }
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (yj, &bj) in y.iter_mut().zip(brow) {
-            *yj += xv * bj;
-        }
+        axpy(y, xv, &b[kk * n..(kk + 1) * n]);
     }
 }
 
@@ -455,14 +450,16 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// y += alpha * x
+/// y += alpha * x — dispatched to the active SIMD tier
+/// ([`crate::simd::axpy`]). Every tier updates each element with one
+/// accumulator in ascending index order (separate mul-then-add), so the
+/// result is identical on all of them; this single dispatch point is
+/// what vectorizes `vecmat_into` / `matmul_into` / the batched
+/// attention kernels in one move.
 // lintra: bitwise-critical
 #[inline]
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::simd::axpy(y, alpha, x);
 }
 
 // ---------------------------------------------------------------------------
@@ -763,15 +760,6 @@ impl WeightMat {
 // widening GEMV/GEMM microkernels over packed weights
 // ---------------------------------------------------------------------------
 
-/// Column-tile width of the widening kernels: 8 independent accumulators
-/// keep the FMA pipeline busy while each individual accumulator still
-/// sums in strict k order.
-const NR: usize = 8;
-
-/// Output width below which a B=1 GEMV is not worth a pool dispatch:
-/// fewer columns than this can't amortize waking the workers.
-pub const PAR_MIN_GEMV_COLS: usize = 64;
-
 /// Core widening GEMV over a column range: writes
 /// `y[j] = sum_k coeff(k) * widen(w[k, col0 + j])` for `j in 0..y.len()`.
 ///
@@ -846,6 +834,7 @@ fn gemv_cols_widen<W: Copy>(
 /// f32 GEMV over a column range, replicating [`vecmat_into`]'s
 /// per-element float-op order exactly (k-ascending with the zero-skip),
 /// so a column-partitioned run is bit-identical to the serial kernel.
+/// The inner loop is [`axpy`], so it runs on the active SIMD tier.
 // lintra: bitwise-critical
 fn gemv_cols_f32(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, col0: usize) {
     let nc = y.len();
@@ -857,26 +846,39 @@ fn gemv_cols_f32(y: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, col0: 
         if xv == 0.0 {
             continue;
         }
-        let brow = &b[kk * n + col0..kk * n + col0 + nc];
-        for (yj, &bj) in y.iter_mut().zip(brow) {
-            *yj += xv * bj;
-        }
+        axpy(y, xv, &b[kk * n + col0..kk * n + col0 + nc]);
     }
 }
 
-/// Dispatch one GEMV column range against a packed weight matrix.
+/// Dispatch one GEMV column range against a packed weight matrix. The
+/// narrow dtypes first offer the range to the [`crate::simd`] widening
+/// kernels (taken on the `Avx2` tier, bitwise-identical — the widening
+/// conversions are exact and the accumulation order matches); a declined
+/// offer falls back to the scalar [`gemv_cols_widen`], the single source
+/// of truth for the reference order.
 // lintra: bitwise-critical
 fn gemv_cols_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize, col0: usize) {
     assert_eq!(x.len(), k);
     match w {
         WeightMat::F32 { data } => gemv_cols_f32(y, x, data, k, n, col0),
-        WeightMat::F16 { bits } => gemv_cols_widen(y, bits, k, n, col0, |kk| x[kk], f16_bits_to_f32),
-        WeightMat::Bf16 { bits } => gemv_cols_widen(y, bits, k, n, col0, |kk| x[kk], bf16_bits_to_f32),
+        WeightMat::F16 { bits } => {
+            if !crate::simd::try_gemv_cols_f16(y, bits, x, k, n, col0) {
+                gemv_cols_widen(y, bits, k, n, col0, |kk| x[kk], f16_bits_to_f32)
+            }
+        }
+        WeightMat::Bf16 { bits } => {
+            if !crate::simd::try_gemv_cols_bf16(y, bits, x, k, n, col0) {
+                gemv_cols_widen(y, bits, k, n, col0, |kk| x[kk], bf16_bits_to_f32)
+            }
+        }
         WeightMat::Int8 { packed, scales } => {
             assert!(scales.len() >= k);
-            // fold the per-row scale into the input coefficient once per
-            // row: one multiply per element in the inner loop, same as f16
-            gemv_cols_widen(y, packed, k, n, col0, |kk| x[kk] * scales[kk], |q: i8| q as f32)
+            if !crate::simd::try_gemv_cols_i8(y, packed, scales, x, k, n, col0) {
+                // fold the per-row scale into the input coefficient once
+                // per row: one multiply per element in the inner loop,
+                // same as f16
+                gemv_cols_widen(y, packed, k, n, col0, |kk| x[kk] * scales[kk], |q: i8| q as f32)
+            }
         }
     }
 }
@@ -891,13 +893,120 @@ pub fn vecmat_into_w(y: &mut [f32], x: &[f32], w: &WeightMat, k: usize, n: usize
 
 /// c[m,n] = a[m,k] @ w[k,n] against a packed weight matrix. Each output
 /// row runs the exact single-row kernel, so results never depend on `m`
-/// (prefill chunking == decode ticks, like the f32 path).
+/// (prefill chunking == decode ticks, like the f32 path). At
+/// [`GEMM_PACK_MIN_ROWS`] rows and above the cache-blocked
+/// [`matmul_into_w_packed`] takes over — bitwise-identical by
+/// construction (packing is pure data movement), just faster.
 // lintra: bitwise-critical
 pub fn matmul_into_w(c: &mut [f32], a: &[f32], w: &WeightMat, m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
+    if m >= GEMM_PACK_MIN_ROWS && n >= NR && k > 0 {
+        matmul_into_w_packed(c, a, w, m, k, n);
+        return;
+    }
     for i in 0..m {
         gemv_cols_w(&mut c[i * n..(i + 1) * n], &a[i * k..(i + 1) * k], w, k, n, 0);
+    }
+}
+
+thread_local! {
+    /// Panel scratch for [`matmul_into_w_packed`]: one widened k×NR
+    /// column panel plus a k-length coefficient row, reused across calls
+    /// so the packed path only allocates on first use (or growth) per
+    /// thread — the steady-state prefill loop is allocation-free.
+    static PACK_SCRATCH: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
+}
+
+/// Widen one k×[`NR`] column panel of `w` (columns `col0..col0+NR`) into
+/// row-major `panel[kk * NR + t]`. Pure data movement: these are the
+/// exact same widened f32 values the streaming kernels read in place
+/// ([`f16_bits_to_f32`] / [`bf16_bits_to_f32`] / `i8 as f32` are all
+/// exact conversions), so consuming the panel cannot change a bit.
+fn pack_panel_w(panel: &mut [f32], w: &WeightMat, k: usize, n: usize, col0: usize) {
+    debug_assert!(panel.len() >= k * NR);
+    match w {
+        WeightMat::F32 { data } => {
+            for kk in 0..k {
+                panel[kk * NR..kk * NR + NR]
+                    .copy_from_slice(&data[kk * n + col0..kk * n + col0 + NR]);
+            }
+        }
+        WeightMat::F16 { bits } => {
+            for kk in 0..k {
+                let row = &bits[kk * n + col0..kk * n + col0 + NR];
+                for (t, &b) in row.iter().enumerate() {
+                    panel[kk * NR + t] = f16_bits_to_f32(b);
+                }
+            }
+        }
+        WeightMat::Bf16 { bits } => {
+            for kk in 0..k {
+                let row = &bits[kk * n + col0..kk * n + col0 + NR];
+                for (t, &b) in row.iter().enumerate() {
+                    panel[kk * NR + t] = bf16_bits_to_f32(b);
+                }
+            }
+        }
+        WeightMat::Int8 { packed, .. } => {
+            for kk in 0..k {
+                let row = &packed[kk * n + col0..kk * n + col0 + NR];
+                for (t, &q) in row.iter().enumerate() {
+                    panel[kk * NR + t] = q as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Cache-blocked GEMM over a packed weight matrix: for each NR-wide
+/// column tile, widen the k×NR panel once into thread-local scratch and
+/// stream every row of `a` through it, amortizing the dtype conversion
+/// `m` ways and turning the strided column-tile walk into sequential
+/// loads. Bitwise contract: every output element still accumulates its
+/// full k range in ascending order through ONE accumulator (the panel
+/// row kernels in [`crate::simd`] enforce this at both ISA tiers), and
+/// the panel holds the exact widened values the streaming path reads,
+/// so packed == streaming bitwise for every dtype. The f32 tile kernel
+/// keeps the `== 0.0` coefficient skip; the widened dtypes stay dense —
+/// both exactly as in the streaming kernels.
+// lintra: bitwise-critical
+fn matmul_into_w_packed(c: &mut [f32], a: &[f32], w: &WeightMat, m: usize, k: usize, n: usize) {
+    let tiles = n / NR;
+    PACK_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        buf.resize(k * (NR + 1), 0.0);
+        let (panel, coeffs) = buf.split_at_mut(k * NR);
+        for tile in 0..tiles {
+            let col0 = tile * NR;
+            pack_panel_w(panel, w, k, n, col0);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let out = &mut c[i * n + col0..i * n + col0 + NR];
+                match w {
+                    WeightMat::F32 { .. } => crate::simd::panel_row_f32_skip(out, arow, panel),
+                    WeightMat::F16 { .. } | WeightMat::Bf16 { .. } => {
+                        crate::simd::panel_row_dense(out, arow, panel)
+                    }
+                    WeightMat::Int8 { scales, .. } => {
+                        // same coefficient the streaming kernel folds per
+                        // row: x[kk] * scales[kk], computed once per tile
+                        // row instead of once per column tile element
+                        for (kk, cf) in coeffs.iter_mut().enumerate() {
+                            *cf = arow[kk] * scales[kk];
+                        }
+                        crate::simd::panel_row_dense(out, coeffs, panel)
+                    }
+                }
+            }
+        }
+    });
+    // remainder columns that don't fill a tile run the streaming kernel
+    let done = tiles * NR;
+    if done < n {
+        for i in 0..m {
+            gemv_cols_w(&mut c[i * n + done..(i + 1) * n], &a[i * k..(i + 1) * k], w, k, n, done);
+        }
     }
 }
 
@@ -1428,7 +1537,12 @@ mod tests {
             for i in 0..m {
                 let mut row = vec![0.0f32; n];
                 vecmat_into_w(&mut row, &a[i * k..(i + 1) * k], &w, k, n);
-                assert_eq!(&c[i * n..(i + 1) * n], &row[..], "{}: row {i} depends on m", dtype.name());
+                assert_eq!(
+                    &c[i * n..(i + 1) * n],
+                    &row[..],
+                    "{}: row {i} depends on m",
+                    dtype.name()
+                );
             }
         }
     }
@@ -1521,6 +1635,37 @@ mod tests {
             let mut mm_pooled = vec![0.0f32; 6 * n];
             matmul_into_w_pooled(Some(&pool), &mut mm_pooled, &a, &w, 6, k, n);
             assert_eq!(mm_pooled, mm_serial, "{}: row-split GEMM diverged", dtype.name());
+        }
+    }
+
+    #[test]
+    fn packed_gemm_is_bitwise_streaming() {
+        // m >= GEMM_PACK_MIN_ROWS engages the cache-blocked packed path;
+        // every row must still match the streaming single-row kernel
+        // bitwise, including ragged column tails (n % NR != 0) and
+        // k below the unroll width
+        let mut rng = Rng::new(58);
+        let shapes = [(GEMM_PACK_MIN_ROWS, 3usize, 8usize), (5, 1, 13), (8, 33, 65), (16, 64, 96)];
+        for &(m, k, n) in &shapes {
+            let data = rng.normal_vec(k * n, 1.0);
+            let mut a = rng.normal_vec(m * k, 1.0);
+            a[0] = 0.0; // the f32 zero-skip must survive packing
+            let dtypes = [WeightDtype::F32, WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8];
+            for dtype in dtypes {
+                let w = WeightMat::quantize(&data, k, n, dtype);
+                let mut packed = vec![0.0f32; m * n];
+                matmul_into_w(&mut packed, &a, &w, m, k, n);
+                for i in 0..m {
+                    let mut row = vec![0.0f32; n];
+                    vecmat_into_w(&mut row, &a[i * k..(i + 1) * k], &w, k, n);
+                    assert_eq!(
+                        &packed[i * n..(i + 1) * n],
+                        &row[..],
+                        "{}: packed row {i} diverged at {m}x{k}x{n}",
+                        dtype.name()
+                    );
+                }
+            }
         }
     }
 

@@ -1,0 +1,61 @@
+//! Kernel-dispatch tunables: every threshold that decides *which*
+//! implementation of a kernel runs lives here, in one documented place.
+//!
+//! Three dispatch axes exist, and all of them are correctness-neutral by
+//! construction — a threshold can only ever change speed, never a bit of
+//! output:
+//!
+//! * **Serial vs pooled** (`PAR_*`): whether a kernel fans its output
+//!   rows/columns out across the [`crate::parallel::ThreadPool`]. Pooled
+//!   kernels partition *outputs only* (never a reduction), so
+//!   pooled == serial bitwise at any thread count.
+//! * **Scalar vs SIMD** (`SIMD_*`): whether the inner loops run the
+//!   portable scalar form or the [`crate::simd`] microkernels selected by
+//!   runtime ISA detection. Every SIMD kernel assigns one vector lane to
+//!   one output element and accumulates in the exact scalar order
+//!   (ascending k, separate mul-then-add), so SIMD == scalar bitwise.
+//! * **Streaming vs packed** (`GEMM_PACK_*`): whether a multi-row GEMM
+//!   against a packed [`crate::tensor::WeightMat`] first repacks each
+//!   column panel into a contiguous widened scratch buffer. Packing is
+//!   pure data movement (the per-element accumulation order is
+//!   unchanged), so packed == unpacked bitwise.
+//!
+//! The values were chosen against the mnist serving geometry
+//! (d_model 128, d_ff 512, vocab 256) — see EXPERIMENTS.md §Perf for the
+//! methodology; they are compile-time constants on purpose (no env knob:
+//! dispatch must stay deterministic for a given build and shape).
+
+/// Mul-add count below which a pooled GEMM-shaped kernel stays serial:
+/// one pool dispatch costs a few microseconds, so only real work fans
+/// out.
+pub const PAR_MIN_WORK: usize = 16 * 1024;
+
+/// Element count below which pooled row-wise kernels (layer norm) stay
+/// serial — cheaper per element than a GEMM row, so the bar is lower.
+pub const PAR_MIN_ROW_ELEMS: usize = 2048;
+
+/// Output width below which a B=1 GEMV is not worth a pool dispatch:
+/// fewer columns than this can't amortize waking the workers.
+pub const PAR_MIN_GEMV_COLS: usize = 64;
+
+/// Column-tile width of the widening GEMV/GEMM kernels: 8 independent
+/// accumulators keep the FMA pipeline busy while each individual
+/// accumulator still sums in strict k order. Equal to the AVX2 f32 lane
+/// count, so one tile is exactly one `ymm` accumulator register on the
+/// SIMD path.
+pub const NR: usize = 8;
+
+/// Slice length below which the SIMD `axpy` dispatch stays scalar: a
+/// vector body needs at least one full [`NR`]-lane step to do anything,
+/// so shorter slices skip the tier check entirely and run the scalar
+/// tail they would have run anyway.
+pub const SIMD_MIN_LEN: usize = NR;
+
+/// Row count at or above which a multi-row GEMM against a packed
+/// [`crate::tensor::WeightMat`] switches to the cache-blocked packed
+/// path: each k×[`NR`] column panel is widened once into contiguous
+/// scratch and then reused by every row, amortizing the dtype conversion
+/// m ways and turning the strided column-tile walk into sequential
+/// loads. Below this, per-row streaming wins (packing would convert the
+/// whole matrix for too few consumers).
+pub const GEMM_PACK_MIN_ROWS: usize = 4;

@@ -1,0 +1,404 @@
+//! Scalar-vs-SIMD tier parity (the `rust/src/simd.rs` microkernel
+//! contract).
+//!
+//! The contract under test, in order of strictness:
+//!
+//! * Every f32 kernel (`axpy`, `vecmat_into`, `matmul_into`, the
+//!   `WeightMat` dispatchers, the batched attention kernels) is
+//!   **bitwise identical** across ISA tiers — the SIMD variants
+//!   vectorize across output columns, so each output element is still
+//!   one accumulator walking k in ascending order.
+//! * The widened-dtype kernels (f16/bf16/int8) are *also* bitwise
+//!   identical across tiers, because the 8-wide conversions are exact —
+//!   and their outputs track the f32 reference within the documented
+//!   per-dtype `(rel_tol, abs_tol)` envelopes of `dtype_parity`.
+//! * The pooled column-split kernels stay bitwise at any thread count
+//!   on the SIMD tier, not just the scalar one.
+//! * At the engine level, a greedy decode stream is identical with the
+//!   tier forced to scalar (`LINTRA_SIMD=0`) and with auto detection.
+//!
+//! Tier forcing is process-global (`simd::force_tier` flips one atomic),
+//! so every test here serializes on one mutex and restores the
+//! ambient-configured tier on exit — including on panic — via a drop
+//! guard. On hardware without AVX2 the force clamps to scalar and the
+//! cross-tier assertions hold trivially; the suite stays green.
+
+use std::sync::{Mutex, MutexGuard};
+
+use linear_transformer::attention::AttentionKind;
+use linear_transformer::config::{ModelConfig, ServeConfig, SimdMode};
+use linear_transformer::coordinator::engine::NativeEngine;
+use linear_transformer::coordinator::request::GenerateRequest;
+use linear_transformer::nn::TransformerLM;
+use linear_transformer::parallel::ThreadPool;
+use linear_transformer::propcheck::{assert_close_ulp, check, default_cases, Gen};
+use linear_transformer::rng::Rng;
+use linear_transformer::simd::{self, IsaTier};
+use linear_transformer::tensor::{
+    axpy, batched_contract, batched_outer_acc, matmul_into, matmul_into_w, matmul_into_w_pooled,
+    vecmat_into, vecmat_into_cols_pooled, vecmat_into_w, vecmat_into_w_cols_pooled, WeightDtype,
+    WeightMat,
+};
+
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes tier forcing across the (parallel) test harness and
+/// restores the ambient-configured tier when dropped, panic included.
+struct TierGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for TierGuard {
+    fn drop(&mut self) {
+        simd::configure(None);
+    }
+}
+
+fn tier_guard() -> TierGuard {
+    TierGuard(TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+/// Bit patterns of a float slice: the comparison the bitwise contract
+/// is actually phrased in (`==` on f32 would blur -0.0 and NaN).
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Run every f32 kernel family on the *current* tier and return the
+/// outputs as bit patterns, one entry per kernel.
+#[allow(clippy::too_many_arguments)]
+fn f32_kernel_outputs(
+    x: &[f32],
+    bmat: &[f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kv: &[f32],
+    vv: &[f32],
+    qv: &[f32],
+    s0: &[f32],
+    lanes: usize,
+    d: usize,
+    md: usize,
+) -> Vec<Vec<u32>> {
+    let mut outs: Vec<Vec<u32>> = Vec::new();
+
+    // axpy: the shared inner loop, on its own
+    let mut y: Vec<f32> = x.iter().map(|v| v * 0.5).collect();
+    axpy(&mut y, 1.5, x);
+    outs.push(bits(&y));
+
+    // B=1 GEMV, dense f32 matrix
+    let mut yv = vec![0.0f32; n];
+    vecmat_into(&mut yv, x, bmat, k, n);
+    outs.push(bits(&yv));
+
+    // B=1 GEMV through the WeightMat f32 dispatcher (gemv_cols_f32)
+    let w = WeightMat::quantize(bmat, k, n, WeightDtype::F32);
+    let mut yw = vec![0.0f32; n];
+    vecmat_into_w(&mut yw, x, &w, k, n);
+    outs.push(bits(&yw));
+
+    // prefill GEMMs: dense and WeightMat (packed path when m >= 4)
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(&mut c, a, bmat, m, k, n);
+    outs.push(bits(&c));
+    let mut cw = vec![0.0f32; m * n];
+    matmul_into_w(&mut cw, a, &w, m, k, n);
+    outs.push(bits(&cw));
+
+    // batched linear-attention kernels
+    let mut s = s0.to_vec();
+    batched_outer_acc(&mut s, kv, vv, lanes, d, md);
+    outs.push(bits(&s));
+    let mut out = vec![0.0f32; lanes * md];
+    batched_contract(&mut out, qv, &s, lanes, d, md);
+    outs.push(bits(&out));
+
+    outs
+}
+
+/// The documented per-dtype decode-logit tolerances vs the f32
+/// reference `(rel_tol, abs_tol)` — the same numbers `dtype_parity`
+/// tests and ARCHITECTURE.md states.
+fn tolerance(dtype: WeightDtype) -> (f32, f32) {
+    match dtype {
+        WeightDtype::F32 => (0.0, 0.0),
+        WeightDtype::F16 => (5e-2, 5e-2),
+        WeightDtype::Bf16 => (1e-1, 1e-1),
+        WeightDtype::Int8 => (2e-1, 2e-1),
+    }
+}
+
+#[test]
+fn f32_kernels_are_bitwise_identical_across_tiers() {
+    let _tier = tier_guard();
+    // awkward shapes on purpose: cols not a multiple of the 8-lane
+    // width, k below the unroll, single-row, and empty on both axes
+    const KS: [usize; 6] = [0, 1, 3, 5, 17, 64];
+    const NS: [usize; 7] = [0, 1, 7, 8, 9, 33, 65];
+    const MS: [usize; 3] = [1, 4, 6];
+    check("f32 scalar/simd tier parity", default_cases(), |g: &mut Gen| {
+        let k = KS[g.usize_in(0, KS.len() - 1)];
+        let n = NS[g.usize_in(0, NS.len() - 1)];
+        let m = MS[g.usize_in(0, MS.len() - 1)];
+        let (lanes, d, md) = (g.usize_in(1, 4), g.usize_in(1, 9), g.usize_in(1, 17));
+
+        let mut x = g.vec_f32(k, 1.0);
+        let bmat = g.vec_f32(k * n, 1.0);
+        let a = g.vec_f32(m * k, 1.0);
+        let mut kv = g.vec_f32(lanes * d, 1.0);
+        let vv = g.vec_f32(lanes * md, 1.0);
+        let mut qv = g.vec_f32(lanes * d, 1.0);
+        let s0 = g.vec_f32(lanes * d * md, 1.0);
+        // inject exact zeros: the f32 kernels' zero-skip must fire (or
+        // not fire) identically on every tier
+        for v in x.iter_mut().chain(kv.iter_mut()).chain(qv.iter_mut()) {
+            if g.bool() && g.bool() {
+                *v = 0.0;
+            }
+        }
+
+        assert_eq!(simd::force_tier(IsaTier::Scalar), IsaTier::Scalar);
+        let want = f32_kernel_outputs(&x, &bmat, &a, m, k, n, &kv, &vv, &qv, &s0, lanes, d, md);
+        // clamps to scalar without AVX2 — trivially equal there
+        simd::force_tier(IsaTier::Avx2);
+        let got = f32_kernel_outputs(&x, &bmat, &a, m, k, n, &kv, &vv, &qv, &s0, lanes, d, md);
+
+        const NAMES: [&str; 7] = [
+            "axpy",
+            "vecmat_into",
+            "vecmat_into_w[f32]",
+            "matmul_into",
+            "matmul_into_w[f32]",
+            "batched_outer_acc",
+            "batched_contract",
+        ];
+        for ((g_bits, w_bits), name) in got.iter().zip(&want).zip(NAMES) {
+            if g_bits != w_bits {
+                return Err(format!("{name}: tier changed bits at m={m} k={k} n={n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn widened_dtype_kernels_are_bitwise_across_tiers_and_inside_envelope() {
+    let _tier = tier_guard();
+    const KS: [usize; 4] = [1, 5, 17, 32];
+    const NS: [usize; 5] = [1, 7, 8, 9, 48];
+    for dtype in [WeightDtype::F16, WeightDtype::Bf16, WeightDtype::Int8] {
+        check(&format!("{} tier parity", dtype.name()), default_cases(), |g: &mut Gen| {
+            let k = KS[g.usize_in(0, KS.len() - 1)];
+            let n = NS[g.usize_in(0, NS.len() - 1)];
+            let m = 5; // past GEMM_PACK_MIN_ROWS: the packed panels run
+            let data = g.vec_f32(k * n, 1.0);
+            // modest activations keep the quantization-error sum far
+            // inside the documented envelope at these k
+            let x = g.vec_f32(k, 0.25);
+            let a = g.vec_f32(m * k, 0.25);
+            let w = WeightMat::quantize(&data, k, n, dtype);
+
+            assert_eq!(simd::force_tier(IsaTier::Scalar), IsaTier::Scalar);
+            let mut y_want = vec![0.0f32; n];
+            vecmat_into_w(&mut y_want, &x, &w, k, n);
+            let mut c_want = vec![0.0f32; m * n];
+            matmul_into_w(&mut c_want, &a, &w, m, k, n);
+
+            simd::force_tier(IsaTier::Avx2);
+            let mut y_got = vec![0.0f32; n];
+            vecmat_into_w(&mut y_got, &x, &w, k, n);
+            let mut c_got = vec![0.0f32; m * n];
+            matmul_into_w(&mut c_got, &a, &w, m, k, n);
+
+            // the conversions are exact, so even the narrow dtypes are
+            // *bitwise* across tiers — stronger than the envelope
+            if bits(&y_got) != bits(&y_want) {
+                return Err(format!("{} GEMV: tier changed bits k={k} n={n}", dtype.name()));
+            }
+            if bits(&c_got) != bits(&c_want) {
+                return Err(format!("{} GEMM: tier changed bits k={k} n={n}", dtype.name()));
+            }
+
+            // and the widened output tracks the f32 source within the
+            // documented dtype envelope (quantization error only)
+            let (rel, abs) = tolerance(dtype);
+            let mut y32 = vec![0.0f32; n];
+            vecmat_into(&mut y32, &x, &data, k, n);
+            for (j, (&got, &want)) in y_got.iter().zip(&y32).enumerate() {
+                assert_close_ulp(
+                    got,
+                    want,
+                    16,
+                    rel,
+                    abs,
+                    &format!("{} GEMV col {j} vs f32 (k={k} n={n})", dtype.name()),
+                );
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn pooled_kernels_stay_bitwise_on_simd_tier() {
+    let _tier = tier_guard();
+    // on the SIMD tier (clamped to scalar without AVX2), the pooled
+    // column split must still be invisible at any thread count
+    simd::force_tier(IsaTier::Avx2);
+    let mut rng = Rng::new(4242);
+
+    // GEMV gate: n == PAR_MIN_GEMV_COLS and k*n == PAR_MIN_WORK exactly
+    let (k, n) = (256usize, 64usize);
+    let data = rng.normal_vec(k * n, 1.0);
+    let x = rng.normal_vec(k, 1.0);
+    // GEMM gate: m >= 2 and m*k2*n >= PAR_MIN_WORK
+    let (m, k2) = (6usize, 64usize);
+    let data2 = rng.normal_vec(k2 * n, 1.0);
+    let a = rng.normal_vec(m * k2, 1.0);
+
+    let mut y_serial = vec![0.0f32; n];
+    vecmat_into(&mut y_serial, &x, &data, k, n);
+
+    for threads in [2usize, 3, 4] {
+        let pool = ThreadPool::new(threads);
+
+        let mut y = vec![0.0f32; n];
+        vecmat_into_cols_pooled(Some(&pool), &mut y, &x, &data, k, n);
+        assert_eq!(bits(&y), bits(&y_serial), "{threads}-thread f32 GEMV split moved bits");
+
+        for dtype in [
+            WeightDtype::F32,
+            WeightDtype::F16,
+            WeightDtype::Bf16,
+            WeightDtype::Int8,
+        ] {
+            let w = WeightMat::quantize(&data, k, n, dtype);
+            let mut want = vec![0.0f32; n];
+            vecmat_into_w(&mut want, &x, &w, k, n);
+            let mut got = vec![0.0f32; n];
+            vecmat_into_w_cols_pooled(Some(&pool), &mut got, &x, &w, k, n);
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "{threads}-thread {} GEMV split moved bits",
+                dtype.name()
+            );
+
+            let w2 = WeightMat::quantize(&data2, k2, n, dtype);
+            let mut c_want = vec![0.0f32; m * n];
+            matmul_into_w(&mut c_want, &a, &w2, m, k2, n);
+            let mut c_got = vec![0.0f32; m * n];
+            matmul_into_w_pooled(Some(&pool), &mut c_got, &a, &w2, m, k2, n);
+            assert_eq!(
+                bits(&c_got),
+                bits(&c_want),
+                "{threads}-thread {} GEMM row split moved bits",
+                dtype.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn simd_mode_resolution_drives_the_tier() {
+    let _tier = tier_guard();
+    // `--simd off` / LINTRA_SIMD=0 always lands on scalar; auto lands
+    // on AVX2 exactly when the CPU has it; forcing clamps the same way
+    assert_eq!(simd::configure(Some(SimdMode::Off)), IsaTier::Scalar);
+    assert_eq!(simd::active_tier(), IsaTier::Scalar);
+    let auto = simd::configure(Some(SimdMode::Auto));
+    assert_eq!(auto == IsaTier::Avx2, simd::avx2_supported());
+    assert_eq!(simd::force_tier(IsaTier::Avx2) == IsaTier::Avx2, simd::avx2_supported());
+    assert_eq!(simd::force_tier(IsaTier::Scalar), IsaTier::Scalar);
+}
+
+/// Wide enough that both the SIMD gate (len >= 8) and the pooled gates
+/// engage inside the engine's decode ticks.
+fn engine_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 32,
+        d_model: 128,
+        n_heads: 4,
+        n_layers: 2,
+        max_len: 160,
+        d_ff: 256,
+        chunk: 16,
+        causal: true,
+        lsh_rounds: 1,
+        lsh_buckets: 8,
+        lsh_chunk: 8,
+    }
+}
+
+fn engine_greedy_streams(cfg: &ModelConfig, cases: &[(Vec<u32>, usize)]) -> Vec<Vec<u32>> {
+    let model = TransformerLM::init(cfg, AttentionKind::Linear, 77);
+    let mut handle = NativeEngine::spawn(
+        model,
+        ServeConfig {
+            max_batch: 2,
+            max_wait_us: 500,
+            num_threads: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, n))| {
+            handle.submit(GenerateRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new: *n,
+                temperature: 0.0,
+                top_k: 0,
+            })
+        })
+        .collect();
+    let streams: Vec<Vec<u32>> = rxs
+        .into_iter()
+        .map(|rx| {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            resp.tokens
+        })
+        .collect();
+    handle.shutdown();
+    streams
+}
+
+#[test]
+fn engine_greedy_stream_identical_with_simd_off_and_auto() {
+    let _tier = tier_guard();
+    let cfg = engine_cfg();
+    let mut rng = Rng::new(9000);
+    let cases: Vec<(Vec<u32>, usize)> = [(20usize, 12usize), (33, 8)]
+        .iter()
+        .map(|&(len, n)| {
+            let p: Vec<u32> = (0..len).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+            (p, n)
+        })
+        .collect();
+
+    // the engine worker threads read the same process-global tier, so
+    // forcing here governs their kernels too (the lock is held)
+    assert_eq!(simd::configure(Some(SimdMode::Off)), IsaTier::Scalar);
+    let scalar_streams = engine_greedy_streams(&cfg, &cases);
+    // direct single-stream reference on the scalar tier
+    let direct_model = TransformerLM::init(&cfg, AttentionKind::Linear, 77);
+    let direct: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| direct_model.generate(p, *n, 0.0, 0))
+        .collect();
+    assert_eq!(scalar_streams, direct, "scalar engine diverged from direct decode");
+
+    let auto_tier = simd::configure(Some(SimdMode::Auto));
+    let auto_streams = engine_greedy_streams(&cfg, &cases);
+    assert_eq!(
+        auto_streams,
+        scalar_streams,
+        "greedy stream changed between LINTRA_SIMD=0 and auto (tier {})",
+        auto_tier.label()
+    );
+}
